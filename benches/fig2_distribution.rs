@@ -1,0 +1,49 @@
+//! Bench + regeneration harness for **Fig 2** (distribution of zero
+//! weights and sorted-weight Δs at 8- and 16-bit across the three models).
+//!
+//! `cargo bench --bench fig2_distribution`
+
+use codr::models::{all_models, Workload};
+use codr::report::fig2_report;
+use codr::reuse::stats::{model_distribution_16bit, model_distribution_8bit};
+use codr::util::bench::Bencher;
+
+fn main() {
+    let models = all_models();
+    println!("{}", fig2_report(&models, 42));
+
+    // --- paper anchors as shape checks.
+    let dist8 = |name: &str| {
+        let m = models.iter().find(|m| m.name == name).unwrap();
+        model_distribution_8bit(&Workload::generate(m, None, None, 42), 4, 4)
+    };
+    let vgg = dist8("vgg16");
+    let goog = dist8("googlenet");
+    let alex = dist8("alexnet");
+    assert!(vgg.zero > goog.zero && vgg.zero > alex.zero, "VGG sparsest");
+    assert!(
+        goog.delta_zero > alex.delta_zero && goog.delta_zero > vgg.delta_zero,
+        "GoogleNet most repetitive"
+    );
+    // 16-bit: sparsity and repetition collapse, small Δs remain (§II-C).
+    let g16 = model_distribution_16bit(
+        models.iter().find(|m| m.name == "googlenet").unwrap(),
+        42,
+        4,
+        4,
+    );
+    assert!(g16.zero < 0.02 && g16.delta_zero < goog.delta_zero);
+    assert!(g16.delta_small + g16.delta_mid > 0.3);
+    println!("shape checks OK: Fig 2 orderings and 16-bit collapse\n");
+
+    // --- timing.
+    let mut b = Bencher::heavy();
+    for m in &models {
+        let mc = m.clone();
+        b.bench(&format!("distribution_8bit_{}", m.name), || {
+            let wl = Workload::generate(&mc, None, None, 7);
+            model_distribution_8bit(&wl, 4, 4)
+        });
+    }
+    b.report("fig2 analysis timings");
+}

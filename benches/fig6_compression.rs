@@ -1,0 +1,63 @@
+//! Bench + regeneration harness for **Fig 6** (weight compression rate
+//! across models × sweep groups × designs). Prints the figure's series
+//! and times the compression pipeline itself.
+//!
+//! `cargo bench --bench fig6_compression`
+
+use codr::coordinator::{run_sweep, Arch};
+use codr::models::{all_models, model_by_name, SweepGroup};
+use codr::report::fig6_report;
+use codr::util::bench::Bencher;
+
+fn main() {
+    // --- regenerate the figure (full grid, all three models).
+    let models = all_models();
+    let groups = SweepGroup::all();
+    let results = run_sweep(&models, &groups, &Arch::all(), 42);
+    let names: Vec<&str> = models.iter().map(|m| m.name).collect();
+    println!("{}", fig6_report(&results, &names, &groups));
+
+    // Paper anchors: CoDR compresses more than UCNN more than SCNN in the
+    // left/middle groups, and the advantage grows when unique weights are
+    // limited (left) — assert the shape so `cargo bench` fails loudly if
+    // a regression flips it.
+    for m in &names {
+        for g in [SweepGroup::Unique(16), SweepGroup::Unique(64), SweepGroup::Original] {
+            let rate = |a| {
+                results
+                    .get(m, g, a)
+                    .map(|r| r.compression().rate())
+                    .unwrap_or(0.0)
+            };
+            assert!(
+                rate(Arch::Codr) > rate(Arch::Ucnn),
+                "{m}/{}: CoDR {} <= UCNN {}",
+                g.label(),
+                rate(Arch::Codr),
+                rate(Arch::Ucnn)
+            );
+        }
+    }
+    println!("shape check OK: CoDR > UCNN compression on U/orig groups\n");
+
+    // --- timing: customized-RLE encode of one full model.
+    let mut b = Bencher::heavy();
+    let alexnet = model_by_name("alexnet").unwrap();
+    b.bench("rle_encode_alexnet_full", || {
+        let wl = codr::models::Workload::generate(&alexnet, None, None, 7);
+        let cfg = codr::arch::TileConfig::codr();
+        let mut total = 0usize;
+        for (spec, w) in wl.conv_layers() {
+            let tiled = codr::reuse::transform_layer(spec, w, cfg.t_n, cfg.t_m);
+            let vs: Vec<codr::reuse::UcrVector> =
+                tiled.iter().flat_map(|(_, v)| v.iter().cloned()).collect();
+            let enc = codr::rle::encode_layer(
+                &vs,
+                codr::rle::CoderSpec::new(cfg.t_m * spec.r_k * spec.r_k),
+            );
+            total += enc.total_bits();
+        }
+        total
+    });
+    b.report("fig6 pipeline timings");
+}

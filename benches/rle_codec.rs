@@ -1,0 +1,74 @@
+//! Micro-benchmarks for the hot paths of the compression stack (the
+//! §Perf optimization targets): UCR transform, histogram collection,
+//! parameter search, encode, and decode throughput.
+//!
+//! `cargo bench --bench rle_codec`
+
+use codr::models::{synthesize_weights, LayerKind, LayerSpec};
+use codr::reuse::{transform_layer, UcrVector};
+use codr::rle::{decode_layer, encode_layer, CoderSpec, LayerHistograms};
+use codr::util::bench::Bencher;
+use codr::util::rng::Rng;
+
+fn main() {
+    let spec = LayerSpec {
+        name: "bench".into(),
+        kind: LayerKind::Conv,
+        n: 256,
+        m: 256,
+        r_i: 14,
+        r_k: 3,
+        stride: 1,
+        pad: 1,
+        sigma_q: 10.0,
+        zero_frac: 0.6,
+    };
+    let mut rng = Rng::new(42);
+    let w = synthesize_weights(&spec, &mut rng);
+    let n_weights = spec.num_weights();
+    let coder = CoderSpec::new(4 * 9);
+
+    let tiled = transform_layer(&spec, &w, 4, 4);
+    let vectors: Vec<UcrVector> = tiled.iter().flat_map(|(_, v)| v.iter().cloned()).collect();
+    let enc = encode_layer(&vectors, coder);
+    let lens: Vec<usize> = tiled
+        .iter()
+        .flat_map(|(t, _)| t.vectors.iter().map(|v| v.len()))
+        .collect();
+    println!(
+        "layer: {} weights → {} bits ({:.2} b/w), {} vectors\n",
+        n_weights,
+        enc.total_bits(),
+        enc.total_bits() as f64 / n_weights as f64,
+        vectors.len()
+    );
+
+    let mut b = Bencher::new();
+    b.bench("ucr_transform_590k_weights", || {
+        transform_layer(&spec, &w, 4, 4).len()
+    });
+    b.bench("histograms_590k_weights", || {
+        let mut h = LayerHistograms::new(coder);
+        for u in &vectors {
+            h.add_vector(u);
+        }
+        h.n_uniques
+    });
+    b.bench("param_search", || {
+        let mut h = LayerHistograms::new(coder);
+        for u in &vectors {
+            h.add_vector(u);
+        }
+        h.best_params()
+    });
+    b.bench("encode_590k_weights", || {
+        encode_layer(&vectors, coder).total_bits()
+    });
+    b.bench("decode_590k_weights", || {
+        decode_layer(&enc, &lens).len()
+    });
+    let s = b.results().last().unwrap().median();
+    let mbps = n_weights as f64 / s.as_secs_f64() / 1e6;
+    b.report("rle codec timings");
+    println!("\ndecode throughput ≈ {mbps:.1} M weights/s");
+}

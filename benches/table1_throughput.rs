@@ -1,0 +1,62 @@
+//! Bench for **Table I**: print the three designs' tiling parameters and
+//! measure what they imply — cycle counts (and multiplies/cycle) on a
+//! representative conv layer at equal area.
+//!
+//! `cargo bench --bench table1_throughput`
+
+use codr::coordinator::Arch;
+use codr::models::{synthesize_weights, LayerKind, LayerSpec};
+use codr::report::table1_report;
+use codr::util::bench::Bencher;
+use codr::util::rng::Rng;
+
+fn main() {
+    println!("{}", table1_report());
+
+    // Representative GoogleNet-class layer.
+    let spec = LayerSpec {
+        name: "rep_3x3".into(),
+        kind: LayerKind::Conv,
+        n: 128,
+        m: 128,
+        r_i: 28,
+        r_k: 3,
+        stride: 1,
+        pad: 1,
+        sigma_q: 2.0,
+        zero_frac: 0.55,
+    };
+    let mut rng = Rng::new(42);
+    let w = synthesize_weights(&spec, &mut rng);
+    let dense_macs = spec.macs();
+
+    println!(
+        "{:<6} {:>8} {:>12} {:>14} {:>16}",
+        "design", "mults", "cycles", "MACs/cycle", "dense-MACs/cycle"
+    );
+    for &arch in &Arch::all() {
+        let acc = arch.build();
+        let r = acc.simulate_layer(&spec, &w);
+        println!(
+            "{:<6} {:>8} {:>12} {:>14.1} {:>16.1}",
+            arch.name(),
+            acc.tile_config().total_mults(),
+            r.cycles,
+            r.alu.mults() as f64 / r.cycles as f64,
+            dense_macs as f64 / r.cycles as f64,
+        );
+    }
+    println!("\n(equal-area configs: effective throughput reflects how much");
+    println!(" computation each design's reuse eliminates)\n");
+
+    // --- timing the cycle model itself.
+    let mut b = Bencher::new();
+    for &arch in &Arch::all() {
+        let w2 = w.clone();
+        let s2 = spec.clone();
+        b.bench(&format!("cycle_model_{}", arch.name()), move || {
+            arch.build().simulate_layer(&s2, &w2).cycles
+        });
+    }
+    b.report("table1 cycle-model timings");
+}

@@ -1,0 +1,85 @@
+//! **End-to-end driver** (EXPERIMENTS.md §E2E): run a real CNN inference
+//! through the entire stack and prove all layers compose:
+//!
+//! 1. synthesize a quantized CNN (the `tiny` zoo model) and inputs;
+//! 2. compress every conv layer with UCR + customized RLE;
+//! 3. execute inference through the CoDR *compressed datapath* — decode,
+//!    differential scalar-matrix multiply, index routing, accumulate —
+//!    plus ReLU / requantize / maxpool / FC;
+//! 4. execute the same inference through the AOT-compiled JAX/Pallas
+//!    artifact (`artifacts/cnn_fwd.hlo.txt`) on the PJRT CPU client;
+//! 5. demand bit-for-bit equality on the logits, and report the
+//!    architecture metrics (accesses, energy, cycles) for the run.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_tiny_cnn
+//! ```
+
+use codr::codr::Codr;
+use codr::models::{tiny_cnn, Workload};
+use codr::runtime::golden::{golden_report, run_tiny_cnn_e2e};
+use codr::sim::simulate_model;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    // --- functional end-to-end: simulator vs compiled golden model.
+    let t0 = Instant::now();
+    let e2e = run_tiny_cnn_e2e(dir, 42).expect("e2e run failed");
+    let dt = t0.elapsed();
+    println!("tiny CNN inference through the compressed datapath:");
+    println!("  simulator logits: {:?}", e2e.logits_sim);
+    println!("  golden logits:    {:?}", e2e.logits_golden);
+    println!(
+        "  bit-for-bit: {}   ({dt:?} wall incl. PJRT compile)",
+        if e2e.exact { "EXACT" } else { "MISMATCH" }
+    );
+    assert!(e2e.exact, "simulator and XLA golden model disagree");
+
+    // --- per-layer golden checks across all artifact geometries.
+    println!();
+    match golden_report(dir, 42) {
+        Ok(r) => print!("{r}"),
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(1);
+        }
+    }
+
+    // --- architecture metrics for the same model on the CoDR design.
+    let wl = Workload::generate(&tiny_cnn(), None, None, 42);
+    let design = Codr::default();
+    let res = simulate_model(&design, &wl, "e2e");
+    let mem = res.mem();
+    let e = res.energy();
+    println!("\nCoDR architecture metrics (tiny CNN conv layers):");
+    println!(
+        "  compression: {:.2} bits/weight ({:.2}x vs dense 8-bit)",
+        res.compression().bits_per_weight(),
+        res.compression().rate()
+    );
+    println!(
+        "  SRAM accesses: {} (weight {} / input {} / output {})",
+        mem.sram_accesses(),
+        mem.weight_sram.accesses,
+        mem.input_sram.accesses,
+        mem.output_sram.accesses
+    );
+    println!("  cycles: {}", res.cycles());
+    println!(
+        "  energy: {:.2} µJ (DRAM {:.2} SRAM {:.2} RF {:.2} ALU {:.2} xbar {:.3})",
+        e.total_uj(),
+        e.dram_uj,
+        e.sram_uj,
+        e.rf_uj,
+        e.alu_uj,
+        e.xbar_uj
+    );
+    println!("\nE2E OK — all layers compose.");
+}

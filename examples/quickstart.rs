@@ -1,0 +1,60 @@
+//! Quickstart: compress one conv layer with the customized RLE, simulate
+//! it on all three designs, and print the comparison.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use codr::baselines::{Scnn, Ucnn};
+use codr::codr::Codr;
+use codr::models::{synthesize_weights, LayerKind, LayerSpec};
+use codr::sim::Accelerator;
+use codr::util::rng::Rng;
+
+fn main() {
+    // A GoogleNet-like 3×3 conv layer.
+    let spec = LayerSpec {
+        name: "demo_conv".into(),
+        kind: LayerKind::Conv,
+        n: 96,
+        m: 128,
+        r_i: 28,
+        r_k: 3,
+        stride: 1,
+        pad: 1,
+        sigma_q: 2.0,
+        zero_frac: 0.55,
+    };
+    let mut rng = Rng::new(42);
+    let weights = synthesize_weights(&spec, &mut rng);
+    println!(
+        "layer {}: {} weights, density {:.2}, {} unique non-zeros\n",
+        spec.name,
+        spec.num_weights(),
+        codr::quant::density(weights.data()),
+        codr::quant::unique_nonzero(weights.data()),
+    );
+
+    let designs: Vec<Box<dyn Accelerator>> = vec![
+        Box::new(Codr::default()),
+        Box::new(Ucnn::default()),
+        Box::new(Scnn::default()),
+    ];
+    println!(
+        "{:<6} {:>9} {:>12} {:>12} {:>12} {:>10}",
+        "design", "bits/w", "SRAM acc", "mults", "cycles", "energy µJ"
+    );
+    for d in &designs {
+        let r = d.simulate_layer(&spec, &weights);
+        println!(
+            "{:<6} {:>9.2} {:>12} {:>12} {:>12} {:>10.1}",
+            d.name(),
+            r.compression.bits_per_weight(),
+            r.mem.sram_accesses(),
+            r.alu.mults(),
+            r.cycles,
+            r.energy.total_uj()
+        );
+    }
+    println!("\n(see `codr figure all` for the full paper reproduction)");
+}

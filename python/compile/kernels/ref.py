@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the build-time ground truth: pytest checks every kernel against
+them (exactly — the golden path is integer-valued), and `aot.py` embeds
+the *kernel* (not the oracle) into the artifacts the Rust runtime loads.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, w, b, *, stride=1, pad=0):
+    """Reference conv via lax.conv_general_dilated.
+
+    x: [N, R_I, C_I]; w: [M, N, R_K, C_K]; b: [M] → [M, R_O, C_O].
+    """
+    out = lax.conv_general_dilated(
+        x[None],  # [1, N, H, W]
+        w,  # [M, N, kh, kw] (OIHW)
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    return out + b[:, None, None]
+
+
+def fc_ref(x, w, b):
+    """Reference FC: x [I], w [O, I], b [O] → [O]."""
+    return w @ x + b
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2d_ref(x, k=2, stride=2):
+    """Max-pool per channel: x [C, R, Cc] → [C, R', C']."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, k, k),
+        window_strides=(1, stride, stride),
+        padding="VALID",
+    )

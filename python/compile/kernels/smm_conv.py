@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: scalar-matrix-multiplication convolution (CoDR Fig 3b).
+
+The paper's datapath computes a convolution as, for every (output-channel,
+input-channel, kernel-offset) triple, a *scalar × input-window matrix*
+product accumulated into the output tile — this is what breaks the
+dependency between weight terms and enables Universal Computation Reuse.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): CoDR's Input-RF /
+Output-RF stationarity maps onto Pallas VMEM blocks — the kernel's grid
+iterates over output channels with the entire (padded) input resident in
+VMEM, and each grid step accumulates the R_K·C_K scalar-matrix products
+for its output channel. The MPE→APE index crossbar is control flow the
+TPU cannot express cheaply, so the dense scatter is materialised as a sum
+over kernel offsets (same arithmetic; the sparse routing stays in the L3
+simulator).
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+that the CPU PJRT plugin cannot run (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _smm_conv_kernel(x_ref, w_ref, b_ref, o_ref, *, stride, r_k, c_k, r_o, c_o):
+    """One grid step: all scalar-matrix products for one output channel.
+
+    x_ref: [N, R_P, C_P] padded input (VMEM-resident, f32)
+    w_ref: [1, N, R_K, C_K] this output channel's filter
+    b_ref: [1]             this output channel's bias
+    o_ref: [1, R_O, C_O]   output tile (accumulated here — output stationary)
+    """
+    n = x_ref.shape[0]
+    acc = jnp.full((r_o, c_o), b_ref[0], dtype=jnp.float32)
+    # Scalar-matrix multiplication: each weight w[ic, kr, kc] (scalar)
+    # multiplies the shifted input window (matrix) — the Fig 3b dataflow.
+    for ic in range(n):
+        for kr in range(r_k):
+            for kc in range(c_k):
+                window = jax.lax.slice(
+                    x_ref[ic],
+                    (kr, kc),
+                    (kr + (r_o - 1) * stride + 1, kc + (c_o - 1) * stride + 1),
+                    (stride, stride),
+                )
+                acc = acc + w_ref[0, ic, kr, kc] * window
+    o_ref[...] = acc[None]
+
+
+def smm_conv(x, w, b, *, stride=1, pad=0):
+    """Convolution via the CoDR scalar-matrix dataflow, as a Pallas kernel.
+
+    Args:
+      x: [N, R_I, C_I] f32 input features
+      w: [M, N, R_K, C_K] f32 weights
+      b: [M] f32 bias
+    Returns:
+      [M, R_O, C_O] f32 pre-activations (exact integers for int-valued
+      inputs — the golden-model contract with the Rust simulator).
+    """
+    n, r_i, c_i = x.shape
+    m, n_w, r_k, c_k = w.shape
+    assert n == n_w, f"input channels mismatch: {n} vs {n_w}"
+    assert b.shape == (m,)
+    r_o = (r_i + 2 * pad - r_k) // stride + 1
+    c_o = (c_i + 2 * pad - c_k) // stride + 1
+
+    x_padded = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    kernel = functools.partial(
+        _smm_conv_kernel, stride=stride, r_k=r_k, c_k=c_k, r_o=r_o, c_o=c_o
+    )
+    # Grid over output channels (the T_M loop of a CoDR PU); the padded
+    # input is broadcast to every step — input stationary in VMEM, exactly
+    # the Input-RF sharing of Fig 5a.
+    return pl.pallas_call(
+        kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec(x_padded.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, n, r_k, c_k), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, r_o, c_o), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, r_o, c_o), jnp.float32),
+        interpret=True,
+    )(x_padded, w, b)
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref):
+    """FC tile: o = x @ w^T + b (w stored [O, I] as in the paper models)."""
+    o_ref[...] = x_ref[...] @ w_ref[...].T + b_ref[...]
+
+
+def fc_matmul(x, w, b):
+    """Fully-connected layer as a Pallas matmul kernel.
+
+    Args:
+      x: [I] f32 flattened activations
+      w: [O, I] f32
+      b: [O] f32
+    Returns: [O] f32
+    """
+    (i,) = x.shape
+    o, i_w = w.shape
+    assert i == i_w
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, o), jnp.float32),
+        interpret=True,
+    )(x.reshape(1, i), w, b.reshape(1, o))
+    return out.reshape(o)

@@ -1,0 +1,54 @@
+"""L2: the JAX golden model — conv layers and a small end-to-end CNN
+built on the L1 Pallas kernels.
+
+Everything here is f32 over integer-valued data (u8 activations, i8
+weights, i32 bias): |accumulator| stays far below 2^24, so f32 arithmetic
+is exact and the Rust simulator's integer outputs must match the compiled
+artifacts bit for bit.
+
+Only `aot.py` imports this module (build time); nothing here runs on the
+simulation path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.smm_conv import fc_matmul, smm_conv
+from .kernels.ref import maxpool2d_ref, relu_ref
+
+# Requantization shifts between the tiny CNN's layers (integer-only
+# inference): accumulators are scaled back to u8 so every layer stays far
+# below 2^24 and f32 remains exact. Mirrored by the Rust side
+# (`tensor::requantize`, examples/e2e_tiny_cnn.rs).
+TINY_SHIFTS = (6, 6)
+
+
+def requant_ref(x, shift):
+    """clip(⌊x / 2^shift⌋, 0, 255) — matches Rust `requantize` on the
+    post-ReLU (non-negative) domain."""
+    return jnp.clip(jnp.floor(x / (2.0**shift)), 0.0, 255.0)
+
+
+def conv_layer(x, w, b, *, stride=1, pad=0):
+    """One conv layer through the scalar-matrix-multiplication kernel —
+    the unit artifact the Rust golden check loads per manifest entry."""
+    return smm_conv(x, w, b, stride=stride, pad=pad)
+
+
+def tiny_cnn_forward(x, w1, b1, w2, b2, wf, bf):
+    """The `tiny` model of the Rust zoo (models::tiny_cnn), end to end:
+
+    conv1(4→8, 3×3, pad 1) → ReLU → requant → maxpool2 →
+    conv2(8→16, 3×3, pad 1) → ReLU → requant → maxpool2 →
+    flatten → FC(→10)
+
+    Shapes: x [4,16,16]; w1 [8,4,3,3]; w2 [16,8,3,3]; wf [10, 16*4*4].
+    Returns logits [10].
+    """
+    h = smm_conv(x, w1, b1, stride=1, pad=1)
+    h = requant_ref(relu_ref(h), TINY_SHIFTS[0])
+    h = maxpool2d_ref(h, 2, 2)
+    h = smm_conv(h, w2, b2, stride=1, pad=1)
+    h = requant_ref(relu_ref(h), TINY_SHIFTS[1])
+    h = maxpool2d_ref(h, 2, 2)
+    flat = jnp.reshape(h, (-1,))
+    return fc_matmul(flat, wf, bf)

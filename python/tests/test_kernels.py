@@ -1,0 +1,112 @@
+"""L1 kernel correctness: Pallas smm_conv / fc_matmul vs the pure-jnp
+oracles, including hypothesis sweeps over layer geometry (the CORE
+build-time correctness signal — the same kernels are AOT-compiled into
+the artifacts the Rust golden check runs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import conv2d_ref, fc_ref
+from compile.kernels.smm_conv import fc_matmul, smm_conv
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def int_conv_case(rng, n, m, r_i, r_k):
+    """Integer-valued f32 tensors (the golden-path value domain)."""
+    x = rng.integers(0, 256, size=(n, r_i, r_i)).astype(np.float32)
+    w = rng.integers(-127, 128, size=(m, n, r_k, r_k)).astype(np.float32)
+    b = rng.integers(-1000, 1000, size=(m,)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)
+
+
+@pytest.mark.parametrize(
+    "n,m,r_i,r_k,stride,pad",
+    [
+        (4, 8, 16, 3, 1, 1),
+        (8, 16, 8, 3, 1, 1),
+        (8, 8, 10, 1, 1, 0),
+        (3, 6, 14, 5, 1, 2),
+        (3, 8, 23, 11, 4, 0),
+        (3, 8, 21, 7, 2, 3),
+        (5, 7, 9, 3, 1, 1),
+        (1, 1, 5, 3, 2, 0),
+    ],
+)
+def test_smm_conv_matches_ref(n, m, r_i, r_k, stride, pad):
+    rng = np.random.default_rng(42 + n * 100 + m)
+    x, w, b = int_conv_case(rng, n, m, r_i, r_k)
+    got = smm_conv(x, w, b, stride=stride, pad=pad)
+    want = conv2d_ref(x, w, b, stride=stride, pad=pad)
+    assert got.shape == want.shape
+    # Integer-valued inputs ⇒ exact equality (f32 is exact below 2^24).
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_smm_conv_zero_weights_is_bias():
+    x = jnp.ones((2, 6, 6), jnp.float32) * 9
+    w = jnp.zeros((3, 2, 3, 3), jnp.float32)
+    b = jnp.asarray([1.0, -2.0, 5.0])
+    out = smm_conv(x, w, b, stride=1, pad=1)
+    assert out.shape == (3, 6, 6)
+    np.testing.assert_array_equal(np.asarray(out[0]), 1.0)
+    np.testing.assert_array_equal(np.asarray(out[1]), -2.0)
+    np.testing.assert_array_equal(np.asarray(out[2]), 5.0)
+
+
+def test_smm_conv_identity_kernel():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(0, 256, size=(1, 5, 5)).astype(np.float32))
+    w = jnp.zeros((1, 1, 1, 1), jnp.float32).at[0, 0, 0, 0].set(1.0)
+    out = smm_conv(x, w, jnp.zeros((1,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    m=st.integers(1, 6),
+    r_k=st.sampled_from([1, 3, 5]),
+    stride=st.integers(1, 2),
+    extra=st.integers(0, 5),
+    pad=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_smm_conv_hypothesis_geometry(n, m, r_k, stride, extra, pad, seed):
+    """Property sweep: arbitrary small geometry, integer data, exactness."""
+    r_i = r_k + stride + extra  # always ≥ kernel
+    rng = np.random.default_rng(seed)
+    x, w, b = int_conv_case(rng, n, m, r_i, r_k)
+    got = smm_conv(x, w, b, stride=stride, pad=pad)
+    want = conv2d_ref(x, w, b, stride=stride, pad=pad)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    i=st.integers(1, 64),
+    o=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fc_matmul_hypothesis(i, o, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, size=(i,)).astype(np.float32))
+    w = jnp.asarray(rng.integers(-127, 128, size=(o, i)).astype(np.float32))
+    b = jnp.asarray(rng.integers(-1000, 1000, size=(o,)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(fc_matmul(x, w, b)), np.asarray(fc_ref(x, w, b))
+    )
+
+
+def test_smm_conv_linearity_in_weights():
+    """conv(w1 + w2) == conv(w1) + conv(w2) for zero bias."""
+    rng = np.random.default_rng(3)
+    x, w1, _ = int_conv_case(rng, 3, 4, 8, 3)
+    _, w2, _ = int_conv_case(rng, 3, 4, 8, 3)
+    b0 = jnp.zeros((4,), jnp.float32)
+    lhs = smm_conv(x, w1 + w2, b0, pad=1)
+    rhs = smm_conv(x, w1, b0, pad=1) + smm_conv(x, w2, b0, pad=1)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))

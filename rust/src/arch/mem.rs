@@ -1,0 +1,176 @@
+//! Memory-hierarchy access accounting.
+//!
+//! Every simulator (CoDR, UCNN, SCNN) records its traffic here; the
+//! energy model then prices each class with [`super::CactiLite`]. Keeping
+//! a single accounting structure guarantees Fig 7 (SRAM accesses) and
+//! Fig 8 (energy) are computed identically across designs.
+
+/// One storage structure's traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AccessCounter {
+    pub accesses: u64,
+    pub bits: u64,
+}
+
+impl AccessCounter {
+    #[inline]
+    pub fn record(&mut self, accesses: u64, bits_per_access: u64) {
+        self.accesses += accesses;
+        self.bits += accesses * bits_per_access;
+    }
+
+    pub fn add(&mut self, o: &AccessCounter) {
+        self.accesses += o.accesses;
+        self.bits += o.bits;
+    }
+}
+
+/// Storage classes distinguished by the evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemoryKind {
+    /// 250 kB input-feature SRAM.
+    InputSram,
+    /// 250 kB output-feature SRAM.
+    OutputSram,
+    /// 200 kB (compressed) weight SRAM.
+    WeightSram,
+    /// Off-chip DRAM.
+    Dram,
+    /// Input register file (shared across PUs in CoDR).
+    InputRf,
+    /// Weight RF inside each MPE.
+    WeightRf,
+    /// Output RF inside each APE.
+    OutputRf,
+}
+
+/// Full traffic breakdown of one simulated layer (or an aggregate).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemoryStats {
+    pub input_sram: AccessCounter,
+    pub output_sram: AccessCounter,
+    pub weight_sram: AccessCounter,
+    pub dram: AccessCounter,
+    pub input_rf: AccessCounter,
+    pub weight_rf: AccessCounter,
+    pub output_rf: AccessCounter,
+}
+
+impl MemoryStats {
+    pub fn counter_mut(&mut self, kind: MemoryKind) -> &mut AccessCounter {
+        match kind {
+            MemoryKind::InputSram => &mut self.input_sram,
+            MemoryKind::OutputSram => &mut self.output_sram,
+            MemoryKind::WeightSram => &mut self.weight_sram,
+            MemoryKind::Dram => &mut self.dram,
+            MemoryKind::InputRf => &mut self.input_rf,
+            MemoryKind::WeightRf => &mut self.weight_rf,
+            MemoryKind::OutputRf => &mut self.output_rf,
+        }
+    }
+
+    pub fn counter(&self, kind: MemoryKind) -> &AccessCounter {
+        match kind {
+            MemoryKind::InputSram => &self.input_sram,
+            MemoryKind::OutputSram => &self.output_sram,
+            MemoryKind::WeightSram => &self.weight_sram,
+            MemoryKind::Dram => &self.dram,
+            MemoryKind::InputRf => &self.input_rf,
+            MemoryKind::WeightRf => &self.weight_rf,
+            MemoryKind::OutputRf => &self.output_rf,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, kind: MemoryKind, accesses: u64, bits_per_access: u64) {
+        self.counter_mut(kind).record(accesses, bits_per_access);
+    }
+
+    /// Total on-chip SRAM accesses — the Fig 7 metric.
+    pub fn sram_accesses(&self) -> u64 {
+        self.input_sram.accesses + self.output_sram.accesses + self.weight_sram.accesses
+    }
+
+    /// Total on-chip SRAM traffic in bits.
+    pub fn sram_bits(&self) -> u64 {
+        self.input_sram.bits + self.output_sram.bits + self.weight_sram.bits
+    }
+
+    /// Fraction of SRAM bandwidth (bits) spent on weights — the paper
+    /// reports 50% for CoDR, 1.40% for UCNN.
+    pub fn weight_bw_fraction(&self) -> f64 {
+        let total = self.sram_bits();
+        if total == 0 {
+            0.0
+        } else {
+            self.weight_sram.bits as f64 / total as f64
+        }
+    }
+
+    pub fn rf_accesses(&self) -> u64 {
+        self.input_rf.accesses + self.weight_rf.accesses + self.output_rf.accesses
+    }
+
+    pub fn add(&mut self, o: &MemoryStats) {
+        self.input_sram.add(&o.input_sram);
+        self.output_sram.add(&o.output_sram);
+        self.weight_sram.add(&o.weight_sram);
+        self.dram.add(&o.dram);
+        self.input_rf.add(&o.input_rf);
+        self.weight_rf.add(&o.weight_rf);
+        self.output_rf.add(&o.output_rf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates_bits() {
+        let mut c = AccessCounter::default();
+        c.record(10, 8);
+        c.record(5, 64);
+        assert_eq!(c.accesses, 15);
+        assert_eq!(c.bits, 80 + 320);
+    }
+
+    #[test]
+    fn stats_route_by_kind() {
+        let mut s = MemoryStats::default();
+        s.record(MemoryKind::InputSram, 3, 8);
+        s.record(MemoryKind::WeightSram, 2, 64);
+        s.record(MemoryKind::Dram, 1, 1024);
+        assert_eq!(s.input_sram.accesses, 3);
+        assert_eq!(s.weight_sram.bits, 128);
+        assert_eq!(s.dram.bits, 1024);
+        assert_eq!(s.sram_accesses(), 5);
+        assert_eq!(s.sram_bits(), 24 + 128);
+    }
+
+    #[test]
+    fn weight_bw_fraction() {
+        let mut s = MemoryStats::default();
+        s.record(MemoryKind::InputSram, 10, 8);
+        s.record(MemoryKind::WeightSram, 10, 8);
+        assert!((s.weight_bw_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_merges_all_classes() {
+        let mut a = MemoryStats::default();
+        a.record(MemoryKind::OutputRf, 7, 32);
+        let mut b = MemoryStats::default();
+        b.record(MemoryKind::OutputRf, 3, 32);
+        b.record(MemoryKind::InputRf, 1, 8);
+        a.add(&b);
+        assert_eq!(a.output_rf.accesses, 10);
+        assert_eq!(a.input_rf.accesses, 1);
+        assert_eq!(a.rf_accesses(), 11);
+    }
+
+    #[test]
+    fn empty_stats_fraction_is_zero() {
+        assert_eq!(MemoryStats::default().weight_bw_fraction(), 0.0);
+    }
+}

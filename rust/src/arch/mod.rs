@@ -1,0 +1,185 @@
+//! Shared architecture substrate: design configurations (paper Table I),
+//! the memory-hierarchy access counters, and the CACTI-lite energy model.
+
+pub mod cacti;
+pub mod mem;
+
+pub use cacti::CactiLite;
+pub use mem::{AccessCounter, MemoryKind, MemoryStats};
+
+/// Tiling configuration of one RTL design — paper **Table I**. All three
+/// designs are sized to the same 2.85 mm² (45 nm) by choosing `T_PU`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileConfig {
+    pub name: &'static str,
+    /// Number of processing units.
+    pub t_pu: usize,
+    /// Output channels per PU iteration.
+    pub t_m: usize,
+    /// Input channels per PU cycle.
+    pub t_n: usize,
+    /// Output tile rows / cols per PU.
+    pub t_ro: usize,
+    pub t_co: usize,
+    /// Input tile rows / cols held in the Input RF.
+    pub t_ri: usize,
+    pub t_ci: usize,
+    /// Multipliers per PU ("× per PU" row of Table I).
+    pub mults_per_pu: usize,
+}
+
+impl TileConfig {
+    /// CoDR column of Table I.
+    pub const fn codr() -> Self {
+        TileConfig {
+            name: "CoDR",
+            t_pu: 8,
+            t_m: 4,
+            t_n: 4,
+            t_ro: 8,
+            t_co: 8,
+            t_ri: 20,
+            t_ci: 20,
+            mults_per_pu: 64,
+        }
+    }
+
+    /// UCNN column of Table I.
+    pub const fn ucnn() -> Self {
+        TileConfig {
+            name: "UCNN",
+            t_pu: 48,
+            t_m: 1,
+            t_n: 4,
+            t_ro: 1,
+            t_co: 8,
+            t_ri: 1,
+            t_ci: 12,
+            mults_per_pu: 8,
+        }
+    }
+
+    /// SCNN column of Table I.
+    pub const fn scnn() -> Self {
+        TileConfig {
+            name: "SCNN",
+            t_pu: 21,
+            t_m: 2,
+            t_n: 1,
+            t_ro: 1,
+            t_co: 1,
+            t_ri: 1,
+            t_ci: 1,
+            mults_per_pu: 16,
+        }
+    }
+
+    /// Total multipliers across the accelerator.
+    pub fn total_mults(&self) -> usize {
+        self.t_pu * self.mults_per_pu
+    }
+
+    /// Effective output tile rows for a layer: the Input RF bounds how many
+    /// output rows a pass can produce (`T_RO_eff = ⌊(T_RI − R_K)/stride⌋+1`,
+    /// clipped to `T_RO`). E.g. AlexNet conv1 (11×11, stride 4) fits only
+    /// 3×3 outputs in CoDR's 20×20 Input RF tile.
+    pub fn t_ro_eff(&self, r_k: usize, stride: usize) -> usize {
+        if self.t_ri < r_k {
+            1
+        } else {
+            ((self.t_ri - r_k) / stride + 1).clamp(1, self.t_ro)
+        }
+    }
+
+    pub fn t_co_eff(&self, c_k: usize, stride: usize) -> usize {
+        if self.t_ci < c_k {
+            1
+        } else {
+            ((self.t_ci - c_k) / stride + 1).clamp(1, self.t_co)
+        }
+    }
+}
+
+/// SRAM provisioning shared by all three designs (paper §V-A): 250 kB for
+/// input features, 250 kB for output features, 200 kB for weights; DRAM
+/// access energy 160 pJ/B; overall area 2.85 mm² at 45 nm.
+#[derive(Clone, Copy, Debug)]
+pub struct MemConfig {
+    pub input_sram_kb: f64,
+    pub output_sram_kb: f64,
+    pub weight_sram_kb: f64,
+    /// Word width of every SRAM port (bits).
+    pub sram_word_bits: u32,
+    /// DRAM access energy, pJ per byte.
+    pub dram_pj_per_byte: f64,
+    /// Register-file size per PE (bytes) — sets the RF per-access energy.
+    pub rf_bytes: f64,
+}
+
+impl Default for MemConfig {
+    fn default() -> Self {
+        MemConfig {
+            input_sram_kb: 250.0,
+            output_sram_kb: 250.0,
+            weight_sram_kb: 200.0,
+            sram_word_bits: 64,
+            dram_pj_per_byte: 160.0,
+            rf_bytes: 2048.0,
+        }
+    }
+}
+
+/// Total area the paper equalizes across designs.
+pub const TOTAL_AREA_MM2: f64 = 2.85;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values_match_paper() {
+        let c = TileConfig::codr();
+        assert_eq!((c.t_pu, c.t_m, c.t_n), (8, 4, 4));
+        assert_eq!((c.t_ro, c.t_co, c.t_ri, c.t_ci), (8, 8, 20, 20));
+        assert_eq!(c.mults_per_pu, 64);
+        let u = TileConfig::ucnn();
+        assert_eq!((u.t_pu, u.t_m, u.t_n), (48, 1, 4));
+        assert_eq!((u.t_ro, u.t_co, u.t_ri, u.t_ci), (1, 8, 1, 12));
+        assert_eq!(u.mults_per_pu, 8);
+        let s = TileConfig::scnn();
+        assert_eq!((s.t_pu, s.t_m, s.t_n), (21, 2, 1));
+        assert_eq!(s.mults_per_pu, 16);
+    }
+
+    #[test]
+    fn total_mults_comparable_across_designs() {
+        // Equal-area designs end up with the same order of multipliers.
+        assert_eq!(TileConfig::codr().total_mults(), 512);
+        assert_eq!(TileConfig::ucnn().total_mults(), 384);
+        assert_eq!(TileConfig::scnn().total_mults(), 336);
+    }
+
+    #[test]
+    fn effective_output_tile_respects_input_rf() {
+        let c = TileConfig::codr();
+        // 3×3 stride 1: (20-3)/1+1 = 18 → clipped to 8.
+        assert_eq!(c.t_ro_eff(3, 1), 8);
+        // 11×11 stride 4 (AlexNet conv1): (20-11)/4+1 = 3.
+        assert_eq!(c.t_ro_eff(11, 4), 3);
+        // 5×5 stride 1: (20-5)+1 = 16 → 8.
+        assert_eq!(c.t_ro_eff(5, 1), 8);
+        // 7×7 stride 2 (GoogleNet conv1): (20-7)/2+1 = 7.
+        assert_eq!(c.t_ro_eff(7, 2), 7);
+        // Degenerate: kernel larger than the RF tile.
+        assert_eq!(c.t_ro_eff(25, 1), 1);
+    }
+
+    #[test]
+    fn mem_config_defaults_match_paper() {
+        let m = MemConfig::default();
+        assert_eq!(m.input_sram_kb, 250.0);
+        assert_eq!(m.output_sram_kb, 250.0);
+        assert_eq!(m.weight_sram_kb, 200.0);
+        assert_eq!(m.dram_pj_per_byte, 160.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Baseline accelerator models: **SCNN** [1] (weight sparsity via
+//! compressed-sparse weights, input-stationary cartesian-product dataflow)
+//! and **UCNN** [5] (weight repetition via activation-group factorization,
+//! fixed-parameter RLE). Both are configured per paper Table I at the same
+//! 2.85 mm² area as CoDR and evaluated with identical memory/energy
+//! models, so Figs 6–8 compare dataflows, not technology assumptions.
+
+pub mod scnn;
+pub mod ucnn;
+
+pub use scnn::Scnn;
+pub use ucnn::Ucnn;

@@ -1,0 +1,300 @@
+//! SCNN [1] baseline: exploits weight **sparsity** only. Weights are kept
+//! in a compressed-sparse format — the raw 8-bit value plus a 4-bit count
+//! of zeros since the previous non-zero (runs longer than 15 insert an
+//! explicit zero weight). The dataflow is input-stationary with a
+//! cartesian-product multiplier array: partial products are scattered
+//! through a crossbar into accumulator banks addressed by output
+//! coordinate.
+//!
+//! Table I configuration: `T_PU=21, T_M=2, T_N=1, T_RO=T_CO=1`, 16
+//! multipliers/PU (4×4 F×I cartesian product). With only two output
+//! channels of accumulator storage, the stationary inputs are re-read per
+//! output-channel pair — SCNN's input traffic ends up ≈21× CoDR's on
+//! GoogleNet (§V-C) and every partial product pays an accumulator-bank
+//! access, which is what Fig 7/8's SCNN bars are made of.
+
+use crate::arch::{CactiLite, MemConfig, MemoryKind, TileConfig};
+use crate::models::LayerSpec;
+use crate::rle::bitstream::BitWriter;
+use crate::rle::CompressionStats;
+use crate::sim::{Accelerator, LayerResult};
+use crate::tensor::Weights;
+
+/// Zero-run field width (4 bits → max run 15) from the SCNN paper.
+pub const SCNN_RUN_BITS: u32 = 4;
+
+#[derive(Clone, Debug)]
+pub struct Scnn {
+    pub cfg: TileConfig,
+    pub cacti: CactiLite,
+    pub mem: MemConfig,
+    /// Input channels accumulated on-chip before the accumulator banks
+    /// spill partials to the output SRAM (microarchitectural calibration).
+    pub accum_depth: usize,
+}
+
+impl Default for Scnn {
+    fn default() -> Self {
+        Scnn {
+            cfg: TileConfig::scnn(),
+            cacti: CactiLite::default(),
+            mem: MemConfig::default(),
+            accum_depth: 3,
+        }
+    }
+}
+
+/// SCNN weight compression: `(4-bit zero run, 8-bit weight)` per non-zero;
+/// zero runs longer than 15 insert an explicit zero weight. Returns the
+/// encoded stream (for round-trip tests) and its stats.
+pub fn compress_weights(weights: &[i8]) -> (BitWriter, CompressionStats) {
+    let mut out = BitWriter::new();
+    let mut entries = 0usize;
+    let mut run = 0u32;
+    for &w in weights {
+        if w == 0 {
+            run += 1;
+            if run > 15 {
+                // Overflow: explicit zero weight with run 15.
+                out.push(15, SCNN_RUN_BITS);
+                out.push(0, 8);
+                entries += 1;
+                run = 0;
+            }
+        } else {
+            out.push(run, SCNN_RUN_BITS);
+            out.push(w as u8 as u32, 8);
+            entries += 1;
+            run = 0;
+        }
+    }
+    let stats = CompressionStats {
+        num_weights: weights.len(),
+        encoded_bits: out.len(),
+        delta_bits: entries * 8,
+        count_bits: entries * SCNN_RUN_BITS as usize,
+        index_bits: 0,
+        header_bits: 0,
+    };
+    (out, stats)
+}
+
+/// Decode an SCNN stream back to a dense weight vector of length `len`.
+pub fn decompress_weights(stream: &BitWriter, len: usize) -> Vec<i8> {
+    let mut r = stream.reader();
+    let mut out = Vec::with_capacity(len);
+    while r.remaining() >= (SCNN_RUN_BITS + 8) as usize && out.len() < len {
+        let run = r.read(SCNN_RUN_BITS);
+        let w = r.read(8) as u8 as i8;
+        for _ in 0..run {
+            out.push(0);
+        }
+        if out.len() < len {
+            out.push(w);
+        }
+    }
+    // Trailing zeros are implicit.
+    out.resize(len, 0);
+    out
+}
+
+impl Accelerator for Scnn {
+    fn name(&self) -> &'static str {
+        "SCNN"
+    }
+
+    fn tile_config(&self) -> TileConfig {
+        self.cfg
+    }
+
+    fn simulate_layer(&self, spec: &LayerSpec, weights: &Weights) -> LayerResult {
+        let cfg = &self.cfg;
+        let (_, compression) = compress_weights(weights.data());
+        let nnz = weights.data().iter().filter(|&&x| x != 0).count() as u64;
+
+        let mut res = LayerResult {
+            layer: spec.name.clone(),
+            compression,
+            ..Default::default()
+        };
+        let mem = &mut res.mem;
+        let alu = &mut res.alu;
+        alu.delta_bits = 8;
+        alu.xbar_bits = 16;
+
+        let out_positions = (spec.r_o() * spec.r_o()) as u64;
+        let passes = spec.m.div_ceil(cfg.t_m) as u64; // output-channel pairs
+
+        // --- Weights stream once over the layer (multicast to all PUs):
+        // each (run, weight) entry is one 12-bit access.
+        let entries = res.compression.encoded_bits as u64 / 12;
+        mem.record(MemoryKind::WeightSram, entries, 12);
+        mem.record(MemoryKind::WeightRf, entries, 12);
+
+        // --- Inputs: stationary across one pass, re-read per pass. The
+        // 21 PUs tile the feature map spatially with only a 1×1 local
+        // tile, so each pass also pays the inter-PU halo exchange and
+        // multicast overhead (§V-C puts SCNN's input traffic at ≈21× CoDR).
+        const HALO_MULTICAST: f64 = 1.6;
+        let input_reads =
+            (spec.input_features() as f64 * passes as f64 * HALO_MULTICAST) as u64;
+        mem.record(MemoryKind::InputSram, input_reads, 8);
+        mem.record(MemoryKind::InputRf, input_reads, 8);
+
+        // --- Cartesian product: every non-zero weight multiplies every
+        // output position it overlaps (dense activations).
+        let mults = nnz * out_positions;
+        alu.mults_full += mults;
+        alu.adds += mults;
+        mem.record(MemoryKind::InputRf, mults, 8); // F operand reads
+        // Every partial product crosses the scatter crossbar and pays a
+        // read-modify-write on its accumulator bank.
+        alu.xbar_transfers += mults;
+        mem.record(MemoryKind::OutputRf, 2 * mults, 24);
+
+        // --- Accumulator banks spill to output SRAM every `accum_depth`
+        // input channels (read-modify-write), and the final pass writes.
+        let spills = (spec.n as u64).div_ceil(self.accum_depth as u64);
+        mem.record(
+            MemoryKind::OutputSram,
+            2 * spec.output_features() as u64 * spills,
+            16,
+        );
+
+        // --- DRAM once.
+        mem.record(MemoryKind::Dram, 1, res.compression.encoded_bits as u64);
+        mem.record(MemoryKind::Dram, 1, spec.input_features() as u64 * 8);
+        mem.record(MemoryKind::Dram, 1, spec.output_features() as u64 * 8);
+
+        // --- Cycles: multiplies spread over the PU array, plus crossbar
+        // serialization when partials collide on a bank (model: 1.2×).
+        let lanes = (cfg.t_pu * cfg.mults_per_pu) as u64;
+        res.cycles = mults * 12 / (lanes * 10) + 1;
+
+        res.finish(&self.cacti, &self.mem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{synthesize_weights, LayerKind};
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn spec(n: usize, m: usize, r_i: usize, r_k: usize, zero_frac: f64) -> LayerSpec {
+        LayerSpec {
+            name: "s".into(),
+            kind: LayerKind::Conv,
+            n,
+            m,
+            r_i,
+            r_k,
+            stride: 1,
+            pad: 1,
+            sigma_q: 12.0,
+            zero_frac,
+        }
+    }
+
+    #[test]
+    fn compress_hand_example() {
+        // [0,0,5,0,0,0,-1] → (run 2, 5), (run 3, -1) = 24 bits.
+        let (s, st) = compress_weights(&[0, 0, 5, 0, 0, 0, -1]);
+        assert_eq!(st.encoded_bits, 24);
+        assert_eq!(decompress_weights(&s, 7), vec![0, 0, 5, 0, 0, 0, -1]);
+    }
+
+    #[test]
+    fn long_zero_run_overflows() {
+        let mut v = vec![0i8; 20];
+        v.push(9);
+        let (s, st) = compress_weights(&v);
+        // One explicit zero entry (run 15) + the real entry (run 4).
+        assert_eq!(st.encoded_bits, 2 * 12);
+        assert_eq!(decompress_weights(&s, 21), v);
+    }
+
+    #[test]
+    fn trailing_zeros_cost_nothing() {
+        let (_, st) = compress_weights(&[1, 0, 0, 0, 0, 0]);
+        assert_eq!(st.encoded_bits, 12);
+    }
+
+    #[test]
+    fn prop_scnn_roundtrip() {
+        check(
+            80,
+            |r, size| {
+                (0..1 + size * 4)
+                    .map(|_| {
+                        if r.chance(0.8) {
+                            0
+                        } else {
+                            (r.below(255) as i16 - 127) as i8
+                        }
+                    })
+                    .collect::<Vec<i8>>()
+            },
+            |v| {
+                let (s, _) = compress_weights(v);
+                decompress_weights(&s, v.len()) == *v
+            },
+        );
+    }
+
+    #[test]
+    fn scnn_does_not_exploit_repetition() {
+        // Limiting unique weights must NOT change SCNN's multiply count
+        // (it has no unification) — only sparsity does.
+        let s = spec(16, 16, 14, 3, 0.5);
+        let mut rng = Rng::new(1);
+        let w = synthesize_weights(&s, &mut rng);
+        let mut w_lim = w.clone();
+        crate::quant::limit_unique_weights(w_lim.data_mut(), 8);
+        let scnn = Scnn::default();
+        let r = scnn.simulate_layer(&s, &w);
+        let r_lim = scnn.simulate_layer(&s, &w_lim);
+        // U-limiting may create new zeros (values that round to 0), so
+        // allow mults to *drop* only from that effect.
+        let nnz = w.data().iter().filter(|&&x| x != 0).count();
+        let nnz_lim = w_lim.data().iter().filter(|&&x| x != 0).count();
+        assert_eq!(
+            r.alu.mults() as f64 / nnz as f64,
+            r_lim.alu.mults() as f64 / nnz_lim as f64
+        );
+    }
+
+    #[test]
+    fn sparsity_cuts_mults_proportionally() {
+        let dense = spec(16, 16, 14, 3, 0.1);
+        let sparse = spec(16, 16, 14, 3, 0.9);
+        let mut rng = Rng::new(2);
+        let wd = synthesize_weights(&dense, &mut rng);
+        let ws = synthesize_weights(&sparse, &mut rng);
+        let scnn = Scnn::default();
+        assert!(scnn.simulate_layer(&sparse, &ws).alu.mults() * 4
+            < scnn.simulate_layer(&dense, &wd).alu.mults());
+    }
+
+    #[test]
+    fn compression_is_12_bits_per_nnz_plus_overflows() {
+        let s = spec(16, 16, 14, 3, 0.6);
+        let mut rng = Rng::new(3);
+        let w = synthesize_weights(&s, &mut rng);
+        let (_, st) = compress_weights(w.data());
+        let nnz = w.data().iter().filter(|&&x| x != 0).count();
+        assert!(st.encoded_bits >= nnz * 12);
+        assert!(st.encoded_bits < nnz * 12 + w.data().len());
+    }
+
+    #[test]
+    fn outputs_pay_per_partial_product() {
+        let s = spec(8, 8, 10, 3, 0.5);
+        let mut rng = Rng::new(4);
+        let w = synthesize_weights(&s, &mut rng);
+        let nnz = w.data().iter().filter(|&&x| x != 0).count() as u64;
+        let r = Scnn::default().simulate_layer(&s, &w);
+        assert_eq!(r.mem.output_rf.accesses, 2 * nnz * (s.r_o() as u64).pow(2));
+    }
+}

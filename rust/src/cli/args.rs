@@ -1,0 +1,147 @@
+//! Flag parsing for the CLI: `--key value` pairs plus boolean switches.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+const SWITCHES: &[&str] = &["save", "functional", "verbose"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("unexpected argument `{tok}` (flags start with --)");
+            };
+            if SWITCHES.contains(&key) {
+                a.switches.push(key.to_string());
+                i += 1;
+            } else {
+                let val = argv
+                    .get(i + 1)
+                    .with_context(|| format!("--{key} needs a value"))?;
+                a.values.insert(key.to_string(), val.clone());
+                i += 2;
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    pub fn seed(&self) -> Result<u64> {
+        match self.get("seed") {
+            None => Ok(42),
+            Some(s) => s.parse().context("--seed must be an integer"),
+        }
+    }
+
+    /// Comma-separated model list (default: the paper's three benchmarks).
+    pub fn models(&self) -> Result<Vec<crate::models::Model>> {
+        let spec = self.get("models").unwrap_or("alexnet,vgg16,googlenet");
+        spec.split(',')
+            .map(|name| {
+                crate::models::model_by_name(name.trim())
+                    .or_else(|| (name.trim() == "tiny").then(crate::models::tiny_cnn))
+                    .with_context(|| format!("unknown model `{name}`"))
+            })
+            .collect()
+    }
+
+    /// Sweep groups (default: all six paper groups).
+    pub fn groups(&self) -> Result<Vec<crate::models::SweepGroup>> {
+        use crate::models::SweepGroup;
+        let Some(spec) = self.get("groups") else {
+            return Ok(SweepGroup::all());
+        };
+        spec.split(',')
+            .map(|g| {
+                let g = g.trim();
+                if g.eq_ignore_ascii_case("orig") {
+                    Ok(SweepGroup::Original)
+                } else if let Some(u) = g.strip_prefix("U=") {
+                    Ok(SweepGroup::Unique(u.parse().context("bad U group")?))
+                } else if let Some(d) = g.strip_prefix("D=") {
+                    let d = d.trim_end_matches('%');
+                    Ok(SweepGroup::Density(d.parse().context("bad D group")?))
+                } else {
+                    bail!("unknown group `{g}` (use U=16 / Orig / D=50%)")
+                }
+            })
+            .collect()
+    }
+
+    pub fn arch(&self) -> Result<crate::coordinator::Arch> {
+        use crate::coordinator::Arch;
+        match self.get("arch").unwrap_or("CoDR").to_ascii_lowercase().as_str() {
+            "codr" => Ok(Arch::Codr),
+            "ucnn" => Ok(Arch::Ucnn),
+            "scnn" => Ok(Arch::Scnn),
+            other => bail!("unknown arch `{other}`"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::SweepGroup;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_pairs_and_switches() {
+        let a = Args::parse(&sv(&["--seed", "7", "--save", "--model", "vgg16"])).unwrap();
+        assert_eq!(a.seed().unwrap(), 7);
+        assert!(a.flag("save"));
+        assert_eq!(a.get("model"), Some("vgg16"));
+    }
+
+    #[test]
+    fn default_seed_and_models() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.seed().unwrap(), 42);
+        assert_eq!(a.models().unwrap().len(), 3);
+        assert_eq!(a.groups().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn group_spec_parsing() {
+        let a = Args::parse(&sv(&["--groups", "U=16,Orig,D=50%"])).unwrap();
+        assert_eq!(
+            a.groups().unwrap(),
+            vec![
+                SweepGroup::Unique(16),
+                SweepGroup::Original,
+                SweepGroup::Density(50)
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Args::parse(&sv(&["positional"])).is_err());
+        assert!(Args::parse(&sv(&["--seed"])).is_err());
+        let a = Args::parse(&sv(&["--groups", "X=9"])).unwrap();
+        assert!(a.groups().is_err());
+        let a = Args::parse(&sv(&["--arch", "tpu"])).unwrap();
+        assert!(a.arch().is_err());
+        let a = Args::parse(&sv(&["--models", "resnet"])).unwrap();
+        assert!(a.models().is_err());
+    }
+}

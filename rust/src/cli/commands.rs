@@ -1,0 +1,282 @@
+//! CLI command implementations.
+
+use super::Args;
+use crate::coordinator::{run_sweep, Arch};
+use crate::models::Workload;
+use crate::report;
+use crate::sim::simulate_model;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// `codr figure <id>` — regenerate a paper figure/table.
+pub fn figure(id: &str, args: &Args) -> Result<String> {
+    let seed = args.seed()?;
+    let models = args.models()?;
+    let groups = args.groups()?;
+    let model_names: Vec<&str> = models.iter().map(|m| m.name).collect();
+
+    let needs_sweep = matches!(id, "fig6" | "fig7" | "fig8" | "headline" | "detail" | "all");
+    let sweep = if needs_sweep {
+        Some(run_sweep(&models, &groups, &Arch::all(), seed))
+    } else {
+        None
+    };
+
+    let mut out = String::new();
+    let mut saved = Vec::new();
+    let mut emit = |name: &str, text: String, save: bool| {
+        if save {
+            if let Ok(p) = report::write_results_file(&format!("{name}.txt"), &text) {
+                saved.push(p.display().to_string());
+            }
+        }
+        out.push_str(&text);
+        out.push('\n');
+    };
+
+    let save = args.flag("save");
+    match id {
+        "fig2" => emit("fig2", report::fig2_report(&models, seed), save),
+        "table1" => emit("table1", report::table1_report(), save),
+        "fig6" => emit(
+            "fig6",
+            report::fig6_report(sweep.as_ref().unwrap(), &model_names, &groups),
+            save,
+        ),
+        "fig7" => {
+            // The paper plots GoogleNet; honor --models for subsets.
+            let model = model_names.last().copied().unwrap_or("googlenet");
+            emit(
+                "fig7",
+                report::fig7_report(sweep.as_ref().unwrap(), model, &groups),
+                save,
+            )
+        }
+        "fig8" => emit(
+            "fig8",
+            report::fig8_report(sweep.as_ref().unwrap(), &model_names, &groups),
+            save,
+        ),
+        "headline" => emit(
+            "headline",
+            report::headline_report(sweep.as_ref().unwrap(), &model_names),
+            save,
+        ),
+        "detail" => {
+            let s = sweep.as_ref().unwrap();
+            for m in &models {
+                emit(
+                    &format!("detail_{}", m.name),
+                    report::sram_detail_report(s, m),
+                    save,
+                );
+            }
+        }
+        "all" => {
+            let s = sweep.as_ref().unwrap();
+            emit("fig2", report::fig2_report(&models, seed), save);
+            emit("table1", report::table1_report(), save);
+            emit("fig6", report::fig6_report(s, &model_names, &groups), save);
+            let f7model = model_names.last().copied().unwrap_or("googlenet");
+            emit("fig7", report::fig7_report(s, f7model, &groups), save);
+            emit("fig8", report::fig8_report(s, &model_names, &groups), save);
+            emit("headline", report::headline_report(s, &model_names), save);
+        }
+        other => bail!("unknown figure `{other}`"),
+    }
+    if !saved.is_empty() {
+        out.push_str(&format!("saved: {}\n", saved.join(", ")));
+    }
+    Ok(out)
+}
+
+/// `codr simulate --model m [--arch a]` — per-layer stats on one design.
+pub fn simulate(args: &Args) -> Result<String> {
+    let name = args.get("model").context("simulate: --model required")?;
+    let model = crate::models::model_by_name(name)
+        .or_else(|| (name == "tiny").then(crate::models::tiny_cnn))
+        .with_context(|| format!("unknown model `{name}`"))?;
+    let arch = args.arch()?;
+    let unique = args
+        .get("unique")
+        .map(|u| u.parse::<u32>().context("--unique"))
+        .transpose()?;
+    let density = args
+        .get("density")
+        .map(|d| d.parse::<f64>().context("--density"))
+        .transpose()?;
+    let wl = Workload::generate(&model, unique, density, args.seed()?);
+    let acc = arch.build();
+    let res = simulate_model(acc.as_ref(), &wl, "cli");
+
+    let headers = vec![
+        "layer", "weights", "b/w", "SRAM acc", "RF acc", "mults", "adds", "cycles", "energy µJ",
+    ];
+    let mut rows: Vec<Vec<String>> = res
+        .layers
+        .iter()
+        .map(|l| {
+            vec![
+                l.layer.clone(),
+                l.compression.num_weights.to_string(),
+                format!("{:.2}", l.compression.bits_per_weight()),
+                l.mem.sram_accesses().to_string(),
+                l.mem.rf_accesses().to_string(),
+                l.alu.mults().to_string(),
+                l.alu.adds.to_string(),
+                l.cycles.to_string(),
+                format!("{:.1}", l.energy.total_uj()),
+            ]
+        })
+        .collect();
+    let c = res.compression();
+    rows.push(vec![
+        "TOTAL".into(),
+        c.num_weights.to_string(),
+        format!("{:.2}", c.bits_per_weight()),
+        res.mem().sram_accesses().to_string(),
+        res.mem().rf_accesses().to_string(),
+        res.alu().mults().to_string(),
+        res.alu().adds.to_string(),
+        res.cycles().to_string(),
+        format!("{:.1}", res.energy().total_uj()),
+    ]);
+    Ok(report::ascii_table(
+        &format!("{} on {} (seed {})", model.name, arch.name(), args.seed()?),
+        &headers,
+        &rows,
+    ))
+}
+
+/// `codr compress --model m` — customized-RLE compression per layer.
+pub fn compress(args: &Args) -> Result<String> {
+    let name = args.get("model").context("compress: --model required")?;
+    let model = crate::models::model_by_name(name)
+        .or_else(|| (name == "tiny").then(crate::models::tiny_cnn))
+        .with_context(|| format!("unknown model `{name}`"))?;
+    let wl = Workload::generate(&model, None, None, args.seed()?);
+    let cfg = crate::arch::TileConfig::codr();
+
+    let headers = vec![
+        "layer", "weights", "density", "uniq", "k", "r", "j", "Δ%", "cnt%", "idx%", "hdr%",
+        "bits/w", "rate",
+    ];
+    let mut rows = Vec::new();
+    let mut total = crate::rle::CompressionStats::default();
+    for (spec, w) in wl.conv_layers() {
+        let tiled = crate::reuse::transform_layer(spec, w, cfg.t_n, cfg.t_m);
+        let vs: Vec<crate::reuse::UcrVector> =
+            tiled.iter().flat_map(|(_, v)| v.iter().cloned()).collect();
+        let enc = crate::rle::encode_layer(
+            &vs,
+            crate::rle::CoderSpec::new(cfg.t_m * spec.r_k * spec.r_k),
+        );
+        let st = enc.stats(spec.num_weights());
+        total.add(&st);
+        let share = |x: usize| format!("{:.0}%", 100.0 * x as f64 / st.encoded_bits as f64);
+        rows.push(vec![
+            spec.name.clone(),
+            spec.num_weights().to_string(),
+            format!("{:.2}", crate::quant::density(w.data())),
+            crate::quant::unique_nonzero(w.data()).to_string(),
+            enc.params.delta_bits.to_string(),
+            enc.params.count_bits.to_string(),
+            enc.params.index_bits.to_string(),
+            share(st.delta_bits),
+            share(st.count_bits),
+            share(st.index_bits),
+            share(st.header_bits),
+            format!("{:.2}", st.bits_per_weight()),
+            format!("{:.2}x", st.rate()),
+        ]);
+    }
+    rows.push(vec![
+        "TOTAL".into(),
+        total.num_weights.to_string(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.2}", total.bits_per_weight()),
+        format!("{:.2}x", total.rate()),
+    ]);
+    Ok(report::ascii_table(
+        &format!("customized RLE: {} (seed {})", model.name, args.seed()?),
+        &headers,
+        &rows,
+    ))
+}
+
+/// `codr golden` — run every artifact (per-layer convs and the end-to-end
+/// tiny CNN) through the XLA golden model and compare against the CoDR
+/// compressed datapath, bit for bit.
+pub fn golden(args: &Args) -> Result<String> {
+    let dir = Path::new(args.get("artifacts").unwrap_or("artifacts"));
+    crate::runtime::golden::golden_report(dir, args.seed()?)
+}
+
+/// `codr info` — configurations and model zoo.
+pub fn info() -> String {
+    let mut out = report::table1_report();
+    out.push('\n');
+    let headers = vec!["model", "conv layers", "conv weights", "MACs"];
+    let rows: Vec<Vec<String>> = crate::models::all_models()
+        .iter()
+        .map(|m| {
+            vec![
+                m.name.to_string(),
+                m.conv_layers().count().to_string(),
+                m.conv_layers()
+                    .map(|l| l.num_weights())
+                    .sum::<usize>()
+                    .to_string(),
+                format!(
+                    "{:.2}G",
+                    m.conv_layers().map(|l| l.macs()).sum::<u64>() as f64 / 1e9
+                ),
+            ]
+        })
+        .collect();
+    out.push_str(&report::ascii_table("model zoo", &headers, &rows));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn simulate_tiny_renders_totals() {
+        let a = Args::parse(&sv(&["--model", "tiny", "--arch", "scnn"])).unwrap();
+        let out = simulate(&a).unwrap();
+        assert!(out.contains("TOTAL"));
+        assert!(out.contains("SCNN"));
+    }
+
+    #[test]
+    fn compress_tiny_shows_params() {
+        let a = Args::parse(&sv(&["--model", "tiny"])).unwrap();
+        let out = compress(&a).unwrap();
+        assert!(out.contains("conv1") && out.contains("rate"));
+    }
+
+    #[test]
+    fn simulate_requires_model() {
+        assert!(simulate(&Args::parse(&[]).unwrap()).is_err());
+    }
+
+    #[test]
+    fn figure_rejects_unknown() {
+        let a = Args::parse(&[]).unwrap();
+        assert!(figure("fig99", &a).is_err());
+    }
+}

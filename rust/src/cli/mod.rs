@@ -1,0 +1,111 @@
+//! Command-line interface (hand-rolled — `clap` is unavailable in the
+//! offline registry).
+//!
+//! ```text
+//! codr figure <fig2|table1|fig6|fig7|fig8|headline|detail|all> [opts]
+//! codr simulate --model <name> [--arch <CoDR|UCNN|SCNN>] [opts]
+//! codr compress --model <name> [--seed N]
+//! codr golden [--artifacts DIR] [--seed N]
+//! codr info
+//! ```
+
+mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use anyhow::{bail, Result};
+
+const USAGE: &str = "\
+CoDR: Computation and Data Reuse Aware CNN Accelerator — reproduction CLI
+
+USAGE:
+    codr <COMMAND> [OPTIONS]
+
+COMMANDS:
+    figure <id>     Regenerate a paper figure/table:
+                    fig2 | table1 | fig6 | fig7 | fig8 | headline | detail | all
+    simulate        Simulate one model on one design, print per-layer stats
+    compress        Compress one model with the customized RLE, print stats
+    golden          Verify the CoDR datapath against the XLA golden model
+    info            Print design configurations and model zoo summary
+
+OPTIONS:
+    --models a,b,c     Models to evaluate (default: alexnet,vgg16,googlenet)
+    --model NAME       Single model (simulate/compress)
+    --arch NAME        Design: CoDR | UCNN | SCNN   (default CoDR)
+    --groups g1,g2     Sweep groups: U=16,U=64,Orig,D=75%,D=50%,D=25%
+    --seed N           Workload seed                (default 42)
+    --artifacts DIR    Artifact directory           (default artifacts)
+    --save             Also write reports under results/
+";
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    match dispatch(argv) {
+        Ok(output) => {
+            println!("{output}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            eprintln!("\n{USAGE}");
+            1
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<String> {
+    if argv.is_empty() {
+        bail!("missing command");
+    }
+    let cmd = argv[0].as_str();
+    let rest = &argv[1..];
+    match cmd {
+        "figure" => {
+            if rest.is_empty() {
+                bail!("figure: missing id");
+            }
+            let args = Args::parse(&rest[1..])?;
+            commands::figure(&rest[0], &args)
+        }
+        "simulate" => commands::simulate(&Args::parse(rest)?),
+        "compress" => commands::compress(&Args::parse(rest)?),
+        "golden" => commands::golden(&Args::parse(rest)?),
+        "info" => Ok(commands::info()),
+        "help" | "--help" | "-h" => Ok(USAGE.to_string()),
+        other => bail!("unknown command `{other}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn help_renders() {
+        assert!(dispatch(&sv(&["help"])).unwrap().contains("COMMANDS"));
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&sv(&["bogus"])).is_err());
+        assert!(dispatch(&[]).is_err());
+    }
+
+    #[test]
+    fn table1_via_cli() {
+        let out = dispatch(&sv(&["figure", "table1"])).unwrap();
+        assert!(out.contains("T_PU"));
+    }
+
+    #[test]
+    fn info_lists_models() {
+        let out = dispatch(&sv(&["info"])).unwrap();
+        assert!(out.contains("alexnet") && out.contains("googlenet"));
+    }
+}

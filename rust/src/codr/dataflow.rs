@@ -1,0 +1,426 @@
+//! CoDR stats-path simulation: walk the Fig 5a loop nest over the real
+//! encoded weight streams, counting SRAM/RF/DRAM accesses, ALU operations
+//! (split by Δ precision), crossbar transfers and cycles.
+//!
+//! All counts are *exact* functions of the encoded weights and the loop
+//! structure — the same quantities a cycle-by-cycle replay would sum, but
+//! computed per spatial-tile *class* (interior / right edge / bottom edge
+//! / corner share identical per-tile work) so whole VGG16 layers simulate
+//! in milliseconds.
+
+use super::Codr;
+use crate::arch::MemoryKind;
+use crate::models::LayerSpec;
+use crate::reuse::{transform_layer_ucr, UcrVector};
+use crate::rle::{encode_layer_refs, CoderSpec, EncodedLayer};
+use crate::sim::LayerResult;
+use crate::tensor::Weights;
+
+/// Per-vector quantities the dataflow loop needs (derived once from the
+/// UCR vectors + chosen RLE parameters).
+#[derive(Clone, Debug)]
+pub(crate) struct VectorMeta {
+    /// Encoded entries: uniques + count-overflow dummies.
+    pub entries: u64,
+    /// Entries whose Δ is encoded low-precision (includes dummies).
+    pub entries_low: u64,
+    /// Entries encoded full-precision (vector firsts + large Δs).
+    pub entries_full: u64,
+    /// Total decoded indexes (= non-zero weights).
+    pub nnz: u64,
+    /// Index count routed to each APE (`m_local`).
+    pub per_ape: Vec<u64>,
+}
+
+impl VectorMeta {
+    pub fn new(u: &UcrVector, delta_bits: u32, count_bits: u32, t_m: usize, kernel: usize) -> Self {
+        let cap = (1u64 << count_bits) - 1;
+        let mut entries = 0u64;
+        for &c in &u.counts {
+            // Continuation chunking: ⌈c / (2^r − 1)⌉ chunks per unique.
+            entries += 1 + (c as u64 - 1) / cap;
+        }
+        let dummies = entries - u.uniques.len() as u64;
+        let deltas = u.deltas();
+        let mut low = dummies; // dummies are Δ=0 → always low precision
+        let mut full = 0u64;
+        for (i, &d) in deltas.iter().enumerate() {
+            if i == 0 {
+                full += 1; // vector-first absolute
+            } else if (d as u32) < (1u32 << delta_bits) {
+                low += 1;
+            } else {
+                full += 1;
+            }
+        }
+        if u.uniques.is_empty() {
+            full = 0;
+        }
+        let mut per_ape = vec![0u64; t_m];
+        for group in &u.indexes {
+            for &idx in group {
+                per_ape[idx as usize / kernel] += 1;
+            }
+        }
+        VectorMeta {
+            entries,
+            entries_low: low,
+            entries_full: full,
+            nnz: u.nnz() as u64,
+            per_ape,
+        }
+    }
+}
+
+/// A spatial-tile class: `count` tiles of `ro×co` outputs each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct SpatialClass {
+    pub ro: usize,
+    pub co: usize,
+    pub count: u64,
+}
+
+/// Partition `r_o × c_o` outputs into tiles of at most `t_ro × t_co`,
+/// grouped into ≤4 classes (interior, right edge, bottom edge, corner).
+pub(crate) fn spatial_classes(r_o: usize, c_o: usize, t_ro: usize, t_co: usize) -> Vec<SpatialClass> {
+    let full_r = r_o / t_ro;
+    let rem_r = r_o % t_ro;
+    let full_c = c_o / t_co;
+    let rem_c = c_o % t_co;
+    let mut classes = Vec::new();
+    let mut push = |ro: usize, co: usize, count: u64| {
+        if ro > 0 && co > 0 && count > 0 {
+            classes.push(SpatialClass { ro, co, count });
+        }
+    };
+    push(t_ro, t_co, (full_r * full_c) as u64);
+    push(t_ro, rem_c, full_r as u64);
+    push(rem_r, t_co, full_c as u64);
+    push(rem_r, rem_c, 1);
+    classes
+}
+
+/// Simulate one conv layer on the CoDR design. See module docs.
+pub fn simulate_layer(design: &Codr, spec: &LayerSpec, weights: &Weights) -> LayerResult {
+    let cfg = &design.cfg;
+    let tiled = transform_layer_ucr(spec, weights, cfg.t_n, cfg.t_m);
+    let coder_spec = CoderSpec::new(cfg.t_m * spec.r_k * spec.r_k);
+    let all_vectors: Vec<&UcrVector> = tiled.iter().flatten().collect();
+    let enc = encode_layer_refs(&all_vectors, coder_spec);
+    simulate_encoded(design, spec, &tiled, &enc)
+}
+
+/// Inner simulation over pre-transformed tiles + encoded layer (shared
+/// with tests that need to poke at the intermediate state).
+pub(crate) fn simulate_encoded(
+    design: &Codr,
+    spec: &LayerSpec,
+    tiled: &[Vec<UcrVector>],
+    enc: &EncodedLayer,
+) -> LayerResult {
+    let cfg = &design.cfg;
+    let kernel = spec.r_k * spec.r_k;
+    let n_m_tiles = spec.m.div_ceil(cfg.t_m);
+    let n_n_tiles = spec.n.div_ceil(cfg.t_n);
+    debug_assert_eq!(tiled.len(), n_m_tiles * n_n_tiles);
+
+    // Per-(m_tile, n_tile) vector metadata.
+    let metas: Vec<Vec<VectorMeta>> = tiled
+        .iter()
+        .map(|vs| {
+            vs.iter()
+                .map(|u| {
+                    VectorMeta::new(u, enc.params.delta_bits, enc.params.count_bits, cfg.t_m, kernel)
+                })
+                .collect()
+        })
+        .collect();
+
+    let t_ro_eff = cfg.t_ro_eff(spec.r_k, spec.stride);
+    let t_co_eff = cfg.t_co_eff(spec.r_k, spec.stride);
+    let classes = spatial_classes(spec.r_o(), spec.r_o(), t_ro_eff, t_co_eff);
+    let n_sp: u64 = classes.iter().map(|c| c.count).sum();
+    let n_m_groups = n_m_tiles.div_ceil(cfg.t_pu);
+
+    let mut res = LayerResult {
+        layer: spec.name.clone(),
+        compression: enc.stats(spec.num_weights()),
+        ..Default::default()
+    };
+    let mem = &mut res.mem;
+    let alu = &mut res.alu;
+    alu.delta_bits = enc.params.delta_bits;
+    alu.xbar_bits = 16;
+
+    // --- Per-layer (loop-invariant) traffic -------------------------------
+    let total_weight_bits = res.compression.encoded_bits as u64;
+    // ① The compressed stream is re-read from Weight SRAM once per spatial
+    // tile (weights are the cheap thing to re-read — §III-B). Accesses are
+    // counted per decoded structure element (Δ + count per entry, one
+    // index per repetition — the Fig 7 convention); energy is priced on
+    // the stream bits, word-amortized (see `energy::price_layer`).
+    let total_elements: u64 = metas
+        .iter()
+        .flat_map(|v| v.iter())
+        .map(|m| 2 * m.entries + m.nnz)
+        .sum();
+    mem.record(MemoryKind::WeightSram, total_elements * n_sp, 0);
+    mem.counter_mut(MemoryKind::WeightSram).bits += total_weight_bits * n_sp;
+    // Weight RF is filled from the SRAM words once per spatial pass.
+    mem.record(
+        MemoryKind::WeightRf,
+        (total_weight_bits * n_sp).div_ceil(design.mem.sram_word_bits as u64),
+        design.mem.sram_word_bits as u64,
+    );
+    // ④ Fully output stationary: each output feature written exactly once.
+    mem.record(MemoryKind::OutputSram, spec.output_features() as u64, 8);
+    // DRAM: compressed weights + raw features, each moved once.
+    mem.record(MemoryKind::Dram, 1, total_weight_bits);
+    mem.record(MemoryKind::Dram, 1, spec.input_features() as u64 * 8);
+    mem.record(MemoryKind::Dram, 1, spec.output_features() as u64 * 8);
+
+    // --- Loop nest ---------------------------------------------------------
+    // MLP-array multipliers available per MPE.
+    let mults_per_mpe = (cfg.mults_per_pu / cfg.t_n).max(1);
+
+    for class in &classes {
+        // Input tile actually needed for this output tile.
+        let t_ri_a = (class.ro - 1) * spec.stride + spec.r_k;
+        let t_ci_a = (class.co - 1) * spec.stride + spec.r_k;
+        let elems_in = (t_ri_a * t_ci_a) as u64;
+        let elems_out = (class.ro * class.co) as u64;
+
+        for g in 0..n_m_groups {
+            for nt in 0..n_n_tiles {
+                let t_n_actual = cfg.t_n.min(spec.n - nt * cfg.t_n);
+                // ② Input tile fetched once per (spatial, m-group, n-tile),
+                // shared by ALL PUs through the Input RF (Fig 5a).
+                let in_reads = t_n_actual as u64 * elems_in;
+                mem.record(MemoryKind::InputSram, class.count * in_reads, 8);
+                // RF filled in 64-bit words (8 features per write).
+                mem.record(
+                    MemoryKind::InputRf,
+                    (class.count * in_reads).div_ceil(8),
+                    64,
+                );
+
+                let mut group_cycles = 0u64;
+                for p in 0..cfg.t_pu {
+                    let mt = g * cfg.t_pu + p;
+                    if mt >= n_m_tiles {
+                        break;
+                    }
+                    let vec_metas = &metas[mt * n_n_tiles + nt];
+                    let mut pu_mpe_cycles = 0u64;
+                    let mut ape_load = vec![0u64; cfg.t_m];
+                    for m in vec_metas {
+                        // MLP array: every entry multiplies its Δ by the
+                        // whole input tile; the matrix-matrix accumulator
+                        // adds it to the running product.
+                        alu.mults_low += class.count * m.entries_low * elems_in;
+                        alu.mults_full += class.count * m.entries_full * elems_in;
+                        alu.adds += class.count * m.entries * elems_in;
+                        // The MLP array streams the tile from the Input RF
+                        // in 64-bit words (8 operands per access) — wide,
+                        // regular access is CoDR's RF advantage over the
+                        // baselines' scalar gathers.
+                        mem.record(
+                            MemoryKind::InputRf,
+                            (class.count * m.entries * elems_in).div_ceil(8),
+                            64,
+                        );
+                        // Decoder reads structures from the Weight RF:
+                        // Δ + count per entry, one index per repetition.
+                        mem.record(
+                            MemoryKind::WeightRf,
+                            class.count * (2 * m.entries + m.nnz),
+                            8,
+                        );
+                        // Selector routes one window per index to its APE.
+                        alu.xbar_transfers += class.count * m.nnz * elems_out;
+                        // APE: accumulate the window into the Output RF —
+                        // read + write per index, in 64-bit words (two
+                        // 32-bit partials per access).
+                        alu.adds += class.count * m.nnz * elems_out;
+                        mem.record(
+                            MemoryKind::OutputRf,
+                            class.count * 2 * m.nnz * elems_out.div_ceil(2),
+                            64,
+                        );
+                        // MPE occupancy: ceil(tile/mults) cycles per entry
+                        // for the multiply, plus one selector cycle per
+                        // index (decode overlaps).
+                        let mpe = m.entries * elems_in.div_ceil(mults_per_mpe as u64) + m.nnz;
+                        pu_mpe_cycles = pu_mpe_cycles.max(mpe);
+                        for (a, &c) in m.per_ape.iter().enumerate() {
+                            ape_load[a] += c;
+                        }
+                    }
+                    // Each APE accepts one window per cycle — MPEs racing
+                    // to the same APE serialize on the interconnect.
+                    let ape_max = ape_load.iter().copied().max().unwrap_or(0);
+                    group_cycles = group_cycles.max(pu_mpe_cycles.max(ape_max));
+                }
+                res.cycles += class.count * group_cycles;
+            }
+        }
+    }
+
+    // Output RF → Output SRAM drain already counted (writes once). The
+    // Output RF also pays one final read per output feature for the drain.
+    mem.record(MemoryKind::OutputRf, spec.output_features() as u64, 32);
+
+    res.finish(&design.cacti, &design.mem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{synthesize_weights, LayerKind};
+    use crate::sim::Accelerator;
+    use crate::util::rng::Rng;
+
+    fn layer(n: usize, m: usize, r_i: usize, r_k: usize, stride: usize, pad: usize) -> LayerSpec {
+        LayerSpec {
+            name: "test".into(),
+            kind: LayerKind::Conv,
+            n,
+            m,
+            r_i,
+            r_k,
+            stride,
+            pad,
+            sigma_q: 15.0,
+            zero_frac: 0.5,
+        }
+    }
+
+    fn sim(spec: &LayerSpec, seed: u64) -> LayerResult {
+        let mut rng = Rng::new(seed);
+        let w = synthesize_weights(spec, &mut rng);
+        Codr::default().simulate_layer(spec, &w)
+    }
+
+    #[test]
+    fn spatial_classes_cover_output_exactly() {
+        for (ro, co, t) in [(55, 55, 8), (13, 13, 8), (7, 7, 8), (16, 16, 8), (3, 3, 8)] {
+            let cls = spatial_classes(ro, co, t, t);
+            let covered: u64 = cls.iter().map(|c| (c.ro * c.co) as u64 * c.count).sum();
+            assert_eq!(covered, (ro * co) as u64, "ro={ro} co={co}");
+            assert!(cls.len() <= 4);
+        }
+    }
+
+    #[test]
+    fn output_features_written_exactly_once() {
+        // The headline dataflow property: fully output stationary.
+        let spec = layer(8, 16, 14, 3, 1, 1);
+        let r = sim(&spec, 1);
+        assert_eq!(r.mem.output_sram.accesses, spec.output_features() as u64);
+    }
+
+    #[test]
+    fn input_fetch_count_matches_paper_formula() {
+        // §III-B: input features are fetched M/(T_PU·T_M) times (with halo
+        // overhead for the kernel skirt). M=64 → 64/32 = 2 passes.
+        let spec = layer(4, 64, 16, 3, 1, 1);
+        let r = sim(&spec, 2);
+        let passes = (spec.m as f64 / 32.0).ceil();
+        let base = spec.input_features() as f64 * passes;
+        let reads = r.mem.input_sram.accesses as f64;
+        // Halo factor for 8×8 tiles of a 3×3 kernel: (10/8)² ≈ 1.56.
+        assert!(reads >= base, "reads {reads} < base {base}");
+        assert!(reads <= base * 1.8, "reads {reads} vs base {base} halo too big");
+    }
+
+    #[test]
+    fn doubling_m_doubles_input_passes() {
+        let spec1 = layer(8, 32, 14, 3, 1, 1);
+        let spec2 = layer(8, 256, 14, 3, 1, 1);
+        let r1 = sim(&spec1, 3);
+        let r2 = sim(&spec2, 3);
+        // M=32 → 1 pass; M=256 → 8 passes.
+        let ratio = r2.mem.input_sram.accesses as f64 / r1.mem.input_sram.accesses as f64;
+        assert!((6.0..10.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn weight_traffic_scales_with_spatial_tiles() {
+        // Weights are re-read once per spatial tile — the deliberate trade
+        // (§III-B): cheap weight re-reads buy input/output stationarity.
+        let small = layer(8, 8, 8, 3, 1, 1); // 8×8 out → 1 tile
+        let big = layer(8, 8, 32, 3, 1, 1); // 32×32 out → 16 tiles
+        let rs = sim(&small, 4);
+        let rb = sim(&big, 4);
+        let ratio = rb.mem.weight_sram.bits as f64 / rs.mem.weight_sram.bits as f64;
+        assert!((14.0..18.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn sparser_weights_mean_fewer_multiplies() {
+        let mut spec = layer(16, 16, 14, 3, 1, 1);
+        spec.zero_frac = 0.2;
+        let dense = sim(&spec, 5);
+        spec.zero_frac = 0.9;
+        let sparse = sim(&spec, 5);
+        assert!(sparse.alu.mults() < dense.alu.mults());
+        assert!(sparse.cycles < dense.cycles);
+    }
+
+    #[test]
+    fn repetition_cuts_multiplies_not_adds() {
+        // Limiting unique weights (more repetition) reduces scalar-matrix
+        // multiplies while APE accumulations track nnz.
+        let spec = layer(16, 16, 14, 3, 1, 1);
+        let mut rng = Rng::new(6);
+        let w = synthesize_weights(&spec, &mut rng);
+        let mut w_lim = w.clone();
+        crate::quant::limit_unique_weights(w_lim.data_mut(), 8);
+        let codr = Codr::default();
+        let r = codr.simulate_layer(&spec, &w);
+        let r_lim = codr.simulate_layer(&spec, &w_lim);
+        assert!(r_lim.alu.mults() < r.alu.mults());
+    }
+
+    #[test]
+    fn dram_weight_traffic_is_compressed_size() {
+        let spec = layer(8, 16, 14, 3, 1, 1);
+        let r = sim(&spec, 7);
+        let feat_bits = (spec.input_features() + spec.output_features()) as u64 * 8;
+        assert_eq!(
+            r.mem.dram.bits,
+            r.compression.encoded_bits as u64 + feat_bits
+        );
+    }
+
+    #[test]
+    fn cycles_positive_and_bounded_by_serial_work() {
+        let spec = layer(16, 32, 14, 3, 1, 1);
+        let r = sim(&spec, 8);
+        assert!(r.cycles > 0);
+        // Parallel cycles can't exceed total MPE work done serially.
+        let serial = r.alu.mults() + r.alu.adds;
+        assert!(r.cycles < serial);
+    }
+
+    #[test]
+    fn energy_breakdown_nonzero_components() {
+        let spec = layer(16, 32, 14, 3, 1, 1);
+        let r = sim(&spec, 9);
+        assert!(r.energy.dram_uj > 0.0);
+        assert!(r.energy.sram_uj > 0.0);
+        assert!(r.energy.rf_uj > 0.0);
+        assert!(r.energy.alu_uj > 0.0);
+        assert!(r.energy.xbar_uj > 0.0);
+    }
+
+    #[test]
+    fn alexnet_conv1_strided_tiling() {
+        // 11×11 stride 4: T_RO_eff = 3, so the 55×55 output needs
+        // ceil(55/3)² = 361 spatial tiles; the sim must not blow up.
+        let spec = layer(3, 96, 227, 11, 4, 0);
+        let r = sim(&spec, 10);
+        assert!(r.cycles > 0);
+        assert_eq!(r.mem.output_sram.accesses, spec.output_features() as u64);
+    }
+}

@@ -1,0 +1,64 @@
+//! The CoDR accelerator model (paper §IV).
+//!
+//! Architecture (Fig 5): `T_PU` processing units share an Input RF; each
+//! PU holds `T_N` Multiplier PEs (MPE) and `T_M` Accumulator PEs (APE)
+//! joined by an interconnect. An MPE decodes the compressed weight
+//! structures, multiplies each unique-weight **Δ** by the VMEM-resident
+//! input tile (differential scalar-matrix multiply, Fig 3b), and the
+//! Selector routes `T_RO×T_CO` windows of the running product matrix to
+//! the APE named by each decoded index.
+//!
+//! Dataflow loop ordering (Fig 5a, circled ④→①):
+//!
+//! ```text
+//! ④ for each output spatial tile            (output stationary: outputs
+//! ③   for each output-channel group          written exactly once)
+//! ②     for each input-channel tile         (inputs fetched
+//! ①       stream the compressed weights      M/(T_PU·T_M) times)
+//! ```
+//!
+//! [`dataflow`] walks this loop nest counting every access, ALU op and
+//! cycle *exactly* (from the real encoded streams) without executing
+//! MACs; [`functional`] executes the same datapath — decode, differential
+//! multiply, index routing, accumulation — and must reproduce
+//! [`crate::tensor::conv2d`] bit-for-bit.
+
+pub mod dataflow;
+pub mod functional;
+
+use crate::arch::TileConfig;
+use crate::models::LayerSpec;
+use crate::sim::{Accelerator, LayerResult};
+use crate::tensor::Weights;
+
+/// The CoDR design at its Table I configuration.
+#[derive(Clone, Debug)]
+pub struct Codr {
+    pub cfg: TileConfig,
+    pub cacti: crate::arch::CactiLite,
+    pub mem: crate::arch::MemConfig,
+}
+
+impl Default for Codr {
+    fn default() -> Self {
+        Codr {
+            cfg: TileConfig::codr(),
+            cacti: crate::arch::CactiLite::default(),
+            mem: crate::arch::MemConfig::default(),
+        }
+    }
+}
+
+impl Accelerator for Codr {
+    fn name(&self) -> &'static str {
+        "CoDR"
+    }
+
+    fn tile_config(&self) -> TileConfig {
+        self.cfg
+    }
+
+    fn simulate_layer(&self, spec: &LayerSpec, weights: &Weights) -> LayerResult {
+        dataflow::simulate_layer(self, spec, weights)
+    }
+}

@@ -1,0 +1,194 @@
+//! Sweep coordinator: fans the (model × sweep-group × architecture) grid
+//! out over a thread pool, caches per-point results, and computes the
+//! paper's headline aggregates.
+//!
+//! tokio is unavailable in the offline registry; the pool is
+//! `std::thread::scope` over a lock-free work queue (atomic cursor),
+//! which is the right shape for this embarrassingly parallel sweep.
+
+pub mod pool;
+
+use crate::baselines::{Scnn, Ucnn};
+use crate::codr::Codr;
+use crate::models::{Model, SweepGroup, Workload};
+use crate::sim::{simulate_model, Accelerator, ModelResult};
+
+/// The three designs of the evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Codr,
+    Ucnn,
+    Scnn,
+}
+
+impl Arch {
+    pub fn all() -> [Arch; 3] {
+        [Arch::Codr, Arch::Ucnn, Arch::Scnn]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Codr => "CoDR",
+            Arch::Ucnn => "UCNN",
+            Arch::Scnn => "SCNN",
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn Accelerator> {
+        match self {
+            Arch::Codr => Box::new(Codr::default()),
+            Arch::Ucnn => Box::new(Ucnn::default()),
+            Arch::Scnn => Box::new(Scnn::default()),
+        }
+    }
+}
+
+/// All results of a sweep, queryable by (model, group, arch).
+#[derive(Debug, Default)]
+pub struct SweepResults {
+    pub results: Vec<ModelResult>,
+}
+
+impl SweepResults {
+    pub fn get(&self, model: &str, group: SweepGroup, arch: Arch) -> Option<&ModelResult> {
+        self.results
+            .iter()
+            .find(|r| r.model == model && r.group == group.label() && r.arch == arch.name())
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut m: Vec<String> = self.results.iter().map(|r| r.model.clone()).collect();
+        m.sort();
+        m.dedup();
+        m
+    }
+}
+
+/// Run the full (or restricted) evaluation grid in parallel.
+///
+/// Workload generation is seeded per (model, knobs), so results are
+/// deterministic regardless of scheduling.
+pub fn run_sweep(
+    models: &[Model],
+    groups: &[SweepGroup],
+    archs: &[Arch],
+    seed: u64,
+) -> SweepResults {
+    // Parallelize over (model × group); each worker synthesizes the
+    // workload once and runs every design on it (the weights are shared —
+    // regenerating them per design tripled the sweep cost, §Perf).
+    let mut points = Vec::new();
+    for model in models {
+        for &group in groups {
+            points.push((model.clone(), group));
+        }
+    }
+    let nested = pool::parallel_map(&points, |(model, group)| {
+        let (unique, density) = group.knobs();
+        let workload = Workload::generate(model, unique, density, seed);
+        archs
+            .iter()
+            .map(|arch| {
+                let acc = arch.build();
+                simulate_model(acc.as_ref(), &workload, &group.label())
+            })
+            .collect::<Vec<_>>()
+    });
+    SweepResults {
+        results: nested.into_iter().flatten().collect(),
+    }
+}
+
+/// The abstract's headline comparisons at the original sweep group,
+/// aggregated over the given models (ratios of sums, as the paper does).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Headline {
+    /// CoDR compression improvement over UCNN / SCNN (paper: 1.69×, 2.80×).
+    pub compression_vs_ucnn: f64,
+    pub compression_vs_scnn: f64,
+    /// SRAM access reduction (paper: 5.08×, 7.99×).
+    pub sram_vs_ucnn: f64,
+    pub sram_vs_scnn: f64,
+    /// Energy reduction (paper: 3.76×, 6.84×).
+    pub energy_vs_ucnn: f64,
+    pub energy_vs_scnn: f64,
+    /// CoDR's average compressed bits per weight (paper: ≈1.69).
+    pub codr_bits_per_weight: f64,
+}
+
+/// Compute the headline ratios from sweep results at [`SweepGroup::Original`].
+pub fn headline(results: &SweepResults, models: &[&str]) -> Headline {
+    let mut agg = std::collections::HashMap::new();
+    for &arch in &Arch::all() {
+        let mut bits = 0f64;
+        let mut weights = 0f64;
+        let mut sram = 0f64;
+        let mut energy = 0f64;
+        for model in models {
+            let r = results
+                .get(model, SweepGroup::Original, arch)
+                .unwrap_or_else(|| panic!("missing sweep point {model}/{}", arch.name()));
+            let c = r.compression();
+            bits += c.encoded_bits as f64;
+            weights += c.num_weights as f64;
+            sram += r.mem().sram_accesses() as f64;
+            energy += r.energy().total_uj();
+        }
+        agg.insert(arch, (bits / weights, sram, energy));
+    }
+    let codr = agg[&Arch::Codr];
+    let ucnn = agg[&Arch::Ucnn];
+    let scnn = agg[&Arch::Scnn];
+    Headline {
+        compression_vs_ucnn: ucnn.0 / codr.0,
+        compression_vs_scnn: scnn.0 / codr.0,
+        sram_vs_ucnn: ucnn.1 / codr.1,
+        sram_vs_scnn: scnn.1 / codr.1,
+        energy_vs_ucnn: ucnn.2 / codr.2,
+        energy_vs_scnn: scnn.2 / codr.2,
+        codr_bits_per_weight: codr.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::tiny_cnn;
+
+    #[test]
+    fn sweep_covers_grid_and_is_deterministic() {
+        let models = [tiny_cnn()];
+        let groups = [SweepGroup::Original, SweepGroup::Density(50)];
+        let archs = [Arch::Codr, Arch::Scnn];
+        let a = run_sweep(&models, &groups, &archs, 42);
+        assert_eq!(a.results.len(), 4);
+        let b = run_sweep(&models, &groups, &archs, 42);
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.cycles(), y.cycles());
+            assert_eq!(x.mem(), y.mem());
+        }
+    }
+
+    #[test]
+    fn lookup_by_point() {
+        let models = [tiny_cnn()];
+        let r = run_sweep(&models, &[SweepGroup::Original], &[Arch::Ucnn], 1);
+        assert!(r.get("tiny", SweepGroup::Original, Arch::Ucnn).is_some());
+        assert!(r.get("tiny", SweepGroup::Original, Arch::Codr).is_none());
+        assert!(r.get("alexnet", SweepGroup::Original, Arch::Ucnn).is_none());
+    }
+
+    #[test]
+    fn headline_ratios_favor_codr_on_tiny() {
+        let models = [tiny_cnn()];
+        let r = run_sweep(&models, &[SweepGroup::Original], &Arch::all(), 7);
+        let h = headline(&r, &["tiny"]);
+        assert!(h.compression_vs_ucnn > 1.0, "{h:?}");
+        assert!(h.compression_vs_scnn > 1.0, "{h:?}");
+        assert!(h.sram_vs_ucnn > 1.0, "{h:?}");
+        assert!(h.sram_vs_scnn > 1.0, "{h:?}");
+        assert!(h.energy_vs_ucnn > 1.0, "{h:?}");
+        assert!(h.energy_vs_scnn > 1.0, "{h:?}");
+    }
+}

@@ -1,0 +1,97 @@
+//! A minimal scoped thread pool: `parallel_map` over a slice with an
+//! atomic work cursor. Order-preserving (results land at their input
+//! index), panic-propagating, and allocation-light.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items` using up to `available_parallelism` threads.
+/// Results are returned in input order.
+pub fn parallel_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    parallel_map_with(items, default_threads(), f)
+}
+
+/// Number of worker threads used by [`parallel_map`].
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Map with an explicit thread count.
+pub fn parallel_map_with<T: Sync, R: Send>(
+    items: &[T],
+    threads: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads == 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker skipped a slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn maps_in_order() {
+        let xs: Vec<u64> = (0..100).collect();
+        let ys = parallel_map(&xs, |&x| x * x);
+        assert_eq!(ys, xs.iter().map(|&x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let xs: Vec<u32> = vec![];
+        assert!(parallel_map(&xs, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn single_item() {
+        assert_eq!(parallel_map(&[7], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let calls = AtomicU64::new(0);
+        let xs: Vec<usize> = (0..57).collect();
+        let ys = parallel_map_with(&xs, 8, |&x| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 57);
+        assert_eq!(ys, xs);
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_worker_panics() {
+        let xs: Vec<u32> = (0..16).collect();
+        let _ = parallel_map_with(&xs, 4, |&x| {
+            if x == 7 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+}

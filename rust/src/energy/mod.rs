@@ -1,0 +1,238 @@
+//! Energy accounting (paper §V-D, Fig 8).
+//!
+//! Prices the traffic recorded in [`crate::arch::MemoryStats`] plus the
+//! ALU and crossbar activity with the [`crate::arch::CactiLite`] model,
+//! yielding the five-way breakdown the paper reports: DRAM, SRAM, RF,
+//! ALU, crossbar.
+
+use crate::arch::{CactiLite, MemConfig, MemoryStats};
+
+/// Datapath activity of one simulated layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AluStats {
+    /// Full-precision multiplies (8×8).
+    pub mults_full: u64,
+    /// Low-precision differential multiplies (Δ fits the layer's k bits),
+    /// paired with the k they were executed at via `delta_bits`.
+    pub mults_low: u64,
+    /// The low-precision Δ width in effect (bits).
+    pub delta_bits: u32,
+    /// 32-bit accumulations.
+    pub adds: u64,
+    /// Crossbar/interconnect flits (each `xbar_bits` wide).
+    pub xbar_transfers: u64,
+    /// Crossbar flit width.
+    pub xbar_bits: u32,
+}
+
+impl AluStats {
+    pub fn mults(&self) -> u64 {
+        self.mults_full + self.mults_low
+    }
+
+    pub fn add(&mut self, o: &AluStats) {
+        self.mults_full += o.mults_full;
+        self.mults_low += o.mults_low;
+        // Widths are per-layer; keep the max for a conservative aggregate.
+        self.delta_bits = self.delta_bits.max(o.delta_bits);
+        self.adds += o.adds;
+        self.xbar_transfers += o.xbar_transfers;
+        self.xbar_bits = self.xbar_bits.max(o.xbar_bits);
+        // Aggregate low-mult energy is priced per layer before summing, so
+        // the max width here is only used for reporting.
+    }
+}
+
+/// Energy breakdown in µJ — the Fig 8 bars.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub dram_uj: f64,
+    pub sram_uj: f64,
+    pub rf_uj: f64,
+    pub alu_uj: f64,
+    pub xbar_uj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_uj(&self) -> f64 {
+        self.dram_uj + self.sram_uj + self.rf_uj + self.alu_uj + self.xbar_uj
+    }
+
+    pub fn add(&mut self, o: &EnergyBreakdown) {
+        self.dram_uj += o.dram_uj;
+        self.sram_uj += o.sram_uj;
+        self.rf_uj += o.rf_uj;
+        self.alu_uj += o.alu_uj;
+        self.xbar_uj += o.xbar_uj;
+    }
+
+    /// Fraction of total spent in a component (for §V-D's percentages).
+    pub fn fraction(&self, component_uj: f64) -> f64 {
+        let t = self.total_uj();
+        if t == 0.0 {
+            0.0
+        } else {
+            component_uj / t
+        }
+    }
+}
+
+const PJ_TO_UJ: f64 = 1e-6;
+
+/// Price one layer's activity.
+///
+/// SRAM accesses are priced at their recorded *access* granularity: each
+/// access of `bits/accesses` width pays `CactiLite::sram_access_pj` on its
+/// array. RF accesses likewise. This is where the §V-C observation comes
+/// from: a 64-bit compressed-weight word access costs little more than an
+/// 8-bit feature access but carries ~38 weights.
+pub fn price_layer(
+    mem: &MemoryStats,
+    alu: &AluStats,
+    cacti: &CactiLite,
+    cfg: &MemConfig,
+) -> EnergyBreakdown {
+    let price_sram = |c: &crate::arch::AccessCounter, size_kb: f64| -> f64 {
+        if c.accesses == 0 {
+            return 0.0;
+        }
+        let width = (c.bits / c.accesses) as u32;
+        c.accesses as f64 * cacti.sram_access_pj(size_kb, width)
+    };
+    // Weight SRAM is *streamed*: accesses are counted per decoded
+    // structure element (Fig 7's x-axis), but the array is physically read
+    // in full words, so the energy is word-amortized over the stream bits.
+    // This is exactly the paper's §V-C observation — a weight access costs
+    // 20.61× less than a feature access because it carries ~1.7 bits of a
+    // 64-bit word, not a full array activation.
+    let price_weight_stream = |c: &crate::arch::AccessCounter, size_kb: f64| -> f64 {
+        let words = c.bits as f64 / cfg.sram_word_bits as f64;
+        words * cacti.sram_access_pj(size_kb, cfg.sram_word_bits)
+    };
+    let price_rf = |c: &crate::arch::AccessCounter| -> f64 {
+        if c.accesses == 0 {
+            return 0.0;
+        }
+        let width = (c.bits / c.accesses) as u32;
+        c.accesses as f64 * cacti.rf_access_pj(width)
+    };
+
+    let sram_pj = price_sram(&mem.input_sram, cfg.input_sram_kb)
+        + price_sram(&mem.output_sram, cfg.output_sram_kb)
+        + price_weight_stream(&mem.weight_sram, cfg.weight_sram_kb);
+    let rf_pj = price_rf(&mem.input_rf) + price_rf(&mem.weight_rf) + price_rf(&mem.output_rf);
+    let dram_pj = cacti.dram_pj(mem.dram.bits);
+    let alu_pj = alu.mults_full as f64 * cacti.mult_pj(8, 8)
+        + alu.mults_low as f64 * cacti.mult_pj(alu.delta_bits.max(1), 8)
+        + alu.adds as f64 * cacti.add32_pj;
+    let xbar_pj = alu.xbar_transfers as f64 * cacti.xbar_pj(alu.xbar_bits);
+
+    EnergyBreakdown {
+        dram_uj: dram_pj * PJ_TO_UJ,
+        sram_uj: sram_pj * PJ_TO_UJ,
+        rf_uj: rf_pj * PJ_TO_UJ,
+        alu_uj: alu_pj * PJ_TO_UJ,
+        xbar_uj: xbar_pj * PJ_TO_UJ,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MemoryKind;
+
+    fn cacti() -> CactiLite {
+        CactiLite::default()
+    }
+
+    #[test]
+    fn empty_layer_costs_nothing() {
+        let e = price_layer(
+            &MemoryStats::default(),
+            &AluStats::default(),
+            &cacti(),
+            &MemConfig::default(),
+        );
+        assert_eq!(e.total_uj(), 0.0);
+    }
+
+    #[test]
+    fn dram_priced_at_160pj_per_byte() {
+        let mut mem = MemoryStats::default();
+        mem.record(MemoryKind::Dram, 1, 8 * 1_000_000); // 1 MB
+        let e = price_layer(&mem, &AluStats::default(), &cacti(), &MemConfig::default());
+        assert!((e.dram_uj - 160.0).abs() < 1e-9, "dram {}", e.dram_uj);
+    }
+
+    #[test]
+    fn low_precision_mults_cost_less() {
+        let full = AluStats {
+            mults_full: 1000,
+            ..Default::default()
+        };
+        let low = AluStats {
+            mults_low: 1000,
+            delta_bits: 2,
+            ..Default::default()
+        };
+        let c = cacti();
+        let cfg = MemConfig::default();
+        let e_full = price_layer(&MemoryStats::default(), &full, &c, &cfg);
+        let e_low = price_layer(&MemoryStats::default(), &low, &c, &cfg);
+        assert!(e_low.alu_uj < e_full.alu_uj / 2.0);
+    }
+
+    #[test]
+    fn wide_sram_access_costs_more_but_sublinearly() {
+        let mut narrow = MemoryStats::default();
+        narrow.record(MemoryKind::InputSram, 64, 8); // 64 × 8-bit
+        let mut wide = MemoryStats::default();
+        wide.record(MemoryKind::InputSram, 8, 64); // 8 × 64-bit (same bits)
+        let c = cacti();
+        let cfg = MemConfig::default();
+        let e_n = price_layer(&narrow, &AluStats::default(), &c, &cfg);
+        let e_w = price_layer(&wide, &AluStats::default(), &c, &cfg);
+        // Same traffic in fewer, wider accesses is cheaper (amortized
+        // array cost) — the §V-C weight-streaming advantage.
+        assert!(e_w.sram_uj < e_n.sram_uj);
+    }
+
+    #[test]
+    fn breakdown_adds_and_fractions() {
+        let mut a = EnergyBreakdown {
+            dram_uj: 1.0,
+            sram_uj: 2.0,
+            rf_uj: 3.0,
+            alu_uj: 4.0,
+            xbar_uj: 0.0,
+        };
+        let b = a;
+        a.add(&b);
+        assert_eq!(a.total_uj(), 20.0);
+        assert!((a.fraction(a.alu_uj) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alu_stats_merge() {
+        let mut a = AluStats {
+            mults_full: 10,
+            mults_low: 5,
+            delta_bits: 2,
+            adds: 7,
+            xbar_transfers: 3,
+            xbar_bits: 32,
+        };
+        a.add(&AluStats {
+            mults_full: 1,
+            mults_low: 2,
+            delta_bits: 4,
+            adds: 3,
+            xbar_transfers: 4,
+            xbar_bits: 16,
+        });
+        assert_eq!(a.mults(), 18);
+        assert_eq!(a.adds, 10);
+        assert_eq!(a.delta_bits, 4);
+        assert_eq!(a.xbar_transfers, 7);
+    }
+}

@@ -1,0 +1,37 @@
+//! # CoDR — Computation and Data Reuse Aware CNN Accelerator
+//!
+//! Full-system reproduction of *CoDR: Computation and Data Reuse Aware CNN
+//! Accelerator* (Khadem, Ye, Mudge; University of Michigan, 2021).
+//!
+//! The crate contains, per DESIGN.md:
+//!
+//! * the **Universal Computation Reuse** offline pipeline ([`reuse`]) —
+//!   tiling, sorting, densification, unification, Δ computation;
+//! * the **customized Run-Length Encoding** codec ([`rle`]) with
+//!   per-structure, per-layer parameter search;
+//! * cycle-level simulators for **CoDR** ([`codr`]) and the two baselines
+//!   **SCNN** / **UCNN** ([`baselines`]);
+//! * the memory-hierarchy and energy models ([`arch`], [`energy`]);
+//! * the model zoo + synthetic weight synthesis ([`models`]);
+//! * the sweep coordinator, report generators and PJRT golden-model
+//!   runtime ([`coordinator`], [`report`], [`runtime`]).
+//!
+//! The Python side (`python/compile/`) authors the JAX + Pallas golden
+//! model and AOT-lowers it to HLO text in `artifacts/`; it never runs at
+//! simulation time.
+
+pub mod arch;
+pub mod baselines;
+pub mod cli;
+pub mod codr;
+pub mod coordinator;
+pub mod energy;
+pub mod models;
+pub mod quant;
+pub mod report;
+pub mod reuse;
+pub mod rle;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,9 @@
+//! `codr` — leader entrypoint for the CoDR reproduction.
+//!
+//! See `codr help` for commands; DESIGN.md maps each figure/table of the
+//! paper to its `codr figure <id>` invocation.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(codr::cli::run(&argv));
+}

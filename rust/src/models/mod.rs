@@ -1,0 +1,387 @@
+//! CNN model zoo and synthetic weight synthesis (paper §V-A).
+//!
+//! The paper evaluates AlexNet [7], VGG16 [13], and GoogleNet [14]
+//! quantized to 8-bit fixed point. Pretrained ImageNet weights are not
+//! available in this environment, so we synthesize weights per layer from
+//! a seeded, zero-inflated discretized Gaussian calibrated to the paper's
+//! Fig 2 statistics (per-model sparsity and Δ-distribution); see
+//! DESIGN.md "Weight statistics calibration". Every figure in the paper is
+//! a function of these *statistics* — density, repetition, Δ magnitudes —
+//! not of the specific weight values.
+
+mod zoo;
+
+pub use zoo::{alexnet, all_models, googlenet, model_by_name, tiny_cnn, vgg16};
+
+use crate::quant;
+use crate::tensor::{Tensor, Weights};
+use crate::util::rng::Rng;
+
+/// Kind of layer (the accelerators evaluate convolutional layers;
+/// FC layers are kept for the end-to-end functional model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    FullyConnected,
+}
+
+/// Static description of one layer.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input channels (N).
+    pub n: usize,
+    /// Output channels (M).
+    pub m: usize,
+    /// Input feature map spatial size (R_I = C_I; all paper models are square).
+    pub r_i: usize,
+    /// Kernel spatial size (R_K = C_K).
+    pub r_k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Gaussian σ of non-zero weights in quantized (int8) units.
+    pub sigma_q: f64,
+    /// Probability that a weight is exactly zero (sparsity calibration).
+    pub zero_frac: f64,
+}
+
+impl LayerSpec {
+    /// Output feature map size (square).
+    pub fn r_o(&self) -> usize {
+        (self.r_i + 2 * self.pad - self.r_k) / self.stride + 1
+    }
+
+    /// Number of weights in this layer.
+    pub fn num_weights(&self) -> usize {
+        self.m * self.n * self.r_k * self.r_k
+    }
+
+    /// Number of multiply-accumulates in a dense direct convolution.
+    pub fn macs(&self) -> u64 {
+        (self.num_weights() as u64) * (self.r_o() as u64) * (self.r_o() as u64)
+    }
+
+    /// Input feature count.
+    pub fn input_features(&self) -> usize {
+        self.n * self.r_i * self.r_i
+    }
+
+    /// Output feature count.
+    pub fn output_features(&self) -> usize {
+        self.m * self.r_o() * self.r_o()
+    }
+}
+
+/// A named network: an ordered list of conv layers (the unit of the
+/// paper's evaluation) plus metadata.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: &'static str,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl Model {
+    pub fn conv_layers(&self) -> impl Iterator<Item = &LayerSpec> {
+        self.layers.iter().filter(|l| l.kind == LayerKind::Conv)
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.num_weights()).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+}
+
+/// Per-layer weight sampler: zero-inflated discretized Gaussian drawn via
+/// an inverse-CDF table (one table per layer, two u64 draws per weight —
+/// much faster than per-weight Box–Muller over a 15 M-weight VGG16, see
+/// EXPERIMENTS.md §Perf; the non-zero value distribution is the
+/// renormalized discrete Gaussian, identical in law to rejection
+/// sampling).
+pub struct WeightSampler {
+    zero_frac: f64,
+    /// Cumulative probabilities over the 254 non-zero values −127..=127
+    /// (zero excluded), scaled to u64.
+    cdf: Vec<u64>,
+}
+
+impl WeightSampler {
+    pub fn new(zero_frac: f64, sigma_q: f64) -> Self {
+        // Discrete Gaussian mass per non-zero value v: the probability
+        // that N(0, σ) rounds to v, i.e. Φ((v+½)/σ) − Φ((v−½)/σ), with the
+        // tails folded into ±127.
+        let phi = |x: f64| 0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2));
+        let mut mass = Vec::with_capacity(254);
+        let mut total = 0.0;
+        for v in (-127i32..=127).filter(|&v| v != 0) {
+            let lo = (v as f64 - 0.5) / sigma_q;
+            let hi = (v as f64 + 0.5) / sigma_q;
+            let p = if v == -127 {
+                phi(hi)
+            } else if v == 127 {
+                1.0 - phi(lo)
+            } else {
+                (phi(hi) - phi(lo)).max(0.0)
+            };
+            total += p;
+            mass.push(p);
+        }
+        if total <= 0.0 {
+            // Degenerate σ: fall back to ±1 uniformly.
+            mass.fill(0.0);
+            mass[126] = 0.5; // v = −1
+            mass[127] = 0.5; // v = +1
+            total = 1.0;
+        }
+        let mut cdf = Vec::with_capacity(254);
+        let mut acc = 0.0;
+        for p in &mass {
+            acc += p / total;
+            cdf.push((acc * u64::MAX as f64) as u64);
+        }
+        *cdf.last_mut().unwrap() = u64::MAX;
+        WeightSampler { zero_frac, cdf }
+    }
+
+    /// Draw one quantized weight.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> i8 {
+        if rng.chance(self.zero_frac) {
+            return 0;
+        }
+        let r = rng.next_u64();
+        let idx = self.cdf.partition_point(|&c| c < r);
+        // Index → value: 0..=126 ↦ −127..=−1, 127..=253 ↦ 1..=127.
+        let v = idx as i32 - 127;
+        (if v >= 0 { v + 1 } else { v }) as i8
+    }
+}
+
+/// Abramowitz–Stegun 7.1.26 rational approximation of erf
+/// (|ε| < 1.5e−7 — far below the weight-statistic tolerances).
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Synthesize the quantized 8-bit weights of one layer.
+///
+/// Zero-inflated discretized Gaussian: with probability `zero_frac` a
+/// weight is 0; otherwise a non-zero value distributed as
+/// `round(N(0, σ_q))` conditioned on being non-zero, tails clamped to ±127.
+pub fn synthesize_weights(spec: &LayerSpec, rng: &mut Rng) -> Weights {
+    let sampler = WeightSampler::new(spec.zero_frac, spec.sigma_q);
+    let shape = [spec.m, spec.n, spec.r_k, spec.r_k];
+    Tensor::from_fn(&shape, |_| sampler.sample(rng))
+}
+
+/// Synthesize a layer's synthetic input activations (u8). Activation
+/// values never affect any reported metric (features are stored raw in all
+/// three designs) but are needed for functional verification.
+pub fn synthesize_activations(spec: &LayerSpec, rng: &mut Rng) -> Tensor<u8> {
+    Tensor::from_fn(&[spec.n, spec.r_i, spec.r_i], |_| rng.below(256) as u8)
+}
+
+/// A fully materialized evaluation workload: a model with synthesized
+/// weights, after applying the paper's (U, D) sweep knobs.
+pub struct Workload {
+    pub model: Model,
+    pub weights: Vec<Weights>,
+    /// The knobs this workload was generated with.
+    pub unique: Option<u32>,
+    pub density: Option<f64>,
+}
+
+impl Workload {
+    /// Build the workload for `model` at the given sweep point.
+    ///
+    /// Seeding: every layer forks an independent stream from
+    /// `(seed, model, layer-name)` so sweep points differ only by the
+    /// knobs, never by base weight draws.
+    pub fn generate(model: &Model, unique: Option<u32>, density: Option<f64>, seed: u64) -> Self {
+        let root = Rng::new(seed).fork(model.name);
+        let mut weights = Vec::with_capacity(model.layers.len());
+        for layer in &model.layers {
+            let mut rng = root.fork(&layer.name);
+            let mut w = synthesize_weights(layer, &mut rng);
+            quant::apply_knobs(&mut w, unique, density, &mut rng);
+            weights.push(w);
+        }
+        Workload {
+            model: model.clone(),
+            weights,
+            unique,
+            density,
+        }
+    }
+
+    /// Convolutional (layer, weights) pairs — the unit of the evaluation.
+    pub fn conv_layers(&self) -> impl Iterator<Item = (&LayerSpec, &Weights)> {
+        self.model
+            .layers
+            .iter()
+            .zip(&self.weights)
+            .filter(|(l, _)| l.kind == LayerKind::Conv)
+    }
+}
+
+/// The paper's sweep groups (x-axis groups of Figs 6–8): middle = original
+/// model, right side = density degradation, left side = unique-weight
+/// limitation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepGroup {
+    /// Limit unique weights to U (left-side groups: 16, 64).
+    Unique(u32),
+    /// Original weights (middle group).
+    Original,
+    /// Degrade density to D% of original non-zeros (right groups: 75, 50, 25).
+    Density(u32),
+}
+
+impl SweepGroup {
+    /// The seven groups of the paper's figures, left to right.
+    pub fn all() -> Vec<SweepGroup> {
+        vec![
+            SweepGroup::Unique(16),
+            SweepGroup::Unique(64),
+            SweepGroup::Original,
+            SweepGroup::Density(75),
+            SweepGroup::Density(50),
+            SweepGroup::Density(25),
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SweepGroup::Unique(u) => format!("U={u}"),
+            SweepGroup::Original => "Orig".to_string(),
+            SweepGroup::Density(d) => format!("D={d}%"),
+        }
+    }
+
+    pub fn knobs(&self) -> (Option<u32>, Option<f64>) {
+        match self {
+            SweepGroup::Unique(u) => (Some(*u), None),
+            SweepGroup::Original => (None, None),
+            SweepGroup::Density(d) => (None, Some(*d as f64 / 100.0)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{density, unique_nonzero};
+
+    #[test]
+    fn alexnet_shapes() {
+        let m = alexnet();
+        let conv1 = &m.layers[0];
+        assert_eq!(conv1.n, 3);
+        assert_eq!(conv1.m, 96);
+        assert_eq!(conv1.r_o(), 55);
+        // Total conv weights ≈ 3.7 M (grouping ignored; with AlexNet's
+        // original 2-way grouping in conv2/4/5 it would be ≈2.3 M).
+        let w: usize = m.conv_layers().map(|l| l.num_weights()).sum();
+        assert!((3_400_000..4_000_000).contains(&w), "alexnet conv weights {w}");
+    }
+
+    #[test]
+    fn vgg16_shapes() {
+        let m = vgg16();
+        assert_eq!(m.conv_layers().count(), 13);
+        let w: usize = m.conv_layers().map(|l| l.num_weights()).sum();
+        // ≈14.7 M conv weights.
+        assert!((14_000_000..15_500_000).contains(&w), "vgg16 conv weights {w}");
+        for l in m.conv_layers() {
+            assert_eq!(l.r_k, 3);
+            assert_eq!(l.pad, 1);
+            assert_eq!(l.r_o(), l.r_i);
+        }
+    }
+
+    #[test]
+    fn googlenet_shapes() {
+        let m = googlenet();
+        // 3 stem convs + 9 inception modules × 6 convs.
+        assert_eq!(m.conv_layers().count(), 57);
+        let w: usize = m.conv_layers().map(|l| l.num_weights()).sum();
+        // ≈6 M conv weights.
+        assert!((5_000_000..7_000_000).contains(&w), "googlenet conv weights {w}");
+    }
+
+    #[test]
+    fn synthesized_density_matches_calibration() {
+        let m = alexnet();
+        let spec = &m.layers[2];
+        let mut rng = Rng::new(42);
+        let w = synthesize_weights(spec, &mut rng);
+        let d = density(w.data());
+        let expect = 1.0 - spec.zero_frac;
+        assert!(
+            (d - expect).abs() < 0.02,
+            "density {d} vs calibrated {expect}"
+        );
+    }
+
+    #[test]
+    fn workload_generation_is_deterministic() {
+        let m = alexnet();
+        let a = Workload::generate(&m, None, None, 7);
+        let b = Workload::generate(&m, None, None, 7);
+        assert_eq!(a.weights[0].data(), b.weights[0].data());
+        let c = Workload::generate(&m, None, None, 8);
+        assert_ne!(a.weights[0].data(), c.weights[0].data());
+    }
+
+    #[test]
+    fn knobs_only_change_knobbed_weights() {
+        let m = alexnet();
+        let orig = Workload::generate(&m, None, None, 7);
+        let dens = Workload::generate(&m, None, Some(0.5), 7);
+        // Density degradation only zeroes weights, never changes values.
+        for (wo, wd) in orig.weights.iter().zip(&dens.weights) {
+            assert!(wo
+                .data()
+                .iter()
+                .zip(wd.data())
+                .all(|(&a, &b)| b == a || b == 0));
+        }
+    }
+
+    #[test]
+    fn unique_knob_limits_uniques_per_layer() {
+        let m = googlenet();
+        let wl = Workload::generate(&m, Some(16), None, 3);
+        for (_, w) in wl.conv_layers() {
+            assert!(unique_nonzero(w.data()) <= 16);
+        }
+    }
+
+    #[test]
+    fn sweep_groups_order_and_knobs() {
+        let gs = SweepGroup::all();
+        assert_eq!(gs.len(), 6);
+        assert_eq!(gs[2], SweepGroup::Original);
+        assert_eq!(gs[0].knobs(), (Some(16), None));
+        assert_eq!(gs[5].knobs(), (None, Some(0.25)));
+    }
+
+    #[test]
+    fn model_lookup() {
+        assert!(model_by_name("alexnet").is_some());
+        assert!(model_by_name("vgg16").is_some());
+        assert!(model_by_name("googlenet").is_some());
+        assert!(model_by_name("resnet").is_none());
+    }
+}

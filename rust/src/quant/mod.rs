@@ -1,0 +1,251 @@
+//! Fixed-point quantization (paper §II, §V-A).
+//!
+//! CoDR quantizes weights and biases to **8-bit fixed point** offline
+//! (step (ii) of the Universal Computation Reuse pipeline). The evaluation
+//! additionally sweeps:
+//!
+//! * **density D** — "randomly eliminating the non-zero weights";
+//! * **unique-weight count U** — "making the 8 − log2(U) least significant
+//!   bits of weights zero".
+//!
+//! Both knobs are implemented here exactly as described, plus the 16-bit
+//! mode used by Fig 2's comparison.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Bit precision of the quantized weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// 8-bit fixed point (the accelerator's operating mode).
+    Int8,
+    /// 16-bit fixed point (Fig 2 analysis only).
+    Int16,
+}
+
+impl Precision {
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Int8 => 8,
+            Precision::Int16 => 16,
+        }
+    }
+    pub fn max_mag(self) -> i32 {
+        match self {
+            Precision::Int8 => 127,
+            Precision::Int16 => 32767,
+        }
+    }
+}
+
+/// Symmetric linear quantization of float weights to `i8`.
+///
+/// Returns `(quantized, scale)` with `w_float ≈ q · scale`.
+pub fn quantize_weights_f32(w: &[f32], precision: Precision) -> (Vec<i16>, f32) {
+    let max_abs = w.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    if max_abs == 0.0 {
+        return (vec![0; w.len()], 1.0);
+    }
+    let scale = max_abs / precision.max_mag() as f32;
+    let q = w
+        .iter()
+        .map(|&x| {
+            let v = (x / scale).round() as i32;
+            v.clamp(-precision.max_mag(), precision.max_mag()) as i16
+        })
+        .collect();
+    (q, scale)
+}
+
+/// The paper's **U knob**: limit the number of unique weights to `u`
+/// (a power of two) by zeroing the `8 − log2(u)` least significant bits.
+///
+/// `u = 256` is a no-op for 8-bit weights.
+pub fn limit_unique_weights(w: &mut [i8], u: u32) {
+    assert!(u.is_power_of_two() && (2..=256).contains(&u), "U must be a power of two in [2,256]");
+    let drop_bits = 8 - u.ilog2();
+    if drop_bits == 0 {
+        return;
+    }
+    // Arithmetic shift keeps the sign; shifting back zeroes the LSBs.
+    for x in w.iter_mut() {
+        *x = (*x >> drop_bits) << drop_bits;
+    }
+}
+
+/// The paper's **D knob**: randomly eliminate non-zero weights until only
+/// a `density` fraction of the *original non-zeros* survives.
+pub fn degrade_density(w: &mut [i8], density: f64, rng: &mut Rng) {
+    assert!((0.0..=1.0).contains(&density));
+    let nz: Vec<usize> = (0..w.len()).filter(|&i| w[i] != 0).collect();
+    let keep = (nz.len() as f64 * density).round() as usize;
+    let kill = nz.len() - keep;
+    if kill == 0 {
+        return;
+    }
+    let mut order = nz;
+    rng.shuffle(&mut order);
+    for &i in order.iter().take(kill) {
+        w[i] = 0;
+    }
+}
+
+/// Fraction of non-zero entries.
+pub fn density(w: &[i8]) -> f64 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    w.iter().filter(|&&x| x != 0).count() as f64 / w.len() as f64
+}
+
+/// Number of distinct values among the non-zero entries.
+pub fn unique_nonzero(w: &[i8]) -> usize {
+    let mut seen = [false; 256];
+    let mut count = 0;
+    for &x in w {
+        if x != 0 {
+            let i = (x as i16 + 128) as usize;
+            if !seen[i] {
+                seen[i] = true;
+                count += 1;
+            }
+        }
+    }
+    count
+}
+
+/// Apply both evaluation knobs to a weight tensor (U first, then D — the
+/// order the paper's §V-A describes them; D operates on the post-U
+/// non-zeros).
+pub fn apply_knobs(w: &mut Tensor<i8>, unique: Option<u32>, dens: Option<f64>, rng: &mut Rng) {
+    if let Some(u) = unique {
+        limit_unique_weights(w.data_mut(), u);
+    }
+    if let Some(d) = dens {
+        degrade_density(w.data_mut(), d, rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn quantize_zero_and_symmetry() {
+        let (q, s) = quantize_weights_f32(&[0.0, 0.5, -0.5, 1.0], Precision::Int8);
+        assert_eq!(q[0], 0);
+        assert_eq!(q[3], 127);
+        assert_eq!(q[1], -q[2]);
+        assert!((s - 1.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn quantize_all_zero_is_safe() {
+        let (q, s) = quantize_weights_f32(&[0.0; 4], Precision::Int8);
+        assert!(q.iter().all(|&x| x == 0));
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn quantize_16bit_range() {
+        let (q, _) = quantize_weights_f32(&[1.0, -1.0, 0.25], Precision::Int16);
+        assert_eq!(q[0], 32767);
+        assert_eq!(q[1], -32767);
+    }
+
+    #[test]
+    fn unique_limit_examples() {
+        // U=16 → zero the 4 LSBs.
+        let mut w = vec![0x11i8, 0x1F, -0x1F, 127, -128, 0];
+        limit_unique_weights(&mut w, 16);
+        assert_eq!(w, vec![0x10, 0x10, -0x20, 0x70, -128, 0]);
+    }
+
+    #[test]
+    fn unique_256_is_identity() {
+        let mut w: Vec<i8> = (-128i16..=127).map(|x| x as i8).collect();
+        let orig = w.clone();
+        limit_unique_weights(&mut w, 256);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn prop_unique_limit_bounds_unique_count() {
+        check(
+            40,
+            |r, size| {
+                let n = 10 + size * 10;
+                let w: Vec<i8> = (0..n).map(|_| (r.below(256) as i16 - 128) as i8).collect();
+                let u = [2u32, 4, 16, 64, 256][r.index(5)];
+                (w, u)
+            },
+            |(w, u)| {
+                let mut w2 = w.clone();
+                limit_unique_weights(&mut w2, *u);
+                // Unique values (including zero) after masking ≤ U.
+                let mut seen = std::collections::HashSet::new();
+                for &x in &w2 {
+                    seen.insert(x);
+                }
+                seen.len() <= *u as usize
+            },
+        );
+    }
+
+    #[test]
+    fn density_knob_hits_target() {
+        let mut rng = Rng::new(1);
+        let mut w: Vec<i8> = (0..1000).map(|i| if i % 2 == 0 { 3 } else { 0 }).collect();
+        degrade_density(&mut w, 0.5, &mut rng);
+        let nz = w.iter().filter(|&&x| x != 0).count();
+        assert_eq!(nz, 250);
+    }
+
+    #[test]
+    fn density_one_is_identity() {
+        let mut rng = Rng::new(2);
+        let mut w = vec![1i8, 0, -3, 5];
+        let orig = w.clone();
+        degrade_density(&mut w, 1.0, &mut rng);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn density_zero_kills_everything() {
+        let mut rng = Rng::new(3);
+        let mut w = vec![1i8, 2, 3, 0];
+        degrade_density(&mut w, 0.0, &mut rng);
+        assert!(w.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn prop_density_never_creates_nonzeros() {
+        check(
+            40,
+            |r, size| {
+                let n = 10 + size * 5;
+                let w: Vec<i8> = (0..n)
+                    .map(|_| if r.chance(0.5) { (r.below(255) as i16 - 127) as i8 } else { 0 })
+                    .collect();
+                let d = r.f64();
+                let seed = r.next_u64();
+                (w, d, seed)
+            },
+            |(w, d, seed)| {
+                let mut w2 = w.clone();
+                let mut rng = Rng::new(*seed);
+                degrade_density(&mut w2, *d, &mut rng);
+                // Zeros stay zero; non-zeros either survive unchanged or die.
+                w.iter().zip(&w2).all(|(&a, &b)| b == a || b == 0)
+            },
+        );
+    }
+
+    #[test]
+    fn density_and_unique_helpers() {
+        let w = vec![0i8, 1, 1, 2, 0, -1];
+        assert!((density(&w) - 4.0 / 6.0).abs() < 1e-12);
+        assert_eq!(unique_nonzero(&w), 3);
+    }
+}

@@ -1,0 +1,449 @@
+//! Universal Computation Reuse — the paper's §II contribution.
+//!
+//! UCR exploits weight **sparsity** (W=0), **repetition** (Δ=0) and
+//! **similarity** (small Δ) *simultaneously*. The offline pipeline
+//! (paper §II-D, steps i–v) is:
+//!
+//! 1. break a conv layer into tiles of `T_N` input × `T_M` output channels;
+//! 2. quantize to 8-bit fixed point (done by [`crate::quant`]);
+//! 3. collect, per input channel inside the tile, one **linearized weight
+//!    vector** containing the weights of the `T_M` kernels (Fig 3c);
+//! 4. **sort**, **densify** (drop zeros) and **unify** (group equal
+//!    weights) each vector;
+//! 5. compute **Δ values** between the non-zero unique weights; the Δs,
+//!    repetition counts, and output indexes go to the RLE encoders.
+//!
+//! The transformation is *lossless*: [`UcrVector::reconstruct`] returns
+//! the original linearized vector, which the property tests verify.
+
+pub mod stats;
+
+use crate::models::LayerSpec;
+use crate::tensor::Weights;
+
+/// One linearized weight vector (Fig 3c): the weights of `t_m` kernels for
+/// a single input channel, in index order `(m_local, k_r, k_c)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WeightVector {
+    pub weights: Vec<i8>,
+    /// Output channels covered (`T_M`, possibly clipped at the edge).
+    pub t_m: usize,
+    /// Kernel spatial size.
+    pub r_k: usize,
+    pub c_k: usize,
+}
+
+impl WeightVector {
+    /// Linear index of `(m_local, kr, kc)` inside the vector.
+    #[inline]
+    pub fn index_of(&self, m_local: usize, kr: usize, kc: usize) -> usize {
+        (m_local * self.r_k + kr) * self.c_k + kc
+    }
+
+    /// Inverse of [`Self::index_of`].
+    #[inline]
+    pub fn coords_of(&self, idx: usize) -> (usize, usize, usize) {
+        let kc = idx % self.c_k;
+        let rest = idx / self.c_k;
+        (rest / self.r_k, rest % self.r_k, kc)
+    }
+
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+}
+
+/// A weight vector after sort + densify + unify + Δ (paper Fig 1e–i).
+///
+/// `uniques[i]` repeats `counts[i]` times at vector positions
+/// `indexes[i]` (ascending). Zero weights are represented implicitly —
+/// any position not listed is zero. `Σ counts[i] = Σ indexes[i].len()` =
+/// number of non-zero weights.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UcrVector {
+    /// Distinct non-zero weights, sorted ascending.
+    pub uniques: Vec<i8>,
+    /// Repetition count per unique weight.
+    pub counts: Vec<u32>,
+    /// Output indexes per unique weight (positions in the linearized
+    /// vector), each list ascending.
+    pub indexes: Vec<Vec<u16>>,
+    /// Original vector length.
+    pub len: usize,
+}
+
+impl UcrVector {
+    /// Run steps (iv)–(v) of the UCR pipeline on a linearized vector.
+    ///
+    /// Counting sort over the 256 possible values: a first pass takes the
+    /// per-value histogram (stack array, no allocation), a second pass
+    /// scatters positions into exactly-sized per-unique index lists. This
+    /// is the whole pipeline's hottest function (millions of calls per
+    /// model) — see EXPERIMENTS.md §Perf.
+    pub fn from_weights(v: &[i8]) -> Self {
+        assert!(v.len() <= u16::MAX as usize + 1, "vector too long for u16 indexes");
+        let mut hist = [0u32; 256];
+        for &w in v {
+            if w != 0 {
+                hist[(w as i16 + 128) as usize] += 1;
+            }
+        }
+        let mut uniques = Vec::new();
+        let mut counts = Vec::new();
+        let mut indexes: Vec<Vec<u16>> = Vec::new();
+        let mut group_of = [u8::MAX; 256];
+        for (slot, &c) in hist.iter().enumerate() {
+            if c > 0 {
+                group_of[slot] = uniques.len() as u8;
+                uniques.push((slot as i16 - 128) as i8);
+                counts.push(c);
+                indexes.push(Vec::with_capacity(c as usize));
+            }
+        }
+        for (pos, &w) in v.iter().enumerate() {
+            if w != 0 {
+                let g = group_of[(w as i16 + 128) as usize] as usize;
+                indexes[g].push(pos as u16);
+            }
+        }
+        UcrVector {
+            uniques,
+            counts,
+            indexes,
+            len: v.len(),
+        }
+    }
+
+    /// Δ values between successive sorted unique weights. `deltas()[0]` is
+    /// meaningless for encoding (the first unique is stored absolute);
+    /// subsequent entries are non-negative by construction.
+    pub fn deltas(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.uniques.len());
+        let mut prev: i16 = 0;
+        for (i, &u) in self.uniques.iter().enumerate() {
+            let d = u as i16 - prev;
+            out.push(if i == 0 { 0 } else { d as u8 });
+            prev = u as i16;
+        }
+        out
+    }
+
+    /// Number of non-zero weights.
+    pub fn nnz(&self) -> usize {
+        self.counts.iter().map(|&c| c as usize).sum()
+    }
+
+    /// Number of *multiplications* a scalar-matrix datapath performs for
+    /// this vector: one per unique weight (instead of one per non-zero
+    /// weight) — the unification saving. With differential computation the
+    /// multiply operand is the Δ, whose magnitude [`Self::deltas`] gives.
+    pub fn num_multiplies(&self) -> usize {
+        self.uniques.len()
+    }
+
+    /// Invert the transformation (used by tests and the functional
+    /// simulator): reproduce the original linearized weight vector.
+    pub fn reconstruct(&self) -> Vec<i8> {
+        let mut v = vec![0i8; self.len];
+        for (u, idx) in self.uniques.iter().zip(&self.indexes) {
+            for &i in idx {
+                v[i as usize] = *u;
+            }
+        }
+        v
+    }
+}
+
+/// One `T_N × T_M` channel tile of a layer (UCR step (i)).
+#[derive(Clone, Debug)]
+pub struct Tile {
+    /// First input channel covered.
+    pub n0: usize,
+    /// First output channel covered.
+    pub m0: usize,
+    /// One weight vector per input channel in the tile.
+    pub vectors: Vec<WeightVector>,
+}
+
+/// Break a layer's weights into channel tiles and linearize each tile's
+/// per-input-channel weight vectors (UCR steps (i) and (iii)).
+///
+/// Edge tiles are clipped when `N % t_n != 0` or `M % t_m != 0`.
+pub fn tile_layer(spec: &LayerSpec, weights: &Weights, t_n: usize, t_m: usize) -> Vec<Tile> {
+    assert_eq!(weights.shape(), &[spec.m, spec.n, spec.r_k, spec.r_k]);
+    let mut tiles = Vec::new();
+    for m0 in (0..spec.m).step_by(t_m) {
+        let tm = t_m.min(spec.m - m0);
+        for n0 in (0..spec.n).step_by(t_n) {
+            let tn = t_n.min(spec.n - n0);
+            let mut vectors = Vec::with_capacity(tn);
+            for n in n0..n0 + tn {
+                let mut w = Vec::with_capacity(tm * spec.r_k * spec.r_k);
+                for m in m0..m0 + tm {
+                    for kr in 0..spec.r_k {
+                        for kc in 0..spec.r_k {
+                            w.push(weights.at4(m, n, kr, kc));
+                        }
+                    }
+                }
+                vectors.push(WeightVector {
+                    weights: w,
+                    t_m: tm,
+                    r_k: spec.r_k,
+                    c_k: spec.r_k,
+                });
+            }
+            tiles.push(Tile { n0, m0, vectors });
+        }
+    }
+    tiles
+}
+
+/// Full UCR transform of a layer: tile + linearize + sort/densify/unify/Δ.
+/// Returns `(tile, per-input-channel UcrVector)` pairs in the tile order
+/// the CoDR dataflow iterates them.
+pub fn transform_layer(
+    spec: &LayerSpec,
+    weights: &Weights,
+    t_n: usize,
+    t_m: usize,
+) -> Vec<(Tile, Vec<UcrVector>)> {
+    tile_layer(spec, weights, t_n, t_m)
+        .into_iter()
+        .map(|tile| {
+            let ucr = tile
+                .vectors
+                .iter()
+                .map(|v| UcrVector::from_weights(&v.weights))
+                .collect();
+            (tile, ucr)
+        })
+        .collect()
+}
+
+/// UCR transform without materializing the linearized weight copies —
+/// the stats-path simulators only need the [`UcrVector`]s (plus the
+/// implicit geometry), and skipping the `Tile` allocation halves the
+/// transform cost on VGG16-sized layers (§Perf). Tile order matches
+/// [`transform_layer`]; the inner `Vec` holds the tile's `t_n` vectors.
+pub fn transform_layer_ucr(
+    spec: &LayerSpec,
+    weights: &Weights,
+    t_n: usize,
+    t_m: usize,
+) -> Vec<Vec<UcrVector>> {
+    assert_eq!(weights.shape(), &[spec.m, spec.n, spec.r_k, spec.r_k]);
+    let kernel = spec.r_k * spec.r_k;
+    let data = weights.data();
+    let mut out = Vec::new();
+    let mut scratch: Vec<i8> = Vec::with_capacity(t_m * kernel);
+    for m0 in (0..spec.m).step_by(t_m) {
+        let tm = t_m.min(spec.m - m0);
+        for n0 in (0..spec.n).step_by(t_n) {
+            let tn = t_n.min(spec.n - n0);
+            let mut vectors = Vec::with_capacity(tn);
+            for n in n0..n0 + tn {
+                scratch.clear();
+                // Kernel elements are contiguous in the [M,N,Kr,Kc]
+                // layout — copy whole kernels per output channel.
+                for m in m0..m0 + tm {
+                    let off = (m * spec.n + n) * kernel;
+                    scratch.extend_from_slice(&data[off..off + kernel]);
+                }
+                vectors.push(UcrVector::from_weights(&scratch));
+            }
+            out.push(vectors);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{synthesize_weights, LayerKind};
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn small_spec() -> LayerSpec {
+        LayerSpec {
+            name: "t".into(),
+            kind: LayerKind::Conv,
+            n: 6,
+            m: 10,
+            r_i: 8,
+            r_k: 3,
+            stride: 1,
+            pad: 1,
+            sigma_q: 15.0,
+            zero_frac: 0.4,
+        }
+    }
+
+    /// The paper's Fig 1 running example: weight vector
+    /// [w1..w8] = [3, 0, 1, 3, 0, 1, 1, 4] (one zero pattern matching
+    /// Fig 1a's two ineffectual weights is equally valid; we use values
+    /// that exercise sort+densify+unify+Δ the way Fig 1e–i illustrates).
+    #[test]
+    fn fig1_style_example() {
+        let v = [3i8, 0, 1, 3, 0, 1, 1, 4];
+        let u = UcrVector::from_weights(&v);
+        assert_eq!(u.uniques, vec![1, 3, 4]);
+        assert_eq!(u.counts, vec![3, 2, 1]);
+        assert_eq!(u.indexes[0], vec![2, 5, 6]);
+        assert_eq!(u.indexes[1], vec![0, 3]);
+        assert_eq!(u.indexes[2], vec![7]);
+        // Δs: first absolute, then 3-1=2, 4-3=1.
+        assert_eq!(u.deltas()[1..], [2, 1]);
+        assert_eq!(u.nnz(), 6);
+        // 6 non-zero weights → only 3 multiplications after unification.
+        assert_eq!(u.num_multiplies(), 3);
+        assert_eq!(u.reconstruct(), v);
+    }
+
+    #[test]
+    fn negative_weights_sort_first() {
+        let v = [5i8, -3, 0, -3, 7];
+        let u = UcrVector::from_weights(&v);
+        assert_eq!(u.uniques, vec![-3, 5, 7]);
+        // Δ stream after the absolute first element is non-negative.
+        assert!(u.deltas()[1..].iter().all(|&d| d as i16 >= 0));
+        assert_eq!(u.reconstruct(), v);
+    }
+
+    #[test]
+    fn all_zero_vector() {
+        let u = UcrVector::from_weights(&[0i8; 16]);
+        assert!(u.uniques.is_empty());
+        assert_eq!(u.nnz(), 0);
+        assert_eq!(u.reconstruct(), vec![0i8; 16]);
+    }
+
+    #[test]
+    fn index_linearization_roundtrip() {
+        let wv = WeightVector {
+            weights: vec![0; 4 * 3 * 3],
+            t_m: 4,
+            r_k: 3,
+            c_k: 3,
+        };
+        for m in 0..4 {
+            for kr in 0..3 {
+                for kc in 0..3 {
+                    let i = wv.index_of(m, kr, kc);
+                    assert_eq!(wv.coords_of(i), (m, kr, kc));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiling_covers_all_weights_once() {
+        let spec = small_spec();
+        let mut rng = Rng::new(3);
+        let w = synthesize_weights(&spec, &mut rng);
+        let tiles = tile_layer(&spec, &w, 4, 4);
+        // ceil(10/4)=3 output groups × ceil(6/4)=2 input groups.
+        assert_eq!(tiles.len(), 6);
+        let total: usize = tiles
+            .iter()
+            .flat_map(|t| t.vectors.iter().map(|v| v.len()))
+            .sum();
+        assert_eq!(total, spec.num_weights());
+    }
+
+    #[test]
+    fn tiling_preserves_values() {
+        let spec = small_spec();
+        let mut rng = Rng::new(4);
+        let w = synthesize_weights(&spec, &mut rng);
+        for tile in tile_layer(&spec, &w, 4, 4) {
+            for (dn, v) in tile.vectors.iter().enumerate() {
+                for m_local in 0..v.t_m {
+                    for kr in 0..3 {
+                        for kc in 0..3 {
+                            assert_eq!(
+                                v.weights[v.index_of(m_local, kr, kc)],
+                                w.at4(tile.m0 + m_local, tile.n0 + dn, kr, kc)
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_ucr_roundtrip_lossless() {
+        check(
+            100,
+            |r, size| {
+                let n = 1 + size * 4;
+                (0..n)
+                    .map(|_| {
+                        if r.chance(0.4) {
+                            0
+                        } else {
+                            (r.below(255) as i16 - 127) as i8
+                        }
+                    })
+                    .collect::<Vec<i8>>()
+            },
+            |v| UcrVector::from_weights(v).reconstruct() == *v,
+        );
+    }
+
+    #[test]
+    fn prop_uniques_sorted_distinct_nonzero() {
+        check(
+            100,
+            |r, size| {
+                (0..1 + size * 3)
+                    .map(|_| (r.below(17) as i16 - 8) as i8)
+                    .collect::<Vec<i8>>()
+            },
+            |v| {
+                let u = UcrVector::from_weights(v);
+                u.uniques.windows(2).all(|w| w[0] < w[1])
+                    && u.uniques.iter().all(|&x| x != 0)
+                    && u.counts.iter().zip(&u.indexes).all(|(&c, i)| c as usize == i.len())
+                    && u.indexes
+                        .iter()
+                        .all(|ix| ix.windows(2).all(|w| w[0] < w[1]))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_multiplies_bounded_by_unique_count() {
+        check(
+            50,
+            |r, size| {
+                (0..8 + size * 2)
+                    .map(|_| (r.below(9) as i16 - 4) as i8)
+                    .collect::<Vec<i8>>()
+            },
+            |v| {
+                let u = UcrVector::from_weights(v);
+                // Unification bound: multiplies ≤ min(nnz, 255 possible values).
+                u.num_multiplies() <= u.nnz() && u.num_multiplies() <= 255
+            },
+        );
+    }
+
+    #[test]
+    fn transform_layer_roundtrips_whole_layer() {
+        let spec = small_spec();
+        let mut rng = Rng::new(9);
+        let w = synthesize_weights(&spec, &mut rng);
+        for (tile, ucrs) in transform_layer(&spec, &w, 4, 4) {
+            for (v, u) in tile.vectors.iter().zip(&ucrs) {
+                assert_eq!(u.reconstruct(), v.weights);
+            }
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Weight-distribution analysis — the data behind the paper's **Fig 2**:
+//! "Average distribution of the 8-bit and 16-bit zero weights and weight
+//! Δs (difference between sorted weights)."
+//!
+//! The distribution is computed over the *unit of reuse* — the linearized
+//! per-input-channel weight vector of `T_M` kernels (Fig 3c) — and
+//! averaged over all vectors of a model, which is what makes Δ=0
+//! (repetition) a meaningful sub-100% number for 8-bit weights.
+
+use crate::models::{LayerSpec, Model, Workload};
+use crate::reuse::tile_layer;
+use crate::util::rng::Rng;
+
+/// Fig 2 histogram buckets. Fractions sum to 1 over all weights.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeltaDistribution {
+    /// W = 0 (sparsity — exploited by densification).
+    pub zero: f64,
+    /// Δ = 0 among sorted non-zeros (repetition — exploited by unification).
+    pub delta_zero: f64,
+    /// 0 < Δ ≤ 3 (similarity — cheap differential computation, 2-bit Δ).
+    pub delta_small: f64,
+    /// 3 < Δ ≤ 15 (4-bit Δ).
+    pub delta_mid: f64,
+    /// Δ > 15 or first-of-vector absolute values.
+    pub delta_large: f64,
+}
+
+impl DeltaDistribution {
+    pub fn total(&self) -> f64 {
+        self.zero + self.delta_zero + self.delta_small + self.delta_mid + self.delta_large
+    }
+
+    fn scale(&mut self, k: f64) {
+        self.zero *= k;
+        self.delta_zero *= k;
+        self.delta_small *= k;
+        self.delta_mid *= k;
+        self.delta_large *= k;
+    }
+
+    fn add_counts(&mut self, o: &DeltaDistribution) {
+        self.zero += o.zero;
+        self.delta_zero += o.delta_zero;
+        self.delta_small += o.delta_small;
+        self.delta_mid += o.delta_mid;
+        self.delta_large += o.delta_large;
+    }
+}
+
+/// Distribution of one linearized weight vector, generic over precision
+/// (`i32` accommodates both i8 and i16 weights). Thresholds scale with
+/// precision so "small" means the same *relative* resolution in both
+/// modes (the paper's 16-bit bars use the wider Δ space).
+pub fn vector_distribution(v: &[i32], small_max: i32, mid_max: i32) -> DeltaDistribution {
+    let mut d = DeltaDistribution::default();
+    let mut nz: Vec<i32> = v.iter().copied().filter(|&x| x != 0).collect();
+    d.zero = (v.len() - nz.len()) as f64;
+    nz.sort_unstable();
+    for w in nz.windows(2) {
+        let delta = w[1] - w[0];
+        if delta == 0 {
+            d.delta_zero += 1.0;
+        } else if delta <= small_max {
+            d.delta_small += 1.0;
+        } else if delta <= mid_max {
+            d.delta_mid += 1.0;
+        } else {
+            d.delta_large += 1.0;
+        }
+    }
+    // First non-zero of a vector has no predecessor — counted as "large"
+    // (stored absolute by the encoder).
+    if !nz.is_empty() {
+        d.delta_large += 1.0;
+    }
+    d
+}
+
+/// Average Fig 2 distribution over every per-input-channel weight vector
+/// of a model's conv layers, at 8-bit precision (`T_M` from the CoDR
+/// tiling, Table I).
+pub fn model_distribution_8bit(workload: &Workload, t_n: usize, t_m: usize) -> DeltaDistribution {
+    let mut acc = DeltaDistribution::default();
+    let mut total = 0usize;
+    for (spec, w) in workload.conv_layers() {
+        for tile in tile_layer(spec, w, t_n, t_m) {
+            for v in &tile.vectors {
+                let v32: Vec<i32> = v.weights.iter().map(|&x| x as i32).collect();
+                acc.add_counts(&vector_distribution(&v32, 3, 15));
+                total += v.len();
+            }
+        }
+    }
+    if total > 0 {
+        acc.scale(1.0 / total as f64);
+    }
+    acc
+}
+
+/// Fig 2's 16-bit companion: quantizing the *unpruned* float weights at
+/// 16-bit resolution. Sparsity and repetition nearly vanish (the paper
+/// reports 0.5% and 9.0%) while small Δs dominate — the case where only
+/// differential computation helps.
+pub fn model_distribution_16bit(model: &Model, seed: u64, _t_n: usize, t_m: usize) -> DeltaDistribution {
+    let root = Rng::new(seed).fork(model.name).fork("16bit");
+    let mut acc = DeltaDistribution::default();
+    let mut total = 0usize;
+    for spec in model.layers.iter().filter(|l| l.kind == crate::models::LayerKind::Conv) {
+        let mut rng = root.fork(&spec.name);
+        // Cap the sampled vectors per layer — the distribution converges
+        // long before the full VGG16 layer is drawn.
+        let vec_len = t_m * spec.r_k * spec.r_k;
+        let n_vectors = ((spec.num_weights() / vec_len).max(1)).min(4000);
+        for _ in 0..n_vectors {
+            let v = synth_vector_16bit(spec, vec_len, &mut rng);
+            // Same relative thresholds as 8-bit, scaled by 256.
+            acc.add_counts(&vector_distribution(&v, 3 * 256, 15 * 256));
+            total += v.len();
+        }
+    }
+    if total > 0 {
+        acc.scale(1.0 / total as f64);
+    }
+    acc
+}
+
+fn synth_vector_16bit(spec: &LayerSpec, len: usize, rng: &mut Rng) -> Vec<i32> {
+    (0..len)
+        .map(|_| {
+            // 16-bit quantization of unpruned floats: only 0.5% of weights
+            // fall below half a quantization step.
+            if rng.chance(0.005) {
+                0
+            } else {
+                let v = (rng.normal() * spec.sigma_q * 256.0).round() as i32;
+                if v == 0 {
+                    1
+                } else {
+                    v.clamp(-32767, 32767)
+                }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{alexnet, googlenet, vgg16, SweepGroup, Workload};
+
+    #[test]
+    fn distribution_sums_to_one() {
+        let wl = Workload::generate(&alexnet(), None, None, 1);
+        let d = model_distribution_8bit(&wl, 4, 4);
+        assert!((d.total() - 1.0).abs() < 1e-9, "total {}", d.total());
+    }
+
+    #[test]
+    fn vector_distribution_hand_example() {
+        // v = [0, 5, 5, 7, 30]: 1 zero, Δs over sorted nz [5,5,7,30]:
+        // 0 (rep), 2 (small), 23 (large) + 1 first-absolute.
+        let d = vector_distribution(&[0, 5, 5, 7, 30], 3, 15);
+        assert_eq!(d.zero, 1.0);
+        assert_eq!(d.delta_zero, 1.0);
+        assert_eq!(d.delta_small, 1.0);
+        assert_eq!(d.delta_mid, 0.0);
+        assert_eq!(d.delta_large, 2.0);
+    }
+
+    #[test]
+    fn fig2_sparsity_ordering_vgg_highest() {
+        // Paper Fig 2: VGG16 has the highest 8-bit sparsity (up to 94% in
+        // its sparsest layers).
+        let a = model_distribution_8bit(&Workload::generate(&alexnet(), None, None, 1), 4, 4);
+        let v = model_distribution_8bit(&Workload::generate(&vgg16(), None, None, 1), 4, 4);
+        let g = model_distribution_8bit(&Workload::generate(&googlenet(), None, None, 1), 4, 4);
+        assert!(v.zero > g.zero, "vgg {} vs googlenet {}", v.zero, g.zero);
+        assert!(v.zero > a.zero, "vgg {} vs alexnet {}", v.zero, a.zero);
+        assert!(v.zero > 0.75, "vgg sparsity {}", v.zero);
+    }
+
+    #[test]
+    fn fig2_googlenet_has_highest_repetition() {
+        // Paper Fig 2: redundant computation (Δ=0) reaches 39% in
+        // GoogleNet — the most concentrated weight distribution.
+        let a = model_distribution_8bit(&Workload::generate(&alexnet(), None, None, 1), 4, 4);
+        let v = model_distribution_8bit(&Workload::generate(&vgg16(), None, None, 1), 4, 4);
+        let g = model_distribution_8bit(&Workload::generate(&googlenet(), None, None, 1), 4, 4);
+        assert!(
+            g.delta_zero > a.delta_zero && g.delta_zero > v.delta_zero,
+            "googlenet {} vs alexnet {} / vgg {}",
+            g.delta_zero,
+            a.delta_zero,
+            v.delta_zero
+        );
+        assert!(g.delta_zero > 0.15, "googlenet Δ=0 {}", g.delta_zero);
+    }
+
+    #[test]
+    fn fig2_16bit_kills_sparsity_and_repetition() {
+        // Paper: zero and Δ=0 drop to 0.5% and ~9% at 16-bit.
+        let d16 = model_distribution_16bit(&googlenet(), 1, 4, 4);
+        assert!(d16.zero < 0.02, "16-bit zeros {}", d16.zero);
+        assert!(d16.delta_zero < 0.15, "16-bit Δ=0 {}", d16.delta_zero);
+        // Small Δs still present: differential computation remains useful.
+        assert!(
+            d16.delta_small + d16.delta_mid > 0.3,
+            "16-bit small+mid Δ {}",
+            d16.delta_small + d16.delta_mid
+        );
+    }
+
+    #[test]
+    fn unique_knob_increases_repetition() {
+        let orig = model_distribution_8bit(&Workload::generate(&alexnet(), None, None, 1), 4, 4);
+        let (u, d) = SweepGroup::Unique(16).knobs();
+        let lim = model_distribution_8bit(&Workload::generate(&alexnet(), u, d, 1), 4, 4);
+        assert!(lim.delta_zero > orig.delta_zero);
+        // For GoogleNet's concentrated weights, LSB-masking both repeats
+        // *and* zeroes values; the total reuse-exploitable fraction
+        // (W=0 ∪ Δ=0) must still grow.
+        let g_orig =
+            model_distribution_8bit(&Workload::generate(&googlenet(), None, None, 1), 4, 4);
+        let g_lim = model_distribution_8bit(&Workload::generate(&googlenet(), u, d, 1), 4, 4);
+        assert!(g_lim.zero + g_lim.delta_zero > g_orig.zero + g_orig.delta_zero);
+    }
+
+    #[test]
+    fn density_knob_increases_sparsity() {
+        let orig = model_distribution_8bit(&Workload::generate(&alexnet(), None, None, 1), 4, 4);
+        let (u, d) = SweepGroup::Density(25).knobs();
+        let deg = model_distribution_8bit(&Workload::generate(&alexnet(), u, d, 1), 4, 4);
+        assert!(deg.zero > orig.zero);
+    }
+}

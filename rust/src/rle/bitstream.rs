@@ -1,0 +1,221 @@
+//! Bit-granular streams — the substrate for every weight encoding in the
+//! repo (CoDR's customized RLE, UCNN's fixed-parameter RLE, SCNN's 4-bit
+//! zero-run format). LSB-first within a backing `u64` word vector.
+
+/// Append-only bit vector.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BitWriter {
+    words: Vec<u64>,
+    /// Total bits written.
+    len: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `n` bits of `value` (`n ≤ 32`).
+    #[inline]
+    pub fn push(&mut self, value: u32, n: u32) {
+        debug_assert!(n <= 32);
+        debug_assert!(n == 32 || value < (1u32 << n), "value {value} exceeds {n} bits");
+        if n == 0 {
+            return;
+        }
+        let bit_off = self.len & 63;
+        let word_idx = self.len >> 6;
+        if word_idx == self.words.len() {
+            self.words.push(0);
+        }
+        self.words[word_idx] |= (value as u64) << bit_off;
+        let spill = (bit_off + n as usize).saturating_sub(64);
+        if spill > 0 {
+            self.words.push((value as u64) >> (n as usize - spill));
+        }
+        self.len += n as usize;
+    }
+
+    /// Append a single bit.
+    #[inline]
+    pub fn push_bit(&mut self, b: bool) {
+        self.push(b as u32, 1);
+    }
+
+    /// Total bits written.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes occupied when stored to memory (the DRAM-footprint figure).
+    pub fn byte_len(&self) -> usize {
+        self.len.div_ceil(8)
+    }
+
+    /// Freeze into a reader.
+    pub fn reader(&self) -> BitReader<'_> {
+        BitReader {
+            words: &self.words,
+            len: self.len,
+            pos: 0,
+        }
+    }
+}
+
+/// Sequential reader over a [`BitWriter`]'s contents.
+#[derive(Clone, Debug)]
+pub struct BitReader<'a> {
+    words: &'a [u64],
+    len: usize,
+    pos: usize,
+}
+
+impl BitReader<'_> {
+    /// Read the next `n` bits (`n ≤ 32`). Panics past the end.
+    #[inline]
+    pub fn read(&mut self, n: u32) -> u32 {
+        debug_assert!(n <= 32);
+        assert!(
+            self.pos + n as usize <= self.len,
+            "bitstream underrun: pos {} + {} > len {}",
+            self.pos,
+            n,
+            self.len
+        );
+        if n == 0 {
+            return 0;
+        }
+        let bit_off = self.pos & 63;
+        let word_idx = self.pos >> 6;
+        let mut v = self.words[word_idx] >> bit_off;
+        let taken = 64 - bit_off;
+        if (n as usize) > taken {
+            v |= self.words[word_idx + 1] << taken;
+        }
+        self.pos += n as usize;
+        if n == 32 {
+            v as u32
+        } else {
+            (v & ((1u64 << n) - 1)) as u32
+        }
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> bool {
+        self.read(1) != 0
+    }
+
+    /// Bits remaining.
+    pub fn remaining(&self) -> usize {
+        self.len - self.pos
+    }
+
+    /// Bits consumed so far.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        w.push(0xFF, 8);
+        w.push(0, 1);
+        w.push(0x1234, 16);
+        assert_eq!(w.len(), 28);
+        let mut r = w.reader();
+        assert_eq!(r.read(3), 0b101);
+        assert_eq!(r.read(8), 0xFF);
+        assert_eq!(r.read(1), 0);
+        assert_eq!(r.read(16), 0x1234);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn word_boundary_crossing() {
+        let mut w = BitWriter::new();
+        w.push(0x3FFFFFFF, 30);
+        w.push(0x3FFFFFFF, 30);
+        w.push(0xABCD, 16); // crosses the 64-bit word boundary
+        let mut r = w.reader();
+        assert_eq!(r.read(30), 0x3FFFFFFF);
+        assert_eq!(r.read(30), 0x3FFFFFFF);
+        assert_eq!(r.read(16), 0xABCD);
+    }
+
+    #[test]
+    fn byte_len_rounds_up() {
+        let mut w = BitWriter::new();
+        w.push(1, 1);
+        assert_eq!(w.byte_len(), 1);
+        w.push(0x7F, 7);
+        assert_eq!(w.byte_len(), 1);
+        w.push_bit(true);
+        assert_eq!(w.byte_len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "underrun")]
+    fn read_past_end_panics() {
+        let mut w = BitWriter::new();
+        w.push(3, 2);
+        let mut r = w.reader();
+        r.read(3);
+    }
+
+    #[test]
+    fn full_32bit_values() {
+        let mut w = BitWriter::new();
+        w.push(u32::MAX, 32);
+        w.push(0, 32);
+        w.push(u32::MAX, 32);
+        let mut r = w.reader();
+        assert_eq!(r.read(32), u32::MAX);
+        assert_eq!(r.read(32), 0);
+        assert_eq!(r.read(32), u32::MAX);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_fields() {
+        check(
+            100,
+            |r, size| {
+                let n = 1 + size * 3;
+                (0..n)
+                    .map(|_| {
+                        let bits = 1 + r.below(32) as u32;
+                        let v = if bits == 32 {
+                            r.next_u64() as u32
+                        } else {
+                            r.below(1 << bits) as u32
+                        };
+                        (v, bits)
+                    })
+                    .collect::<Vec<(u32, u32)>>()
+            },
+            |fields| {
+                let mut w = BitWriter::new();
+                for &(v, n) in fields {
+                    w.push(v, n);
+                }
+                let expected: usize = fields.iter().map(|&(_, n)| n as usize).sum();
+                if w.len() != expected {
+                    return false;
+                }
+                let mut rd = w.reader();
+                fields.iter().all(|&(v, n)| rd.read(n) == v) && rd.remaining() == 0
+            },
+        );
+    }
+}

@@ -1,0 +1,870 @@
+//! The CoDR RLE coder: histogram collection, parameter search, encode,
+//! decode. See module docs in [`super`] for the exact bit formats.
+
+use super::bitstream::{BitReader, BitWriter};
+use super::CompressionStats;
+use crate::reuse::UcrVector;
+
+/// `ceil(log2(n))` — width needed to store values in `[0, n)`.
+#[inline]
+pub(crate) fn bits_for(n: usize) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        usize::BITS - (n - 1).leading_zeros()
+    }
+}
+
+/// Fixed geometry of the vectors being coded (identical for every vector
+/// of a layer once the tiling parameters are chosen).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoderSpec {
+    /// Linearized vector length `L = T_M · R_K · C_K`.
+    pub vec_len: usize,
+}
+
+impl CoderSpec {
+    pub fn new(vec_len: usize) -> Self {
+        assert!(vec_len >= 1);
+        CoderSpec { vec_len }
+    }
+
+    /// Absolute-index width: `ceil(log2 L)`.
+    pub fn abs_bits(&self) -> u32 {
+        bits_for(self.vec_len)
+    }
+
+    /// Per-vector entry-count header width: `ceil(log2 (L+1))` (the entry
+    /// count including dummies never exceeds the non-zero count ≤ L).
+    pub fn len_bits(&self) -> u32 {
+        bits_for(self.vec_len + 1)
+    }
+}
+
+/// The per-layer encoding parameters chosen by the search (paper: "RLE
+/// Encoder iterates on the encoding parameter of each data structure").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RleParams {
+    /// Low-precision Δ width `k` (weights).
+    pub delta_bits: u32,
+    /// Fixed repetition-count width `r`.
+    pub count_bits: u32,
+    /// Low-precision index-Δ width `j`.
+    pub index_bits: u32,
+    /// Per-vector entry-count header width `h`: counts in
+    /// `[0, 2^h − 2]` are stored directly; the all-ones escape code is
+    /// followed by a full `len_bits` value. Searched like the other
+    /// structures — sparse layers pick a tiny `h` because most vectors
+    /// hold only a few uniques.
+    pub header_bits: u32,
+}
+
+/// Bits of the per-layer parameter header written to DRAM alongside the
+/// streams (three 4-bit parameters + 16-bit vector-geometry tag, rounded
+/// up to a byte multiple).
+pub const PARAM_HEADER_BITS: usize = 32;
+
+// ---------------------------------------------------------------------------
+// Histograms + size model
+// ---------------------------------------------------------------------------
+
+/// One-pass histograms from which the encoded size under any candidate
+/// parameter set is computed in O(1).
+#[derive(Clone, Debug)]
+pub struct LayerHistograms {
+    spec: CoderSpec,
+    pub n_vectors: usize,
+    /// Vectors with at least one unique weight (each emits one absolute
+    /// first entry).
+    pub n_nonempty: usize,
+    /// Real unique entries, including each vector's first.
+    pub n_uniques: usize,
+    /// Δ values of non-first entries (0..=254 after sort, always ≥ 1 for
+    /// real entries; kept full-width for safety).
+    pub delta_hist: [u64; 256],
+    /// Repetition counts, indexed by count (1..=L).
+    pub count_hist: Vec<u64>,
+    /// Positive index Δs (`idx − prev`), indexed by Δ (1..=L−1).
+    pub idx_delta_hist: Vec<u64>,
+    /// Indexes forced to absolute mode (vector-first or non-positive Δ).
+    pub n_idx_abs: u64,
+    /// Total indexes (= total non-zeros).
+    pub n_indexes: u64,
+    /// Unique counts per vector (before dummy insertion), indexed by count.
+    pub vec_unique_hist: Vec<u64>,
+}
+
+impl LayerHistograms {
+    pub fn new(spec: CoderSpec) -> Self {
+        LayerHistograms {
+            spec,
+            n_vectors: 0,
+            n_nonempty: 0,
+            n_uniques: 0,
+            delta_hist: [0; 256],
+            count_hist: vec![0; spec.vec_len + 1],
+            idx_delta_hist: vec![0; spec.vec_len + 1],
+            n_idx_abs: 0,
+            n_indexes: 0,
+            vec_unique_hist: vec![0; spec.vec_len + 1],
+        }
+    }
+
+    /// Accumulate one UCR vector.
+    pub fn add_vector(&mut self, u: &UcrVector) {
+        assert!(u.len <= self.spec.vec_len, "vector longer than coder spec");
+        self.n_vectors += 1;
+        self.vec_unique_hist[u.uniques.len()] += 1;
+        if u.uniques.is_empty() {
+            return;
+        }
+        self.n_nonempty += 1;
+        self.n_uniques += u.uniques.len();
+        let deltas = u.deltas();
+        for &d in &deltas[1..] {
+            self.delta_hist[d as usize] += 1;
+        }
+        for &c in &u.counts {
+            self.count_hist[c as usize] += 1;
+        }
+        // Index Δs in emission order: ascending within each unique's list,
+        // restarting (possibly negative Δ) at group boundaries.
+        let mut prev: i64 = -1;
+        let mut first = true;
+        for group in &u.indexes {
+            for &idx in group {
+                let idx = idx as i64;
+                if first {
+                    self.n_idx_abs += 1;
+                    first = false;
+                } else {
+                    let d = idx - prev;
+                    if d > 0 {
+                        self.idx_delta_hist[d as usize] += 1;
+                    } else {
+                        self.n_idx_abs += 1;
+                    }
+                }
+                prev = idx;
+                self.n_indexes += 1;
+            }
+        }
+    }
+
+    /// Dummy entries created by count overflow at count width `r`.
+    ///
+    /// Count-field semantics: the all-ones field means "this chunk carries
+    /// `2^r − 1` repetitions and a continuation dummy follows"; any other
+    /// field `f` means "final chunk of `f + 1` repetitions". A unique with
+    /// count `c` therefore needs `⌈c / (2^r − 1)⌉` chunks, i.e.
+    /// `⌊(c − 1) / (2^r − 1)⌋` dummies.
+    pub fn dummies(&self, r: u32) -> u64 {
+        let cap = (1u64 << r) - 1;
+        self.count_hist
+            .iter()
+            .enumerate()
+            .skip(1)
+            .map(|(c, &n)| n * ((c as u64 - 1) / cap))
+            .sum()
+    }
+
+    /// Per-vector header stream size at width `h`: real-unique counts in
+    /// `[0, 2^h − 2]` are direct; the all-ones escape prefixes a full
+    /// `len_bits` value.
+    pub fn header_stream_bits(&self, h: u32) -> u64 {
+        let escape = (1u64 << h) - 1;
+        let len_bits = self.spec.len_bits() as u64;
+        self.vec_unique_hist
+            .iter()
+            .enumerate()
+            .map(|(g, &n)| {
+                let w = if (g as u64) < escape { h as u64 } else { h as u64 + len_bits };
+                n * w
+            })
+            .sum()
+    }
+
+    /// Size of the Δ stream at low-precision width `k`, with the dummies
+    /// induced by count width `r` (dummies are Δ=0 → always low precision).
+    pub fn delta_stream_bits(&self, k: u32, r: u32) -> u64 {
+        let mut bits = self.n_nonempty as u64 * (1 + 8);
+        let threshold = 1u64 << k;
+        for (d, &n) in self.delta_hist.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let w = if (d as u64) < threshold { k } else { 8 };
+            bits += n * (1 + w) as u64;
+        }
+        bits + self.dummies(r) * (1 + k) as u64
+    }
+
+    /// Size of the count stream at width `r`.
+    pub fn count_stream_bits(&self, r: u32) -> u64 {
+        (self.n_uniques as u64 + self.dummies(r)) * r as u64
+    }
+
+    /// Size of the index stream at low-precision width `j` (stores `Δ−1`,
+    /// so Δ ∈ [1, 2^j] fits).
+    pub fn index_stream_bits(&self, j: u32) -> u64 {
+        let abs = self.spec.abs_bits();
+        let mut bits = self.n_idx_abs * (1 + abs) as u64;
+        let threshold = 1u64 << j;
+        for (d, &n) in self.idx_delta_hist.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let w = if (d as u64) <= threshold { j } else { abs };
+            bits += n * (1 + w) as u64;
+        }
+        bits
+    }
+
+    /// Total size under a parameter set.
+    pub fn total_bits(&self, p: RleParams) -> u64 {
+        self.delta_stream_bits(p.delta_bits, p.count_bits)
+            + self.count_stream_bits(p.count_bits)
+            + self.index_stream_bits(p.index_bits)
+            + self.header_stream_bits(p.header_bits)
+            + PARAM_HEADER_BITS as u64
+    }
+
+    /// Exhaustive parameter search (paper §III-C): k and r are coupled
+    /// through dummy insertion; j and h are independent.
+    pub fn best_params(&self) -> RleParams {
+        let r_max = bits_for(self.spec.vec_len).max(1);
+        let mut best = RleParams {
+            delta_bits: 1,
+            count_bits: 1,
+            index_bits: 1,
+            header_bits: 1,
+        };
+        let mut best_wc = u64::MAX;
+        for r in 1..=r_max {
+            for k in 1..=7 {
+                let bits = self.delta_stream_bits(k, r) + self.count_stream_bits(r);
+                if bits < best_wc {
+                    best_wc = bits;
+                    best.delta_bits = k;
+                    best.count_bits = r;
+                }
+            }
+        }
+        let j_max = self.spec.abs_bits().max(1);
+        let mut best_ib = u64::MAX;
+        for j in 1..=j_max {
+            let bits = self.index_stream_bits(j);
+            if bits < best_ib {
+                best_ib = bits;
+                best.index_bits = j;
+            }
+        }
+        let h_max = self.spec.len_bits().max(1);
+        let mut best_hb = u64::MAX;
+        for h in 1..=h_max {
+            let bits = self.header_stream_bits(h);
+            if bits < best_hb {
+                best_hb = bits;
+                best.header_bits = h;
+            }
+        }
+        best
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode
+// ---------------------------------------------------------------------------
+
+/// The three encoded streams plus per-vector headers of one layer.
+#[derive(Clone, Debug)]
+pub struct EncodedLayer {
+    pub spec: CoderSpec,
+    pub params: RleParams,
+    pub header: BitWriter,
+    pub deltas: BitWriter,
+    pub counts: BitWriter,
+    pub indexes: BitWriter,
+    pub n_vectors: usize,
+}
+
+impl EncodedLayer {
+    pub fn new(spec: CoderSpec, params: RleParams) -> Self {
+        EncodedLayer {
+            spec,
+            params,
+            header: BitWriter::new(),
+            deltas: BitWriter::new(),
+            counts: BitWriter::new(),
+            indexes: BitWriter::new(),
+            n_vectors: 0,
+        }
+    }
+
+    /// Total encoded bits including headers.
+    pub fn total_bits(&self) -> usize {
+        self.header.len() + self.deltas.len() + self.counts.len() + self.indexes.len()
+            + PARAM_HEADER_BITS
+    }
+
+    pub fn stats(&self, num_weights: usize) -> CompressionStats {
+        CompressionStats {
+            num_weights,
+            encoded_bits: self.total_bits(),
+            delta_bits: self.deltas.len(),
+            count_bits: self.counts.len(),
+            index_bits: self.indexes.len(),
+            header_bits: self.header.len() + PARAM_HEADER_BITS,
+        }
+    }
+}
+
+/// Split one repetition count into chunks per the continuation scheme:
+/// all-but-last chunks carry exactly `2^r − 1` repetitions (encoded as the
+/// all-ones field, which doubles as the "more follows" marker), the last
+/// carries `[1, 2^r − 1]` (encoded as `count − 1`).
+pub(crate) fn split_count(c: u32, r: u32) -> Vec<u32> {
+    let cap = (1u32 << r) - 1;
+    let n_cont = ((c - 1) / cap) as usize;
+    let last = c - n_cont as u32 * cap;
+    let mut chunks = vec![cap; n_cont];
+    chunks.push(last);
+    chunks
+}
+
+/// Append one UCR vector to the layer's streams.
+pub fn encode_vector(enc: &mut EncodedLayer, u: &UcrVector) {
+    assert!(u.len <= enc.spec.vec_len);
+    let p = enc.params;
+
+    // Split counts into chunks (dummy Δ=0 entries carry overflow).
+    // Chunks: (delta_entry, count). delta_entry None = vector-first abs.
+    let deltas = u.deltas();
+    let mut entries: Vec<(Option<u8>, u32)> = Vec::new();
+    for (i, &c) in u.counts.iter().enumerate() {
+        for (ci, chunk) in split_count(c, p.count_bits).into_iter().enumerate() {
+            let delta = if ci == 0 {
+                if i == 0 {
+                    None // vector-first: absolute weight
+                } else {
+                    Some(deltas[i])
+                }
+            } else {
+                Some(0) // dummy
+            };
+            entries.push((delta, chunk));
+        }
+    }
+
+    // Per-vector header: the *real* unique count, h-bit with escape.
+    let g = u.uniques.len() as u32;
+    let escape = (1u32 << p.header_bits) - 1;
+    if g < escape {
+        enc.header.push(g, p.header_bits);
+    } else {
+        enc.header.push(escape, p.header_bits);
+        enc.header.push(g, enc.spec.len_bits());
+    }
+    enc.n_vectors += 1;
+
+    // Δ stream.
+    for &(delta, _) in &entries {
+        match delta {
+            None => {
+                // Absolute first unique: flag 0 + 8-bit two's complement.
+                enc.deltas.push_bit(false);
+                enc.deltas.push(u.uniques[0] as u8 as u32, 8);
+            }
+            Some(d) => {
+                if (d as u32) < (1u32 << p.delta_bits) {
+                    enc.deltas.push_bit(true);
+                    enc.deltas.push(d as u32, p.delta_bits);
+                } else {
+                    enc.deltas.push_bit(false);
+                    enc.deltas.push(d as u32, 8);
+                }
+            }
+        }
+    }
+
+    // Count stream: continuation chunks (carrying 2^r − 1) are the
+    // all-ones field; final chunks encode `count − 1`. A continuation is
+    // always followed by a dummy entry, so "is this entry a continuation"
+    // is recoverable: it is iff the *next* entry's Δ is 0 — but the field
+    // encoding makes it explicit without lookahead.
+    let cap = (1u32 << p.count_bits) - 1;
+    for (i, &(_, c)) in entries.iter().enumerate() {
+        let next_is_dummy = entries.get(i + 1).is_some_and(|&(d, _)| d == Some(0));
+        if next_is_dummy {
+            debug_assert_eq!(c, cap);
+            enc.counts.push((1 << p.count_bits) - 1, p.count_bits);
+        } else {
+            enc.counts.push(c - 1, p.count_bits);
+        }
+    }
+
+    // Index stream: Δ−1 coded with mode flag, running prev across the
+    // vector's whole emission order.
+    let mut prev: i64 = -1;
+    let mut first = true;
+    for group in &u.indexes {
+        for &idx in group {
+            let idx = idx as i64;
+            let d = idx - prev;
+            if !first && d > 0 && d <= (1i64 << p.index_bits) {
+                enc.indexes.push_bit(true);
+                enc.indexes.push((d - 1) as u32, p.index_bits);
+            } else {
+                enc.indexes.push_bit(false);
+                enc.indexes.push(idx as u32, enc.spec.abs_bits());
+            }
+            prev = idx;
+            first = false;
+        }
+    }
+}
+
+/// Encode a whole layer (vectors in dataflow order): collect histograms,
+/// search parameters, emit streams.
+pub fn encode_layer(vectors: &[UcrVector], spec: CoderSpec) -> EncodedLayer {
+    let refs: Vec<&UcrVector> = vectors.iter().collect();
+    encode_layer_refs(&refs, spec)
+}
+
+/// [`encode_layer`] over borrowed vectors (avoids cloning the transformed
+/// layer — the simulators keep the tile structure alive alongside).
+pub fn encode_layer_refs(vectors: &[&UcrVector], spec: CoderSpec) -> EncodedLayer {
+    let mut hist = LayerHistograms::new(spec);
+    for u in vectors {
+        hist.add_vector(u);
+    }
+    let params = hist.best_params();
+    let mut enc = EncodedLayer::new(spec, params);
+    for u in vectors {
+        encode_vector(&mut enc, u);
+    }
+    debug_assert_eq!(
+        enc.total_bits() as u64,
+        hist.total_bits(params),
+        "histogram size model disagrees with emitted streams"
+    );
+    enc
+}
+
+// ---------------------------------------------------------------------------
+// Decode
+// ---------------------------------------------------------------------------
+
+/// Streaming decoder state over an [`EncodedLayer`] (this is what the
+/// MPE's Weight Decoder implements in hardware, Fig 5c).
+pub struct LayerDecoder<'a> {
+    enc: &'a EncodedLayer,
+    header: BitReader<'a>,
+    deltas: BitReader<'a>,
+    counts: BitReader<'a>,
+    indexes: BitReader<'a>,
+    decoded: usize,
+}
+
+impl<'a> LayerDecoder<'a> {
+    pub fn new(enc: &'a EncodedLayer) -> Self {
+        LayerDecoder {
+            enc,
+            header: enc.header.reader(),
+            deltas: enc.deltas.reader(),
+            counts: enc.counts.reader(),
+            indexes: enc.indexes.reader(),
+            decoded: 0,
+        }
+    }
+
+    /// Vectors remaining.
+    pub fn remaining(&self) -> usize {
+        self.enc.n_vectors - self.decoded
+    }
+
+    /// Decode the next vector. `vec_len` is the true linearized length of
+    /// this vector (edge tiles may be shorter than the spec's `L`).
+    pub fn next_vector(&mut self, vec_len: usize) -> UcrVector {
+        assert!(self.remaining() > 0, "decoder exhausted");
+        let p = self.enc.params;
+        let spec = self.enc.spec;
+        // Header: real unique count, h-bit with all-ones escape.
+        let escape = (1u32 << p.header_bits) - 1;
+        let mut n_uniques = self.header.read(p.header_bits);
+        if n_uniques == escape {
+            n_uniques = self.header.read(spec.len_bits());
+        }
+
+        let mut uniques: Vec<i8> = Vec::new();
+        let mut counts: Vec<u32> = Vec::new();
+        let mut indexes: Vec<Vec<u16>> = Vec::new();
+        let mut prev_weight: i16 = 0;
+        let mut prev_idx: i64 = -1;
+        let all_ones = (1u32 << p.count_bits) - 1;
+
+        let mut remaining_real = n_uniques;
+        let mut expect_continuation = false;
+        let mut first = true;
+        while remaining_real > 0 || expect_continuation {
+            // Δ entry.
+            let low = self.deltas.read_bit();
+            let raw = if low {
+                self.deltas.read(p.delta_bits)
+            } else {
+                self.deltas.read(8)
+            };
+            // Count field: all-ones = "2^r − 1 repetitions, continuation
+            // dummy follows"; otherwise "final chunk of f + 1 repetitions".
+            let f = self.counts.read(p.count_bits);
+            let count;
+            if f == all_ones {
+                count = all_ones.max(1);
+                expect_continuation = true;
+            } else {
+                count = f + 1;
+                expect_continuation = false;
+            }
+
+            let is_dummy;
+            let weight: i8;
+            if first {
+                debug_assert!(!low, "vector-first entry must be absolute");
+                weight = raw as u8 as i8;
+                is_dummy = false;
+                first = false;
+            } else if raw == 0 {
+                // Dummy: continuation of the previous unique.
+                weight = prev_weight as i8;
+                is_dummy = true;
+            } else {
+                weight = (prev_weight + raw as i16) as i8;
+                is_dummy = false;
+            }
+            prev_weight = weight as i16;
+            if !is_dummy {
+                remaining_real -= 1;
+            }
+
+            // Indexes of this entry.
+            let mut idx_list = Vec::with_capacity(count as usize);
+            for _ in 0..count {
+                let mode = self.indexes.read_bit();
+                let idx = if mode {
+                    (prev_idx + 1 + self.indexes.read(p.index_bits) as i64) as u32
+                } else {
+                    self.indexes.read(spec.abs_bits())
+                };
+                debug_assert!((idx as usize) < vec_len, "decoded index out of range");
+                idx_list.push(idx as u16);
+                prev_idx = idx as i64;
+            }
+
+            if is_dummy {
+                let last = uniques.len() - 1;
+                counts[last] += count;
+                indexes[last].extend(idx_list);
+            } else {
+                uniques.push(weight);
+                counts.push(count);
+                indexes.push(idx_list);
+            }
+        }
+
+        self.decoded += 1;
+        UcrVector {
+            uniques,
+            counts,
+            indexes,
+            len: vec_len,
+        }
+    }
+}
+
+/// Convenience: decode every vector of a layer given their true lengths.
+pub fn decode_layer(enc: &EncodedLayer, vec_lens: &[usize]) -> Vec<UcrVector> {
+    assert_eq!(vec_lens.len(), enc.n_vectors);
+    let mut dec = LayerDecoder::new(enc);
+    vec_lens.iter().map(|&l| dec.next_vector(l)).collect()
+}
+
+/// Convenience wrapper used in tests: encode + decode one vector.
+pub fn decode_vector(enc: &EncodedLayer, vec_len: usize) -> UcrVector {
+    LayerDecoder::new(enc).next_vector(vec_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn random_vector(rng: &mut Rng, len: usize, zero_p: f64, spread: u64) -> Vec<i8> {
+        (0..len)
+            .map(|_| {
+                if rng.chance(zero_p) {
+                    0
+                } else {
+                    let v = (rng.below(2 * spread + 1) as i64 - spread as i64).clamp(-127, 127);
+                    if v == 0 {
+                        1
+                    } else {
+                        v as i8
+                    }
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bits_for_edges() {
+        assert_eq!(bits_for(1), 0);
+        assert_eq!(bits_for(2), 1);
+        assert_eq!(bits_for(3), 2);
+        assert_eq!(bits_for(36), 6);
+        assert_eq!(bits_for(64), 6);
+        assert_eq!(bits_for(65), 7);
+        assert_eq!(bits_for(484), 9);
+    }
+
+    #[test]
+    fn paper_fig4_example_roundtrip() {
+        // The Fig 1i / Fig 4 running example: weights manipulated into
+        // uniques with Δs and repetitions, encoded with parameter 2.
+        let v = [3i8, 0, 1, 3, 0, 1, 1, 4];
+        let u = UcrVector::from_weights(&v);
+        let spec = CoderSpec::new(8);
+        let enc = encode_layer(std::slice::from_ref(&u), spec);
+        let dec = decode_vector(&enc, 8);
+        assert_eq!(dec, u);
+        assert_eq!(dec.reconstruct(), v);
+    }
+
+    #[test]
+    fn empty_vector_roundtrip() {
+        let u = UcrVector::from_weights(&[0i8; 36]);
+        let enc = encode_layer(std::slice::from_ref(&u), CoderSpec::new(36));
+        let dec = decode_vector(&enc, 36);
+        assert_eq!(dec.reconstruct(), vec![0i8; 36]);
+    }
+
+    #[test]
+    fn single_element_vector() {
+        for w in [-128i8, -1, 1, 127] {
+            let u = UcrVector::from_weights(&[w]);
+            let enc = encode_layer(std::slice::from_ref(&u), CoderSpec::new(1));
+            assert_eq!(decode_vector(&enc, 1).reconstruct(), vec![w]);
+        }
+    }
+
+    #[test]
+    fn split_count_scheme() {
+        // r=2 → continuation chunks carry 3 (= 2^r − 1), final in [1,3].
+        assert_eq!(split_count(3, 2), vec![3]);
+        assert_eq!(split_count(4, 2), vec![3, 1]);
+        assert_eq!(split_count(6, 2), vec![3, 3]);
+        assert_eq!(split_count(7, 2), vec![3, 3, 1]);
+        for c in 1..200u32 {
+            for r in 1..6 {
+                let chunks = split_count(c, r);
+                assert_eq!(chunks.iter().sum::<u32>(), c);
+                let cap = (1u32 << r) - 1;
+                assert!(*chunks.last().unwrap() >= 1);
+                assert!(*chunks.last().unwrap() <= cap);
+                for &ch in &chunks[..chunks.len() - 1] {
+                    assert_eq!(ch, cap);
+                }
+                assert_eq!(chunks.len() as u64, 1 + (c as u64 - 1) / cap as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn count_overflow_inserts_dummies() {
+        // 40 repetitions of the same weight in a 64-long vector.
+        let v = vec![7i8; 40]
+            .into_iter()
+            .chain(vec![0i8; 24])
+            .collect::<Vec<_>>();
+        let u = UcrVector::from_weights(&v);
+        let spec = CoderSpec::new(64);
+        // Force a small count width to exercise overflow.
+        let params = RleParams {
+            delta_bits: 2,
+            count_bits: 3,
+            index_bits: 3,
+            header_bits: 2,
+        };
+        let mut enc = EncodedLayer::new(spec, params);
+        encode_vector(&mut enc, &u);
+        // Header stores the real unique count (1), not the entry count.
+        let mut hdr = enc.header.reader();
+        assert_eq!(hdr.read(2), 1);
+        let dec = decode_vector(&enc, 64);
+        assert_eq!(dec.reconstruct(), v);
+        assert_eq!(dec.uniques, vec![7]);
+        assert_eq!(dec.counts, vec![40]);
+    }
+
+    #[test]
+    fn header_escape_roundtrip() {
+        // A vector with many uniques forces the header escape path.
+        let v: Vec<i8> = (1..=30).map(|x| x as i8).collect();
+        let u = UcrVector::from_weights(&v);
+        let params = RleParams {
+            delta_bits: 2,
+            count_bits: 1,
+            index_bits: 2,
+            header_bits: 2, // escape at 3 — 30 uniques must escape
+        };
+        let spec = CoderSpec::new(30);
+        let mut enc = EncodedLayer::new(spec, params);
+        encode_vector(&mut enc, &u);
+        let dec = decode_vector(&enc, 30);
+        assert_eq!(dec.reconstruct(), v);
+    }
+
+    #[test]
+    fn histogram_model_matches_emitted_size_exactly() {
+        let mut rng = Rng::new(77);
+        let vectors: Vec<UcrVector> = (0..50)
+            .map(|_| UcrVector::from_weights(&random_vector(&mut rng, 36, 0.5, 20)))
+            .collect();
+        let spec = CoderSpec::new(36);
+        let mut hist = LayerHistograms::new(spec);
+        for u in &vectors {
+            hist.add_vector(u);
+        }
+        // Check *all* parameter combinations, not just the chosen one.
+        for r in 1..=6 {
+            for k in 1..=7 {
+                for j in 1..=6 {
+                    for h in 1..=6 {
+                        let p = RleParams {
+                            delta_bits: k,
+                            count_bits: r,
+                            index_bits: j,
+                            header_bits: h,
+                        };
+                        let mut enc = EncodedLayer::new(spec, p);
+                        for u in &vectors {
+                            encode_vector(&mut enc, u);
+                        }
+                        assert_eq!(
+                            enc.total_bits() as u64,
+                            hist.total_bits(p),
+                            "size model mismatch at k={k} r={r} j={j} h={h}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn best_params_is_argmin() {
+        let mut rng = Rng::new(123);
+        let vectors: Vec<UcrVector> = (0..30)
+            .map(|_| UcrVector::from_weights(&random_vector(&mut rng, 36, 0.6, 10)))
+            .collect();
+        let spec = CoderSpec::new(36);
+        let mut hist = LayerHistograms::new(spec);
+        for u in &vectors {
+            hist.add_vector(u);
+        }
+        let best = hist.best_params();
+        let best_bits = hist.total_bits(best);
+        for r in 1..=6 {
+            for k in 1..=7 {
+                for j in 1..=6 {
+                    for h in 1..=6 {
+                        let p = RleParams {
+                            delta_bits: k,
+                            count_bits: r,
+                            index_bits: j,
+                            header_bits: h,
+                        };
+                        assert!(hist.total_bits(p) >= best_bits);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn customization_beats_fixed_parameters() {
+        // The headline §V-B mechanism: per-layer-optimal parameters never
+        // lose to UCNN's fixed bit-length 5.
+        let mut rng = Rng::new(5);
+        for &(zero_p, spread) in &[(0.3, 5u64), (0.6, 40), (0.9, 100), (0.1, 2)] {
+            let vectors: Vec<UcrVector> = (0..40)
+                .map(|_| UcrVector::from_weights(&random_vector(&mut rng, 36, zero_p, spread)))
+                .collect();
+            let spec = CoderSpec::new(36);
+            let mut hist = LayerHistograms::new(spec);
+            for u in &vectors {
+                hist.add_vector(u);
+            }
+            let best = hist.total_bits(hist.best_params());
+            let fixed = hist.total_bits(RleParams {
+                delta_bits: 5,
+                count_bits: 5,
+                index_bits: 5,
+                header_bits: 5,
+            });
+            assert!(best <= fixed, "zero_p={zero_p} spread={spread}");
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_losing_nothing() {
+        check(
+            80,
+            |r, size| {
+                let len = 4 + size * 4;
+                let n_vec = 1 + r.index(6);
+                let zero_p = r.f64();
+                let spread = 1 + r.below(100);
+                let vs: Vec<Vec<i8>> = (0..n_vec)
+                    .map(|_| random_vector(r, len, zero_p, spread))
+                    .collect();
+                (vs, len)
+            },
+            |(vs, len)| {
+                let ucr: Vec<UcrVector> =
+                    vs.iter().map(|v| UcrVector::from_weights(v)).collect();
+                let enc = encode_layer(&ucr, CoderSpec::new(*len));
+                let lens = vec![*len; vs.len()];
+                let dec = decode_layer(&enc, &lens);
+                dec.iter()
+                    .zip(vs)
+                    .all(|(d, v)| d.reconstruct() == *v)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_sparser_vectors_compress_better_per_weight() {
+        // Compression should improve (fewer bits/weight) as sparsity rises,
+        // holding the value distribution fixed.
+        check(
+            20,
+            |r, _| r.next_u64(),
+            |&seed| {
+                let mut rng = Rng::new(seed);
+                let spec = CoderSpec::new(64);
+                let mut rates = Vec::new();
+                for zero_p in [0.2, 0.5, 0.8, 0.95] {
+                    let vs: Vec<UcrVector> = (0..40)
+                        .map(|_| {
+                            UcrVector::from_weights(&random_vector(&mut rng, 64, zero_p, 30))
+                        })
+                        .collect();
+                    let enc = encode_layer(&vs, spec);
+                    rates.push(enc.total_bits() as f64 / (40.0 * 64.0));
+                }
+                rates.windows(2).all(|w| w[1] <= w[0] * 1.05)
+            },
+        );
+    }
+}

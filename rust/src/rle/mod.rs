@@ -1,0 +1,75 @@
+//! Customized Run-Length Encoding (paper §III-C, Fig 4).
+//!
+//! CoDR stores three data structures per layer, each with its own
+//! per-layer-optimal encoding parameter found by exhaustive search:
+//!
+//! * **Unique-weight Δs** — the first unique of each vector is stored
+//!   absolute (8 bits); subsequent Δs carry a 1-bit *precision flag*:
+//!   `1` + `k` bits when `Δ < 2^k` (low precision), `0` + 8 bits otherwise.
+//! * **Repetition counts** — fixed `r`-bit numbers storing `count−1`.
+//!   A count overflowing `2^r` is split: the encoder inserts a **dummy
+//!   unique weight with Δ=0** carrying the remainder (Δ=0 cannot occur
+//!   between real distinct uniques, so the decoder merges dummies back
+//!   unambiguously).
+//! * **Indexes** — Δ-coded against the previous index with a 1-bit
+//!   *mode flag*: `1` + `j` bits storing `Δ−1` when `0 < Δ ≤ 2^j`;
+//!   absolute (`0` + `ceil(log2 L)` bits) when the Δ is negative, zero is
+//!   impossible, it does not fit, or the index is the vector's first.
+//!
+//! The parameter search evaluates sizes from histograms collected in one
+//! pass (O(1) per candidate parameter), then a second pass emits the
+//! actual bitstreams. `encoded ⇄ decoded` round-trips are property-tested
+//! and the histogram size-model is asserted equal to the emitted size.
+
+pub mod bitstream;
+mod coder;
+
+pub use coder::{
+    decode_layer, decode_vector, encode_layer, encode_layer_refs, encode_vector, CoderSpec,
+    EncodedLayer,
+    LayerHistograms, RleParams,
+};
+
+/// Compression summary for one encoded layer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompressionStats {
+    /// Weights in the raw layer (including zeros).
+    pub num_weights: usize,
+    /// Total encoded bits (streams + per-vector headers + parameter header).
+    pub encoded_bits: usize,
+    /// Bits of the delta / count / index streams individually.
+    pub delta_bits: usize,
+    pub count_bits: usize,
+    pub index_bits: usize,
+    /// Per-vector length headers.
+    pub header_bits: usize,
+}
+
+impl CompressionStats {
+    /// Average encoded bits per weight (the paper's ≈1.69 b/w for CoDR).
+    pub fn bits_per_weight(&self) -> f64 {
+        if self.num_weights == 0 {
+            0.0
+        } else {
+            self.encoded_bits as f64 / self.num_weights as f64
+        }
+    }
+
+    /// Compression rate versus dense 8-bit storage.
+    pub fn rate(&self) -> f64 {
+        if self.encoded_bits == 0 {
+            0.0
+        } else {
+            (self.num_weights * 8) as f64 / self.encoded_bits as f64
+        }
+    }
+
+    pub fn add(&mut self, o: &CompressionStats) {
+        self.num_weights += o.num_weights;
+        self.encoded_bits += o.encoded_bits;
+        self.delta_bits += o.delta_bits;
+        self.count_bits += o.count_bits;
+        self.index_bits += o.index_bits;
+        self.header_bits += o.header_bits;
+    }
+}

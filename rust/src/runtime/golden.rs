@@ -1,0 +1,177 @@
+//! Golden-model verification: run the CoDR compressed datapath and the
+//! AOT-compiled JAX/Pallas artifacts on identical inputs and demand
+//! bit-for-bit equality. Shared by the CLI (`codr golden`), the
+//! integration tests, and the end-to-end example.
+
+use super::{activations_f32, weights_f32, Manifest, Runtime};
+use crate::codr::{functional, Codr};
+use crate::models::{synthesize_activations, tiny_cnn, Workload};
+use crate::tensor::{fc, maxpool2d, relu_i32, requantize, Accum, Tensor};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Requantization shifts of the tiny CNN — must mirror
+/// `python/compile/model.py::TINY_SHIFTS`. Sized for the zoo's σ_q = 6
+/// weights so the post-shift activations keep ~6 bits of signal (too
+/// large a shift silently zeroes the network — caught by the
+/// `golden_is_seed_sensitive` integration test).
+pub const TINY_SHIFTS: (u32, u32) = (6, 6);
+
+/// Deterministic bias used by every golden comparison.
+pub fn golden_bias(m: usize) -> Vec<i32> {
+    (0..m as i32).map(|i| i * 5 - 11).collect()
+}
+
+/// Outcome of one conv-artifact check.
+#[derive(Clone, Debug)]
+pub struct ConvCheck {
+    pub name: String,
+    pub outputs: usize,
+    pub exact: bool,
+}
+
+/// Verify every conv artifact in `dir` against the simulator.
+pub fn check_convs(dir: &Path, seed: u64) -> Result<Vec<ConvCheck>> {
+    let manifest = Manifest::load(dir).context("loading manifest (run `make artifacts`)")?;
+    let rt = Runtime::cpu()?;
+    let design = Codr::default();
+    let mut results = Vec::new();
+    for entry in manifest.convs() {
+        let spec = entry.to_layer_spec()?;
+        let mut rng = Rng::new(seed).fork(&entry.name);
+        let w = crate::models::synthesize_weights(&spec, &mut rng);
+        let x = synthesize_activations(&spec, &mut rng);
+        let bias = golden_bias(spec.m);
+
+        let sim = functional::run_layer(&design, &spec, &w, &x, &bias);
+
+        let model = rt.load_hlo(&entry.hlo_path(dir))?;
+        let xf = activations_f32(&x);
+        let wf = weights_f32(&w);
+        let bf: Vec<f32> = bias.iter().map(|&b| b as f32).collect();
+        let out = model.run_f32(&[
+            (&xf, &[spec.n, spec.r_i, spec.r_i][..]),
+            (&wf, &[spec.m, spec.n, spec.r_k, spec.r_k][..]),
+            (&bf, &[spec.m][..]),
+        ])?;
+        let golden = &out[0];
+        let exact = golden.len() == sim.len()
+            && golden.iter().zip(sim.data()).all(|(&g, &s)| g == s as f32);
+        results.push(ConvCheck {
+            name: entry.name.clone(),
+            outputs: sim.len(),
+            exact,
+        });
+    }
+    Ok(results)
+}
+
+/// Max-pool 2×2 stride 2 over u8 activations (post-requantization).
+fn maxpool_u8(x: &Tensor<u8>, k: usize, stride: usize) -> Tensor<u8> {
+    let as_i32: Accum = x.map(|v| v as i32);
+    maxpool2d(&as_i32, k, stride).map(|v| v as u8)
+}
+
+/// End-to-end tiny-CNN comparison: simulator logits vs compiled model.
+#[derive(Clone, Debug)]
+pub struct TinyCnnE2e {
+    pub logits_sim: Vec<i32>,
+    pub logits_golden: Vec<f32>,
+    pub exact: bool,
+}
+
+/// Run the tiny CNN through the CoDR compressed datapath layer by layer
+/// (conv → ReLU → requantize → pool, then FC) and through the single
+/// `cnn_fwd` artifact, on identical weights/activations.
+pub fn run_tiny_cnn_e2e(dir: &Path, seed: u64) -> Result<TinyCnnE2e> {
+    let model = tiny_cnn();
+    let wl = Workload::generate(&model, None, None, seed);
+    let conv1 = &model.layers[0];
+    let conv2 = &model.layers[1];
+    let fc_spec = &model.layers[2];
+    let (w1, w2, wf) = (&wl.weights[0], &wl.weights[1], &wl.weights[2]);
+    let b1 = golden_bias(conv1.m);
+    let b2 = golden_bias(conv2.m);
+    let bf = golden_bias(fc_spec.m);
+    let mut rng = Rng::new(seed).fork("tiny/input");
+    let x = synthesize_activations(conv1, &mut rng);
+
+    // ---- simulator forward (every conv through the compressed datapath).
+    let design = Codr::default();
+    let h = functional::run_layer(&design, conv1, w1, &x, &b1);
+    let h = maxpool_u8(&requantize(&relu_i32(&h), TINY_SHIFTS.0), 2, 2);
+    let h = functional::run_layer(&design, conv2, w2, &h, &b2);
+    let h = maxpool_u8(&requantize(&relu_i32(&h), TINY_SHIFTS.1), 2, 2);
+    let wf2d = Tensor::from_vec(&[fc_spec.m, fc_spec.n], wf.data().to_vec());
+    let logits_sim = fc(h.data(), &wf2d, &bf);
+
+    // ---- golden forward (one compiled artifact, all layers fused).
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(dir)?;
+    let entry = manifest
+        .find("cnn_fwd")
+        .context("cnn_fwd missing from manifest")?;
+    let exe = rt.load_hlo(&entry.hlo_path(dir))?;
+    let xf = activations_f32(&x);
+    let w1f = weights_f32(w1);
+    let b1f: Vec<f32> = b1.iter().map(|&v| v as f32).collect();
+    let w2f = weights_f32(w2);
+    let b2f: Vec<f32> = b2.iter().map(|&v| v as f32).collect();
+    let wff = weights_f32(wf);
+    let bff: Vec<f32> = bf.iter().map(|&v| v as f32).collect();
+    let out = exe.run_f32(&[
+        (&xf, &[conv1.n, conv1.r_i, conv1.r_i][..]),
+        (&w1f, &[conv1.m, conv1.n, 3, 3][..]),
+        (&b1f, &[conv1.m][..]),
+        (&w2f, &[conv2.m, conv2.n, 3, 3][..]),
+        (&b2f, &[conv2.m][..]),
+        (&wff, &[fc_spec.m, fc_spec.n][..]),
+        (&bff, &[fc_spec.m][..]),
+    ])?;
+    let logits_golden = out[0].clone();
+
+    let exact = logits_golden.len() == logits_sim.len()
+        && logits_golden
+            .iter()
+            .zip(&logits_sim)
+            .all(|(&g, &s)| g == s as f32);
+    Ok(TinyCnnE2e {
+        logits_sim,
+        logits_golden,
+        exact,
+    })
+}
+
+/// Render a full golden report (used by `codr golden`).
+pub fn golden_report(dir: &Path, seed: u64) -> Result<String> {
+    let rt_platform = Runtime::cpu()?.platform();
+    let mut out = format!("golden check on PJRT platform `{rt_platform}`\n");
+    let mut failures = 0;
+    for c in check_convs(dir, seed)? {
+        out.push_str(&format!(
+            "  {:<28} {:>7} outputs ... {}\n",
+            c.name,
+            c.outputs,
+            if c.exact { "OK (exact)" } else { "MISMATCH" }
+        ));
+        if !c.exact {
+            failures += 1;
+        }
+    }
+    let e2e = run_tiny_cnn_e2e(dir, seed)?;
+    out.push_str(&format!(
+        "  {:<28} {:>7} logits  ... {}\n",
+        "cnn_fwd (end-to-end)",
+        e2e.logits_sim.len(),
+        if e2e.exact { "OK (exact)" } else { "MISMATCH" }
+    ));
+    if !e2e.exact {
+        failures += 1;
+    }
+    if failures > 0 {
+        bail!("{failures} golden mismatches\n{out}");
+    }
+    out.push_str("all golden checks passed: simulator == XLA, bit for bit\n");
+    Ok(out)
+}

@@ -1,0 +1,145 @@
+//! Artifact manifest: `artifacts/manifest.txt` maps each compiled HLO
+//! artifact to the layer geometry it was lowered at. Written by
+//! `python/compile/aot.py`, parsed here. Format: one entry per line of
+//! whitespace-separated `key=value` pairs, `#` comments allowed.
+//!
+//! ```text
+//! name=conv_n4_m8_r16_k3_s1_p1 kind=conv n=4 m=8 ri=16 rk=3 stride=1 pad=1
+//! name=cnn_fwd kind=cnn n=4 ri=16
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's geometry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// "conv" (single layer golden) or "cnn" (end-to-end forward).
+    pub kind: String,
+    pub fields: HashMap<String, usize>,
+}
+
+impl ArtifactEntry {
+    pub fn get(&self, key: &str) -> Result<usize> {
+        self.fields
+            .get(key)
+            .copied()
+            .with_context(|| format!("manifest entry {} missing field {key}", self.name))
+    }
+
+    /// Reconstruct the layer spec a conv artifact was lowered for.
+    pub fn to_layer_spec(&self) -> Result<crate::models::LayerSpec> {
+        Ok(crate::models::LayerSpec {
+            name: self.name.clone(),
+            kind: crate::models::LayerKind::Conv,
+            n: self.get("n")?,
+            m: self.get("m")?,
+            r_i: self.get("ri")?,
+            r_k: self.get("rk")?,
+            stride: self.get("stride")?,
+            pad: self.get("pad")?,
+            sigma_q: 20.0,
+            zero_frac: 0.5,
+        })
+    }
+
+    /// Path of the artifact's HLO text within `dir`.
+    pub fn hlo_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.hlo.txt", self.name))
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut name = None;
+            let mut kind = None;
+            let mut fields = HashMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad token {tok}", lineno + 1))?;
+                match k {
+                    "name" => name = Some(v.to_string()),
+                    "kind" => kind = Some(v.to_string()),
+                    _ => {
+                        let n: usize = v.parse().with_context(|| {
+                            format!("manifest line {}: non-numeric {k}={v}", lineno + 1)
+                        })?;
+                        fields.insert(k.to_string(), n);
+                    }
+                }
+            }
+            let (Some(name), Some(kind)) = (name, kind) else {
+                bail!("manifest line {}: missing name/kind", lineno + 1);
+            };
+            entries.push(ArtifactEntry { name, kind, fields });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn convs(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.entries.iter().filter(|e| e.kind == "conv")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# golden conv cases
+name=conv_a kind=conv n=4 m=8 ri=16 rk=3 stride=1 pad=1
+
+name=cnn_fwd kind=cnn n=4 ri=16
+";
+
+    #[test]
+    fn parses_entries_and_comments() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.convs().count(), 1);
+        let e = m.find("conv_a").unwrap();
+        assert_eq!(e.get("m").unwrap(), 8);
+        let spec = e.to_layer_spec().unwrap();
+        assert_eq!(spec.r_o(), 16);
+    }
+
+    #[test]
+    fn hlo_path_layout() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let p = m.find("cnn_fwd").unwrap().hlo_path(Path::new("artifacts"));
+        assert_eq!(p, PathBuf::from("artifacts/cnn_fwd.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("name=x kind=conv badtoken").is_err());
+        assert!(Manifest::parse("kind=conv n=1").is_err());
+        assert!(Manifest::parse("name=x kind=conv n=abc").is_err());
+    }
+}

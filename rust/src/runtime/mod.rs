@@ -1,0 +1,118 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas golden model from
+//! `artifacts/*.hlo.txt` and execute it on the XLA CPU client.
+//!
+//! This is the only place the `xla` crate is touched. Interchange is HLO
+//! **text** (not serialized `HloModuleProto`): jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids and round-trips cleanly (see
+//! /opt/xla-example/README.md). Python never runs at simulation time —
+//! after `make artifacts` the binary is self-contained.
+
+pub mod golden;
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client plus the executables loaded from the artifact dir.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled artifact ready to execute.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModel {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl LoadedModel {
+    /// Execute with f32 inputs of the given shapes; returns the flattened
+    /// f32 outputs (artifacts are lowered with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let tuple = result.decompose_tuple().context("decomposing result tuple")?;
+        tuple
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+/// Convert the integer simulation tensors to the f32 the golden model
+/// consumes. Integer convs at these magnitudes (|acc| < 2^24) are exact
+/// in f32, so golden comparisons are equality checks.
+pub fn to_f32(data: &[impl Copy + Into<f64>]) -> Vec<f32> {
+    data.iter().map(|&x| {
+        let v: f64 = x.into();
+        v as f32
+    }).collect()
+}
+
+/// Convert u8 activations to f32.
+pub fn activations_f32(t: &crate::tensor::Tensor<u8>) -> Vec<f32> {
+    t.data().iter().map(|&x| x as f32).collect()
+}
+
+/// Convert i8 weights to f32.
+pub fn weights_f32(t: &crate::tensor::Tensor<i8>) -> Vec<f32> {
+    t.data().iter().map(|&x| x as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn conversions_roundtrip_values() {
+        let a = Tensor::from_vec(&[4], vec![0u8, 1, 128, 255]);
+        assert_eq!(activations_f32(&a), vec![0.0, 1.0, 128.0, 255.0]);
+        let w = Tensor::from_vec(&[3], vec![-128i8, 0, 127]);
+        assert_eq!(weights_f32(&w), vec![-128.0, 0.0, 127.0]);
+    }
+
+    // PJRT-dependent tests live in rust/tests/golden.rs (they need the
+    // artifacts built by `make artifacts`).
+}

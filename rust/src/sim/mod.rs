@@ -1,0 +1,140 @@
+//! Common simulation driver types shared by the CoDR, UCNN and SCNN
+//! architecture models: per-layer results, per-model aggregation, and the
+//! `Accelerator` abstraction the coordinator fans out over.
+
+use crate::arch::{CactiLite, MemConfig, MemoryStats, TileConfig};
+use crate::energy::{price_layer, AluStats, EnergyBreakdown};
+use crate::models::{LayerSpec, Workload};
+use crate::rle::CompressionStats;
+use crate::tensor::Weights;
+
+/// Everything measured while simulating one conv layer on one design.
+#[derive(Clone, Debug, Default)]
+pub struct LayerResult {
+    pub layer: String,
+    pub mem: MemoryStats,
+    pub alu: AluStats,
+    pub cycles: u64,
+    pub compression: CompressionStats,
+    pub energy: EnergyBreakdown,
+}
+
+impl LayerResult {
+    /// Price this layer's activity and store the breakdown.
+    pub fn finish(mut self, cacti: &CactiLite, mem_cfg: &MemConfig) -> Self {
+        self.energy = price_layer(&self.mem, &self.alu, cacti, mem_cfg);
+        self
+    }
+}
+
+/// Aggregate over a whole model.
+#[derive(Clone, Debug, Default)]
+pub struct ModelResult {
+    pub arch: String,
+    pub model: String,
+    pub group: String,
+    pub layers: Vec<LayerResult>,
+}
+
+impl ModelResult {
+    pub fn mem(&self) -> MemoryStats {
+        let mut m = MemoryStats::default();
+        for l in &self.layers {
+            m.add(&l.mem);
+        }
+        m
+    }
+
+    pub fn alu(&self) -> AluStats {
+        let mut a = AluStats::default();
+        for l in &self.layers {
+            a.add(&l.alu);
+        }
+        a
+    }
+
+    pub fn energy(&self) -> EnergyBreakdown {
+        let mut e = EnergyBreakdown::default();
+        for l in &self.layers {
+            e.add(&l.energy);
+        }
+        e
+    }
+
+    pub fn compression(&self) -> CompressionStats {
+        let mut c = CompressionStats::default();
+        for l in &self.layers {
+            c.add(&l.compression);
+        }
+        c
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles).sum()
+    }
+}
+
+/// An accelerator design that can simulate a conv layer.
+///
+/// `simulate_layer` is the *stats* path used by every figure: it encodes
+/// the real weights, walks the design's dataflow loop nest, and returns
+/// exact access/ALU/cycle counts — without executing MACs, so full
+/// VGG16-scale models simulate in milliseconds. Functional execution
+/// (computing actual outputs through the compressed datapath) lives in
+/// `codr::functional` and is exercised by tests/examples on small layers.
+pub trait Accelerator: Sync {
+    fn name(&self) -> &'static str;
+    fn tile_config(&self) -> TileConfig;
+    fn simulate_layer(&self, spec: &LayerSpec, weights: &Weights) -> LayerResult;
+}
+
+/// Simulate every conv layer of a workload on `acc`.
+pub fn simulate_model(acc: &dyn Accelerator, workload: &Workload, group: &str) -> ModelResult {
+    let layers = workload
+        .conv_layers()
+        .map(|(spec, w)| acc.simulate_layer(spec, w))
+        .collect();
+    ModelResult {
+        arch: acc.name().to_string(),
+        model: workload.model.name.to_string(),
+        group: group.to_string(),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MemoryKind;
+
+    #[test]
+    fn model_result_aggregates() {
+        let mut l1 = LayerResult {
+            layer: "a".into(),
+            cycles: 10,
+            ..Default::default()
+        };
+        l1.mem.record(MemoryKind::InputSram, 5, 8);
+        l1.compression.num_weights = 100;
+        l1.compression.encoded_bits = 200;
+        let mut l2 = LayerResult {
+            layer: "b".into(),
+            cycles: 32,
+            ..Default::default()
+        };
+        l2.mem.record(MemoryKind::InputSram, 3, 8);
+        l2.compression.num_weights = 50;
+        l2.compression.encoded_bits = 100;
+        let mr = ModelResult {
+            arch: "x".into(),
+            model: "m".into(),
+            group: "Orig".into(),
+            layers: vec![l1, l2],
+        };
+        assert_eq!(mr.cycles(), 42);
+        assert_eq!(mr.mem().input_sram.accesses, 8);
+        let c = mr.compression();
+        assert_eq!(c.num_weights, 150);
+        assert!((c.bits_per_weight() - 2.0).abs() < 1e-12);
+    }
+}

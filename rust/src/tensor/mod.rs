@@ -1,0 +1,219 @@
+//! Minimal integer tensor substrate.
+//!
+//! The simulators operate on quantized CNN data: `u8` activations, `i8`
+//! weights, `i32` accumulators. This module provides the dense containers
+//! and the *reference* layer operators (direct convolution, FC, ReLU,
+//! max-pool) that every accelerator simulation is checked against — the
+//! simulators must reproduce these outputs bit-for-bit through their
+//! compressed datapaths.
+
+mod ops;
+
+pub use ops::{conv2d, fc, maxpool2d, relu_i32, requantize};
+
+/// Dense row-major N-d array.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-filled tensor with the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let len = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![T::default(); len],
+        }
+    }
+
+    /// Build from existing data; `data.len()` must equal the shape volume.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Tensor filled by `f(flat_index)`.
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> T) -> Self {
+        let len = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..len).map(&mut f).collect(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Number of dimensions.
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Flat offset of a multi-index (row-major).
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (d, (&i, &s)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(i < s, "index {i} out of bounds for dim {d} (size {s})");
+            off = off * s + i;
+        }
+        off
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// 3-d accessor (channels, rows, cols) — the activation layout.
+    #[inline]
+    pub fn at3(&self, c: usize, r: usize, col: usize) -> T {
+        debug_assert_eq!(self.shape.len(), 3);
+        self.data[(c * self.shape[1] + r) * self.shape[2] + col]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, c: usize, r: usize, col: usize, v: T) {
+        debug_assert_eq!(self.shape.len(), 3);
+        let o = (c * self.shape[1] + r) * self.shape[2] + col;
+        self.data[o] = v;
+    }
+
+    /// 4-d accessor (out-ch, in-ch, krow, kcol) — the weight layout.
+    #[inline]
+    pub fn at4(&self, m: usize, n: usize, r: usize, c: usize) -> T {
+        debug_assert_eq!(self.shape.len(), 4);
+        let s = &self.shape;
+        self.data[((m * s[1] + n) * s[2] + r) * s[3] + c]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, m: usize, n: usize, r: usize, c: usize, v: T) {
+        debug_assert_eq!(self.shape.len(), 4);
+        let o = {
+            let s = &self.shape;
+            ((m * s[1] + n) * s[2] + r) * s[3] + c
+        };
+        self.data[o] = v;
+    }
+
+    /// Map element-wise into a new tensor.
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+/// Activations: `[channels, rows, cols]` of `u8`.
+pub type Activations = Tensor<u8>;
+/// Weights: `[out_channels, in_channels, k_rows, k_cols]` of `i8`.
+pub type Weights = Tensor<i8>;
+/// Accumulators / pre-activation outputs: `[channels, rows, cols]` of `i32`.
+pub type Accum = Tensor<i32>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape_and_volume() {
+        let t: Tensor<i32> = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert!(t.data().iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn offset_row_major() {
+        let t: Tensor<u8> = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.offset(&[0, 0, 0]), 0);
+        assert_eq!(t.offset(&[0, 0, 3]), 3);
+        assert_eq!(t.offset(&[0, 1, 0]), 4);
+        assert_eq!(t.offset(&[1, 0, 0]), 12);
+        assert_eq!(t.offset(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn at3_matches_generic() {
+        let t = Tensor::from_fn(&[3, 4, 5], |i| i as u8);
+        for c in 0..3 {
+            for r in 0..4 {
+                for col in 0..5 {
+                    assert_eq!(t.at3(c, r, col), t.at(&[c, r, col]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn at4_matches_generic() {
+        let t = Tensor::from_fn(&[2, 3, 2, 2], |i| i as i8);
+        for m in 0..2 {
+            for n in 0..3 {
+                for r in 0..2 {
+                    for c in 0..2 {
+                        assert_eq!(t.at4(m, n, r, c), t.at(&[m, n, r, c]));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_rejects_bad_volume() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1u8, 2, 3]);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut t: Tensor<i32> = Tensor::zeros(&[2, 2]);
+        t.set(&[1, 0], -7);
+        assert_eq!(t.at(&[1, 0]), -7);
+        assert_eq!(t.at(&[0, 0]), 0);
+    }
+
+    #[test]
+    fn map_preserves_shape() {
+        let t = Tensor::from_fn(&[2, 5], |i| i as i8);
+        let u = t.map(|x| x as i32 * 2);
+        assert_eq!(u.shape(), t.shape());
+        assert_eq!(u.at(&[1, 4]), 18);
+    }
+}

@@ -1,0 +1,390 @@
+//! Reference layer operators (the functional ground truth).
+//!
+//! Everything is integer-exact: `u8` activations × `i8` weights accumulated
+//! in `i32`. Padding is zero-padding. These operators define the outputs
+//! that every accelerator simulation must reproduce exactly through its
+//! compressed datapath, and they match the JAX/Pallas golden model compiled
+//! into `artifacts/` (f32 there, exact for these magnitudes).
+
+use super::{Accum, Activations, Tensor, Weights};
+
+/// Output spatial size for one dimension.
+#[inline]
+pub(crate) fn out_dim(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    (input + 2 * pad - kernel) / stride + 1
+}
+
+/// Direct 2-D convolution (cross-correlation, as in every CNN framework).
+///
+/// * `input`  — `[N, R_I, C_I]` u8
+/// * `weights`— `[M, N, R_K, C_K]` i8
+/// * `bias`   — length `M` (i32), added to every output element
+///
+/// Returns `[M, R_O, C_O]` i32 pre-activations.
+pub fn conv2d(
+    input: &Activations,
+    weights: &Weights,
+    bias: &[i32],
+    stride: usize,
+    pad: usize,
+) -> Accum {
+    assert_eq!(input.ndim(), 3, "input must be [N, R_I, C_I]");
+    assert_eq!(weights.ndim(), 4, "weights must be [M, N, R_K, C_K]");
+    let (n_in, r_i, c_i) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let (m, n_w, r_k, c_k) = (
+        weights.shape()[0],
+        weights.shape()[1],
+        weights.shape()[2],
+        weights.shape()[3],
+    );
+    assert_eq!(n_in, n_w, "input channels mismatch");
+    assert_eq!(bias.len(), m, "bias length mismatch");
+    assert!(stride >= 1);
+    let r_o = out_dim(r_i, r_k, stride, pad);
+    let c_o = out_dim(c_i, c_k, stride, pad);
+
+    let mut out = Accum::zeros(&[m, r_o, c_o]);
+    for om in 0..m {
+        for or in 0..r_o {
+            for oc in 0..c_o {
+                let mut acc = bias[om];
+                for ic in 0..n_in {
+                    for kr in 0..r_k {
+                        // Signed arithmetic for the padded border.
+                        let ir = (or * stride + kr) as isize - pad as isize;
+                        if ir < 0 || ir >= r_i as isize {
+                            continue;
+                        }
+                        for kc in 0..c_k {
+                            let icol = (oc * stride + kc) as isize - pad as isize;
+                            if icol < 0 || icol >= c_i as isize {
+                                continue;
+                            }
+                            let x = input.at3(ic, ir as usize, icol as usize) as i32;
+                            let w = weights.at4(om, ic, kr, kc) as i32;
+                            acc += x * w;
+                        }
+                    }
+                }
+                out.set3(om, or, oc, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Fully-connected layer: `out[j] = bias[j] + Σ_i in[i]·w[j][i]`.
+///
+/// * `input` — flattened u8 activations, length `I`
+/// * `weights` — `[O, I]` i8
+pub fn fc(input: &[u8], weights: &Tensor<i8>, bias: &[i32]) -> Vec<i32> {
+    assert_eq!(weights.ndim(), 2);
+    let (o, i) = (weights.shape()[0], weights.shape()[1]);
+    assert_eq!(input.len(), i, "fc input length mismatch");
+    assert_eq!(bias.len(), o);
+    let w = weights.data();
+    (0..o)
+        .map(|j| {
+            let row = &w[j * i..(j + 1) * i];
+            let mut acc = bias[j];
+            for (x, wv) in input.iter().zip(row) {
+                acc += *x as i32 * *wv as i32;
+            }
+            acc
+        })
+        .collect()
+}
+
+/// ReLU on accumulators.
+pub fn relu_i32(x: &Accum) -> Accum {
+    x.map(|v| v.max(0))
+}
+
+/// 2-D max-pool over each channel. `input` is `[C, R, Cc]`.
+pub fn maxpool2d(input: &Accum, k: usize, stride: usize) -> Accum {
+    assert_eq!(input.ndim(), 3);
+    let (c, r_i, c_i) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let r_o = out_dim(r_i, k, stride, 0);
+    let c_o = out_dim(c_i, k, stride, 0);
+    let mut out = Accum::zeros(&[c, r_o, c_o]);
+    for ch in 0..c {
+        for or in 0..r_o {
+            for oc in 0..c_o {
+                let mut best = i32::MIN;
+                for kr in 0..k {
+                    for kc in 0..k {
+                        best = best.max(input.at3(ch, or * stride + kr, oc * stride + kc));
+                    }
+                }
+                out.set3(ch, or, oc, best);
+            }
+        }
+    }
+    out
+}
+
+/// Requantize i32 accumulators back to u8 activations with a power-of-two
+/// right shift (the usual integer-only CNN inference step), saturating.
+pub fn requantize(x: &Accum, shift: u32) -> Activations {
+    x.map(|v| {
+        let v = v >> shift;
+        v.clamp(0, 255) as u8
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+
+    /// The paper's Fig 3 worked example: N=2 input channels, M=2 output
+    /// channels, 4×4 inputs, 2×2 kernels, stride 1, no padding. The figure
+    /// shows the first 3-D convolution output value is 21.
+    #[test]
+    fn paper_fig3_example() {
+        // Input channel values chosen to reproduce the figure's partial
+        // sums: first channel dot product 14, second 7, total 21.
+        // Kernel ch0 = [[1,0],[1,1]], window [[2,4],[4,8]] → 2+4+8 = 14
+        // Kernel ch1 = [[1,1],[0,1]], window [[1,2],[3,4]] → 1+2+4 = 7
+        let mut input = Activations::zeros(&[2, 4, 4]);
+        // channel 0 top-left window
+        input.set3(0, 0, 0, 2);
+        input.set3(0, 0, 1, 4);
+        input.set3(0, 1, 0, 4);
+        input.set3(0, 1, 1, 8);
+        // channel 1 top-left window
+        input.set3(1, 0, 0, 1);
+        input.set3(1, 0, 1, 2);
+        input.set3(1, 1, 0, 3);
+        input.set3(1, 1, 1, 4);
+
+        let mut w = Weights::zeros(&[2, 2, 2, 2]);
+        // output channel 0, input channel 0: [[1,0],[1,1]]
+        w.set4(0, 0, 0, 0, 1);
+        w.set4(0, 0, 1, 0, 1);
+        w.set4(0, 0, 1, 1, 1);
+        // output channel 0, input channel 1: [[1,1],[0,1]]
+        w.set4(0, 1, 0, 0, 1);
+        w.set4(0, 1, 0, 1, 1);
+        w.set4(0, 1, 1, 1, 1);
+        // output channel 1 uses weights {2,3} (the paper's scalar-matrix demo)
+        w.set4(1, 0, 0, 0, 2);
+        w.set4(1, 1, 1, 1, 3);
+
+        let out = conv2d(&input, &w, &[0, 0], 1, 0);
+        assert_eq!(out.shape(), &[2, 3, 3]);
+        assert_eq!(out.at3(0, 0, 0), 21);
+        // Output ch1 at (0,0): 2·in0(0,0) + 3·in1(1,1) = 2·2 + 3·4 = 16
+        assert_eq!(out.at3(1, 0, 0), 16);
+    }
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        let input = Activations::from_fn(&[1, 3, 3], |i| i as u8 + 1);
+        let mut w = Weights::zeros(&[1, 1, 1, 1]);
+        w.set4(0, 0, 0, 0, 1);
+        let out = conv2d(&input, &w, &[0], 1, 0);
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(out.at3(0, r, c), input.at3(0, r, c) as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn bias_is_added_once_per_output() {
+        let input = Activations::zeros(&[1, 4, 4]);
+        let w = Weights::zeros(&[2, 1, 3, 3]);
+        let out = conv2d(&input, &w, &[5, -3], 1, 0);
+        assert!(out.data()[..4].iter().all(|&v| v == 5));
+        assert!(out.data()[4..].iter().all(|&v| v == -3));
+    }
+
+    #[test]
+    fn stride_and_padding_shapes() {
+        let input = Activations::zeros(&[1, 7, 7]);
+        let w = Weights::zeros(&[1, 1, 3, 3]);
+        assert_eq!(conv2d(&input, &w, &[0], 2, 0).shape(), &[1, 3, 3]);
+        assert_eq!(conv2d(&input, &w, &[0], 1, 1).shape(), &[1, 7, 7]);
+        assert_eq!(conv2d(&input, &w, &[0], 2, 1).shape(), &[1, 4, 4]);
+    }
+
+    #[test]
+    fn padding_zeros_contribute_nothing() {
+        // All-ones input and kernel: interior outputs see 9 taps, the
+        // corner sees only 4.
+        let input = Activations::from_fn(&[1, 5, 5], |_| 1);
+        let w = Weights::from_fn(&[1, 1, 3, 3], |_| 1);
+        let out = conv2d(&input, &w, &[0], 1, 1);
+        assert_eq!(out.at3(0, 2, 2), 9);
+        assert_eq!(out.at3(0, 0, 0), 4);
+        assert_eq!(out.at3(0, 0, 2), 6);
+    }
+
+    #[test]
+    fn fc_matches_manual() {
+        let w = Tensor::from_vec(&[2, 3], vec![1i8, 2, 3, -1, 0, 1]);
+        let out = fc(&[1, 2, 3], &w, &[10, 20]);
+        assert_eq!(out, vec![10 + 1 + 4 + 9, 20 - 1 + 0 + 3]);
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let x = Accum::from_vec(&[1, 1, 3], vec![-5, 0, 7]);
+        assert_eq!(relu_i32(&x).data(), &[0, 0, 7]);
+    }
+
+    #[test]
+    fn maxpool_picks_window_max() {
+        let x = Accum::from_vec(&[1, 2, 4], vec![1, 5, 2, 0, 3, 4, 9, -1]);
+        let out = maxpool2d(&x, 2, 2);
+        assert_eq!(out.shape(), &[1, 1, 2]);
+        assert_eq!(out.data(), &[5, 9]);
+    }
+
+    #[test]
+    fn requantize_shifts_and_saturates() {
+        let x = Accum::from_vec(&[1, 1, 4], vec![-100, 0, 512, 100_000]);
+        let q = requantize(&x, 2);
+        assert_eq!(q.data(), &[0, 0, 128, 255]);
+    }
+
+    /// Property: convolution is linear in the weights — conv(w1+w2) =
+    /// conv(w1) + conv(w2) (exact in i32 for small magnitudes).
+    #[test]
+    fn prop_conv_linear_in_weights() {
+        check(
+            30,
+            |r, size| {
+                let n = 1 + r.index(3);
+                let m = 1 + r.index(3);
+                let k = 1 + r.index(2);
+                let d = (k + 1 + r.index(4 + size / 25)).max(k);
+                let input = Activations::from_fn(&[n, d, d], |_| r.below(16) as u8);
+                let w1 = Weights::from_fn(&[m, n, k, k], |_| r.below(9) as i8 - 4);
+                let w2 = Weights::from_fn(&[m, n, k, k], |_| r.below(9) as i8 - 4);
+                (input, w1, w2, m)
+            },
+            |(input, w1, w2, m)| {
+                let bias = vec![0; *m];
+                let a = conv2d(input, w1, &bias, 1, 0);
+                let b = conv2d(input, w2, &bias, 1, 0);
+                let wsum = Weights::from_vec(
+                    w1.shape(),
+                    w1.data()
+                        .iter()
+                        .zip(w2.data())
+                        .map(|(&x, &y)| x + y)
+                        .collect(),
+                );
+                let s = conv2d(input, &wsum, &bias, 1, 0);
+                s.data()
+                    .iter()
+                    .zip(a.data().iter().zip(b.data()))
+                    .all(|(&sv, (&av, &bv))| sv == av + bv)
+            },
+        );
+    }
+
+    /// Property: stride-s conv equals stride-1 conv subsampled.
+    #[test]
+    fn prop_stride_is_subsampling() {
+        check(
+            20,
+            |r, _| {
+                let input = Activations::from_fn(&[2, 8, 8], |_| r.below(8) as u8);
+                let w = Weights::from_fn(&[2, 2, 3, 3], |_| r.below(7) as i8 - 3);
+                (input, w)
+            },
+            |(input, w)| {
+                let bias = [1, -1];
+                let full = conv2d(input, w, &bias, 1, 0);
+                let strided = conv2d(input, w, &bias, 2, 0);
+                let (ro, co) = (strided.shape()[1], strided.shape()[2]);
+                (0..2).all(|m| {
+                    (0..ro).all(|r2| {
+                        (0..co).all(|c2| strided.at3(m, r2, c2) == full.at3(m, r2 * 2, c2 * 2))
+                    })
+                })
+            },
+        );
+    }
+
+    /// Property: conv with a kernel that is zero except one tap equals a
+    /// shifted copy of the input scaled by that tap.
+    #[test]
+    fn prop_single_tap_is_shift() {
+        check(
+            20,
+            |r, _| {
+                let input = Activations::from_fn(&[1, 6, 6], |_| r.below(32) as u8);
+                let kr = r.index(3);
+                let kc = r.index(3);
+                let wv = (r.below(11) as i8) - 5;
+                (input, kr, kc, wv)
+            },
+            |(input, kr, kc, wv)| {
+                let mut w = Weights::zeros(&[1, 1, 3, 3]);
+                w.set4(0, 0, *kr, *kc, *wv);
+                let out = conv2d(input, &w, &[0], 1, 0);
+                (0..4).all(|r| {
+                    (0..4).all(|c| {
+                        out.at3(0, r, c) == input.at3(0, r + kr, c + kc) as i32 * *wv as i32
+                    })
+                })
+            },
+        );
+    }
+
+    /// Randomized agreement with a second, differently-ordered conv
+    /// implementation (kernel-major accumulation).
+    #[test]
+    fn prop_conv_agrees_with_scalar_matrix_order() {
+        check(
+            20,
+            |r, _| {
+                let n = 1 + r.index(3);
+                let m = 1 + r.index(3);
+                let input = Activations::from_fn(&[n, 6, 6], |_| r.below(64) as u8);
+                let w = Weights::from_fn(&[m, n, 3, 3], |_| (r.below(255) as i64 - 127) as i8);
+                (input, w, m, n)
+            },
+            |(input, w, m, n)| {
+                let bias: Vec<i32> = (0..*m as i32).collect();
+                let direct = conv2d(input, w, &bias, 1, 0);
+                // Scalar-matrix order: for each (m, n, kr, kc) accumulate the
+                // shifted input region — CoDR's dataflow (Fig 3b).
+                let (ro, co) = (direct.shape()[1], direct.shape()[2]);
+                let mut out = Accum::zeros(&[*m, ro, co]);
+                for om in 0..*m {
+                    for orr in 0..ro {
+                        for occ in 0..co {
+                            out.set3(om, orr, occ, bias[om]);
+                        }
+                    }
+                }
+                for om in 0..*m {
+                    for ic in 0..*n {
+                        for kr in 0..3 {
+                            for kc in 0..3 {
+                                let wv = w.at4(om, ic, kr, kc) as i32;
+                                if wv == 0 {
+                                    continue;
+                                }
+                                for orr in 0..ro {
+                                    for occ in 0..co {
+                                        let x = input.at3(ic, orr + kr, occ + kc) as i32;
+                                        let cur = out.at3(om, orr, occ);
+                                        out.set3(om, orr, occ, cur + wv * x);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                out == direct
+            },
+        );
+    }
+}

@@ -1,0 +1,202 @@
+//! In-tree micro/macro benchmark harness (the offline registry has no
+//! `criterion`). Used by every target under `benches/` via
+//! `[[bench]] harness = false`.
+//!
+//! Measures wall-clock over repeated runs with warmup, reports
+//! min / median / mean / p95 and a robust MAD-based noise estimate, and
+//! renders the one-line summary format the benches print for
+//! EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchStats {
+    fn sorted_nanos(&self) -> Vec<u128> {
+        let mut v: Vec<u128> = self.samples.iter().map(|d| d.as_nanos()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().unwrap()
+    }
+
+    pub fn median(&self) -> Duration {
+        let s = self.sorted_nanos();
+        Duration::from_nanos(s[s.len() / 2] as u64)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: u128 = self.samples.iter().map(|d| d.as_nanos()).sum();
+        Duration::from_nanos((total / self.samples.len() as u128) as u64)
+    }
+
+    pub fn p95(&self) -> Duration {
+        let s = self.sorted_nanos();
+        Duration::from_nanos(s[((s.len() * 95) / 100).min(s.len() - 1)] as u64)
+    }
+
+    /// Median absolute deviation, as a fraction of the median — a robust
+    /// "noise" figure (0.02 = ±2%).
+    pub fn noise(&self) -> f64 {
+        let s = self.sorted_nanos();
+        let med = s[s.len() / 2] as i128;
+        let mut dev: Vec<i128> = s.iter().map(|&x| (x as i128 - med).abs()).collect();
+        dev.sort_unstable();
+        let mad = dev[dev.len() / 2] as f64;
+        if med == 0 {
+            0.0
+        } else {
+            mad / med as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} median {:>12?}  mean {:>12?}  min {:>12?}  noise ±{:.1}%  (n={})",
+            self.name,
+            self.median(),
+            self.mean(),
+            self.min(),
+            self.noise() * 100.0,
+            self.samples.len()
+        )
+    }
+}
+
+/// Benchmark runner with warmup and a time budget.
+pub struct Bencher {
+    /// Minimum number of measured iterations.
+    pub min_iters: usize,
+    /// Maximum number of measured iterations.
+    pub max_iters: usize,
+    /// Stop sampling after roughly this much measured time.
+    pub budget: Duration,
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            min_iters: 10,
+            max_iters: 200,
+            budget: Duration::from_secs(3),
+            warmup: 2,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick configuration for heavyweight end-to-end benches.
+    pub fn heavy() -> Self {
+        Bencher {
+            min_iters: 3,
+            max_iters: 20,
+            budget: Duration::from_secs(10),
+            warmup: 1,
+            results: Vec::new(),
+        }
+    }
+
+    /// Fully custom configuration.
+    pub fn with(min_iters: usize, max_iters: usize, budget: Duration, warmup: usize) -> Self {
+        Bencher {
+            min_iters,
+            max_iters,
+            budget,
+            warmup,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, preventing the compiler from discarding its result via
+    /// `std::hint::black_box`.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples,
+        };
+        println!("{}", stats.summary());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All results recorded so far.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Render a closing table (printed by each bench binary's footer).
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        for r in &self.results {
+            println!("  {}", r.summary());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_samples_and_stats() {
+        let mut b = Bencher {
+            min_iters: 5,
+            max_iters: 5,
+            budget: Duration::from_millis(100),
+            warmup: 1,
+            results: Vec::new(),
+        };
+        let s = b.bench("noop", || 1 + 1).clone();
+        assert_eq!(s.samples.len(), 5);
+        assert!(s.min() <= s.median());
+        assert!(s.median() <= s.p95().max(s.median()));
+    }
+
+    #[test]
+    fn mean_of_constant_workload_is_positive() {
+        let mut b = Bencher {
+            min_iters: 3,
+            max_iters: 3,
+            budget: Duration::from_millis(50),
+            warmup: 0,
+            results: Vec::new(),
+        };
+        let s = b
+            .bench("spin", || {
+                let mut acc = 0u64;
+                for i in 0..10_000 {
+                    acc = acc.wrapping_add(i);
+                }
+                acc
+            })
+            .clone();
+        assert!(s.mean() > Duration::ZERO);
+    }
+}

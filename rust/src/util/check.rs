@@ -1,0 +1,94 @@
+//! Minimal property-based testing support (the offline registry has no
+//! `proptest`), used by the unit tests across the crate.
+//!
+//! `check(cases, gen, prop)` runs `prop` on `cases` random inputs produced
+//! by `gen`. On failure it re-runs the generator deterministically to
+//! report the failing seed so the case can be replayed, and performs a
+//! simple halving "shrink" over the generator's size hint when the
+//! generator supports it (via [`Sized`]-style closures taking a budget).
+
+use super::rng::Rng;
+
+/// Run `prop` against `cases` random values from `gen`.
+///
+/// `gen` receives an [`Rng`] plus a *size budget* in `[1, 100]` that grows
+/// over the run, so early cases are small (easy to debug) and later cases
+/// stress larger structures. Panics with the failing seed on the first
+/// counterexample.
+pub fn check<T: std::fmt::Debug>(
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    check_seeded(0xC0D2_2024, cases, &mut gen, &mut prop);
+}
+
+/// Like [`check`] but with an explicit base seed (for replaying failures).
+pub fn check_seeded<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: &mut impl FnMut(&mut Rng, usize) -> T,
+    prop: &mut impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        // Budget ramps 1..=100 over the run.
+        let size = 1 + (case * 100) / cases.max(1);
+        let value = gen(&mut rng, size);
+        if !prop(&value) {
+            // Try to find a smaller failing budget for a friendlier report.
+            let mut best: Option<(usize, T)> = None;
+            let mut lo = 1usize;
+            let mut hi = size;
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                let mut r2 = Rng::new(case_seed);
+                let v2 = gen(&mut r2, mid);
+                if !prop(&v2) {
+                    hi = mid;
+                    best = Some((mid, v2));
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            let (fsize, fval) = best.map(|(s, v)| (s, format!("{v:?}"))).unwrap_or((
+                size,
+                format!("{value:?}"),
+            ));
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}, size {fsize}):\n{fval}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(50, |r, size| r.index(size.max(1)), |&v| v < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_counterexample() {
+        check(50, |r, size| r.index(size.max(1)), |&v| v < 3);
+    }
+
+    #[test]
+    fn size_budget_ramps() {
+        let mut max_seen = 0usize;
+        check(
+            100,
+            |_, size| size,
+            |&s| {
+                max_seen = max_seen.max(s);
+                s <= 100
+            },
+        );
+        assert!(max_seen >= 99);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree utilities that replace crates unavailable in the offline
+//! registry: deterministic RNG (`rand`), property testing (`proptest`),
+//! and a benchmark harness (`criterion`).
+
+pub mod bench;
+pub mod check;
+pub mod rng;

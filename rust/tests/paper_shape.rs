@@ -1,0 +1,72 @@
+//! Integration test: the paper's qualitative claims (the "shape" of
+//! Figs 6–8 and the §V-C/§V-D anchors) hold on a real model sweep.
+//! Heavier than unit tests — one GoogleNet sweep across three designs.
+
+use codr::coordinator::{headline, run_sweep, Arch};
+use codr::models::{googlenet, SweepGroup};
+
+#[test]
+fn googlenet_original_group_reproduces_paper_shape() {
+    let model = googlenet();
+    let groups = [SweepGroup::Unique(16), SweepGroup::Original, SweepGroup::Density(25)];
+    let results = run_sweep(&[model.clone()], &groups, &Arch::all(), 42);
+
+    // --- headline directions (abstract): CoDR wins on all three axes.
+    let h = headline(&results, &["googlenet"]);
+    assert!(h.compression_vs_ucnn > 1.0, "{h:?}");
+    assert!(h.sram_vs_ucnn > 1.0 && h.sram_vs_scnn > 1.0, "{h:?}");
+    assert!(h.energy_vs_ucnn > 1.0 && h.energy_vs_scnn > 1.0, "{h:?}");
+    // Paper order: SCNN is the worst on SRAM and energy.
+    assert!(h.sram_vs_scnn > h.sram_vs_ucnn, "{h:?}");
+    assert!(h.energy_vs_scnn > h.energy_vs_ucnn, "{h:?}");
+
+    // --- Fig 6 trend: limiting unique weights improves CoDR's rate more
+    // than SCNN's (SCNN cannot exploit repetition).
+    let rate = |g, a| {
+        results
+            .get("googlenet", g, a)
+            .unwrap()
+            .compression()
+            .rate()
+    };
+    let codr_gain = rate(SweepGroup::Unique(16), Arch::Codr) / rate(SweepGroup::Original, Arch::Codr);
+    let scnn_gain = rate(SweepGroup::Unique(16), Arch::Scnn) / rate(SweepGroup::Original, Arch::Scnn);
+    assert!(
+        codr_gain > scnn_gain,
+        "U=16 compression gain: CoDR {codr_gain} vs SCNN {scnn_gain}"
+    );
+
+    // --- Fig 7: CoDR output-stationary; input ratios ≈ paper's 20×.
+    let mem = |a| results.get("googlenet", SweepGroup::Original, a).unwrap().mem();
+    let out_feats: u64 = model.conv_layers().map(|l| l.output_features() as u64).sum();
+    assert_eq!(mem(Arch::Codr).output_sram.accesses, out_feats);
+    let in_ratio = mem(Arch::Ucnn).input_sram.accesses as f64
+        / mem(Arch::Codr).input_sram.accesses as f64;
+    assert!((10.0..40.0).contains(&in_ratio), "input ratio {in_ratio}");
+
+    // --- Fig 8: energy falls with density degradation for every design.
+    for &a in &Arch::all() {
+        let orig = results
+            .get("googlenet", SweepGroup::Original, a)
+            .unwrap()
+            .energy()
+            .total_uj();
+        let sparse = results
+            .get("googlenet", SweepGroup::Density(25), a)
+            .unwrap()
+            .energy()
+            .total_uj();
+        assert!(sparse < orig, "{}: {sparse} !< {orig}", a.name());
+    }
+
+    // --- §V-D: SCNN pays the most DRAM energy (worst compression).
+    let dram = |a| {
+        results
+            .get("googlenet", SweepGroup::Original, a)
+            .unwrap()
+            .energy()
+            .dram_uj
+    };
+    assert!(dram(Arch::Scnn) > dram(Arch::Ucnn));
+    assert!(dram(Arch::Scnn) > dram(Arch::Codr));
+}
