@@ -14,10 +14,10 @@ fn main() {
     let results = run_sweep(&models, &groups, &Arch::all(), 42);
     let names: Vec<&str> = models.iter().map(|m| m.name).collect();
     println!("{}", fig8_report(&results, &names, &groups));
-    println!("{}", headline_report(&results, &names));
+    println!("{}", headline_report(&results, &names).expect("full grid"));
 
     // --- §V-D / abstract shape checks.
-    let h = headline(&results, &names);
+    let h = headline(&results, &names).expect("full grid");
     assert!(h.energy_vs_ucnn > 2.0, "energy vs UCNN {}", h.energy_vs_ucnn);
     assert!(h.energy_vs_scnn > 2.0, "energy vs SCNN {}", h.energy_vs_scnn);
     // Paper order: SCNN consumes more than UCNN.

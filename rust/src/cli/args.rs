@@ -2,6 +2,7 @@
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
+use std::path::PathBuf;
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -9,7 +10,7 @@ pub struct Args {
     switches: Vec<String>,
 }
 
-const SWITCHES: &[&str] = &["save", "functional", "verbose"];
+const SWITCHES: &[&str] = &["save", "functional", "verbose", "fresh", "wait"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -51,47 +52,33 @@ impl Args {
 
     /// Comma-separated model list (default: the paper's three benchmarks).
     pub fn models(&self) -> Result<Vec<crate::models::Model>> {
-        let spec = self.get("models").unwrap_or("alexnet,vgg16,googlenet");
-        spec.split(',')
-            .map(|name| {
-                crate::models::model_by_name(name.trim())
-                    .or_else(|| (name.trim() == "tiny").then(crate::models::tiny_cnn))
-                    .with_context(|| format!("unknown model `{name}`"))
-            })
-            .collect()
+        crate::models::parse_model_list(self.get("models").unwrap_or("alexnet,vgg16,googlenet"))
     }
 
     /// Sweep groups (default: all six paper groups).
     pub fn groups(&self) -> Result<Vec<crate::models::SweepGroup>> {
-        use crate::models::SweepGroup;
-        let Some(spec) = self.get("groups") else {
-            return Ok(SweepGroup::all());
-        };
-        spec.split(',')
-            .map(|g| {
-                let g = g.trim();
-                if g.eq_ignore_ascii_case("orig") {
-                    Ok(SweepGroup::Original)
-                } else if let Some(u) = g.strip_prefix("U=") {
-                    Ok(SweepGroup::Unique(u.parse().context("bad U group")?))
-                } else if let Some(d) = g.strip_prefix("D=") {
-                    let d = d.trim_end_matches('%');
-                    Ok(SweepGroup::Density(d.parse().context("bad D group")?))
-                } else {
-                    bail!("unknown group `{g}` (use U=16 / Orig / D=50%)")
-                }
-            })
-            .collect()
+        match self.get("groups") {
+            None => Ok(crate::models::SweepGroup::all()),
+            Some(spec) => crate::models::parse_group_list(spec),
+        }
     }
 
     pub fn arch(&self) -> Result<crate::coordinator::Arch> {
-        use crate::coordinator::Arch;
-        match self.get("arch").unwrap_or("CoDR").to_ascii_lowercase().as_str() {
-            "codr" => Ok(Arch::Codr),
-            "ucnn" => Ok(Arch::Ucnn),
-            "scnn" => Ok(Arch::Scnn),
-            other => bail!("unknown arch `{other}`"),
+        crate::coordinator::Arch::parse(self.get("arch").unwrap_or("CoDR"))
+    }
+
+    /// Result-store directory (`--store`, then `$CODR_STORE`, then
+    /// `results/store`).
+    pub fn store_dir(&self) -> PathBuf {
+        match self.get("store") {
+            Some(dir) => PathBuf::from(dir),
+            None => crate::serve::default_store_dir(),
         }
+    }
+
+    /// Serve/submit/warm address (`--addr`, default 127.0.0.1:7878).
+    pub fn addr(&self) -> &str {
+        self.get("addr").unwrap_or(crate::serve::DEFAULT_ADDR)
     }
 }
 
@@ -143,5 +130,15 @@ mod tests {
         assert!(a.arch().is_err());
         let a = Args::parse(&sv(&["--models", "resnet"])).unwrap();
         assert!(a.models().is_err());
+    }
+
+    #[test]
+    fn store_and_addr_defaults() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.addr(), "127.0.0.1:7878");
+        let a = Args::parse(&sv(&["--store", "/tmp/s", "--addr", "127.0.0.1:9"])).unwrap();
+        assert_eq!(a.store_dir(), PathBuf::from("/tmp/s"));
+        assert_eq!(a.addr(), "127.0.0.1:9");
+        assert!(Args::parse(&sv(&["--fresh", "--wait"])).is_ok());
     }
 }

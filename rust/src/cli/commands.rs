@@ -1,12 +1,44 @@
 //! CLI command implementations.
 
 use super::Args;
-use crate::coordinator::{run_sweep, Arch};
+use crate::coordinator::{run_sweep_with, Arch, SweepResults, SweepStats};
 use crate::models::Workload;
 use crate::report;
+use crate::serve::{proto, ResultStore, Server};
 use crate::sim::simulate_model;
+use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
-use std::path::Path;
+
+/// Run the figure sweep through the result store (unless `--fresh`), so
+/// repeated figure invocations reuse every previously simulated point.
+/// Cache statistics go to stderr: stdout must stay byte-identical between
+/// cold and warm runs.
+fn figure_sweep(args: &Args, models: &[crate::models::Model]) -> Result<SweepResults> {
+    let seed = args.seed()?;
+    let groups = args.groups()?;
+    if args.flag("fresh") {
+        return Ok(run_sweep_with(models, &groups, &Arch::all(), seed, None));
+    }
+    match ResultStore::open(args.store_dir()) {
+        Ok(store) => {
+            let results = run_sweep_with(models, &groups, &Arch::all(), seed, Some(&store));
+            eprintln!(
+                "sweep: {} points — {} cache hits, {} computed, {} corrupt (store: {})",
+                results.stats.requested,
+                results.stats.cache_hits,
+                results.stats.computed,
+                results.stats.corrupt,
+                store.dir().display()
+            );
+            Ok(results)
+        }
+        Err(e) => {
+            // An unusable store must never block a figure.
+            eprintln!("warn: result store unavailable ({e:#}); running uncached");
+            Ok(run_sweep_with(models, &groups, &Arch::all(), seed, None))
+        }
+    }
+}
 
 /// `codr figure <id>` — regenerate a paper figure/table.
 pub fn figure(id: &str, args: &Args) -> Result<String> {
@@ -17,7 +49,7 @@ pub fn figure(id: &str, args: &Args) -> Result<String> {
 
     let needs_sweep = matches!(id, "fig6" | "fig7" | "fig8" | "headline" | "detail" | "all");
     let sweep = if needs_sweep {
-        Some(run_sweep(&models, &groups, &Arch::all(), seed))
+        Some(figure_sweep(args, &models)?)
     } else {
         None
     };
@@ -59,7 +91,7 @@ pub fn figure(id: &str, args: &Args) -> Result<String> {
         ),
         "headline" => emit(
             "headline",
-            report::headline_report(sweep.as_ref().unwrap(), &model_names),
+            report::headline_report(sweep.as_ref().unwrap(), &model_names)?,
             save,
         ),
         "detail" => {
@@ -80,7 +112,11 @@ pub fn figure(id: &str, args: &Args) -> Result<String> {
             let f7model = model_names.last().copied().unwrap_or("googlenet");
             emit("fig7", report::fig7_report(s, f7model, &groups), save);
             emit("fig8", report::fig8_report(s, &model_names, &groups), save);
-            emit("headline", report::headline_report(s, &model_names), save);
+            emit(
+                "headline",
+                report::headline_report(s, &model_names)?,
+                save,
+            );
         }
         other => bail!("unknown figure `{other}`"),
     }
@@ -93,9 +129,7 @@ pub fn figure(id: &str, args: &Args) -> Result<String> {
 /// `codr simulate --model m [--arch a]` — per-layer stats on one design.
 pub fn simulate(args: &Args) -> Result<String> {
     let name = args.get("model").context("simulate: --model required")?;
-    let model = crate::models::model_by_name(name)
-        .or_else(|| (name == "tiny").then(crate::models::tiny_cnn))
-        .with_context(|| format!("unknown model `{name}`"))?;
+    let model = crate::models::parse_model(name)?;
     let arch = args.arch()?;
     let unique = args
         .get("unique")
@@ -151,9 +185,7 @@ pub fn simulate(args: &Args) -> Result<String> {
 /// `codr compress --model m` — customized-RLE compression per layer.
 pub fn compress(args: &Args) -> Result<String> {
     let name = args.get("model").context("compress: --model required")?;
-    let model = crate::models::model_by_name(name)
-        .or_else(|| (name == "tiny").then(crate::models::tiny_cnn))
-        .with_context(|| format!("unknown model `{name}`"))?;
+    let model = crate::models::parse_model(name)?;
     let wl = Workload::generate(&model, None, None, args.seed()?);
     let cfg = crate::arch::TileConfig::codr();
 
@@ -214,10 +246,165 @@ pub fn compress(args: &Args) -> Result<String> {
 
 /// `codr golden` — run every artifact (per-layer convs and the end-to-end
 /// tiny CNN) through the XLA golden model and compare against the CoDR
-/// compressed datapath, bit for bit.
+/// compressed datapath, bit for bit. Requires the `pjrt` feature.
+#[cfg(feature = "pjrt")]
 pub fn golden(args: &Args) -> Result<String> {
-    let dir = Path::new(args.get("artifacts").unwrap_or("artifacts"));
+    let dir = std::path::Path::new(args.get("artifacts").unwrap_or("artifacts"));
     crate::runtime::golden::golden_report(dir, args.seed()?)
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub fn golden(_args: &Args) -> Result<String> {
+    bail!(
+        "`codr golden` needs the PJRT runtime — rebuild with \
+         `--features pjrt` (requires the vendored `xla` crate; see ROADMAP.md)"
+    )
+}
+
+/// `codr serve` — run the persistent sweep service (blocks until a
+/// `shutdown` request).
+pub fn serve(args: &Args) -> Result<String> {
+    let store_dir = args.store_dir();
+    let server = Server::bind(args.addr(), &store_dir)?;
+    // Announce before blocking so scripts can wait for readiness.
+    println!(
+        "codr serve: listening on {} (store: {})",
+        server.local_addr()?,
+        store_dir.display()
+    );
+    server.run()?;
+    Ok("codr serve: shut down".to_string())
+}
+
+/// Build the grid fields shared by `submit` and `warm` requests.
+fn grid_fields(args: &Args) -> Result<Vec<(String, Json)>> {
+    // Validate locally so typos fail client-side with a real error.
+    let models = args.models()?;
+    let groups = args.groups()?;
+    let mut fields = vec![
+        (
+            "models".into(),
+            Json::str(
+                models
+                    .iter()
+                    .map(|m| m.name)
+                    .collect::<Vec<_>>()
+                    .join(","),
+            ),
+        ),
+        (
+            "groups".into(),
+            Json::str(
+                groups
+                    .iter()
+                    .map(|g| g.label())
+                    .collect::<Vec<_>>()
+                    .join(","),
+            ),
+        ),
+        ("seed".into(), Json::u64(args.seed()?)),
+    ];
+    if let Some(archs) = args.get("archs") {
+        Arch::parse_list(archs)?;
+        fields.push(("archs".into(), Json::str(archs)));
+    }
+    Ok(fields)
+}
+
+fn expect_ok(resp: &Json) -> Result<()> {
+    if matches!(resp.get("ok").and_then(|o| o.as_bool().ok()), Some(true)) {
+        Ok(())
+    } else {
+        let err = resp
+            .get("error")
+            .and_then(|e| e.as_str().ok().map(|s| s.to_string()))
+            .unwrap_or_else(|| resp.to_string());
+        bail!("server error: {err}")
+    }
+}
+
+fn render_stats(stats: &SweepStats) -> String {
+    format!(
+        "{} points — {} cache hits, {} computed, {} deduped, {} corrupt, {} layers simulated",
+        stats.requested,
+        stats.cache_hits,
+        stats.computed,
+        stats.deduped,
+        stats.corrupt,
+        stats.simulated_layers
+    )
+}
+
+/// `codr submit` — send a grid to a running `codr serve` and poll until
+/// done (with `--wait`) or return the job id immediately.
+pub fn submit(args: &Args) -> Result<String> {
+    let addr = args.addr();
+    let mut fields = vec![("verb".into(), Json::str("submit"))];
+    fields.extend(grid_fields(args)?);
+    let resp = proto::request(addr, &Json::Obj(fields))?;
+    expect_ok(&resp)?;
+    let job = resp.field("job")?.as_u64()?;
+    let points = resp.field("points")?.as_u64()?;
+    if !args.flag("wait") {
+        return Ok(format!(
+            "submitted job {job} ({points} points) to {addr} — poll with \
+             `codr submit --wait` or the status verb"
+        ));
+    }
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let status = proto::request(
+            addr,
+            &Json::Obj(vec![
+                ("verb".into(), Json::str("status")),
+                ("job".into(), Json::u64(job)),
+            ]),
+        )?;
+        expect_ok(&status)?;
+        match status.field("state")?.as_str()? {
+            "running" => continue,
+            "done" => {
+                let stats = proto::stats_from_json(status.field("stats")?)?;
+                return Ok(format!("job {job} done: {}", render_stats(&stats)));
+            }
+            "failed" => {
+                let err = status
+                    .get("error")
+                    .and_then(|e| e.as_str().ok())
+                    .unwrap_or("unknown");
+                bail!("job {job} failed: {err}");
+            }
+            other => bail!("job {job}: unexpected state `{other}`"),
+        }
+    }
+}
+
+/// `codr warm` — populate the result store for a grid, either through a
+/// running server (`--addr` reachable) or locally against the on-disk
+/// store.
+pub fn warm(args: &Args) -> Result<String> {
+    // Prefer a running server when one was explicitly named.
+    if args.get("addr").is_some() {
+        let mut fields = vec![("verb".into(), Json::str("warm"))];
+        fields.extend(grid_fields(args)?);
+        let resp = proto::request(args.addr(), &Json::Obj(fields))?;
+        expect_ok(&resp)?;
+        let stats = proto::stats_from_json(resp.field("stats")?)?;
+        return Ok(format!("warm (via {}): {}", args.addr(), render_stats(&stats)));
+    }
+    let models = args.models()?;
+    let groups = args.groups()?;
+    let archs = match args.get("archs") {
+        Some(spec) => Arch::parse_list(spec)?,
+        None => Arch::all().to_vec(),
+    };
+    let store = ResultStore::open(args.store_dir())?;
+    let results = run_sweep_with(&models, &groups, &archs, args.seed()?, Some(&store));
+    Ok(format!(
+        "warm ({}): {}",
+        store.dir().display(),
+        render_stats(&results.stats)
+    ))
 }
 
 /// `codr info` — configurations and model zoo.
@@ -278,5 +465,35 @@ mod tests {
     fn figure_rejects_unknown() {
         let a = Args::parse(&[]).unwrap();
         assert!(figure("fig99", &a).is_err());
+    }
+
+    #[test]
+    fn warm_then_figure_hits_cache_and_matches_fresh_output() {
+        let dir = std::env::temp_dir().join(format!(
+            "codr-cli-warm-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_string_lossy().to_string();
+        let base = ["--models", "tiny", "--groups", "Orig", "--store", &dir_s];
+        let warm_args = Args::parse(&sv(&base)).unwrap();
+        let out = warm(&warm_args).unwrap();
+        assert!(out.contains("0 cache hits"), "{out}");
+        assert!(out.contains("3 computed"), "{out}");
+
+        // Cached figure equals a fresh (storeless) run byte for byte.
+        let cached = figure("headline", &warm_args).unwrap();
+        let mut fresh_argv = base.to_vec();
+        fresh_argv.push("--fresh");
+        let fresh = figure("headline", &Args::parse(&sv(&fresh_argv)).unwrap()).unwrap();
+        assert_eq!(cached, fresh);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn submit_without_server_fails_cleanly() {
+        // Port 1 is never listening; the client must error, not hang.
+        let a = Args::parse(&sv(&["--addr", "127.0.0.1:1", "--models", "tiny"])).unwrap();
+        assert!(submit(&a).is_err());
     }
 }

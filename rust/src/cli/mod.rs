@@ -6,6 +6,9 @@
 //! codr simulate --model <name> [--arch <CoDR|UCNN|SCNN>] [opts]
 //! codr compress --model <name> [--seed N]
 //! codr golden [--artifacts DIR] [--seed N]
+//! codr serve [--addr HOST:PORT] [--store DIR]
+//! codr submit [--addr HOST:PORT] [grid opts] [--wait]
+//! codr warm [--addr HOST:PORT | --store DIR] [grid opts]
 //! codr info
 //! ```
 
@@ -25,18 +28,28 @@ USAGE:
 COMMANDS:
     figure <id>     Regenerate a paper figure/table:
                     fig2 | table1 | fig6 | fig7 | fig8 | headline | detail | all
+                    (reads/writes the result store; --fresh bypasses it)
     simulate        Simulate one model on one design, print per-layer stats
     compress        Compress one model with the customized RLE, print stats
     golden          Verify the CoDR datapath against the XLA golden model
+                    (needs a build with --features pjrt)
+    serve           Run the persistent sweep service (TCP, line-JSON)
+    submit          Send a sweep grid to a running server (--wait to poll)
+    warm            Populate the result store (locally, or via --addr)
     info            Print design configurations and model zoo summary
 
 OPTIONS:
     --models a,b,c     Models to evaluate (default: alexnet,vgg16,googlenet)
     --model NAME       Single model (simulate/compress)
     --arch NAME        Design: CoDR | UCNN | SCNN   (default CoDR)
+    --archs a,b        Designs for serve/warm grids (default all)
     --groups g1,g2     Sweep groups: U=16,U=64,Orig,D=75%,D=50%,D=25%
     --seed N           Workload seed                (default 42)
     --artifacts DIR    Artifact directory           (default artifacts)
+    --store DIR        Result store ($CODR_STORE, default results/store)
+    --addr HOST:PORT   Sweep service address        (default 127.0.0.1:7878)
+    --fresh            Ignore the result store for this run
+    --wait             submit: poll until the job finishes
     --save             Also write reports under results/
 ";
 
@@ -72,6 +85,9 @@ fn dispatch(argv: &[String]) -> Result<String> {
         "simulate" => commands::simulate(&Args::parse(rest)?),
         "compress" => commands::compress(&Args::parse(rest)?),
         "golden" => commands::golden(&Args::parse(rest)?),
+        "serve" => commands::serve(&Args::parse(rest)?),
+        "submit" => commands::submit(&Args::parse(rest)?),
+        "warm" => commands::warm(&Args::parse(rest)?),
         "info" => Ok(commands::info()),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => bail!("unknown command `{other}`"),

@@ -5,13 +5,21 @@
 //! tokio is unavailable in the offline registry; the pool is
 //! `std::thread::scope` over a lock-free work queue (atomic cursor),
 //! which is the right shape for this embarrassingly parallel sweep.
+//!
+//! [`run_sweep_with`] threads an optional [`ResultStore`] through the
+//! sweep: points already in the store are loaded instead of simulated,
+//! and newly computed points are persisted. [`SweepStats`] reports what
+//! happened — `simulated_layers == 0` is the proof that a warm store
+//! served the whole grid without a single `simulate_layer` call.
 
 pub mod pool;
 
 use crate::baselines::{Scnn, Ucnn};
 use crate::codr::Codr;
 use crate::models::{Model, SweepGroup, Workload};
+use crate::serve::{ResultStore, Scheduler};
 use crate::sim::{simulate_model, Accelerator, ModelResult};
+use anyhow::{bail, Result};
 
 /// The three designs of the evaluation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -41,12 +49,50 @@ impl Arch {
             Arch::Scnn => Box::new(Scnn::default()),
         }
     }
+
+    /// Parse one design name (case-insensitive).
+    pub fn parse(name: &str) -> Result<Arch> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "codr" => Ok(Arch::Codr),
+            "ucnn" => Ok(Arch::Ucnn),
+            "scnn" => Ok(Arch::Scnn),
+            other => bail!("unknown arch `{other}` (use CoDR | UCNN | SCNN)"),
+        }
+    }
+
+    /// Parse a comma-separated design list; `all` expands to every design.
+    pub fn parse_list(spec: &str) -> Result<Vec<Arch>> {
+        if spec.trim().eq_ignore_ascii_case("all") {
+            return Ok(Arch::all().to_vec());
+        }
+        spec.split(',').map(Arch::parse).collect()
+    }
+}
+
+/// What the sweep did for each requested point — the cache-hit counters
+/// the acceptance checks and the `serve` status verb report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepStats {
+    /// Points in the requested grid.
+    pub requested: usize,
+    /// Points served from the result store.
+    pub cache_hits: usize,
+    /// Points simulated in this call.
+    pub computed: usize,
+    /// Points that waited on an identical in-flight computation instead
+    /// of duplicating it (only possible under `codr serve`).
+    pub deduped: usize,
+    /// Store entries that existed but failed to load (recomputed).
+    pub corrupt: usize,
+    /// Total `simulate_layer` calls made. Zero on a fully warm store.
+    pub simulated_layers: usize,
 }
 
 /// All results of a sweep, queryable by (model, group, arch).
 #[derive(Debug, Default)]
 pub struct SweepResults {
     pub results: Vec<ModelResult>,
+    pub stats: SweepStats,
 }
 
 impl SweepResults {
@@ -64,7 +110,8 @@ impl SweepResults {
     }
 }
 
-/// Run the full (or restricted) evaluation grid in parallel.
+/// Run the full (or restricted) evaluation grid in parallel, without a
+/// result store (every point is simulated).
 ///
 /// Workload generation is seeded per (model, knobs), so results are
 /// deterministic regardless of scheduling.
@@ -74,6 +121,26 @@ pub fn run_sweep(
     archs: &[Arch],
     seed: u64,
 ) -> SweepResults {
+    run_sweep_with(models, groups, archs, seed, None)
+}
+
+/// Run the grid through an optional result store: cached points load
+/// instead of simulating, missing points are computed and persisted.
+///
+/// The returned results are ordered (model × group) then arch — the same
+/// order as the storeless path — and carry [`SweepStats`] describing the
+/// cache behavior. A cold store followed by a warm re-run produces
+/// identical `results` with `simulated_layers == 0` on the second pass.
+pub fn run_sweep_with(
+    models: &[Model],
+    groups: &[SweepGroup],
+    archs: &[Arch],
+    seed: u64,
+    store: Option<&ResultStore>,
+) -> SweepResults {
+    if let Some(store) = store {
+        return Scheduler::new(store.clone()).run_grid(models, groups, archs, seed);
+    }
     // Parallelize over (model × group); each worker synthesizes the
     // workload once and runs every design on it (the weights are shared —
     // regenerating them per design tripled the sweep cost, §Perf).
@@ -94,9 +161,15 @@ pub fn run_sweep(
             })
             .collect::<Vec<_>>()
     });
-    SweepResults {
-        results: nested.into_iter().flatten().collect(),
-    }
+    let results: Vec<ModelResult> = nested.into_iter().flatten().collect();
+    let simulated_layers = results.iter().map(|r| r.layers.len()).sum();
+    let stats = SweepStats {
+        requested: results.len(),
+        computed: results.len(),
+        simulated_layers,
+        ..Default::default()
+    };
+    SweepResults { results, stats }
 }
 
 /// The abstract's headline comparisons at the original sweep group,
@@ -116,8 +189,10 @@ pub struct Headline {
     pub codr_bits_per_weight: f64,
 }
 
-/// Compute the headline ratios from sweep results at [`SweepGroup::Original`].
-pub fn headline(results: &SweepResults, models: &[&str]) -> Headline {
+/// Compute the headline ratios from sweep results at
+/// [`SweepGroup::Original`]. Errors (instead of panicking) when the sweep
+/// does not cover a requested (model, arch) point.
+pub fn headline(results: &SweepResults, models: &[&str]) -> Result<Headline> {
     let mut agg = std::collections::HashMap::new();
     for &arch in &Arch::all() {
         let mut bits = 0f64;
@@ -125,9 +200,14 @@ pub fn headline(results: &SweepResults, models: &[&str]) -> Headline {
         let mut sram = 0f64;
         let mut energy = 0f64;
         for model in models {
-            let r = results
-                .get(model, SweepGroup::Original, arch)
-                .unwrap_or_else(|| panic!("missing sweep point {model}/{}", arch.name()));
+            let Some(r) = results.get(model, SweepGroup::Original, arch) else {
+                bail!(
+                    "missing sweep point {model}/{}/{} — the sweep must cover \
+                     the Orig group for every model and design",
+                    SweepGroup::Original.label(),
+                    arch.name()
+                );
+            };
             let c = r.compression();
             bits += c.encoded_bits as f64;
             weights += c.num_weights as f64;
@@ -139,7 +219,7 @@ pub fn headline(results: &SweepResults, models: &[&str]) -> Headline {
     let codr = agg[&Arch::Codr];
     let ucnn = agg[&Arch::Ucnn];
     let scnn = agg[&Arch::Scnn];
-    Headline {
+    Ok(Headline {
         compression_vs_ucnn: ucnn.0 / codr.0,
         compression_vs_scnn: scnn.0 / codr.0,
         sram_vs_ucnn: ucnn.1 / codr.1,
@@ -147,7 +227,7 @@ pub fn headline(results: &SweepResults, models: &[&str]) -> Headline {
         energy_vs_ucnn: ucnn.2 / codr.2,
         energy_vs_scnn: scnn.2 / codr.2,
         codr_bits_per_weight: codr.0,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -162,6 +242,9 @@ mod tests {
         let archs = [Arch::Codr, Arch::Scnn];
         let a = run_sweep(&models, &groups, &archs, 42);
         assert_eq!(a.results.len(), 4);
+        assert_eq!(a.stats.requested, 4);
+        assert_eq!(a.stats.computed, 4);
+        assert_eq!(a.stats.cache_hits, 0);
         let b = run_sweep(&models, &groups, &archs, 42);
         for (x, y) in a.results.iter().zip(&b.results) {
             assert_eq!(x.model, y.model);
@@ -183,12 +266,37 @@ mod tests {
     fn headline_ratios_favor_codr_on_tiny() {
         let models = [tiny_cnn()];
         let r = run_sweep(&models, &[SweepGroup::Original], &Arch::all(), 7);
-        let h = headline(&r, &["tiny"]);
+        let h = headline(&r, &["tiny"]).unwrap();
         assert!(h.compression_vs_ucnn > 1.0, "{h:?}");
         assert!(h.compression_vs_scnn > 1.0, "{h:?}");
         assert!(h.sram_vs_ucnn > 1.0, "{h:?}");
         assert!(h.sram_vs_scnn > 1.0, "{h:?}");
         assert!(h.energy_vs_ucnn > 1.0, "{h:?}");
         assert!(h.energy_vs_scnn > 1.0, "{h:?}");
+    }
+
+    #[test]
+    fn headline_reports_missing_points_as_errors() {
+        // Sweep without CoDR: headline must error, not panic (the seed's
+        // `unwrap_or_else(panic!)` took the whole process down).
+        let models = [tiny_cnn()];
+        let r = run_sweep(&models, &[SweepGroup::Original], &[Arch::Ucnn, Arch::Scnn], 7);
+        let err = headline(&r, &["tiny"]).unwrap_err().to_string();
+        assert!(err.contains("missing sweep point"), "{err}");
+        // Unknown model likewise.
+        let full = run_sweep(&models, &[SweepGroup::Original], &Arch::all(), 7);
+        assert!(headline(&full, &["alexnet"]).is_err());
+    }
+
+    #[test]
+    fn arch_parsing() {
+        assert_eq!(Arch::parse("codr").unwrap(), Arch::Codr);
+        assert_eq!(Arch::parse(" UCNN ").unwrap(), Arch::Ucnn);
+        assert!(Arch::parse("tpu").is_err());
+        assert_eq!(Arch::parse_list("all").unwrap().len(), 3);
+        assert_eq!(
+            Arch::parse_list("scnn,codr").unwrap(),
+            vec![Arch::Scnn, Arch::Codr]
+        );
     }
 }

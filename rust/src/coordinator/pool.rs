@@ -84,6 +84,23 @@ mod tests {
     }
 
     #[test]
+    fn more_threads_than_items() {
+        // `threads` clamps to the item count: no idle spawns, no panics,
+        // every item mapped exactly once.
+        let calls = AtomicU64::new(0);
+        let xs: Vec<usize> = (0..3).collect();
+        let ys = parallel_map_with(&xs, 64, |&x| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            x * 10
+        });
+        assert_eq!(ys, vec![0, 10, 20]);
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+        // Degenerate corners: zero threads requested, and one item.
+        assert_eq!(parallel_map_with(&[5], 0, |&x| x + 1), vec![6]);
+        assert_eq!(parallel_map_with(&[5], 1000, |&x| x + 1), vec![6]);
+    }
+
+    #[test]
     #[should_panic]
     fn propagates_worker_panics() {
         let xs: Vec<u32> = (0..16).collect();

@@ -13,8 +13,13 @@
 //!   **SCNN** / **UCNN** ([`baselines`]);
 //! * the memory-hierarchy and energy models ([`arch`], [`energy`]);
 //! * the model zoo + synthetic weight synthesis ([`models`]);
-//! * the sweep coordinator, report generators and PJRT golden-model
-//!   runtime ([`coordinator`], [`report`], [`runtime`]).
+//! * the sweep coordinator and report generators ([`coordinator`],
+//!   [`report`]), plus the PJRT golden-model runtime (`runtime`, behind
+//!   the off-by-default `pjrt` feature — the `xla` crate is absent from
+//!   the offline registry);
+//! * the **persistent sweep service** ([`serve`]): a content-addressed
+//!   result store, an incremental grid scheduler, and the `codr serve`
+//!   TCP service with `codr submit` / `codr warm` clients.
 //!
 //! The Python side (`python/compile/`) authors the JAX + Pallas golden
 //! model and AOT-lowers it to HLO text in `artifacts/`; it never runs at
@@ -31,7 +36,9 @@ pub mod quant;
 pub mod report;
 pub mod reuse;
 pub mod rle;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tensor;
 pub mod util;

@@ -16,6 +16,39 @@ pub use zoo::{alexnet, all_models, googlenet, model_by_name, tiny_cnn, vgg16};
 use crate::quant;
 use crate::tensor::{Tensor, Weights};
 use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+/// Look up one model by name — the zoo plus the `tiny` test CNN.
+pub fn parse_model(name: &str) -> Result<Model> {
+    let name = name.trim();
+    model_by_name(name)
+        .or_else(|| (name == "tiny").then(tiny_cnn))
+        .with_context(|| format!("unknown model `{name}` (alexnet | vgg16 | googlenet | tiny)"))
+}
+
+/// Parse a comma-separated model list.
+pub fn parse_model_list(spec: &str) -> Result<Vec<Model>> {
+    spec.split(',').map(parse_model).collect()
+}
+
+/// Parse a comma-separated sweep-group list: `U=16,Orig,D=50%`.
+pub fn parse_group_list(spec: &str) -> Result<Vec<SweepGroup>> {
+    spec.split(',')
+        .map(|g| {
+            let g = g.trim();
+            if g.eq_ignore_ascii_case("orig") {
+                Ok(SweepGroup::Original)
+            } else if let Some(u) = g.strip_prefix("U=") {
+                Ok(SweepGroup::Unique(u.parse().context("bad U group")?))
+            } else if let Some(d) = g.strip_prefix("D=") {
+                let d = d.trim_end_matches('%');
+                Ok(SweepGroup::Density(d.parse().context("bad D group")?))
+            } else {
+                bail!("unknown group `{g}` (use U=16 / Orig / D=50%)")
+            }
+        })
+        .collect()
+}
 
 /// Kind of layer (the accelerators evaluate convolutional layers;
 /// FC layers are kept for the end-to-end functional model).
@@ -383,5 +416,23 @@ mod tests {
         assert!(model_by_name("vgg16").is_some());
         assert!(model_by_name("googlenet").is_some());
         assert!(model_by_name("resnet").is_none());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let ms = parse_model_list("alexnet, tiny").unwrap();
+        assert_eq!(ms.len(), 2);
+        assert_eq!(ms[1].name, "tiny");
+        assert!(parse_model_list("alexnet,resnet").is_err());
+        let gs = parse_group_list("U=16,Orig,D=50%").unwrap();
+        assert_eq!(
+            gs,
+            vec![
+                SweepGroup::Unique(16),
+                SweepGroup::Original,
+                SweepGroup::Density(50)
+            ]
+        );
+        assert!(parse_group_list("X=9").is_err());
     }
 }

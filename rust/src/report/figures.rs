@@ -6,6 +6,7 @@ use crate::arch::TileConfig;
 use crate::coordinator::{headline, Arch, SweepResults};
 use crate::models::{Model, SweepGroup, Workload};
 use crate::reuse::stats::{model_distribution_16bit, model_distribution_8bit};
+use anyhow::Result;
 
 fn pct(x: f64) -> String {
     format!("{:.1}%", x * 100.0)
@@ -206,9 +207,10 @@ pub fn sram_detail_report(results: &SweepResults, model: &Model) -> String {
     )
 }
 
-/// **Headline** (abstract / §V) — CoDR vs UCNN and SCNN.
-pub fn headline_report(results: &SweepResults, models: &[&str]) -> String {
-    let h = headline(results, models);
+/// **Headline** (abstract / §V) — CoDR vs UCNN and SCNN. Errors when the
+/// sweep lacks a requested (model, arch) point at the original group.
+pub fn headline_report(results: &SweepResults, models: &[&str]) -> Result<String> {
+    let h = headline(results, models)?;
     let headers = vec!["metric", "vs UCNN (paper)", "vs SCNN (paper)", "measured UCNN", "measured SCNN"];
     let rows = vec![
         vec![
@@ -240,7 +242,11 @@ pub fn headline_report(results: &SweepResults, models: &[&str]) -> String {
             "-".into(),
         ],
     ];
-    ascii_table("Headline: CoDR vs UCNN / SCNN (paper vs measured)", &headers, &rows)
+    Ok(ascii_table(
+        "Headline: CoDR vs UCNN / SCNN (paper vs measured)",
+        &headers,
+        &rows,
+    ))
 }
 
 #[cfg(test)]
@@ -269,8 +275,10 @@ mod tests {
         assert!(f7.contains("CoDR") && f7.contains("SCNN"));
         let f8 = fig8_report(&r, &["tiny"], &groups);
         assert!(f8.contains("total µJ"));
-        let h = headline_report(&r, &["tiny"]);
+        let h = headline_report(&r, &["tiny"]).unwrap();
         assert!(h.contains("5.08x"));
+        // A sweep that misses the grid surfaces as an error, not a panic.
+        assert!(headline_report(&r, &["vgg16"]).is_err());
         let d = sram_detail_report(&r, &tiny_cnn());
         assert!(d.contains("wgt BW%"));
     }

@@ -31,7 +31,7 @@ pub use coder::{
 };
 
 /// Compression summary for one encoded layer.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CompressionStats {
     /// Weights in the raw layer (including zeros).
     pub num_weights: usize,

@@ -1,0 +1,40 @@
+//! The `serve` subsystem: a persistent sweep service.
+//!
+//! Every sweep point is deterministic given `(model, sweep group, arch,
+//! seed, accelerator config)`, so results computed once can serve every
+//! later figure. This module turns that determinism into a system:
+//!
+//! * [`store`] — content-addressed, corruption-tolerant on-disk cache of
+//!   [`crate::sim::ModelResult`]s (versioned JSON, atomic writes);
+//! * [`scheduler`] — diffs a requested grid against the store, batches
+//!   missing points that share a workload, dedups identical in-flight
+//!   requests, and fans out over [`crate::coordinator::pool`];
+//! * [`server`] / [`proto`] — `codr serve`, a long-running TCP service
+//!   speaking line-delimited JSON (`submit` / `status` / `result` /
+//!   `warm`), with `codr submit` / `codr warm` as clients.
+//!
+//! The CLI figure path reads through the same store, so
+//! `codr warm --models tiny` followed by `codr figure headline --models
+//! tiny` renders the figure without a single `simulate_layer` call.
+
+pub mod proto;
+pub mod scheduler;
+pub mod server;
+pub mod store;
+
+pub use proto::{GridRequest, DEFAULT_ADDR};
+pub use scheduler::Scheduler;
+pub use server::Server;
+pub use store::{CacheKey, LoadOutcome, ResultStore, STORE_FORMAT_VERSION};
+
+use std::path::PathBuf;
+
+/// Default on-disk store location: `$CODR_STORE` if set, else
+/// `results/store` under the working directory (next to the `--save`
+/// report artifacts).
+pub fn default_store_dir() -> PathBuf {
+    match std::env::var_os("CODR_STORE") {
+        Some(dir) if !dir.is_empty() => PathBuf::from(dir),
+        _ => PathBuf::from("results").join("store"),
+    }
+}

@@ -1,0 +1,226 @@
+//! `codr serve` wire protocol: one JSON object per line, both directions
+//! (tokio is unavailable offline; blocking std::net + line framing keeps
+//! the protocol trivially scriptable — `echo '{"verb":"status"}' | nc`).
+//!
+//! Requests name a verb plus grid fields; responses always carry an
+//! `"ok"` bool, with `"error"` set when it is false.
+//!
+//! ```text
+//! → {"verb":"warm","models":"tiny","groups":"Orig,D=50%","seed":42}
+//! ← {"ok":true,"stats":{"requested":6,"cache_hits":0,...}}
+//! → {"verb":"submit","models":"alexnet"}
+//! ← {"ok":true,"job":1}
+//! → {"verb":"status","job":1}
+//! ← {"ok":true,"state":"running"}
+//! → {"verb":"result","model":"tiny","group":"Orig","arch":"CoDR","seed":42}
+//! ← {"ok":true,"cycles":...,"energy_uj":...,"bits_per_weight":...}
+//! ```
+
+use crate::coordinator::{Arch, SweepStats};
+use crate::models::{parse_group_list, parse_model_list, Model, SweepGroup};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// Longest accepted request/response line. Grid requests are tiny; the
+/// cap only bounds memory against a misbehaving peer.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Default listen address of `codr serve`.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:7878";
+
+/// A parsed grid request: which sweep points a client wants.
+pub struct GridRequest {
+    pub models: Vec<Model>,
+    pub groups: Vec<SweepGroup>,
+    pub archs: Vec<Arch>,
+    pub seed: u64,
+}
+
+impl GridRequest {
+    /// Parse the grid fields of a request, defaulting to the paper's
+    /// evaluation grid (all models × all groups × all designs, seed 42).
+    pub fn from_json(j: &Json) -> Result<GridRequest> {
+        let models = match j.get("models") {
+            Some(m) => parse_model_list(m.as_str()?)?,
+            None => crate::models::all_models(),
+        };
+        let groups = match j.get("groups") {
+            Some(g) => parse_group_list(g.as_str()?)?,
+            None => SweepGroup::all(),
+        };
+        let archs = match j.get("archs") {
+            Some(a) => Arch::parse_list(a.as_str()?)?,
+            None => Arch::all().to_vec(),
+        };
+        let seed = match j.get("seed") {
+            Some(s) => s.as_u64().context("seed must be a non-negative integer")?,
+            None => 42,
+        };
+        Ok(GridRequest {
+            models,
+            groups,
+            archs,
+            seed,
+        })
+    }
+
+    pub fn points(&self) -> usize {
+        self.models.len() * self.groups.len() * self.archs.len()
+    }
+}
+
+/// Serialize sweep stats for a response.
+pub fn stats_to_json(s: &SweepStats) -> Json {
+    Json::Obj(vec![
+        ("requested".into(), Json::usize(s.requested)),
+        ("cache_hits".into(), Json::usize(s.cache_hits)),
+        ("computed".into(), Json::usize(s.computed)),
+        ("deduped".into(), Json::usize(s.deduped)),
+        ("corrupt".into(), Json::usize(s.corrupt)),
+        ("simulated_layers".into(), Json::usize(s.simulated_layers)),
+    ])
+}
+
+/// Parse stats back out of a response (client side).
+pub fn stats_from_json(j: &Json) -> Result<SweepStats> {
+    Ok(SweepStats {
+        requested: j.field("requested")?.as_usize()?,
+        cache_hits: j.field("cache_hits")?.as_usize()?,
+        computed: j.field("computed")?.as_usize()?,
+        deduped: j.field("deduped")?.as_usize()?,
+        corrupt: j.field("corrupt")?.as_usize()?,
+        simulated_layers: j.field("simulated_layers")?.as_usize()?,
+    })
+}
+
+pub fn ok_response(mut fields: Vec<(String, Json)>) -> Json {
+    let mut pairs = vec![("ok".into(), Json::Bool(true))];
+    pairs.append(&mut fields);
+    Json::Obj(pairs)
+}
+
+pub fn error_response(msg: impl Into<String>) -> Json {
+    Json::Obj(vec![
+        ("ok".into(), Json::Bool(false)),
+        ("error".into(), Json::Str(msg.into())),
+    ])
+}
+
+/// Read one line-delimited JSON value from a buffered reader. Returns
+/// `Ok(None)` on clean EOF.
+pub fn read_message(reader: &mut impl BufRead) -> Result<Option<Json>> {
+    use std::io::Read;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader
+            .by_ref()
+            .take(MAX_LINE_BYTES as u64)
+            .read_line(&mut line)
+            .context("reading message line")?;
+        if n == 0 {
+            return Ok(None);
+        }
+        if n >= MAX_LINE_BYTES && !line.ends_with('\n') {
+            anyhow::bail!("message exceeds {MAX_LINE_BYTES} bytes");
+        }
+        if line.trim().is_empty() {
+            continue; // tolerate blank keep-alive lines
+        }
+        return Json::parse(line.trim()).map(Some);
+    }
+}
+
+/// Write one value as a line.
+pub fn write_message(writer: &mut impl Write, msg: &Json) -> Result<()> {
+    writeln!(writer, "{msg}").context("writing message line")?;
+    writer.flush().context("flushing message")?;
+    Ok(())
+}
+
+/// Client helper: open a fresh connection, send one request, read one
+/// response. Errors if the server reports `ok:false`? No — transport
+/// errors only; callers inspect `ok` themselves so they can surface the
+/// server's error text.
+pub fn request(addr: &str, msg: &Json) -> Result<Json> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to codr serve at {addr}"))?;
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(600)))
+        .ok();
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let mut reader = BufReader::new(stream);
+    write_message(&mut writer, msg)?;
+    read_message(&mut reader)?.context("server closed the connection without replying")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_defaults_to_paper_evaluation() {
+        let g = GridRequest::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(g.models.len(), 3);
+        assert_eq!(g.groups.len(), 6);
+        assert_eq!(g.archs.len(), 3);
+        assert_eq!(g.seed, 42);
+        assert_eq!(g.points(), 54);
+    }
+
+    #[test]
+    fn grid_parses_explicit_fields() {
+        let j = Json::parse(
+            r#"{"models":"tiny","groups":"Orig,D=50%","archs":"codr,scnn","seed":7}"#,
+        )
+        .unwrap();
+        let g = GridRequest::from_json(&j).unwrap();
+        assert_eq!(g.models[0].name, "tiny");
+        assert_eq!(g.groups, vec![SweepGroup::Original, SweepGroup::Density(50)]);
+        assert_eq!(g.archs, vec![Arch::Codr, Arch::Scnn]);
+        assert_eq!(g.seed, 7);
+    }
+
+    #[test]
+    fn grid_rejects_unknown_names() {
+        for bad in [
+            r#"{"models":"resnet"}"#,
+            r#"{"groups":"X=3"}"#,
+            r#"{"archs":"tpu"}"#,
+            r#"{"seed":-1}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(GridRequest::from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn stats_roundtrip() {
+        let s = SweepStats {
+            requested: 10,
+            cache_hits: 4,
+            computed: 5,
+            deduped: 1,
+            corrupt: 2,
+            simulated_layers: 37,
+        };
+        let back = stats_from_json(&stats_to_json(&s)).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn messages_frame_on_lines() {
+        let mut buf = Vec::new();
+        write_message(&mut buf, &ok_response(vec![])).unwrap();
+        write_message(&mut buf, &error_response("nope")).unwrap();
+        let mut r = std::io::BufReader::new(&buf[..]);
+        let a = read_message(&mut r).unwrap().unwrap();
+        assert!(a.get("ok").unwrap().as_bool().unwrap());
+        let b = read_message(&mut r).unwrap().unwrap();
+        assert!(!b.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(b.get("error").unwrap().as_str().unwrap(), "nope");
+        assert!(read_message(&mut r).unwrap().is_none());
+    }
+}

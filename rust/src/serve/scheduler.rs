@@ -1,0 +1,388 @@
+//! Incremental grid scheduler: diff a requested (model × group × arch)
+//! grid against the result store and simulate only what is missing.
+//!
+//! Three properties matter here:
+//!
+//! 1. **Incrementality** — points already in the store are loaded, not
+//!    simulated; corrupt entries are recomputed and overwritten.
+//! 2. **Workload batching** — missing points that share a (model, group)
+//!    pair are dispatched as one batch so the synthetic weights are
+//!    generated once and reused by every design, mirroring the
+//!    coordinator's storeless fan-out.
+//! 3. **In-flight dedup** — when two requests (e.g. two `codr serve`
+//!    clients) need the same point concurrently, the second waits for the
+//!    first instead of burning a second simulation; claims are released
+//!    on unwind, so a failed claimant degrades to the waiter computing
+//!    the point itself, never to a hung server.
+//!
+//! Results are returned in (model × group) then arch order — identical to
+//! the storeless sweep, so figure output is byte-for-byte the same
+//! whether it came from silicon^W simulation or from disk.
+
+use super::store::{CacheKey, LoadOutcome, ResultStore};
+use crate::arch::MemConfig;
+use crate::coordinator::{pool, Arch, SweepResults, SweepStats};
+use crate::models::{Model, SweepGroup, Workload};
+use crate::sim::{simulate_model, ModelResult};
+use std::collections::{HashMap, HashSet};
+use std::sync::{Condvar, Mutex};
+
+/// One grid point, addressed by indices into the request plus its store
+/// key.
+struct Point {
+    mi: usize,
+    gi: usize,
+    ai: usize,
+    key: CacheKey,
+}
+
+/// Missing points sharing one (model, group) — one workload synthesis.
+struct Batch<'a> {
+    model: &'a Model,
+    group: SweepGroup,
+    points: Vec<Point>,
+}
+
+/// Long-lived scheduler over one result store. `codr serve` keeps a
+/// single instance so in-flight dedup spans connections; one-shot CLI
+/// paths build a transient one per sweep.
+pub struct Scheduler {
+    store: ResultStore,
+    inflight: Mutex<HashSet<u64>>,
+    released: Condvar,
+}
+
+/// Releases claimed fingerprints even if the claimant unwinds.
+struct ClaimGuard<'a> {
+    sched: &'a Scheduler,
+    claims: Vec<u64>,
+}
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        let mut inflight = self.sched.inflight.lock().unwrap();
+        for c in &self.claims {
+            inflight.remove(c);
+        }
+        drop(inflight);
+        self.sched.released.notify_all();
+    }
+}
+
+impl Scheduler {
+    pub fn new(store: ResultStore) -> Scheduler {
+        Scheduler {
+            store,
+            inflight: Mutex::new(HashSet::new()),
+            released: Condvar::new(),
+        }
+    }
+
+    pub fn store(&self) -> &ResultStore {
+        &self.store
+    }
+
+    /// Run one grid request through the store. See the module docs for
+    /// the hit/miss/dedup semantics.
+    pub fn run_grid(
+        &self,
+        models: &[Model],
+        groups: &[SweepGroup],
+        archs: &[Arch],
+        seed: u64,
+    ) -> SweepResults {
+        let mem = MemConfig::default();
+        let mut stats = SweepStats::default();
+        let mut found: HashMap<(usize, usize, usize), ModelResult> = HashMap::new();
+        let mut misses: Vec<Point> = Vec::new();
+
+        // Phase 1: diff the grid against the store.
+        for (mi, model) in models.iter().enumerate() {
+            for (gi, group) in groups.iter().enumerate() {
+                for (ai, arch) in archs.iter().enumerate() {
+                    stats.requested += 1;
+                    let key = CacheKey::for_point(
+                        model.name,
+                        group,
+                        arch.name(),
+                        &arch.build().tile_config(),
+                        &mem,
+                        seed,
+                    );
+                    let point = Point { mi, gi, ai, key };
+                    match self.store.load(&point.key) {
+                        LoadOutcome::Hit(r) => {
+                            stats.cache_hits += 1;
+                            found.insert((mi, gi, ai), *r);
+                        }
+                        LoadOutcome::Corrupt => {
+                            stats.corrupt += 1;
+                            misses.push(point);
+                        }
+                        LoadOutcome::Miss => misses.push(point),
+                    }
+                }
+            }
+        }
+
+        // Phase 2: claim what no other request is already computing. The
+        // guard releases claims even if a later phase unwinds.
+        let mut guard = ClaimGuard {
+            sched: self,
+            claims: Vec::new(),
+        };
+        let mut claimed: Vec<Point> = Vec::new();
+        let mut waited: Vec<Point> = Vec::new();
+        {
+            let mut inflight = self.inflight.lock().unwrap();
+            for p in misses {
+                if inflight.insert(p.key.fingerprint) {
+                    guard.claims.push(p.key.fingerprint);
+                    claimed.push(p);
+                } else {
+                    waited.push(p);
+                }
+            }
+        }
+
+        // Double-checked locking: another request may have computed and
+        // saved a point between our phase-1 miss and the claim. Now that
+        // we hold the claim nobody else is writing it, so one re-read
+        // settles it: a hit here releases the claim and skips the
+        // simulation.
+        let mut to_compute: Vec<Point> = Vec::new();
+        for p in claimed {
+            match self.store.load(&p.key) {
+                LoadOutcome::Hit(r) => {
+                    stats.cache_hits += 1;
+                    self.inflight.lock().unwrap().remove(&p.key.fingerprint);
+                    self.released.notify_all();
+                    guard.claims.retain(|&f| f != p.key.fingerprint);
+                    found.insert((p.mi, p.gi, p.ai), *r);
+                }
+                _ => to_compute.push(p),
+            }
+        }
+
+        // Phase 3: batch claimed points by (model, group) and fan out over
+        // the coordinator pool; each batch synthesizes its weights once.
+        if !to_compute.is_empty() {
+            let mut batches: Vec<Batch> = Vec::new();
+            let mut by_pair: HashMap<(usize, usize), usize> = HashMap::new();
+            for p in to_compute {
+                let slot = *by_pair.entry((p.mi, p.gi)).or_insert_with(|| {
+                    batches.push(Batch {
+                        model: &models[p.mi],
+                        group: groups[p.gi],
+                        points: Vec::new(),
+                    });
+                    batches.len() - 1
+                });
+                batches[slot].points.push(p);
+            }
+            let computed = pool::parallel_map(&batches, |batch| {
+                let (unique, density) = batch.group.knobs();
+                let workload = Workload::generate(batch.model, unique, density, seed);
+                batch
+                    .points
+                    .iter()
+                    .map(|p| {
+                        let acc = archs[p.ai].build();
+                        let result = simulate_model(acc.as_ref(), &workload, &batch.group.label());
+                        if let Err(e) = self.store.save(&p.key, &result) {
+                            eprintln!("warn: failed to persist {}: {e:#}", p.key.file_stem());
+                        }
+                        // Release this point's claim as soon as it is
+                        // persisted: a request waiting on just this point
+                        // must not block behind the rest of our grid.
+                        // (The guard's redundant remove at the end is a
+                        // no-op.)
+                        self.inflight.lock().unwrap().remove(&p.key.fingerprint);
+                        self.released.notify_all();
+                        result
+                    })
+                    .collect::<Vec<_>>()
+            });
+            for (batch, results) in batches.iter().zip(computed) {
+                for (p, r) in batch.points.iter().zip(results) {
+                    stats.computed += 1;
+                    stats.simulated_layers += r.layers.len();
+                    found.insert((p.mi, p.gi, p.ai), r);
+                }
+            }
+        }
+        drop(guard); // release remaining claims, wake waiters
+
+        // Phase 4: points another request was already computing — wait for
+        // the claim to clear, then read the store. If the claimant failed
+        // (no entry appeared), claim and compute the point ourselves.
+        for p in waited {
+            let result = self.wait_for_point(&p, models, groups, archs, seed, &mut stats);
+            found.insert((p.mi, p.gi, p.ai), result);
+        }
+
+        // Assemble in the storeless sweep's order.
+        let mut results = Vec::with_capacity(stats.requested);
+        for mi in 0..models.len() {
+            for gi in 0..groups.len() {
+                for ai in 0..archs.len() {
+                    if let Some(r) = found.remove(&(mi, gi, ai)) {
+                        results.push(r);
+                    }
+                }
+            }
+        }
+        SweepResults { results, stats }
+    }
+
+    fn wait_for_point(
+        &self,
+        p: &Point,
+        models: &[Model],
+        groups: &[SweepGroup],
+        archs: &[Arch],
+        seed: u64,
+        stats: &mut SweepStats,
+    ) -> ModelResult {
+        loop {
+            // Wait until no request holds a claim on this point.
+            {
+                let mut inflight = self.inflight.lock().unwrap();
+                while inflight.contains(&p.key.fingerprint) {
+                    inflight = self.released.wait(inflight).unwrap();
+                }
+            }
+            match self.store.load(&p.key) {
+                LoadOutcome::Hit(r) => {
+                    stats.deduped += 1;
+                    return *r;
+                }
+                _ => {
+                    // Claimant died or failed to persist: try to take over.
+                    let claimed = self.inflight.lock().unwrap().insert(p.key.fingerprint);
+                    if !claimed {
+                        continue; // someone else took over; wait again
+                    }
+                    let guard = ClaimGuard {
+                        sched: self,
+                        claims: vec![p.key.fingerprint],
+                    };
+                    let group = groups[p.gi];
+                    let (unique, density) = group.knobs();
+                    let workload = Workload::generate(&models[p.mi], unique, density, seed);
+                    let acc = archs[p.ai].build();
+                    let result = simulate_model(acc.as_ref(), &workload, &group.label());
+                    if let Err(e) = self.store.save(&p.key, &result) {
+                        eprintln!("warn: failed to persist {}: {e:#}", p.key.file_stem());
+                    }
+                    stats.computed += 1;
+                    stats.simulated_layers += result.layers.len();
+                    drop(guard);
+                    return result;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::tiny_cnn;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn temp_store(tag: &str) -> ResultStore {
+        let dir = std::env::temp_dir().join(format!(
+            "codr-sched-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        ResultStore::open(dir).unwrap()
+    }
+
+    #[test]
+    fn second_run_is_all_hits_with_zero_simulated_layers() {
+        let store = temp_store("rerun");
+        let sched = Scheduler::new(store.clone());
+        let models = [tiny_cnn()];
+        let groups = [SweepGroup::Original, SweepGroup::Density(50)];
+        let archs = Arch::all();
+
+        let cold = sched.run_grid(&models, &groups, &archs, 11);
+        assert_eq!(cold.stats.requested, 6);
+        assert_eq!(cold.stats.computed, 6);
+        assert_eq!(cold.stats.cache_hits, 0);
+        assert!(cold.stats.simulated_layers > 0);
+
+        let warm = sched.run_grid(&models, &groups, &archs, 11);
+        assert_eq!(warm.stats.cache_hits, 6);
+        assert_eq!(warm.stats.computed, 0);
+        assert_eq!(warm.stats.simulated_layers, 0, "warm run must not simulate");
+        // Same results, same order.
+        assert_eq!(cold.results, warm.results);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn partial_store_computes_only_the_diff() {
+        let store = temp_store("diff");
+        let sched = Scheduler::new(store.clone());
+        let models = [tiny_cnn()];
+        let archs = Arch::all();
+        // Warm only the Orig group.
+        sched.run_grid(&models, &[SweepGroup::Original], &archs, 5);
+        // Request Orig + D=25%: only the new group simulates.
+        let r = sched.run_grid(
+            &models,
+            &[SweepGroup::Original, SweepGroup::Density(25)],
+            &archs,
+            5,
+        );
+        assert_eq!(r.stats.requested, 6);
+        assert_eq!(r.stats.cache_hits, 3);
+        assert_eq!(r.stats.computed, 3);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn different_seed_is_a_different_point() {
+        let store = temp_store("seed");
+        let sched = Scheduler::new(store.clone());
+        let models = [tiny_cnn()];
+        sched.run_grid(&models, &[SweepGroup::Original], &[Arch::Codr], 1);
+        let r = sched.run_grid(&models, &[SweepGroup::Original], &[Arch::Codr], 2);
+        assert_eq!(r.stats.cache_hits, 0);
+        assert_eq!(r.stats.computed, 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn concurrent_identical_requests_dedupe() {
+        let store = temp_store("dedupe");
+        let sched = Arc::new(Scheduler::new(store.clone()));
+        let models = Arc::new([tiny_cnn()]);
+        let total_computed = Arc::new(AtomicUsize::new(0));
+        let total_deduped = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let sched = Arc::clone(&sched);
+            let models = Arc::clone(&models);
+            let computed = Arc::clone(&total_computed);
+            let deduped = Arc::clone(&total_deduped);
+            handles.push(std::thread::spawn(move || {
+                let r = sched.run_grid(&models[..], &[SweepGroup::Original], &Arch::all(), 3);
+                computed.fetch_add(r.stats.computed, Ordering::Relaxed);
+                deduped.fetch_add(r.stats.deduped, Ordering::Relaxed);
+                assert_eq!(r.results.len(), 3);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Every point was computed exactly once across all four requests
+        // (the rest were cache hits or waited on the in-flight claimant).
+        assert_eq!(total_computed.load(Ordering::Relaxed), 3);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+}

@@ -1,0 +1,301 @@
+//! The long-running sweep service behind `codr serve`.
+//!
+//! Blocking std::net (tokio is unavailable offline): a poll-accept loop
+//! hands each connection to its own thread; every connection can issue
+//! any number of line-delimited JSON requests. All connections share one
+//! [`Scheduler`], so the in-flight dedup spans clients — two clients
+//! warming the same grid simulate it once.
+//!
+//! Verbs: `ping`, `warm` (synchronous sweep), `submit` (async job),
+//! `status` (job or server), `result` (store lookup), `shutdown`.
+
+use super::proto::{
+    error_response, ok_response, read_message, stats_to_json, write_message, GridRequest,
+};
+use super::scheduler::Scheduler;
+use super::store::{CacheKey, LoadOutcome, ResultStore};
+use crate::arch::MemConfig;
+use crate::coordinator::{Arch, SweepStats};
+use crate::models::parse_group_list;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Progress of one submitted job.
+#[derive(Clone, Debug)]
+enum JobState {
+    Running,
+    Done(SweepStats),
+    Failed(String),
+}
+
+/// Shared server state: the scheduler (store + in-flight claims) plus the
+/// job table.
+struct Shared {
+    sched: Scheduler,
+    jobs: Mutex<HashMap<u64, JobState>>,
+    next_job: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// A bound, not-yet-running sweep service.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Bind the service. `addr` may use port 0 to pick a free port (the
+    /// tests do); `store_dir` is created if missing.
+    pub fn bind(addr: &str, store_dir: &Path) -> Result<Server> {
+        let store = ResultStore::open(store_dir)?;
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding codr serve to {addr}"))?;
+        Ok(Server {
+            listener,
+            shared: Arc::new(Shared {
+                sched: Scheduler::new(store),
+                jobs: Mutex::new(HashMap::new()),
+                next_job: AtomicU64::new(1),
+                stop: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        self.listener.local_addr().context("reading bound address")
+    }
+
+    /// Accept-and-serve until a `shutdown` request arrives. Consumes the
+    /// server; each connection runs on its own thread.
+    pub fn run(self) -> Result<()> {
+        self.listener
+            .set_nonblocking(true)
+            .context("setting listener nonblocking")?;
+        loop {
+            if self.shared.stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let shared = Arc::clone(&self.shared);
+                    std::thread::spawn(move || {
+                        if let Err(e) = serve_connection(stream, &shared) {
+                            eprintln!("warn: connection ended with error: {e:#}");
+                        }
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                Err(e) => return Err(e).context("accepting connection"),
+            }
+        }
+    }
+}
+
+fn serve_connection(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
+    stream
+        .set_nonblocking(false)
+        .context("setting stream blocking")?;
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let msg = match read_message(&mut reader) {
+            Ok(Some(m)) => m,
+            Ok(None) => return Ok(()), // clean EOF
+            Err(e) => {
+                // Malformed request: answer with the error, then drop the
+                // connection (framing may be lost).
+                let _ = write_message(&mut writer, &error_response(format!("{e:#}")));
+                return Ok(());
+            }
+        };
+        let response = handle_request(&msg, shared);
+        write_message(&mut writer, &response)?;
+        if shared.stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+    }
+}
+
+/// Dispatch one request. Never panics on client input: every failure
+/// becomes an `ok:false` response.
+fn handle_request(msg: &Json, shared: &Arc<Shared>) -> Json {
+    let verb = match msg.get("verb").map(|v| v.as_str()) {
+        Some(Ok(v)) => v.to_string(),
+        _ => return error_response("request must carry a string `verb`"),
+    };
+    let result = match verb.as_str() {
+        "ping" => Ok(ok_response(vec![("pong".into(), Json::Bool(true))])),
+        "warm" => warm(msg, shared),
+        "submit" => submit(msg, shared),
+        "status" => status(msg, shared),
+        "result" => result_lookup(msg, shared),
+        "shutdown" => {
+            shared.stop.store(true, Ordering::SeqCst);
+            Ok(ok_response(vec![(
+                "stopping".into(),
+                Json::Bool(true),
+            )]))
+        }
+        other => Err(anyhow::anyhow!(
+            "unknown verb `{other}` (use ping|warm|submit|status|result|shutdown)"
+        )),
+    };
+    result.unwrap_or_else(|e| error_response(format!("{e:#}")))
+}
+
+/// `warm`: run the requested grid synchronously, reply with stats.
+fn warm(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
+    let grid = GridRequest::from_json(msg)?;
+    let results = shared
+        .sched
+        .run_grid(&grid.models, &grid.groups, &grid.archs, grid.seed);
+    Ok(ok_response(vec![
+        ("stats".into(), stats_to_json(&results.stats)),
+        (
+            "store_entries".into(),
+            Json::usize(shared.sched.store().len()),
+        ),
+    ]))
+}
+
+/// `submit`: run the grid on a worker thread, reply immediately with a
+/// job id for `status` polling.
+/// Finished jobs retained for `status` polling; beyond this the oldest
+/// terminal entries are pruned so a long-lived server's job table stays
+/// bounded.
+const MAX_RETAINED_JOBS: usize = 256;
+
+fn submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
+    let grid = GridRequest::from_json(msg)?;
+    let id = shared.next_job.fetch_add(1, Ordering::SeqCst);
+    {
+        let mut jobs = shared.jobs.lock().unwrap();
+        if jobs.len() >= MAX_RETAINED_JOBS {
+            let mut finished: Vec<u64> = jobs
+                .iter()
+                .filter(|(_, s)| !matches!(s, JobState::Running))
+                .map(|(&jid, _)| jid)
+                .collect();
+            finished.sort_unstable();
+            let excess = jobs.len() + 1 - MAX_RETAINED_JOBS;
+            for old in finished.into_iter().take(excess) {
+                jobs.remove(&old);
+            }
+        }
+        jobs.insert(id, JobState::Running);
+    }
+    let shared_worker = Arc::clone(shared);
+    std::thread::spawn(move || {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            shared_worker
+                .sched
+                .run_grid(&grid.models, &grid.groups, &grid.archs, grid.seed)
+        }));
+        let state = match outcome {
+            Ok(results) => JobState::Done(results.stats),
+            Err(_) => JobState::Failed("sweep worker panicked".into()),
+        };
+        shared_worker.jobs.lock().unwrap().insert(id, state);
+    });
+    Ok(ok_response(vec![
+        ("job".into(), Json::u64(id)),
+        ("points".into(), Json::usize(grid.points())),
+    ]))
+}
+
+/// `status`: with `job`, that job's state; without, server-wide counters.
+fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
+    if let Some(job) = msg.get("job") {
+        let id = job.as_u64()?;
+        let state = shared
+            .jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .with_context(|| format!("unknown job {id}"))?;
+        let mut fields = vec![("job".into(), Json::u64(id))];
+        match state {
+            JobState::Running => fields.push(("state".into(), Json::str("running"))),
+            JobState::Done(stats) => {
+                fields.push(("state".into(), Json::str("done")));
+                fields.push(("stats".into(), stats_to_json(&stats)));
+            }
+            JobState::Failed(err) => {
+                fields.push(("state".into(), Json::str("failed")));
+                fields.push(("error".into(), Json::Str(err)));
+            }
+        }
+        return Ok(ok_response(fields));
+    }
+    let jobs = shared.jobs.lock().unwrap();
+    let running = jobs
+        .values()
+        .filter(|s| matches!(s, JobState::Running))
+        .count();
+    Ok(ok_response(vec![
+        ("jobs".into(), Json::usize(jobs.len())),
+        ("running".into(), Json::usize(running)),
+        (
+            "store_entries".into(),
+            Json::usize(shared.sched.store().len()),
+        ),
+    ]))
+}
+
+/// `result`: summarize one stored point without simulating anything.
+fn result_lookup(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
+    let model = msg.field("model")?.as_str()?;
+    let group_spec = msg.field("group")?.as_str()?;
+    let groups = parse_group_list(group_spec)?;
+    if groups.len() != 1 {
+        anyhow::bail!("`group` must name exactly one sweep group, got `{group_spec}`");
+    }
+    let group = &groups[0];
+    let arch = Arch::parse(msg.field("arch")?.as_str()?)?;
+    let seed = match msg.get("seed") {
+        Some(s) => s.as_u64()?,
+        None => 42,
+    };
+    let key = CacheKey::for_point(
+        model,
+        group,
+        arch.name(),
+        &arch.build().tile_config(),
+        &MemConfig::default(),
+        seed,
+    );
+    match shared.sched.store().load(&key) {
+        LoadOutcome::Hit(r) => {
+            let c = r.compression();
+            Ok(ok_response(vec![
+                ("model".into(), Json::str(model)),
+                ("group".into(), Json::str(group.label())),
+                ("arch".into(), Json::str(arch.name())),
+                ("seed".into(), Json::u64(seed)),
+                ("layers".into(), Json::usize(r.layers.len())),
+                ("cycles".into(), Json::u64(r.cycles())),
+                ("sram_accesses".into(), Json::u64(r.mem().sram_accesses())),
+                ("energy_uj".into(), Json::f64(r.energy().total_uj())),
+                (
+                    "bits_per_weight".into(),
+                    Json::f64(c.bits_per_weight()),
+                ),
+            ]))
+        }
+        LoadOutcome::Miss => Err(anyhow::anyhow!(
+            "point not in store — warm it first (`codr warm` or the warm verb)"
+        )),
+        LoadOutcome::Corrupt => Err(anyhow::anyhow!(
+            "store entry for that point is corrupt; re-warm to recompute"
+        )),
+    }
+}

@@ -1,0 +1,339 @@
+//! Content-addressed, on-disk result store.
+//!
+//! Sweep results are fully deterministic given `(model, sweep group,
+//! arch, seed, accelerator config)`, so a [`ModelResult`] computed once
+//! can serve every later figure. Each point is one JSON file named by the
+//! point coordinates plus a 64-bit FNV-1a fingerprint of the *full*
+//! canonical key — the fingerprint covers the tiling and memory
+//! configuration and the store/codec versions, so a config or schema
+//! change silently misses instead of serving stale numbers.
+//!
+//! Loads are corruption-tolerant by design: any read, parse, schema, or
+//! key-mismatch failure degrades to [`LoadOutcome::Corrupt`] and the
+//! caller recomputes. A broken cache can cost time, never correctness.
+
+use crate::arch::{MemConfig, TileConfig};
+use crate::models::SweepGroup;
+use crate::sim::codec::{model_result_from_json, model_result_to_json, CODEC_VERSION};
+use crate::sim::ModelResult;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Version of the store's file layout + envelope (independent of the
+/// result schema, which [`CODEC_VERSION`] tracks).
+pub const STORE_FORMAT_VERSION: u32 = 1;
+
+/// 64-bit FNV-1a — stable, dependency-free content hash.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The identity of one sweep point. Two keys are interchangeable iff
+/// every figure derived from their results is identical.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CacheKey {
+    pub model: String,
+    pub group: String,
+    pub arch: String,
+    pub seed: u64,
+    /// FNV-1a of the canonical key string (includes the fields above plus
+    /// the accelerator tile/memory configuration and format versions).
+    pub fingerprint: u64,
+}
+
+impl CacheKey {
+    /// Build the key for one sweep point under the accelerator
+    /// configuration that will simulate it.
+    pub fn for_point(
+        model: &str,
+        group: &SweepGroup,
+        arch: &str,
+        tile: &TileConfig,
+        mem: &MemConfig,
+        seed: u64,
+    ) -> CacheKey {
+        let canonical = format!(
+            "store=v{STORE_FORMAT_VERSION}|codec=v{CODEC_VERSION}|model={model}|group={}|\
+             arch={arch}|seed={seed}|tile={},{},{},{},{},{},{},{}|\
+             mem={},{},{},{},{},{}",
+            group.label(),
+            tile.t_pu,
+            tile.t_m,
+            tile.t_n,
+            tile.t_ro,
+            tile.t_co,
+            tile.t_ri,
+            tile.t_ci,
+            tile.mults_per_pu,
+            mem.input_sram_kb,
+            mem.output_sram_kb,
+            mem.weight_sram_kb,
+            mem.sram_word_bits,
+            mem.dram_pj_per_byte,
+            mem.rf_bytes,
+        );
+        CacheKey {
+            model: model.to_string(),
+            group: group.label(),
+            arch: arch.to_string(),
+            seed,
+            fingerprint: fnv1a64(canonical.as_bytes()),
+        }
+    }
+
+    /// File stem: human-greppable coordinates plus the fingerprint.
+    pub fn file_stem(&self) -> String {
+        let sanitize = |s: &str| -> String {
+            s.chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect()
+        };
+        format!(
+            "{}-{}-{}-s{}-{:016x}",
+            sanitize(&self.model),
+            sanitize(&self.group),
+            sanitize(&self.arch),
+            self.seed,
+            self.fingerprint
+        )
+    }
+}
+
+/// What a store lookup found.
+#[derive(Debug)]
+pub enum LoadOutcome {
+    /// Valid entry for exactly this key.
+    Hit(Box<ModelResult>),
+    /// No entry on disk.
+    Miss,
+    /// An entry exists but is unreadable, truncated, from another
+    /// format/codec version, or keyed differently (hash collision).
+    /// Callers recompute; the bad file is overwritten on save.
+    Corrupt,
+}
+
+/// On-disk result store rooted at one directory. Cheap to clone; safe to
+/// share across threads (all state is the path — concurrency is handled
+/// with atomic write-then-rename).
+#[derive(Clone, Debug)]
+pub struct ResultStore {
+    dir: PathBuf,
+}
+
+impl ResultStore {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ResultStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating result store at {}", dir.display()))?;
+        Ok(ResultStore { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path_for(&self, key: &CacheKey) -> PathBuf {
+        self.dir.join(format!("{}.json", key.file_stem()))
+    }
+
+    /// Look up one point. Never errors: every failure mode maps to
+    /// [`LoadOutcome::Miss`] or [`LoadOutcome::Corrupt`].
+    pub fn load(&self, key: &CacheKey) -> LoadOutcome {
+        let path = self.path_for(key);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return LoadOutcome::Miss,
+            Err(_) => return LoadOutcome::Corrupt,
+        };
+        match Self::decode_entry(&text, key) {
+            Ok(r) => LoadOutcome::Hit(Box::new(r)),
+            Err(_) => LoadOutcome::Corrupt,
+        }
+    }
+
+    fn decode_entry(text: &str, key: &CacheKey) -> Result<ModelResult> {
+        let j = Json::parse(text)?;
+        let version = j.field("version")?.as_u32()?;
+        if version != STORE_FORMAT_VERSION {
+            anyhow::bail!("store format v{version}, expected v{STORE_FORMAT_VERSION}");
+        }
+        let k = j.field("key")?;
+        let matches = k.field("model")?.as_str()? == key.model
+            && k.field("group")?.as_str()? == key.group
+            && k.field("arch")?.as_str()? == key.arch
+            && k.field("seed")?.as_u64()? == key.seed
+            && k.field("fingerprint")?.as_u64()? == key.fingerprint;
+        if !matches {
+            anyhow::bail!("entry keyed for a different point");
+        }
+        model_result_from_json(j.field("result")?)
+    }
+
+    /// Persist one point. Atomic: writes a temp file in the store dir and
+    /// renames over the target, so concurrent readers and a mid-write
+    /// crash both see either the old entry or the new one, never a torn
+    /// file.
+    pub fn save(&self, key: &CacheKey, result: &ModelResult) -> Result<()> {
+        let envelope = Json::Obj(vec![
+            ("version".into(), Json::u64(STORE_FORMAT_VERSION as u64)),
+            (
+                "key".into(),
+                Json::Obj(vec![
+                    ("model".into(), Json::str(&key.model)),
+                    ("group".into(), Json::str(&key.group)),
+                    ("arch".into(), Json::str(&key.arch)),
+                    ("seed".into(), Json::u64(key.seed)),
+                    ("fingerprint".into(), Json::u64(key.fingerprint)),
+                ]),
+            ),
+            ("result".into(), model_result_to_json(result)),
+        ]);
+        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let path = self.path_for(key);
+        let tmp = self.dir.join(format!(
+            ".{}.tmp-{}-{}",
+            key.file_stem(),
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, envelope.to_string())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).with_context(|| format!("renaming to {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Number of entries currently on disk (non-temp `.json` files).
+    pub fn len(&self) -> usize {
+        std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter(|e| {
+                        let name = e.file_name();
+                        let name = name.to_string_lossy();
+                        name.ends_with(".json") && !name.starts_with('.')
+                    })
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Arch;
+    use crate::models::{tiny_cnn, Workload};
+    use crate::sim::simulate_model;
+
+    fn temp_store(tag: &str) -> ResultStore {
+        let dir = std::env::temp_dir().join(format!(
+            "codr-store-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        ResultStore::open(dir).unwrap()
+    }
+
+    fn tiny_point() -> (CacheKey, ModelResult) {
+        let model = tiny_cnn();
+        let group = SweepGroup::Original;
+        let wl = Workload::generate(&model, None, None, 9);
+        let acc = Arch::Codr.build();
+        let result = simulate_model(acc.as_ref(), &wl, &group.label());
+        let key = CacheKey::for_point(
+            "tiny",
+            &group,
+            Arch::Codr.name(),
+            &acc.tile_config(),
+            &MemConfig::default(),
+            9,
+        );
+        (key, result)
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // Reference FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn keys_separate_points() {
+        let tile = TileConfig::codr();
+        let mem = MemConfig::default();
+        let k = |m: &str, g: SweepGroup, s: u64| CacheKey::for_point(m, &g, "CoDR", &tile, &mem, s);
+        let base = k("tiny", SweepGroup::Original, 42);
+        assert_ne!(base.fingerprint, k("tiny", SweepGroup::Original, 43).fingerprint);
+        assert_ne!(base.fingerprint, k("tiny", SweepGroup::Density(50), 42).fingerprint);
+        assert_ne!(base.fingerprint, k("vgg16", SweepGroup::Original, 42).fingerprint);
+        let ucnn = CacheKey::for_point(
+            "tiny",
+            &SweepGroup::Original,
+            "UCNN",
+            &TileConfig::ucnn(),
+            &mem,
+            42,
+        );
+        assert_ne!(base.fingerprint, ucnn.fingerprint);
+        // Same point, same key — content addressing is stable.
+        assert_eq!(base, k("tiny", SweepGroup::Original, 42));
+    }
+
+    #[test]
+    fn save_then_load_hits() {
+        let store = temp_store("hit");
+        let (key, result) = tiny_point();
+        assert!(matches!(store.load(&key), LoadOutcome::Miss));
+        store.save(&key, &result).unwrap();
+        assert_eq!(store.len(), 1);
+        match store.load(&key) {
+            LoadOutcome::Hit(r) => assert_eq!(*r, result),
+            other => panic!("expected hit, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn garbage_and_truncation_degrade_to_corrupt() {
+        let store = temp_store("corrupt");
+        let (key, result) = tiny_point();
+        store.save(&key, &result).unwrap();
+        let path = store.path_for(&key);
+
+        // Truncate to half: unparseable.
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(matches!(store.load(&key), LoadOutcome::Corrupt));
+
+        // Arbitrary garbage.
+        std::fs::write(&path, "not json at all {{{").unwrap();
+        assert!(matches!(store.load(&key), LoadOutcome::Corrupt));
+
+        // Valid JSON, wrong shape.
+        std::fs::write(&path, "{\"version\":1}").unwrap();
+        assert!(matches!(store.load(&key), LoadOutcome::Corrupt));
+
+        // Future store format.
+        let bumped = full.replacen("\"version\":1", "\"version\":99", 1);
+        std::fs::write(&path, bumped).unwrap();
+        assert!(matches!(store.load(&key), LoadOutcome::Corrupt));
+
+        // Saving again repairs the entry.
+        store.save(&key, &result).unwrap();
+        assert!(matches!(store.load(&key), LoadOutcome::Hit(_)));
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+}

@@ -1,0 +1,252 @@
+//! Versioned JSON (de)serialization of the simulation result types —
+//! the schema of the `serve` result store (the offline registry has no
+//! `serde`, so the mapping is spelled out by hand).
+//!
+//! [`CODEC_VERSION`] names the *schema* of a serialized [`ModelResult`].
+//! Bump it whenever a field is added, removed, or changes meaning; the
+//! store treats any version mismatch as a miss and recomputes, so old
+//! cache files degrade to a cold start, never to a crash or a wrong
+//! figure.
+
+use crate::arch::{AccessCounter, MemoryStats};
+use crate::energy::{AluStats, EnergyBreakdown};
+use crate::rle::CompressionStats;
+use crate::sim::{LayerResult, ModelResult};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Schema version of the serialized result types.
+pub const CODEC_VERSION: u32 = 1;
+
+fn counter_to_json(c: &AccessCounter) -> Json {
+    Json::Obj(vec![
+        ("accesses".into(), Json::u64(c.accesses)),
+        ("bits".into(), Json::u64(c.bits)),
+    ])
+}
+
+fn counter_from_json(j: &Json) -> Result<AccessCounter> {
+    Ok(AccessCounter {
+        accesses: j.field("accesses")?.as_u64()?,
+        bits: j.field("bits")?.as_u64()?,
+    })
+}
+
+fn mem_to_json(m: &MemoryStats) -> Json {
+    Json::Obj(vec![
+        ("input_sram".into(), counter_to_json(&m.input_sram)),
+        ("output_sram".into(), counter_to_json(&m.output_sram)),
+        ("weight_sram".into(), counter_to_json(&m.weight_sram)),
+        ("dram".into(), counter_to_json(&m.dram)),
+        ("input_rf".into(), counter_to_json(&m.input_rf)),
+        ("weight_rf".into(), counter_to_json(&m.weight_rf)),
+        ("output_rf".into(), counter_to_json(&m.output_rf)),
+    ])
+}
+
+fn mem_from_json(j: &Json) -> Result<MemoryStats> {
+    Ok(MemoryStats {
+        input_sram: counter_from_json(j.field("input_sram")?)?,
+        output_sram: counter_from_json(j.field("output_sram")?)?,
+        weight_sram: counter_from_json(j.field("weight_sram")?)?,
+        dram: counter_from_json(j.field("dram")?)?,
+        input_rf: counter_from_json(j.field("input_rf")?)?,
+        weight_rf: counter_from_json(j.field("weight_rf")?)?,
+        output_rf: counter_from_json(j.field("output_rf")?)?,
+    })
+}
+
+fn alu_to_json(a: &AluStats) -> Json {
+    Json::Obj(vec![
+        ("mults_full".into(), Json::u64(a.mults_full)),
+        ("mults_low".into(), Json::u64(a.mults_low)),
+        ("delta_bits".into(), Json::u64(a.delta_bits as u64)),
+        ("adds".into(), Json::u64(a.adds)),
+        ("xbar_transfers".into(), Json::u64(a.xbar_transfers)),
+        ("xbar_bits".into(), Json::u64(a.xbar_bits as u64)),
+    ])
+}
+
+fn alu_from_json(j: &Json) -> Result<AluStats> {
+    Ok(AluStats {
+        mults_full: j.field("mults_full")?.as_u64()?,
+        mults_low: j.field("mults_low")?.as_u64()?,
+        delta_bits: j.field("delta_bits")?.as_u32()?,
+        adds: j.field("adds")?.as_u64()?,
+        xbar_transfers: j.field("xbar_transfers")?.as_u64()?,
+        xbar_bits: j.field("xbar_bits")?.as_u32()?,
+    })
+}
+
+fn energy_to_json(e: &EnergyBreakdown) -> Json {
+    Json::Obj(vec![
+        ("dram_uj".into(), Json::f64(e.dram_uj)),
+        ("sram_uj".into(), Json::f64(e.sram_uj)),
+        ("rf_uj".into(), Json::f64(e.rf_uj)),
+        ("alu_uj".into(), Json::f64(e.alu_uj)),
+        ("xbar_uj".into(), Json::f64(e.xbar_uj)),
+    ])
+}
+
+fn energy_from_json(j: &Json) -> Result<EnergyBreakdown> {
+    Ok(EnergyBreakdown {
+        dram_uj: j.field("dram_uj")?.as_f64()?,
+        sram_uj: j.field("sram_uj")?.as_f64()?,
+        rf_uj: j.field("rf_uj")?.as_f64()?,
+        alu_uj: j.field("alu_uj")?.as_f64()?,
+        xbar_uj: j.field("xbar_uj")?.as_f64()?,
+    })
+}
+
+fn compression_to_json(c: &CompressionStats) -> Json {
+    Json::Obj(vec![
+        ("num_weights".into(), Json::usize(c.num_weights)),
+        ("encoded_bits".into(), Json::usize(c.encoded_bits)),
+        ("delta_bits".into(), Json::usize(c.delta_bits)),
+        ("count_bits".into(), Json::usize(c.count_bits)),
+        ("index_bits".into(), Json::usize(c.index_bits)),
+        ("header_bits".into(), Json::usize(c.header_bits)),
+    ])
+}
+
+fn compression_from_json(j: &Json) -> Result<CompressionStats> {
+    Ok(CompressionStats {
+        num_weights: j.field("num_weights")?.as_usize()?,
+        encoded_bits: j.field("encoded_bits")?.as_usize()?,
+        delta_bits: j.field("delta_bits")?.as_usize()?,
+        count_bits: j.field("count_bits")?.as_usize()?,
+        index_bits: j.field("index_bits")?.as_usize()?,
+        header_bits: j.field("header_bits")?.as_usize()?,
+    })
+}
+
+fn layer_to_json(l: &LayerResult) -> Json {
+    Json::Obj(vec![
+        ("layer".into(), Json::str(&l.layer)),
+        ("mem".into(), mem_to_json(&l.mem)),
+        ("alu".into(), alu_to_json(&l.alu)),
+        ("cycles".into(), Json::u64(l.cycles)),
+        ("compression".into(), compression_to_json(&l.compression)),
+        ("energy".into(), energy_to_json(&l.energy)),
+    ])
+}
+
+fn layer_from_json(j: &Json) -> Result<LayerResult> {
+    Ok(LayerResult {
+        layer: j.field("layer")?.as_str()?.to_string(),
+        mem: mem_from_json(j.field("mem")?)?,
+        alu: alu_from_json(j.field("alu")?)?,
+        cycles: j.field("cycles")?.as_u64()?,
+        compression: compression_from_json(j.field("compression")?)?,
+        energy: energy_from_json(j.field("energy")?)?,
+    })
+}
+
+/// Serialize a [`ModelResult`] (schema [`CODEC_VERSION`]).
+pub fn model_result_to_json(r: &ModelResult) -> Json {
+    Json::Obj(vec![
+        ("codec".into(), Json::u64(CODEC_VERSION as u64)),
+        ("arch".into(), Json::str(&r.arch)),
+        ("model".into(), Json::str(&r.model)),
+        ("group".into(), Json::str(&r.group)),
+        (
+            "layers".into(),
+            Json::Arr(r.layers.iter().map(layer_to_json).collect()),
+        ),
+    ])
+}
+
+/// Deserialize a [`ModelResult`]; errors on any schema or type mismatch
+/// (callers treat the error as a cache miss).
+pub fn model_result_from_json(j: &Json) -> Result<ModelResult> {
+    let codec = j.field("codec")?.as_u32()?;
+    if codec != CODEC_VERSION {
+        anyhow::bail!("codec version {codec}, expected {CODEC_VERSION}");
+    }
+    let layers = j
+        .field("layers")?
+        .as_arr()?
+        .iter()
+        .enumerate()
+        .map(|(i, l)| layer_from_json(l).with_context(|| format!("layer {i}")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelResult {
+        arch: j.field("arch")?.as_str()?.to_string(),
+        model: j.field("model")?.as_str()?.to_string(),
+        group: j.field("group")?.as_str()?.to_string(),
+        layers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MemoryKind;
+
+    fn sample_result() -> ModelResult {
+        let mut l = LayerResult {
+            layer: "conv1".into(),
+            cycles: 123_456,
+            ..Default::default()
+        };
+        l.mem.record(MemoryKind::InputSram, 17, 8);
+        l.mem.record(MemoryKind::WeightSram, 5, 64);
+        l.mem.record(MemoryKind::Dram, 2, 4096);
+        l.alu = AluStats {
+            mults_full: 9,
+            mults_low: 1000,
+            delta_bits: 3,
+            adds: 1009,
+            xbar_transfers: 40,
+            xbar_bits: 32,
+        };
+        l.compression = CompressionStats {
+            num_weights: 864,
+            encoded_bits: 1460,
+            delta_bits: 700,
+            count_bits: 300,
+            index_bits: 260,
+            header_bits: 200,
+        };
+        l.energy = EnergyBreakdown {
+            dram_uj: 0.1,
+            sram_uj: 1.0 / 3.0,
+            rf_uj: 2.5e-7,
+            alu_uj: 42.0,
+            xbar_uj: 0.0,
+        };
+        ModelResult {
+            arch: "CoDR".into(),
+            model: "tiny".into(),
+            group: "Orig".into(),
+            layers: vec![l.clone(), LayerResult { layer: "conv2".into(), ..l }],
+        }
+    }
+
+    #[test]
+    fn round_trip_is_identity() {
+        let r = sample_result();
+        let text = model_result_to_json(&r).to_string();
+        let back = model_result_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+        // And a second encode is byte-stable.
+        assert_eq!(model_result_to_json(&back).to_string(), text);
+    }
+
+    #[test]
+    fn missing_field_is_an_error_not_a_panic() {
+        let r = sample_result();
+        let text = model_result_to_json(&r).to_string();
+        let truncated = text.replace("\"cycles\"", "\"cycle_\"");
+        let j = Json::parse(&truncated).unwrap();
+        assert!(model_result_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn future_codec_version_is_rejected() {
+        let mut text = model_result_to_json(&sample_result()).to_string();
+        text = text.replacen("\"codec\":1", "\"codec\":999", 1);
+        let j = Json::parse(&text).unwrap();
+        assert!(model_result_from_json(&j).is_err());
+    }
+}

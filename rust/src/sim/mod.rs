@@ -2,6 +2,8 @@
 //! architecture models: per-layer results, per-model aggregation, and the
 //! `Accelerator` abstraction the coordinator fans out over.
 
+pub mod codec;
+
 use crate::arch::{CactiLite, MemConfig, MemoryStats, TileConfig};
 use crate::energy::{price_layer, AluStats, EnergyBreakdown};
 use crate::models::{LayerSpec, Workload};
@@ -9,7 +11,7 @@ use crate::rle::CompressionStats;
 use crate::tensor::Weights;
 
 /// Everything measured while simulating one conv layer on one design.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LayerResult {
     pub layer: String,
     pub mem: MemoryStats,
@@ -28,7 +30,7 @@ impl LayerResult {
 }
 
 /// Aggregate over a whole model.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ModelResult {
     pub arch: String,
     pub model: String,

@@ -1,7 +1,8 @@
 //! In-tree utilities that replace crates unavailable in the offline
 //! registry: deterministic RNG (`rand`), property testing (`proptest`),
-//! and a benchmark harness (`criterion`).
+//! a benchmark harness (`criterion`), and JSON (`serde_json`).
 
 pub mod bench;
 pub mod check;
+pub mod json;
 pub mod rng;

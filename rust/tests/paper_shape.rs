@@ -12,7 +12,7 @@ fn googlenet_original_group_reproduces_paper_shape() {
     let results = run_sweep(&[model.clone()], &groups, &Arch::all(), 42);
 
     // --- headline directions (abstract): CoDR wins on all three axes.
-    let h = headline(&results, &["googlenet"]);
+    let h = headline(&results, &["googlenet"]).expect("grid covers googlenet");
     assert!(h.compression_vs_ucnn > 1.0, "{h:?}");
     assert!(h.sram_vs_ucnn > 1.0 && h.sram_vs_scnn > 1.0, "{h:?}");
     assert!(h.energy_vs_ucnn > 1.0 && h.energy_vs_scnn > 1.0, "{h:?}");

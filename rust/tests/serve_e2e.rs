@@ -1,0 +1,178 @@
+//! End-to-end test of the sweep service: a real `codr serve` server on an
+//! ephemeral localhost port, driven through the line-delimited JSON
+//! protocol exactly as the `codr submit` / `codr warm` clients drive it.
+
+use codr::serve::{proto, Server};
+use codr::util::json::Json;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("codr-serve-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn obj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+fn ok(resp: &Json) -> bool {
+    matches!(resp.get("ok").and_then(|o| o.as_bool().ok()), Some(true))
+}
+
+#[test]
+fn serve_submit_status_result_warm_shutdown() {
+    let dir = temp_dir("full");
+    let server = Server::bind("127.0.0.1:0", &dir).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    // ping
+    let pong = proto::request(&addr, &obj(&[("verb", Json::str("ping"))])).unwrap();
+    assert!(ok(&pong), "{pong}");
+
+    // warm a tiny grid synchronously: 1 model × 1 group × 3 archs.
+    let warm_req = obj(&[
+        ("verb", Json::str("warm")),
+        ("models", Json::str("tiny")),
+        ("groups", Json::str("Orig")),
+        ("seed", Json::u64(5)),
+    ]);
+    let first = proto::request(&addr, &warm_req).unwrap();
+    assert!(ok(&first), "{first}");
+    let stats = first.get("stats").unwrap();
+    assert_eq!(stats.get("requested").unwrap().as_u64().unwrap(), 3);
+    assert_eq!(stats.get("computed").unwrap().as_u64().unwrap(), 3);
+    assert_eq!(stats.get("cache_hits").unwrap().as_u64().unwrap(), 0);
+
+    // Second warm of the same grid: all hits, zero simulated layers.
+    let second = proto::request(&addr, &warm_req).unwrap();
+    assert!(ok(&second), "{second}");
+    let stats = second.get("stats").unwrap();
+    assert_eq!(stats.get("cache_hits").unwrap().as_u64().unwrap(), 3);
+    assert_eq!(stats.get("computed").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(stats.get("simulated_layers").unwrap().as_u64().unwrap(), 0);
+
+    // result: a warmed point answers from the store.
+    let res = proto::request(
+        &addr,
+        &obj(&[
+            ("verb", Json::str("result")),
+            ("model", Json::str("tiny")),
+            ("group", Json::str("Orig")),
+            ("arch", Json::str("CoDR")),
+            ("seed", Json::u64(5)),
+        ]),
+    )
+    .unwrap();
+    assert!(ok(&res), "{res}");
+    assert!(res.get("cycles").unwrap().as_u64().unwrap() > 0);
+    assert!(res.get("energy_uj").unwrap().as_f64().unwrap() > 0.0);
+
+    // result for a point never warmed: clean protocol error.
+    let missing = proto::request(
+        &addr,
+        &obj(&[
+            ("verb", Json::str("result")),
+            ("model", Json::str("tiny")),
+            ("group", Json::str("D=25%")),
+            ("arch", Json::str("SCNN")),
+            ("seed", Json::u64(5)),
+        ]),
+    )
+    .unwrap();
+    assert!(!ok(&missing), "{missing}");
+    assert!(missing.get("error").unwrap().as_str().unwrap().contains("not in store"));
+
+    // submit: async job over a new group, polled to completion.
+    let submitted = proto::request(
+        &addr,
+        &obj(&[
+            ("verb", Json::str("submit")),
+            ("models", Json::str("tiny")),
+            ("groups", Json::str("D=50%")),
+            ("seed", Json::u64(5)),
+        ]),
+    )
+    .unwrap();
+    assert!(ok(&submitted), "{submitted}");
+    let job = submitted.get("job").unwrap().as_u64().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let final_stats = loop {
+        assert!(Instant::now() < deadline, "job {job} never finished");
+        let status = proto::request(
+            &addr,
+            &obj(&[("verb", Json::str("status")), ("job", Json::u64(job))]),
+        )
+        .unwrap();
+        assert!(ok(&status), "{status}");
+        match status.get("state").unwrap().as_str().unwrap() {
+            "running" => std::thread::sleep(Duration::from_millis(50)),
+            "done" => break status.get("stats").unwrap().clone(),
+            other => panic!("job entered state {other}: {status}"),
+        }
+    };
+    assert_eq!(final_stats.get("requested").unwrap().as_u64().unwrap(), 3);
+
+    // Unknown verbs and malformed grids answer, not crash.
+    let bad = proto::request(&addr, &obj(&[("verb", Json::str("frobnicate"))])).unwrap();
+    assert!(!ok(&bad));
+    let bad_model = proto::request(
+        &addr,
+        &obj(&[("verb", Json::str("warm")), ("models", Json::str("resnet"))]),
+    )
+    .unwrap();
+    assert!(!ok(&bad_model));
+    assert!(bad_model.get("error").unwrap().as_str().unwrap().contains("unknown model"));
+
+    // Server-wide status sees the job table and the populated store.
+    let status = proto::request(&addr, &obj(&[("verb", Json::str("status"))])).unwrap();
+    assert!(ok(&status), "{status}");
+    assert_eq!(status.get("jobs").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(status.get("store_entries").unwrap().as_u64().unwrap(), 6);
+
+    // shutdown stops the accept loop; run() returns cleanly.
+    let bye = proto::request(&addr, &obj(&[("verb", Json::str("shutdown"))])).unwrap();
+    assert!(ok(&bye), "{bye}");
+    handle.join().unwrap().unwrap();
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_clients_share_one_computation() {
+    let dir = temp_dir("concurrent");
+    let server = Server::bind("127.0.0.1:0", &dir).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    // Four clients warm the identical grid at once; the in-flight dedup
+    // must keep total computed points at exactly 3 (one per arch).
+    let mut clients = Vec::new();
+    for _ in 0..4 {
+        let addr = addr.clone();
+        clients.push(std::thread::spawn(move || {
+            let resp = proto::request(
+                &addr,
+                &obj(&[
+                    ("verb", Json::str("warm")),
+                    ("models", Json::str("tiny")),
+                    ("groups", Json::str("Orig")),
+                    ("seed", Json::u64(9)),
+                ]),
+            )
+            .unwrap();
+            assert!(ok(&resp), "{resp}");
+            let stats = resp.get("stats").unwrap();
+            stats.get("computed").unwrap().as_u64().unwrap()
+        }));
+    }
+    let total: u64 = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    assert_eq!(total, 3, "each point must be simulated exactly once");
+
+    let bye = proto::request(&addr, &obj(&[("verb", Json::str("shutdown"))])).unwrap();
+    assert!(ok(&bye));
+    handle.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
