@@ -1,0 +1,28 @@
+//! End-to-end hot-path benchmark: the seed (reference) simulation
+//! pipeline versus the memoized, emission-free one, over the full
+//! (model × group × arch × layer) grid.
+//!
+//! Thin wrapper over the `codr bench` subcommand so `cargo bench --bench
+//! hotpath` and the CLI produce the same `BENCH_hotpath.json`:
+//!
+//! ```text
+//! cargo bench --bench hotpath -- --quick --out /tmp/hotpath.json
+//! ```
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match codr::cli::Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    match codr::cli::commands::bench(&args) {
+        Ok(summary) => println!("{summary}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -49,7 +49,6 @@ impl Default for Scnn {
 /// encoded stream (for round-trip tests) and its stats.
 pub fn compress_weights(weights: &[i8]) -> (BitWriter, CompressionStats) {
     let mut out = BitWriter::new();
-    let mut entries = 0usize;
     let mut run = 0u32;
     for &w in weights {
         if w == 0 {
@@ -58,25 +57,58 @@ pub fn compress_weights(weights: &[i8]) -> (BitWriter, CompressionStats) {
                 // Overflow: explicit zero weight with run 15.
                 out.push(15, SCNN_RUN_BITS);
                 out.push(0, 8);
-                entries += 1;
                 run = 0;
             }
         } else {
             out.push(run, SCNN_RUN_BITS);
             out.push(w as u8 as u32, 8);
-            entries += 1;
             run = 0;
         }
     }
-    let stats = CompressionStats {
-        num_weights: weights.len(),
-        encoded_bits: out.len(),
+    let stats = compression_stats(weights);
+    debug_assert_eq!(out.len(), stats.encoded_bits);
+    (out, stats)
+}
+
+/// One pass over the raw weights counting stream entries and non-zeros —
+/// the whole compression model without touching a [`BitWriter`] (each
+/// entry is a fixed 12 bits).
+fn scan(weights: &[i8]) -> (usize, u64) {
+    let mut entries = 0usize;
+    let mut nnz = 0u64;
+    let mut run = 0u32;
+    for &w in weights {
+        if w == 0 {
+            run += 1;
+            if run > 15 {
+                entries += 1; // explicit zero weight with run 15
+                run = 0;
+            }
+        } else {
+            entries += 1;
+            nnz += 1;
+            run = 0;
+        }
+    }
+    (entries, nnz)
+}
+
+/// The fixed 12-bits-per-entry size model, shared by every stats path.
+fn stats_from_entries(entries: usize, num_weights: usize) -> CompressionStats {
+    CompressionStats {
+        num_weights,
+        encoded_bits: entries * 12,
         delta_bits: entries * 8,
         count_bits: entries * SCNN_RUN_BITS as usize,
         index_bits: 0,
         header_bits: 0,
-    };
-    (out, stats)
+    }
+}
+
+/// [`compress_weights`]'s stats, computed arithmetically (no emission).
+pub fn compression_stats(weights: &[i8]) -> CompressionStats {
+    let (entries, _) = scan(weights);
+    stats_from_entries(entries, weights.len())
 }
 
 /// Decode an SCNN stream back to a dense weight vector of length `len`.
@@ -98,6 +130,15 @@ pub fn decompress_weights(stream: &BitWriter, len: usize) -> Vec<i8> {
     out
 }
 
+/// The seed implementation — emits the stream via [`compress_weights`]
+/// and recounts non-zeros. Oracle for the `invariance` tests and the
+/// `codr bench` baseline.
+pub fn simulate_layer_reference(design: &Scnn, spec: &LayerSpec, weights: &Weights) -> LayerResult {
+    let (_, compression) = compress_weights(weights.data());
+    let nnz = weights.data().iter().filter(|&&x| x != 0).count() as u64;
+    layer_result(design, spec, compression, nnz)
+}
+
 impl Accelerator for Scnn {
     fn name(&self) -> &'static str {
         "SCNN"
@@ -107,72 +148,82 @@ impl Accelerator for Scnn {
         self.cfg
     }
 
+    /// Hot path: one allocation-free pass over the raw weights yields
+    /// both the compression stats and the non-zero count.
     fn simulate_layer(&self, spec: &LayerSpec, weights: &Weights) -> LayerResult {
-        let cfg = &self.cfg;
-        let (_, compression) = compress_weights(weights.data());
-        let nnz = weights.data().iter().filter(|&&x| x != 0).count() as u64;
-
-        let mut res = LayerResult {
-            layer: spec.name.clone(),
-            compression,
-            ..Default::default()
-        };
-        let mem = &mut res.mem;
-        let alu = &mut res.alu;
-        alu.delta_bits = 8;
-        alu.xbar_bits = 16;
-
-        let out_positions = (spec.r_o() * spec.r_o()) as u64;
-        let passes = spec.m.div_ceil(cfg.t_m) as u64; // output-channel pairs
-
-        // --- Weights stream once over the layer (multicast to all PUs):
-        // each (run, weight) entry is one 12-bit access.
-        let entries = res.compression.encoded_bits as u64 / 12;
-        mem.record(MemoryKind::WeightSram, entries, 12);
-        mem.record(MemoryKind::WeightRf, entries, 12);
-
-        // --- Inputs: stationary across one pass, re-read per pass. The
-        // 21 PUs tile the feature map spatially with only a 1×1 local
-        // tile, so each pass also pays the inter-PU halo exchange and
-        // multicast overhead (§V-C puts SCNN's input traffic at ≈21× CoDR).
-        const HALO_MULTICAST: f64 = 1.6;
-        let input_reads =
-            (spec.input_features() as f64 * passes as f64 * HALO_MULTICAST) as u64;
-        mem.record(MemoryKind::InputSram, input_reads, 8);
-        mem.record(MemoryKind::InputRf, input_reads, 8);
-
-        // --- Cartesian product: every non-zero weight multiplies every
-        // output position it overlaps (dense activations).
-        let mults = nnz * out_positions;
-        alu.mults_full += mults;
-        alu.adds += mults;
-        mem.record(MemoryKind::InputRf, mults, 8); // F operand reads
-        // Every partial product crosses the scatter crossbar and pays a
-        // read-modify-write on its accumulator bank.
-        alu.xbar_transfers += mults;
-        mem.record(MemoryKind::OutputRf, 2 * mults, 24);
-
-        // --- Accumulator banks spill to output SRAM every `accum_depth`
-        // input channels (read-modify-write), and the final pass writes.
-        let spills = (spec.n as u64).div_ceil(self.accum_depth as u64);
-        mem.record(
-            MemoryKind::OutputSram,
-            2 * spec.output_features() as u64 * spills,
-            16,
-        );
-
-        // --- DRAM once.
-        mem.record(MemoryKind::Dram, 1, res.compression.encoded_bits as u64);
-        mem.record(MemoryKind::Dram, 1, spec.input_features() as u64 * 8);
-        mem.record(MemoryKind::Dram, 1, spec.output_features() as u64 * 8);
-
-        // --- Cycles: multiplies spread over the PU array, plus crossbar
-        // serialization when partials collide on a bank (model: 1.2×).
-        let lanes = (cfg.t_pu * cfg.mults_per_pu) as u64;
-        res.cycles = mults * 12 / (lanes * 10) + 1;
-
-        res.finish(&self.cacti, &self.mem)
+        let (entries, nnz) = scan(weights.data());
+        let compression = stats_from_entries(entries, weights.data().len());
+        layer_result(self, spec, compression, nnz)
     }
+}
+
+/// Traffic/datapath accounting shared by the hot path and the oracle.
+fn layer_result(
+    design: &Scnn,
+    spec: &LayerSpec,
+    compression: CompressionStats,
+    nnz: u64,
+) -> LayerResult {
+    let cfg = &design.cfg;
+    let mut res = LayerResult {
+        layer: spec.name.clone(),
+        compression,
+        ..Default::default()
+    };
+    let mem = &mut res.mem;
+    let alu = &mut res.alu;
+    alu.delta_bits = 8;
+    alu.xbar_bits = 16;
+
+    let out_positions = (spec.r_o() * spec.r_o()) as u64;
+    let passes = spec.m.div_ceil(cfg.t_m) as u64; // output-channel pairs
+
+    // --- Weights stream once over the layer (multicast to all PUs):
+    // each (run, weight) entry is one 12-bit access.
+    let entries = res.compression.encoded_bits as u64 / 12;
+    mem.record(MemoryKind::WeightSram, entries, 12);
+    mem.record(MemoryKind::WeightRf, entries, 12);
+
+    // --- Inputs: stationary across one pass, re-read per pass. The
+    // 21 PUs tile the feature map spatially with only a 1×1 local
+    // tile, so each pass also pays the inter-PU halo exchange and
+    // multicast overhead (§V-C puts SCNN's input traffic at ≈21× CoDR).
+    const HALO_MULTICAST: f64 = 1.6;
+    let input_reads = (spec.input_features() as f64 * passes as f64 * HALO_MULTICAST) as u64;
+    mem.record(MemoryKind::InputSram, input_reads, 8);
+    mem.record(MemoryKind::InputRf, input_reads, 8);
+
+    // --- Cartesian product: every non-zero weight multiplies every
+    // output position it overlaps (dense activations).
+    let mults = nnz * out_positions;
+    alu.mults_full += mults;
+    alu.adds += mults;
+    mem.record(MemoryKind::InputRf, mults, 8); // F operand reads
+    // Every partial product crosses the scatter crossbar and pays a
+    // read-modify-write on its accumulator bank.
+    alu.xbar_transfers += mults;
+    mem.record(MemoryKind::OutputRf, 2 * mults, 24);
+
+    // --- Accumulator banks spill to output SRAM every `accum_depth`
+    // input channels (read-modify-write), and the final pass writes.
+    let spills = (spec.n as u64).div_ceil(design.accum_depth as u64);
+    mem.record(
+        MemoryKind::OutputSram,
+        2 * spec.output_features() as u64 * spills,
+        16,
+    );
+
+    // --- DRAM once.
+    mem.record(MemoryKind::Dram, 1, res.compression.encoded_bits as u64);
+    mem.record(MemoryKind::Dram, 1, spec.input_features() as u64 * 8);
+    mem.record(MemoryKind::Dram, 1, spec.output_features() as u64 * 8);
+
+    // --- Cycles: multiplies spread over the PU array, plus crossbar
+    // serialization when partials collide on a bank (model: 1.2×).
+    let lanes = (cfg.t_pu * cfg.mults_per_pu) as u64;
+    res.cycles = mults * 12 / (lanes * 10) + 1;
+
+    res.finish(&design.cacti, &design.mem)
 }
 
 #[cfg(test)]
@@ -240,6 +291,27 @@ mod tests {
                 let (s, _) = compress_weights(v);
                 decompress_weights(&s, v.len()) == *v
             },
+        );
+    }
+
+    #[test]
+    fn arithmetic_stats_match_emitted_stream() {
+        let s = spec(16, 16, 14, 3, 0.6);
+        let mut rng = Rng::new(12);
+        let w = synthesize_weights(&s, &mut rng);
+        let (_, emitted) = compress_weights(w.data());
+        assert_eq!(compression_stats(w.data()), emitted);
+    }
+
+    #[test]
+    fn hot_path_equals_reference_bit_for_bit() {
+        let s = spec(11, 13, 14, 3, 0.7);
+        let mut rng = Rng::new(13);
+        let w = synthesize_weights(&s, &mut rng);
+        let design = Scnn::default();
+        assert_eq!(
+            design.simulate_layer(&s, &w),
+            simulate_layer_reference(&design, &s, &w)
         );
     }
 

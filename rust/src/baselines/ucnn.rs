@@ -18,9 +18,9 @@
 
 use crate::arch::{CactiLite, MemConfig, MemoryKind, TileConfig};
 use crate::models::LayerSpec;
-use crate::reuse::UcrVector;
+use crate::reuse::{memo, UcrVector};
 use crate::rle::bitstream::BitWriter;
-use crate::rle::{CoderSpec, CompressionStats};
+use crate::rle::{CoderSpec, CompressionStats, VectorSizeStats};
 use crate::sim::{Accelerator, LayerResult};
 use crate::tensor::Weights;
 
@@ -92,10 +92,9 @@ fn encode_vector(u: &UcrVector, spec: CoderSpec, deltas: &mut BitWriter, indexes
     // 1-bit group-transition indicator UCNN appends to every index.
     let mut prev: i64 = -1;
     let mut first = true;
-    for (gi, group) in u.indexes.iter().enumerate() {
+    for group in u.index_groups() {
         for (ii, &idx) in group.iter().enumerate() {
             let last_of_group = ii + 1 == group.len();
-            let _ = gi;
             let d = idx as i64 - prev;
             if !first && d > 0 && d <= (1 << UCNN_RLE_BITS) {
                 indexes.push_bit(true);
@@ -144,6 +143,139 @@ pub fn compress_vectors(
     }
 }
 
+/// Per-vector encoded size (Δ-stream bits, index-stream bits) computed
+/// arithmetically from the cached [`VectorSizeStats`] — bit-identical to
+/// what [`encode_vector`] emits (asserted by the
+/// `arithmetic_sizes_match_emitted_streams` test), so the hot path never
+/// touches a [`BitWriter`].
+pub fn vector_stream_bits(s: &VectorSizeStats, n_uniques: usize, spec: CoderSpec) -> (u64, u64) {
+    let k = UCNN_RLE_BITS as u64;
+    let mut delta_bits = 0u64;
+    if n_uniques > 0 {
+        delta_bits += 1 + 8; // absolute vector-first weight
+    }
+    for &d in &s.deltas {
+        delta_bits += if (d as u64) < (1 << k) { 1 + k } else { 1 + 8 };
+    }
+    let abs = spec.abs_bits() as u64;
+    let mut n_abs = s.n_idx_abs;
+    let mut index_bits = 0u64;
+    for &(d, n) in &s.idx_deltas {
+        if (d as u64) <= (1 << k) {
+            index_bits += n as u64 * (1 + k);
+        } else {
+            n_abs += n as u64;
+        }
+    }
+    index_bits += n_abs * (1 + abs);
+    index_bits += s.n_indexes; // 1-bit group-transition indicator per index
+    (delta_bits, index_bits)
+}
+
+/// The datapath/traffic accounting shared by the memoized hot path and
+/// the reference oracle — everything after the per-vector totals
+/// (`total_uniques`, `total_nnz`) and compression stats are known.
+fn layer_result(
+    design: &Ucnn,
+    spec: &LayerSpec,
+    compression: CompressionStats,
+    total_uniques: u64,
+    total_nnz: u64,
+) -> LayerResult {
+    let cfg = &design.cfg;
+    let mut res = LayerResult {
+        layer: spec.name.clone(),
+        compression,
+        ..Default::default()
+    };
+    let r_o = spec.r_o() as u64;
+    let c_o = spec.r_o() as u64;
+    let n_tiles_n = spec.n.div_ceil(cfg.t_n) as u64;
+    let strips = r_o * c_o.div_ceil(cfg.t_co as u64); // 1×8 output strips
+    let mem = &mut res.mem;
+    let alu = &mut res.alu;
+    alu.delta_bits = 8; // UCNN multiplies full-precision weights
+    alu.xbar_bits = 16;
+
+    // --- Weight traffic: the compressed stream is re-read once per
+    // output row (strip row) — weight reuse across the row's strips.
+    // Accesses counted per decoded element (unique Δs + indexes),
+    // energy word-amortized over the stream bits, same convention as
+    // CoDR so Fig 7 compares like with like.
+    let elements = total_uniques + total_nnz;
+    let weight_bits = res.compression.encoded_bits as u64 * r_o;
+    mem.record(MemoryKind::WeightSram, elements * r_o, 0);
+    mem.counter_mut(MemoryKind::WeightSram).bits += weight_bits;
+    mem.record(
+        MemoryKind::WeightRf,
+        weight_bits.div_ceil(design.mem.sram_word_bits as u64),
+        design.mem.sram_word_bits as u64,
+    );
+
+    // --- Input traffic: for every (output channel, strip, n-tile) the
+    // 12-entry line buffer is filled with the strip's input columns;
+    // a row is fetched once per strip (the line buffer feeds all R_K
+    // kernel rows) and vertically adjacent strips retain the shared
+    // (C_K−1)-column overlap (VERTICAL_REUSE, calibrated so UCNN's
+    // input traffic lands at the paper's ≈20.4× CoDR on GoogleNet).
+    // Nothing is reused across output channels (T_M = 1).
+    const VERTICAL_REUSE: f64 = 1.56;
+    let cols_needed = ((cfg.t_co - 1) * spec.stride + spec.r_k) as u64;
+    let input_reads_per_strip = cfg.t_n as u64 * cols_needed;
+    let input_reads = (spec.m as u64 * strips * n_tiles_n * input_reads_per_strip) as f64
+        / cfg.t_m as f64
+        / VERTICAL_REUSE;
+    let input_reads = input_reads as u64;
+    mem.record(MemoryKind::InputSram, input_reads, 8);
+    mem.record(MemoryKind::InputRf, input_reads, 8); // buffer fills
+
+    // --- Output traffic: partial sums are read-modified-written per
+    // input-channel tile (not output stationary).
+    let out_accesses = 2 * spec.output_features() as u64 * n_tiles_n;
+    mem.record(MemoryKind::OutputSram, out_accesses, 16);
+
+    // --- DRAM: compressed weights + features once.
+    mem.record(MemoryKind::Dram, 1, res.compression.encoded_bits as u64);
+    mem.record(MemoryKind::Dram, 1, spec.input_features() as u64 * 8);
+    mem.record(MemoryKind::Dram, 1, spec.output_features() as u64 * 8);
+
+    // --- Datapath: per output position and vector, gather-sum each
+    // activation group (adds = nnz) then multiply once per unique.
+    // Vectors span all (m-tile, n-tile) pairs; each runs once per output
+    // position of its channel.
+    let positions = r_o * c_o;
+    let per_pos_mults = total_uniques;
+    let per_pos_adds = total_nnz + total_uniques;
+    alu.mults_full += per_pos_mults * positions;
+    alu.adds += per_pos_adds * positions;
+    // Input buffer read per gathered activation.
+    mem.record(MemoryKind::InputRf, total_nnz * positions, 8);
+    // Output mux/small crossbar per multiply result.
+    alu.xbar_transfers += per_pos_mults * positions;
+
+    // --- Cycles: total gather+multiply work spread over T_PU PUs with
+    // `mults_per_pu` parallel lanes.
+    let work = (per_pos_mults + per_pos_adds) * positions;
+    res.cycles = work / (cfg.t_pu as u64 * cfg.mults_per_pu as u64).max(1) + 1;
+
+    res.finish(&design.cacti, &design.mem)
+}
+
+/// The seed implementation — builds every vector afresh and emits the
+/// real bitstreams. Oracle for the `invariance` tests and the
+/// `codr bench` baseline.
+pub fn simulate_layer_reference(design: &Ucnn, spec: &LayerSpec, weights: &Weights) -> LayerResult {
+    let vectors = ucnn_vectors(spec, weights, &design.cfg);
+    let compression = compress_vectors(spec, &vectors, &design.cfg);
+    let mut total_uniques = 0u64;
+    let mut total_nnz = 0u64;
+    for u in &vectors {
+        total_uniques += u.uniques.len() as u64;
+        total_nnz += u.nnz() as u64;
+    }
+    layer_result(design, spec, compression, total_uniques, total_nnz)
+}
+
 impl Accelerator for Ucnn {
     fn name(&self) -> &'static str {
         "UCNN"
@@ -153,96 +285,54 @@ impl Accelerator for Ucnn {
         self.cfg
     }
 
+    /// Memoized hot path: per-tile vectors come from the global
+    /// [`memo`] and their encoded sizes from the cached per-vector
+    /// summaries — no `BitWriter`, no per-vector allocation.
     fn simulate_layer(&self, spec: &LayerSpec, weights: &Weights) -> LayerResult {
         let cfg = &self.cfg;
-        let vectors = ucnn_vectors(spec, weights, cfg);
-        let compression = compress_vectors(spec, &vectors, cfg);
-
-        let mut res = LayerResult {
-            layer: spec.name.clone(),
-            compression,
-            ..Default::default()
-        };
-        let r_o = spec.r_o() as u64;
-        let c_o = spec.r_o() as u64;
-        let n_tiles_n = spec.n.div_ceil(cfg.t_n) as u64;
-        let strips = r_o * c_o.div_ceil(cfg.t_co as u64); // 1×8 output strips
-        let mem = &mut res.mem;
-        let alu = &mut res.alu;
-        alu.delta_bits = 8; // UCNN multiplies full-precision weights
-        alu.xbar_bits = 16;
-
-        // --- Weight traffic: the compressed stream is re-read once per
-        // output row (strip row) — weight reuse across the row's strips.
-        // Accesses counted per decoded element (unique Δs + indexes),
-        // energy word-amortized over the stream bits, same convention as
-        // CoDR so Fig 7 compares like with like.
-        let mut elements = 0u64;
-        for u in &vectors {
-            elements += (u.uniques.len() + u.nnz()) as u64;
-        }
-        let weight_bits = res.compression.encoded_bits as u64 * r_o;
-        mem.record(MemoryKind::WeightSram, elements * r_o, 0);
-        mem.counter_mut(MemoryKind::WeightSram).bits += weight_bits;
-        mem.record(
-            MemoryKind::WeightRf,
-            weight_bits.div_ceil(self.mem.sram_word_bits as u64),
-            self.mem.sram_word_bits as u64,
-        );
-
-        // --- Input traffic: for every (output channel, strip, n-tile) the
-        // 12-entry line buffer is filled with the strip's input columns;
-        // a row is fetched once per strip (the line buffer feeds all R_K
-        // kernel rows) and vertically adjacent strips retain the shared
-        // (C_K−1)-column overlap (VERTICAL_REUSE, calibrated so UCNN's
-        // input traffic lands at the paper's ≈20.4× CoDR on GoogleNet).
-        // Nothing is reused across output channels (T_M = 1).
-        const VERTICAL_REUSE: f64 = 1.56;
-        let cols_needed = ((cfg.t_co - 1) * spec.stride + spec.r_k) as u64;
-        let input_reads_per_strip = cfg.t_n as u64 * cols_needed;
-        let input_reads = (spec.m as u64 * strips * n_tiles_n * input_reads_per_strip) as f64
-            / cfg.t_m as f64
-            / VERTICAL_REUSE;
-        let input_reads = input_reads as u64;
-        mem.record(MemoryKind::InputSram, input_reads, 8);
-        mem.record(MemoryKind::InputRf, input_reads, 8); // buffer fills
-
-        // --- Output traffic: partial sums are read-modified-written per
-        // input-channel tile (not output stationary).
-        let out_accesses = 2 * spec.output_features() as u64 * n_tiles_n;
-        mem.record(MemoryKind::OutputSram, out_accesses, 16);
-
-        // --- DRAM: compressed weights + features once.
-        mem.record(MemoryKind::Dram, 1, res.compression.encoded_bits as u64);
-        mem.record(MemoryKind::Dram, 1, spec.input_features() as u64 * 8);
-        mem.record(MemoryKind::Dram, 1, spec.output_features() as u64 * 8);
-
-        // --- Datapath: per output position and vector, gather-sum each
-        // activation group (adds = nnz) then multiply once per unique.
-        let positions = r_o * c_o;
+        let kernel = spec.r_k * spec.r_k;
+        let coder = CoderSpec::new(cfg.t_m * cfg.t_n * kernel);
+        let cache = memo::global();
+        let data = weights.data();
+        let mut scratch: Vec<i8> = Vec::with_capacity(cfg.t_m * cfg.t_n * kernel);
+        let mut delta_bits = 0u64;
+        let mut index_bits = 0u64;
+        let mut n_vectors = 0usize;
         let mut total_uniques = 0u64;
         let mut total_nnz = 0u64;
-        for u in &vectors {
-            total_uniques += u.uniques.len() as u64;
-            total_nnz += u.nnz() as u64;
+        for m0 in (0..spec.m).step_by(cfg.t_m) {
+            let tm = cfg.t_m.min(spec.m - m0);
+            for n0 in (0..spec.n).step_by(cfg.t_n) {
+                let tn = cfg.t_n.min(spec.n - n0);
+                scratch.clear();
+                // Same linearization as ucnn_vectors: T_N input channels'
+                // kernels concatenated, inner loop over output channels.
+                for n in n0..n0 + tn {
+                    for m in m0..m0 + tm {
+                        let off = (m * spec.n + n) * kernel;
+                        scratch.extend_from_slice(&data[off..off + kernel]);
+                    }
+                }
+                let entry = cache.get_or_insert(&scratch);
+                let (db, ib) =
+                    vector_stream_bits(&entry.size, entry.ucr.uniques.len(), coder);
+                delta_bits += db;
+                index_bits += ib;
+                n_vectors += 1;
+                total_uniques += entry.ucr.uniques.len() as u64;
+                total_nnz += entry.ucr.nnz() as u64;
+            }
         }
-        // Vectors already span all (m-tile, n-tile) pairs; each runs once
-        // per output position of its channel.
-        let per_pos_mults = total_uniques;
-        let per_pos_adds = total_nnz + total_uniques;
-        alu.mults_full += per_pos_mults * positions;
-        alu.adds += per_pos_adds * positions;
-        // Input buffer read per gathered activation.
-        mem.record(MemoryKind::InputRf, total_nnz * positions, 8);
-        // Output mux/small crossbar per multiply result.
-        alu.xbar_transfers += per_pos_mults * positions;
-
-        // --- Cycles: total gather+multiply work spread over T_PU PUs with
-        // `mults_per_pu` parallel lanes.
-        let work = (per_pos_mults + per_pos_adds) * positions;
-        res.cycles = work / (cfg.t_pu as u64 * cfg.mults_per_pu as u64).max(1) + 1;
-
-        res.finish(&self.cacti, &self.mem)
+        let header_bits = n_vectors * coder.len_bits() as usize;
+        let compression = CompressionStats {
+            num_weights: spec.num_weights(),
+            encoded_bits: delta_bits as usize + index_bits as usize + header_bits,
+            delta_bits: delta_bits as usize,
+            count_bits: 0,
+            index_bits: index_bits as usize,
+            header_bits,
+        };
+        layer_result(self, spec, compression, total_uniques, total_nnz)
     }
 }
 
@@ -332,6 +422,48 @@ mod tests {
         crate::quant::limit_unique_weights(w_lim.data_mut(), 8);
         let u = Ucnn::default();
         assert!(u.simulate_layer(&s, &w_lim).alu.mults() < u.simulate_layer(&s, &w).alu.mults());
+    }
+
+    #[test]
+    fn arithmetic_sizes_match_emitted_streams() {
+        // The memo fast path prices every vector without a BitWriter;
+        // per-vector arithmetic must equal emission bit for bit.
+        let s = spec(13, 11, 12, 3, 0.5);
+        let mut rng = Rng::new(7);
+        let w = synthesize_weights(&s, &mut rng);
+        let cfg = TileConfig::ucnn();
+        let vectors = ucnn_vectors(&s, &w, &cfg);
+        let coder = CoderSpec::new(cfg.t_m * cfg.t_n * s.r_k * s.r_k);
+        let emitted = compress_vectors(&s, &vectors, &cfg);
+        let mut delta_bits = 0u64;
+        let mut index_bits = 0u64;
+        for u in &vectors {
+            let (db, ib) = vector_stream_bits(
+                &crate::rle::VectorSizeStats::collect(u),
+                u.uniques.len(),
+                coder,
+            );
+            delta_bits += db;
+            index_bits += ib;
+        }
+        assert_eq!(delta_bits as usize, emitted.delta_bits);
+        assert_eq!(index_bits as usize, emitted.index_bits);
+    }
+
+    #[test]
+    fn memoized_path_equals_reference_bit_for_bit() {
+        for (s, seed) in [
+            (spec(13, 11, 12, 3, 0.5), 8u64), // clipped edge tiles
+            (spec(8, 6, 10, 3, 0.4), 9),
+            (spec(3, 8, 23, 11, 0.6), 10), // big kernel
+        ] {
+            let mut rng = Rng::new(seed);
+            let w = synthesize_weights(&s, &mut rng);
+            let design = Ucnn::default();
+            let oracle = simulate_layer_reference(&design, &s, &w);
+            assert_eq!(design.simulate_layer(&s, &w), oracle, "seed {seed}");
+            assert_eq!(design.simulate_layer(&s, &w), oracle, "warm, seed {seed}");
+        }
     }
 
     #[test]

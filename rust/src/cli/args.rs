@@ -10,7 +10,7 @@ pub struct Args {
     switches: Vec<String>,
 }
 
-const SWITCHES: &[&str] = &["save", "functional", "verbose", "fresh", "wait"];
+const SWITCHES: &[&str] = &["save", "functional", "verbose", "fresh", "wait", "quick"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {

@@ -23,11 +23,8 @@ fn figure_sweep(args: &Args, models: &[crate::models::Model]) -> Result<SweepRes
         Ok(store) => {
             let results = run_sweep_with(models, &groups, &Arch::all(), seed, Some(&store));
             eprintln!(
-                "sweep: {} points — {} cache hits, {} computed, {} corrupt (store: {})",
-                results.stats.requested,
-                results.stats.cache_hits,
-                results.stats.computed,
-                results.stats.corrupt,
+                "sweep: {} (store: {})",
+                render_stats(&results.stats),
                 store.dir().display()
             );
             Ok(results)
@@ -324,14 +321,21 @@ fn expect_ok(resp: &Json) -> Result<()> {
 }
 
 fn render_stats(stats: &SweepStats) -> String {
+    let memo = match stats.memo_hit_rate() {
+        Some(rate) => format!("{:.0}% memo hits", rate * 100.0),
+        None => "no memo lookups".to_string(),
+    };
     format!(
-        "{} points — {} cache hits, {} computed, {} deduped, {} corrupt, {} layers simulated",
+        "{} points — {} cache hits, {} computed, {} deduped, {} corrupt, \
+         {} layers simulated, {} ({} ms)",
         stats.requested,
         stats.cache_hits,
         stats.computed,
         stats.deduped,
         stats.corrupt,
-        stats.simulated_layers
+        stats.simulated_layers,
+        memo,
+        stats.wall_ms
     )
 }
 
@@ -404,6 +408,261 @@ pub fn warm(args: &Args) -> Result<String> {
         "warm ({}): {}",
         store.dir().display(),
         render_stats(&results.stats)
+    ))
+}
+
+/// `codr bench` — time the simulation hot path on the model zoo and
+/// write a machine-readable snapshot (`BENCH_hotpath.json` by default;
+/// `--out` overrides, `--quick` shrinks the grid for CI smoke runs).
+///
+/// Three passes over the same per-layer task list establish the perf
+/// trajectory:
+///
+/// 1. **reference** — the seed pipeline (full transform + bitstream
+///    emission per layer), the pre-optimization baseline;
+/// 2. **optimized cold** — the memoized hot path with a flushed vector
+///    memo (what a fresh process pays);
+/// 3. **optimized warm** — the same grid again with the memo populated
+///    (what a long-running `codr serve` pays).
+///
+/// All passes fan out per (arch, layer) over the worker pool, so the
+/// comparison isolates the hot-path rework from the scheduling rework.
+pub fn bench(args: &Args) -> Result<String> {
+    use crate::baselines::{scnn, ucnn, Scnn, Ucnn};
+    use crate::codr::{dataflow, Codr};
+    use crate::coordinator::pool;
+    use crate::models::SweepGroup;
+    use crate::reuse::memo;
+    use crate::sim::Accelerator;
+    use crate::util::bench::Bencher;
+    use std::time::{Duration, Instant};
+
+    let quick = args.flag("quick");
+    let models = if quick && args.get("models").is_none() {
+        vec![crate::models::tiny_cnn()]
+    } else {
+        args.models()?
+    };
+    let groups = if quick && args.get("groups").is_none() {
+        vec![SweepGroup::Original, SweepGroup::Density(50)]
+    } else {
+        args.groups()?
+    };
+    let seed = args.seed()?;
+    let archs = Arch::all();
+
+    // Workload synthesis is excluded from every timing — the hot path
+    // under test is the simulation, not the weight synthesis.
+    let mut points = Vec::new();
+    for model in &models {
+        for &group in &groups {
+            points.push((model.clone(), group));
+        }
+    }
+    let workloads: Vec<Workload> = pool::parallel_map(&points, |(model, group)| {
+        let (unique, density) = group.knobs();
+        Workload::generate(model, unique, density, seed)
+    });
+    let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
+    for (pi, wl) in workloads.iter().enumerate() {
+        let n_layers = wl.conv_layers().count();
+        for ai in 0..archs.len() {
+            for li in 0..n_layers {
+                tasks.push((pi, ai, li));
+            }
+        }
+    }
+    let n_layer_sims = tasks.len();
+    let layers_per_sec = |ms: u64| {
+        if ms == 0 {
+            n_layer_sims as f64 * 1000.0
+        } else {
+            n_layer_sims as f64 * 1000.0 / ms as f64
+        }
+    };
+
+    // Pass 1: the seed pipeline.
+    let t_ref = Instant::now();
+    let reference_cycles: u64 = pool::parallel_map(&tasks, |&(pi, ai, li)| {
+        let (spec, w) = workloads[pi].conv_layers().nth(li).expect("bench layer");
+        match archs[ai] {
+            Arch::Codr => dataflow::simulate_layer_reference(&Codr::default(), spec, w),
+            Arch::Ucnn => ucnn::simulate_layer_reference(&Ucnn::default(), spec, w),
+            Arch::Scnn => scnn::simulate_layer_reference(&Scnn::default(), spec, w),
+        }
+        .cycles
+    })
+    .iter()
+    .sum();
+    let ref_ms = t_ref.elapsed().as_millis() as u64;
+
+    let optimized_pass = || -> (u64, u64, u64, u64) {
+        let (h0, m0) = memo::global().counters();
+        let t = Instant::now();
+        let cycles: u64 = pool::parallel_map(&tasks, |&(pi, ai, li)| {
+            let acc = archs[ai].build();
+            let (spec, w) = workloads[pi].conv_layers().nth(li).expect("bench layer");
+            acc.simulate_layer(spec, w).cycles
+        })
+        .iter()
+        .sum();
+        let ms = t.elapsed().as_millis() as u64;
+        let (h1, m1) = memo::global().counters();
+        (ms, cycles, h1 - h0, m1 - m0)
+    };
+
+    // Pass 2: optimized, memo cold. Pass 3: optimized, memo warm.
+    memo::global().flush();
+    let (cold_ms, cold_cycles, cold_hits, cold_misses) = optimized_pass();
+    let (warm_ms, warm_cycles, warm_hits, warm_misses) = optimized_pass();
+    if cold_cycles != reference_cycles || warm_cycles != reference_cycles {
+        bail!(
+            "hot path diverged from reference (cycles {cold_cycles}/{warm_cycles} \
+             vs {reference_cycles}) — run the invariance tests"
+        );
+    }
+
+    // Micro benches on the largest conv layer of the first workload.
+    let mut b = Bencher::with(3, 15, Duration::from_secs(2), 1);
+    let mut micro = Vec::new();
+    if let Some((spec, w)) = workloads
+        .first()
+        .and_then(|wl| wl.conv_layers().max_by_key(|(s, _)| s.num_weights()))
+    {
+        let design = Codr::default();
+        let s1 = b
+            .bench(&format!("codr_layer_reference/{}", spec.name), || {
+                dataflow::simulate_layer_reference(&design, spec, w).cycles
+            })
+            .clone();
+        let s2 = b
+            .bench(&format!("codr_layer_memoized/{}", spec.name), || {
+                dataflow::simulate_layer(&design, spec, w).cycles
+            })
+            .clone();
+        micro.push(s1);
+        micro.push(s2);
+    }
+
+    let pass_json = |ms: u64, hits: u64, misses: u64| {
+        let total = hits + misses;
+        let rate = if total == 0 {
+            Json::Null
+        } else {
+            Json::f64(hits as f64 / total as f64)
+        };
+        Json::Obj(vec![
+            ("wall_ms".into(), Json::u64(ms)),
+            ("layers_per_sec".into(), Json::f64(layers_per_sec(ms))),
+            ("memo_hits".into(), Json::u64(hits)),
+            ("memo_misses".into(), Json::u64(misses)),
+            ("memo_hit_rate".into(), rate),
+        ])
+    };
+    let ratio = |num: u64, den: u64| {
+        if den == 0 {
+            Json::Null
+        } else {
+            Json::f64(num as f64 / den as f64)
+        }
+    };
+    let json = Json::Obj(vec![
+        ("bench".into(), Json::str("hotpath")),
+        ("version".into(), Json::u64(1)),
+        (
+            "note".into(),
+            Json::str(
+                "machine-dependent snapshot from `codr bench` — regenerate \
+                 locally for comparable numbers",
+            ),
+        ),
+        (
+            "grid".into(),
+            Json::Obj(vec![
+                (
+                    "models".into(),
+                    Json::str(models.iter().map(|m| m.name).collect::<Vec<_>>().join(",")),
+                ),
+                (
+                    "groups".into(),
+                    Json::str(
+                        groups
+                            .iter()
+                            .map(|g| g.label())
+                            .collect::<Vec<_>>()
+                            .join(","),
+                    ),
+                ),
+                ("archs".into(), Json::str("CoDR,UCNN,SCNN")),
+                ("seed".into(), Json::u64(seed)),
+                ("quick".into(), Json::Bool(quick)),
+                ("threads".into(), Json::usize(pool::default_threads())),
+                ("layer_sims".into(), Json::usize(n_layer_sims)),
+            ]),
+        ),
+        (
+            "reference".into(),
+            Json::Obj(vec![
+                ("wall_ms".into(), Json::u64(ref_ms)),
+                ("layers_per_sec".into(), Json::f64(layers_per_sec(ref_ms))),
+            ]),
+        ),
+        ("optimized_cold".into(), pass_json(cold_ms, cold_hits, cold_misses)),
+        ("optimized_warm".into(), pass_json(warm_ms, warm_hits, warm_misses)),
+        ("speedup_cold".into(), ratio(ref_ms, cold_ms)),
+        ("speedup_warm".into(), ratio(ref_ms, warm_ms)),
+        (
+            "micro".into(),
+            Json::Arr(
+                micro
+                    .iter()
+                    .map(|s| {
+                        Json::Obj(vec![
+                            ("name".into(), Json::str(s.name.clone())),
+                            ("median_ns".into(), Json::u64(s.median().as_nanos() as u64)),
+                            ("mean_ns".into(), Json::u64(s.mean().as_nanos() as u64)),
+                            ("min_ns".into(), Json::u64(s.min().as_nanos() as u64)),
+                            ("noise".into(), Json::f64(s.noise())),
+                            ("samples".into(), Json::usize(s.samples.len())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+
+    let out_path = args.get("out").unwrap_or("BENCH_hotpath.json");
+    std::fs::write(out_path, json.to_pretty_string() + "\n")
+        .with_context(|| format!("writing {out_path}"))?;
+
+    let speedup = |den: u64| {
+        if den == 0 {
+            f64::INFINITY
+        } else {
+            ref_ms as f64 / den as f64
+        }
+    };
+    Ok(format!(
+        "hot path over {} layer sims ({} threads):\n\
+         \u{20} reference       {:>8} ms  ({:.1} layers/s)\n\
+         \u{20} optimized cold  {:>8} ms  ({:.1} layers/s, {:.1}x, memo {}/{} hits)\n\
+         \u{20} optimized warm  {:>8} ms  ({:.1} layers/s, {:.1}x, memo {}/{} hits)\n\
+         wrote {}",
+        n_layer_sims,
+        pool::default_threads(),
+        ref_ms,
+        layers_per_sec(ref_ms),
+        cold_ms,
+        layers_per_sec(cold_ms),
+        speedup(cold_ms),
+        cold_hits,
+        cold_hits + cold_misses,
+        warm_ms,
+        layers_per_sec(warm_ms),
+        speedup(warm_ms),
+        warm_hits,
+        warm_hits + warm_misses,
+        out_path
     ))
 }
 
@@ -488,6 +747,26 @@ mod tests {
         let fresh = figure("headline", &Args::parse(&sv(&fresh_argv)).unwrap()).unwrap();
         assert_eq!(cached, fresh);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bench_quick_writes_parseable_snapshot() {
+        let out = std::env::temp_dir().join(format!(
+            "codr-bench-test-{}.json",
+            std::process::id()
+        ));
+        let out_s = out.to_string_lossy().to_string();
+        let a = Args::parse(&sv(&[
+            "--quick", "--models", "tiny", "--groups", "Orig", "--out", &out_s,
+        ]))
+        .unwrap();
+        let summary = bench(&a).unwrap();
+        assert!(summary.contains("optimized cold"), "{summary}");
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(j.field("bench").unwrap().as_str().unwrap(), "hotpath");
+        assert!(j.get("speedup_cold").is_some());
+        assert!(j.field("optimized_warm").unwrap().get("memo_hits").is_some());
+        let _ = std::fs::remove_file(&out);
     }
 
     #[test]

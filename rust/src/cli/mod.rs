@@ -9,6 +9,7 @@
 //! codr serve [--addr HOST:PORT] [--store DIR]
 //! codr submit [--addr HOST:PORT] [grid opts] [--wait]
 //! codr warm [--addr HOST:PORT | --store DIR] [grid opts]
+//! codr bench [--quick] [--out FILE] [grid opts]
 //! codr info
 //! ```
 
@@ -36,6 +37,8 @@ COMMANDS:
     serve           Run the persistent sweep service (TCP, line-JSON)
     submit          Send a sweep grid to a running server (--wait to poll)
     warm            Populate the result store (locally, or via --addr)
+    bench           Time the simulation hot path (reference vs memoized),
+                    write BENCH_hotpath.json
     info            Print design configurations and model zoo summary
 
 OPTIONS:
@@ -51,6 +54,8 @@ OPTIONS:
     --fresh            Ignore the result store for this run
     --wait             submit: poll until the job finishes
     --save             Also write reports under results/
+    --quick            bench: tiny grid for CI smoke runs
+    --out FILE         bench: output path (default BENCH_hotpath.json)
 ";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
@@ -88,6 +93,7 @@ fn dispatch(argv: &[String]) -> Result<String> {
         "serve" => commands::serve(&Args::parse(rest)?),
         "submit" => commands::submit(&Args::parse(rest)?),
         "warm" => commands::warm(&Args::parse(rest)?),
+        "bench" => commands::bench(&Args::parse(rest)?),
         "info" => Ok(commands::info()),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => bail!("unknown command `{other}`"),

@@ -133,7 +133,7 @@ fn process_vector(
     // Running product matrix P (the MLP array's matrix-matrix accumulator).
     let mut prod = vec![0i64; t_ri_a * t_ci_a];
     let mut prev: i64 = 0;
-    for (ui, &uw) in u.uniques.iter().enumerate() {
+    for (&uw, group) in u.uniques.iter().zip(u.index_groups()) {
         let delta = uw as i64 - prev;
         prev = uw as i64;
         // Differential scalar-matrix multiply: P += Δ · tile.
@@ -144,7 +144,7 @@ fn process_vector(
         }
         // Selector: each index picks the (k_r,k_c)-offset window of P and
         // the interconnect routes it to APE m_local.
-        for &idx in &u.indexes[ui] {
+        for &idx in group {
             let (m_local, kr, kc) = geom.coords_of(idx as usize);
             let m = m0 + m_local;
             for r in 0..ro_a {

@@ -1,10 +1,12 @@
-//! Sweep coordinator: fans the (model × sweep-group × architecture) grid
-//! out over a thread pool, caches per-point results, and computes the
-//! paper's headline aggregates.
+//! Sweep coordinator: fans the (model × sweep-group × architecture ×
+//! layer) grid out over a thread pool, caches per-point results, and
+//! computes the paper's headline aggregates.
 //!
 //! tokio is unavailable in the offline registry; the pool is
 //! `std::thread::scope` over a lock-free work queue (atomic cursor),
 //! which is the right shape for this embarrassingly parallel sweep.
+//! Since the intra-point fan-out, the task unit is a single (arch,
+//! layer) simulation, so even one sweep point keeps every worker busy.
 //!
 //! [`run_sweep_with`] threads an optional [`ResultStore`] through the
 //! sweep: points already in the store are loaded instead of simulated,
@@ -17,9 +19,11 @@ pub mod pool;
 use crate::baselines::{Scnn, Ucnn};
 use crate::codr::Codr;
 use crate::models::{Model, SweepGroup, Workload};
+use crate::reuse::memo;
 use crate::serve::{ResultStore, Scheduler};
-use crate::sim::{simulate_model, Accelerator, ModelResult};
+use crate::sim::{Accelerator, LayerResult, ModelResult};
 use anyhow::{bail, Result};
+use std::time::Instant;
 
 /// The three designs of the evaluation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -86,6 +90,26 @@ pub struct SweepStats {
     pub corrupt: usize,
     /// Total `simulate_layer` calls made. Zero on a fully warm store.
     pub simulated_layers: usize,
+    /// Weight-vector memo hits/misses during this sweep (deltas of the
+    /// process-wide [`memo`] counters — approximate when sweeps run
+    /// concurrently, exact otherwise).
+    pub memo_hits: usize,
+    pub memo_misses: usize,
+    /// Wall-clock of the whole sweep call, in milliseconds.
+    pub wall_ms: u64,
+}
+
+impl SweepStats {
+    /// Memo hit rate in [0, 1], or `None` before any lookup happened
+    /// (e.g. a fully store-warm run that never simulated).
+    pub fn memo_hit_rate(&self) -> Option<f64> {
+        let total = self.memo_hits + self.memo_misses;
+        if total == 0 {
+            None
+        } else {
+            Some(self.memo_hits as f64 / total as f64)
+        }
+    }
 }
 
 /// All results of a sweep, queryable by (model, group, arch).
@@ -141,32 +165,67 @@ pub fn run_sweep_with(
     if let Some(store) = store {
         return Scheduler::new(store.clone()).run_grid(models, groups, archs, seed);
     }
-    // Parallelize over (model × group); each worker synthesizes the
-    // workload once and runs every design on it (the weights are shared —
-    // regenerating them per design tripled the sweep cost, §Perf).
+    let t0 = Instant::now();
+    let (memo_h0, memo_m0) = memo::global().counters();
+
+    // Phase 1: synthesize each (model × group) workload once, in
+    // parallel — the weights are shared by every design (regenerating
+    // them per design tripled the sweep cost, §Perf).
     let mut points = Vec::new();
     for model in models {
         for &group in groups {
             points.push((model.clone(), group));
         }
     }
-    let nested = pool::parallel_map(&points, |(model, group)| {
+    let workloads = pool::parallel_map(&points, |(model, group)| {
         let (unique, density) = group.knobs();
-        let workload = Workload::generate(model, unique, density, seed);
-        archs
-            .iter()
-            .map(|arch| {
-                let acc = arch.build();
-                simulate_model(acc.as_ref(), &workload, &group.label())
-            })
-            .collect::<Vec<_>>()
+        Workload::generate(model, unique, density, seed)
     });
-    let results: Vec<ModelResult> = nested.into_iter().flatten().collect();
+
+    // Phase 2: fan the *layers* out — one task per (point, arch, layer),
+    // so even a single-point sweep saturates the pool instead of running
+    // the three designs serially on one worker. `parallel_map` preserves
+    // task order, so results are deterministic regardless of scheduling.
+    let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
+    for (pi, wl) in workloads.iter().enumerate() {
+        let n_layers = wl.conv_layers().count();
+        for ai in 0..archs.len() {
+            for li in 0..n_layers {
+                tasks.push((pi, ai, li));
+            }
+        }
+    }
+    let layer_results = pool::parallel_map(&tasks, |&(pi, ai, li)| {
+        let acc = archs[ai].build();
+        let (spec, w) = workloads[pi].conv_layers().nth(li).expect("task layer index");
+        acc.simulate_layer(spec, w)
+    });
+
+    // Phase 3: reassemble in (model × group) then arch order — the same
+    // order the seed's nested map produced.
+    let mut results = Vec::with_capacity(points.len() * archs.len());
+    let mut remaining = layer_results.into_iter();
+    for (pi, wl) in workloads.iter().enumerate() {
+        let n_layers = wl.conv_layers().count();
+        for arch in archs {
+            let layers: Vec<LayerResult> = remaining.by_ref().take(n_layers).collect();
+            results.push(ModelResult {
+                arch: arch.name().to_string(),
+                model: wl.model.name.to_string(),
+                group: points[pi].1.label(),
+                layers,
+            });
+        }
+    }
     let simulated_layers = results.iter().map(|r| r.layers.len()).sum();
+    let (memo_h1, memo_m1) = memo::global().counters();
     let stats = SweepStats {
         requested: results.len(),
         computed: results.len(),
         simulated_layers,
+        memo_hits: (memo_h1 - memo_h0) as usize,
+        memo_misses: (memo_m1 - memo_m0) as usize,
+        wall_ms: t0.elapsed().as_millis() as u64,
         ..Default::default()
     };
     SweepResults { results, stats }

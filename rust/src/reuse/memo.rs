@@ -1,0 +1,255 @@
+//! Content-addressed weight-vector memo — cross-tile / cross-layer /
+//! cross-sweep-point computation reuse for the simulator itself.
+//!
+//! The paper's thesis is that CNN weights repeat; the simulator should
+//! exploit the same fact. Every UCR pipeline run
+//! ([`UcrVector::from_weights`]), every per-vector size summary
+//! ([`VectorSizeStats::collect`]) and every dataflow metadata derivation
+//! ([`VectorMeta::new`]) is a pure function of the linearized weight
+//! bytes (plus, for the metadata, the chosen encoding parameters and
+//! tile geometry). So the transform of each **distinct** vector is done
+//! exactly once per process and shared:
+//!
+//! * across tiles of one layer (sparse layers repeat vectors heavily —
+//!   the all-zero vector alone can be a double-digit share at D=25%);
+//! * across layers and models within a sweep;
+//! * across sweep points and repeated requests (same seed ⇒ same base
+//!   weights), including every connection of a long-running `codr serve`.
+//!
+//! Keys are the raw weight bytes — candidates are compared
+//! byte-for-byte by the map's `Eq` on lookup, so a hash collision can
+//! never alias two different vectors and cached results are exactly what
+//! a fresh transform would produce. Hit/miss counters feed
+//! `SweepStats::{memo_hits, memo_misses}`.
+
+use super::UcrVector;
+use crate::codr::dataflow::VectorMeta;
+use crate::rle::VectorSizeStats;
+use crate::util::hash::FxBuildHasher;
+use std::collections::HashMap;
+use std::hash::{BuildHasher, Hash, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Lock striping: vectors hash uniformly, so 64 shards keep the memo
+/// uncontended even with every pool worker hitting it.
+const SHARDS: usize = 64;
+
+/// Default soft cap on cached vectors (entries, not bytes). A 3×3 CoDR
+/// vector entry is a few hundred bytes, so the default bounds the memo
+/// around the low hundreds of MB in the worst case. Override with
+/// `CODR_MEMO_CAP`.
+const DEFAULT_CAPACITY: usize = 1 << 19;
+
+/// `(delta_bits, count_bits, t_m, kernel)` — everything
+/// [`VectorMeta::new`] depends on besides the vector itself.
+type MetaKey = (u32, u32, usize, usize);
+
+/// Everything derived from one distinct linearized weight vector.
+pub struct CachedVector {
+    /// The sorted/densified/unified form (UCR steps iv–v).
+    pub ucr: UcrVector,
+    /// Per-vector encoded-size summary for `LayerHistograms::merge_vector`.
+    pub size: VectorSizeStats,
+    /// Dataflow metadata per (encoding parameters, tile geometry) — a
+    /// layer's parameter search picks the key, so the tiny linear map
+    /// almost always holds one entry.
+    metas: Mutex<Vec<(MetaKey, Arc<VectorMeta>)>>,
+}
+
+impl CachedVector {
+    fn new(weights: &[i8]) -> CachedVector {
+        let ucr = UcrVector::from_weights(weights);
+        let size = VectorSizeStats::collect(&ucr);
+        CachedVector {
+            ucr,
+            size,
+            metas: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Dataflow metadata under the given encoding parameters and tile
+    /// geometry, derived once per distinct key.
+    pub fn meta_for(
+        &self,
+        delta_bits: u32,
+        count_bits: u32,
+        t_m: usize,
+        kernel: usize,
+    ) -> Arc<VectorMeta> {
+        let key: MetaKey = (delta_bits, count_bits, t_m, kernel);
+        let mut metas = self.metas.lock().unwrap();
+        if let Some((_, m)) = metas.iter().find(|(k, _)| *k == key) {
+            return Arc::clone(m);
+        }
+        let m = Arc::new(VectorMeta::new(&self.ucr, delta_bits, count_bits, t_m, kernel));
+        metas.push((key, Arc::clone(&m)));
+        m
+    }
+}
+
+/// One stripe of the cache: weight bytes → transform, FxHash-indexed.
+type Shard = HashMap<Box<[i8]>, Arc<CachedVector>, FxBuildHasher>;
+
+/// Sharded, capacity-bounded map from weight bytes to [`CachedVector`].
+pub struct VectorCache {
+    shards: Vec<Mutex<Shard>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    entries: AtomicUsize,
+    capacity: usize,
+}
+
+impl VectorCache {
+    /// A cache holding at most ~`capacity` entries. At capacity the cache
+    /// stops inserting (lookups still hit existing entries) rather than
+    /// evicting: the most frequent vectors — all-zero and near-zero ones —
+    /// are seen early and stay resident, and the bound stays hard.
+    pub fn with_capacity(capacity: usize) -> VectorCache {
+        VectorCache {
+            shards: (0..SHARDS)
+                .map(|_| Mutex::new(HashMap::with_hasher(FxBuildHasher)))
+                .collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            entries: AtomicUsize::new(0),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Look up (or transform and insert) one linearized weight vector.
+    pub fn get_or_insert(&self, weights: &[i8]) -> Arc<CachedVector> {
+        let mut hasher = FxBuildHasher.build_hasher();
+        weights.hash(&mut hasher);
+        // Shard on the HIGH bits: the shard's HashMap buckets on the low
+        // bits of this same hash, so selecting shards by the low bits
+        // would leave every table using 1/SHARDS of its buckets.
+        let shard = &self.shards[(hasher.finish() >> 32) as usize % SHARDS];
+        {
+            let map = shard.lock().unwrap();
+            if let Some(e) = map.get(weights) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(e);
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Transform outside the lock; if a racing worker inserted the
+        // same vector meanwhile, its (identical) entry wins.
+        let entry = Arc::new(CachedVector::new(weights));
+        if self.entries.load(Ordering::Relaxed) >= self.capacity {
+            return entry; // full: serve the transform uncached
+        }
+        let mut map = shard.lock().unwrap();
+        if let Some(e) = map.get(weights) {
+            return Arc::clone(e);
+        }
+        map.insert(weights.to_vec().into_boxed_slice(), Arc::clone(&entry));
+        drop(map);
+        self.entries.fetch_add(1, Ordering::Relaxed);
+        entry
+    }
+
+    /// Cumulative (hits, misses) since construction. Sweeps report the
+    /// delta across their run; under concurrent sweeps the split between
+    /// them is approximate (the totals are exact).
+    pub fn counters(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Drop every cached vector (used by `codr bench` to measure the
+    /// cold path). Counters are preserved.
+    pub fn flush(&self) {
+        for shard in &self.shards {
+            shard.lock().unwrap().clear();
+        }
+        self.entries.store(0, Ordering::Relaxed);
+    }
+
+    /// Cached distinct vectors.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The process-wide memo every simulator path shares.
+pub fn global() -> &'static VectorCache {
+    static CACHE: OnceLock<VectorCache> = OnceLock::new();
+    CACHE.get_or_init(|| {
+        let cap = std::env::var("CODR_MEMO_CAP")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_CAPACITY);
+        VectorCache::with_capacity(cap)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_returns_identical_transform() {
+        let cache = VectorCache::with_capacity(1024);
+        let v = [3i8, 0, 1, 3, 0, 1, 1, 4];
+        let a = cache.get_or_insert(&v);
+        let b = cache.get_or_insert(&v);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must share the entry");
+        assert_eq!(a.ucr, UcrVector::from_weights(&v));
+        assert_eq!(a.size, VectorSizeStats::collect(&a.ucr));
+        assert_eq!(cache.counters(), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_vectors_never_alias() {
+        let cache = VectorCache::with_capacity(1024);
+        let a = cache.get_or_insert(&[1i8, 2, 3]);
+        let b = cache.get_or_insert(&[1i8, 2, 4]);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(a.ucr.reconstruct(), vec![1, 2, 3]);
+        assert_eq!(b.ucr.reconstruct(), vec![1, 2, 4]);
+        // Same bytes at a different length are a different vector.
+        let c = cache.get_or_insert(&[1i8, 2, 3, 0]);
+        assert_eq!(c.ucr.len, 4);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn meta_for_computes_once_per_key() {
+        let cache = VectorCache::with_capacity(16);
+        let e = cache.get_or_insert(&[5i8, 0, 5, -1, 0, 0, 2, 2, 2]);
+        let m1 = e.meta_for(2, 3, 1, 9);
+        let m2 = e.meta_for(2, 3, 1, 9);
+        assert!(Arc::ptr_eq(&m1, &m2));
+        let m3 = e.meta_for(3, 3, 1, 9);
+        assert!(!Arc::ptr_eq(&m1, &m3));
+        assert_eq!(m1.nnz, 6);
+    }
+
+    #[test]
+    fn capacity_bounds_entries_without_breaking_lookups() {
+        let cache = VectorCache::with_capacity(2);
+        cache.get_or_insert(&[1i8]);
+        cache.get_or_insert(&[2i8]);
+        // Full: the next distinct vector is transformed but not retained.
+        let e = cache.get_or_insert(&[3i8]);
+        assert_eq!(e.ucr.reconstruct(), vec![3]);
+        assert!(cache.len() <= 2);
+        // Resident entries still hit.
+        let (h0, _) = cache.counters();
+        cache.get_or_insert(&[1i8]);
+        assert_eq!(cache.counters().0, h0 + 1);
+        // Flush resets occupancy.
+        cache.flush();
+        assert!(cache.is_empty());
+        cache.get_or_insert(&[3i8]);
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -16,6 +16,7 @@
 //! The transformation is *lossless*: [`UcrVector::reconstruct`] returns
 //! the original linearized vector, which the property tests verify.
 
+pub mod memo;
 pub mod stats;
 
 use crate::models::LayerSpec;
@@ -59,21 +60,47 @@ impl WeightVector {
 
 /// A weight vector after sort + densify + unify + Δ (paper Fig 1e–i).
 ///
-/// `uniques[i]` repeats `counts[i]` times at vector positions
-/// `indexes[i]` (ascending). Zero weights are represented implicitly —
-/// any position not listed is zero. `Σ counts[i] = Σ indexes[i].len()` =
-/// number of non-zero weights.
+/// `uniques[i]` repeats `counts[i]` times at the vector positions given
+/// by the `i`-th group of [`Self::index_groups`] (ascending). Zero
+/// weights are represented implicitly — any position not listed is zero.
+///
+/// The index lists are stored structure-of-arrays: one flat backing
+/// buffer, with the group boundaries implied by `counts` (group `i`
+/// holds exactly `counts[i]` indexes). Compared to the seed's
+/// `Vec<Vec<u16>>` this is three allocations per vector instead of
+/// `2 + uniques` and keeps every traversal a linear scan.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct UcrVector {
     /// Distinct non-zero weights, sorted ascending.
     pub uniques: Vec<i8>,
-    /// Repetition count per unique weight.
+    /// Repetition count per unique weight (doubles as the group length
+    /// table of `indexes`).
     pub counts: Vec<u32>,
-    /// Output indexes per unique weight (positions in the linearized
-    /// vector), each list ascending.
-    pub indexes: Vec<Vec<u16>>,
+    /// Flat index buffer: the concatenation of every unique's ascending
+    /// position list, in `uniques` order. `Σ counts[i] = indexes.len()` =
+    /// number of non-zero weights.
+    pub indexes: Vec<u16>,
     /// Original vector length.
     pub len: usize,
+}
+
+/// Iterator over the per-unique index groups of a [`UcrVector`] — yields
+/// one `&[u16]` slice of the flat buffer per unique weight.
+pub struct IndexGroups<'a> {
+    counts: std::slice::Iter<'a, u32>,
+    rest: &'a [u16],
+}
+
+impl<'a> Iterator for IndexGroups<'a> {
+    type Item = &'a [u16];
+
+    #[inline]
+    fn next(&mut self) -> Option<&'a [u16]> {
+        let &c = self.counts.next()?;
+        let (head, tail) = self.rest.split_at(c as usize);
+        self.rest = tail;
+        Some(head)
+    }
 }
 
 impl UcrVector {
@@ -81,9 +108,11 @@ impl UcrVector {
     ///
     /// Counting sort over the 256 possible values: a first pass takes the
     /// per-value histogram (stack array, no allocation), a second pass
-    /// scatters positions into exactly-sized per-unique index lists. This
-    /// is the whole pipeline's hottest function (millions of calls per
-    /// model) — see EXPERIMENTS.md §Perf.
+    /// scatters positions into the exactly-sized flat index buffer via a
+    /// per-value write cursor. This is the whole pipeline's hottest
+    /// function (millions of calls per model) — see EXPERIMENTS.md §Perf;
+    /// the cross-tile memo ([`memo`]) ensures each distinct vector runs
+    /// it only once.
     pub fn from_weights(v: &[i8]) -> Self {
         assert!(v.len() <= u16::MAX as usize + 1, "vector too long for u16 indexes");
         let mut hist = [0u32; 256];
@@ -94,20 +123,23 @@ impl UcrVector {
         }
         let mut uniques = Vec::new();
         let mut counts = Vec::new();
-        let mut indexes: Vec<Vec<u16>> = Vec::new();
-        let mut group_of = [u8::MAX; 256];
+        // Flat-buffer write cursor per value slot (group start offsets).
+        let mut cursor_of = [0u32; 256];
+        let mut cursor = 0u32;
         for (slot, &c) in hist.iter().enumerate() {
             if c > 0 {
-                group_of[slot] = uniques.len() as u8;
                 uniques.push((slot as i16 - 128) as i8);
                 counts.push(c);
-                indexes.push(Vec::with_capacity(c as usize));
+                cursor_of[slot] = cursor;
+                cursor += c;
             }
         }
+        let mut indexes = vec![0u16; cursor as usize];
         for (pos, &w) in v.iter().enumerate() {
             if w != 0 {
-                let g = group_of[(w as i16 + 128) as usize] as usize;
-                indexes[g].push(pos as u16);
+                let slot = (w as i16 + 128) as usize;
+                indexes[cursor_of[slot] as usize] = pos as u16;
+                cursor_of[slot] += 1;
             }
         }
         UcrVector {
@@ -115,6 +147,16 @@ impl UcrVector {
             counts,
             indexes,
             len: v.len(),
+        }
+    }
+
+    /// The per-unique index groups (ascending within each group), in
+    /// `uniques` order.
+    #[inline]
+    pub fn index_groups(&self) -> IndexGroups<'_> {
+        IndexGroups {
+            counts: self.counts.iter(),
+            rest: &self.indexes,
         }
     }
 
@@ -149,8 +191,8 @@ impl UcrVector {
     /// simulator): reproduce the original linearized weight vector.
     pub fn reconstruct(&self) -> Vec<i8> {
         let mut v = vec![0i8; self.len];
-        for (u, idx) in self.uniques.iter().zip(&self.indexes) {
-            for &i in idx {
+        for (u, group) in self.uniques.iter().zip(self.index_groups()) {
+            for &i in group {
                 v[i as usize] = *u;
             }
         }
@@ -294,9 +336,10 @@ mod tests {
         let u = UcrVector::from_weights(&v);
         assert_eq!(u.uniques, vec![1, 3, 4]);
         assert_eq!(u.counts, vec![3, 2, 1]);
-        assert_eq!(u.indexes[0], vec![2, 5, 6]);
-        assert_eq!(u.indexes[1], vec![0, 3]);
-        assert_eq!(u.indexes[2], vec![7]);
+        // Flat buffer = the groups [2,5,6] [0,3] [7] concatenated.
+        assert_eq!(u.indexes, vec![2, 5, 6, 0, 3, 7]);
+        let groups: Vec<&[u16]> = u.index_groups().collect();
+        assert_eq!(groups, vec![&[2u16, 5, 6][..], &[0, 3][..], &[7][..]]);
         // Δs: first absolute, then 3-1=2, 4-3=1.
         assert_eq!(u.deltas()[1..], [2, 1]);
         assert_eq!(u.nnz(), 6);
@@ -410,10 +453,64 @@ mod tests {
                 let u = UcrVector::from_weights(v);
                 u.uniques.windows(2).all(|w| w[0] < w[1])
                     && u.uniques.iter().all(|&x| x != 0)
-                    && u.counts.iter().zip(&u.indexes).all(|(&c, i)| c as usize == i.len())
-                    && u.indexes
+                    && u.counts.iter().map(|&c| c as usize).sum::<usize>() == u.indexes.len()
+                    && u.counts
                         .iter()
-                        .all(|ix| ix.windows(2).all(|w| w[0] < w[1]))
+                        .zip(u.index_groups())
+                        .all(|(&c, g)| c as usize == g.len())
+                    && u.index_groups()
+                        .all(|g| g.windows(2).all(|w| w[0] < w[1]))
+            },
+        );
+    }
+
+    /// The seed stored one `Vec<u16>` per unique; the flat layout must be
+    /// observationally identical: same uniques, same counts, the same
+    /// per-unique groups, and a byte-identical reconstruction.
+    #[test]
+    fn prop_flat_layout_matches_seed_nested_layout() {
+        fn nested_reference(v: &[i8]) -> (Vec<i8>, Vec<u32>, Vec<Vec<u16>>) {
+            let mut uniques: Vec<i8> = v.iter().copied().filter(|&w| w != 0).collect();
+            uniques.sort_unstable();
+            uniques.dedup();
+            let mut counts = Vec::with_capacity(uniques.len());
+            let mut groups = Vec::with_capacity(uniques.len());
+            for &u in &uniques {
+                let g: Vec<u16> = v
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &w)| w == u)
+                    .map(|(i, _)| i as u16)
+                    .collect();
+                counts.push(g.len() as u32);
+                groups.push(g);
+            }
+            (uniques, counts, groups)
+        }
+        check(
+            100,
+            |r, size| {
+                (0..1 + size * 4)
+                    .map(|_| {
+                        if r.chance(0.5) {
+                            0
+                        } else {
+                            (r.below(255) as i16 - 127) as i8
+                        }
+                    })
+                    .collect::<Vec<i8>>()
+            },
+            |v| {
+                let flat = UcrVector::from_weights(v);
+                let (uniques, counts, groups) = nested_reference(v);
+                flat.uniques == uniques
+                    && flat.counts == counts
+                    && flat
+                        .index_groups()
+                        .zip(&groups)
+                        .all(|(a, b)| a == b.as_slice())
+                    && flat.index_groups().count() == groups.len()
+                    && flat.reconstruct() == *v
             },
         );
     }

@@ -70,7 +70,7 @@ pub const PARAM_HEADER_BITS: usize = 32;
 
 /// One-pass histograms from which the encoded size under any candidate
 /// parameter set is computed in O(1).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LayerHistograms {
     spec: CoderSpec,
     pub n_vectors: usize,
@@ -131,7 +131,7 @@ impl LayerHistograms {
         // restarting (possibly negative Δ) at group boundaries.
         let mut prev: i64 = -1;
         let mut first = true;
-        for group in &u.indexes {
+        for group in u.index_groups() {
             for &idx in group {
                 let idx = idx as i64;
                 if first {
@@ -149,6 +149,32 @@ impl LayerHistograms {
                 self.n_indexes += 1;
             }
         }
+    }
+
+    /// Accumulate one vector from its precomputed per-vector summary —
+    /// the memo-served fast path of [`Self::add_vector`]. Must stay
+    /// behaviorally identical (asserted by the
+    /// `merge_vector_equals_add_vector` test).
+    pub fn merge_vector(&mut self, u: &UcrVector, s: &VectorSizeStats) {
+        assert!(u.len <= self.spec.vec_len, "vector longer than coder spec");
+        self.n_vectors += 1;
+        self.vec_unique_hist[u.uniques.len()] += 1;
+        if u.uniques.is_empty() {
+            return;
+        }
+        self.n_nonempty += 1;
+        self.n_uniques += u.uniques.len();
+        for &d in &s.deltas {
+            self.delta_hist[d as usize] += 1;
+        }
+        for &c in &u.counts {
+            self.count_hist[c as usize] += 1;
+        }
+        for &(d, n) in &s.idx_deltas {
+            self.idx_delta_hist[d as usize] += n as u64;
+        }
+        self.n_idx_abs += s.n_idx_abs;
+        self.n_indexes += s.n_indexes;
     }
 
     /// Dummy entries created by count overflow at count width `r`.
@@ -229,6 +255,24 @@ impl LayerHistograms {
             + PARAM_HEADER_BITS as u64
     }
 
+    /// Compression stats under a parameter set, straight from the size
+    /// model — no bitstreams are emitted. Bit-identical to
+    /// [`EncodedLayer::stats`] after encoding the same vectors (asserted
+    /// by `histogram_model_matches_emitted_size_exactly` and the
+    /// `encode_layer_refs` debug assertion), which is what lets the
+    /// stats-path simulators skip stream emission entirely.
+    pub fn stats(&self, p: RleParams, num_weights: usize) -> CompressionStats {
+        CompressionStats {
+            num_weights,
+            encoded_bits: self.total_bits(p) as usize,
+            delta_bits: self.delta_stream_bits(p.delta_bits, p.count_bits) as usize,
+            count_bits: self.count_stream_bits(p.count_bits) as usize,
+            index_bits: self.index_stream_bits(p.index_bits) as usize,
+            header_bits: (self.header_stream_bits(p.header_bits)
+                + PARAM_HEADER_BITS as u64) as usize,
+        }
+    }
+
     /// Exhaustive parameter search (paper §III-C): k and r are coupled
     /// through dummy insertion; j and h are independent.
     pub fn best_params(&self) -> RleParams {
@@ -269,6 +313,75 @@ impl LayerHistograms {
             }
         }
         best
+    }
+}
+
+/// Per-vector sufficient statistics for the encoded-size model — the
+/// content-addressed memo caches one of these per distinct weight vector
+/// so repeated vectors contribute to [`LayerHistograms`] (via
+/// [`LayerHistograms::merge_vector`]) without re-walking their indexes.
+///
+/// Everything here is a pure function of the [`UcrVector`] alone (no
+/// layer geometry), which is what makes the summary shareable across
+/// tiles, layers, and sweep points.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct VectorSizeStats {
+    /// Non-first Δs between successive sorted uniques (1..=254 each).
+    pub deltas: Vec<u8>,
+    /// Sparse histogram of positive index Δs: `(Δ, occurrences)`,
+    /// ascending by Δ.
+    pub idx_deltas: Vec<(u16, u32)>,
+    /// Indexes forced to absolute mode (vector-first or non-positive Δ).
+    pub n_idx_abs: u64,
+    /// Total indexes (= non-zero weights).
+    pub n_indexes: u64,
+}
+
+impl VectorSizeStats {
+    /// Summarize one UCR vector (one-time cost at memo insertion).
+    pub fn collect(u: &UcrVector) -> VectorSizeStats {
+        let mut s = VectorSizeStats::default();
+        if u.uniques.is_empty() {
+            return s;
+        }
+        let mut prev = u.uniques[0] as i16;
+        for &w in &u.uniques[1..] {
+            s.deltas.push((w as i16 - prev) as u8);
+            prev = w as i16;
+        }
+        // Positive index Δs in emission order, then aggregated sparse.
+        let mut raw: Vec<u16> = Vec::new();
+        let mut prev_idx: i64 = -1;
+        let mut first = true;
+        for group in u.index_groups() {
+            for &idx in group {
+                let idx = idx as i64;
+                if first {
+                    s.n_idx_abs += 1;
+                    first = false;
+                } else {
+                    let d = idx - prev_idx;
+                    if d > 0 {
+                        raw.push(d as u16);
+                    } else {
+                        s.n_idx_abs += 1;
+                    }
+                }
+                prev_idx = idx;
+                s.n_indexes += 1;
+            }
+        }
+        raw.sort_unstable();
+        for d in raw {
+            if let Some(last) = s.idx_deltas.last_mut() {
+                if last.0 == d {
+                    last.1 += 1;
+                    continue;
+                }
+            }
+            s.idx_deltas.push((d, 1));
+        }
+        s
     }
 }
 
@@ -407,7 +520,7 @@ pub fn encode_vector(enc: &mut EncodedLayer, u: &UcrVector) {
     // vector's whole emission order.
     let mut prev: i64 = -1;
     let mut first = true;
-    for group in &u.indexes {
+    for group in u.index_groups() {
         for &idx in group {
             let idx = idx as i64;
             let d = idx - prev;
@@ -498,7 +611,7 @@ impl<'a> LayerDecoder<'a> {
 
         let mut uniques: Vec<i8> = Vec::new();
         let mut counts: Vec<u32> = Vec::new();
-        let mut indexes: Vec<Vec<u16>> = Vec::new();
+        let mut indexes: Vec<u16> = Vec::new();
         let mut prev_weight: i16 = 0;
         let mut prev_idx: i64 = -1;
         let all_ones = (1u32 << p.count_bits) - 1;
@@ -546,8 +659,9 @@ impl<'a> LayerDecoder<'a> {
                 remaining_real -= 1;
             }
 
-            // Indexes of this entry.
-            let mut idx_list = Vec::with_capacity(count as usize);
+            // Indexes of this entry, appended straight onto the flat
+            // buffer — a dummy's indexes directly follow its unique's, so
+            // group contiguity is preserved by construction.
             for _ in 0..count {
                 let mode = self.indexes.read_bit();
                 let idx = if mode {
@@ -556,18 +670,16 @@ impl<'a> LayerDecoder<'a> {
                     self.indexes.read(spec.abs_bits())
                 };
                 debug_assert!((idx as usize) < vec_len, "decoded index out of range");
-                idx_list.push(idx as u16);
+                indexes.push(idx as u16);
                 prev_idx = idx as i64;
             }
 
             if is_dummy {
-                let last = uniques.len() - 1;
+                let last = counts.len() - 1;
                 counts[last] += count;
-                indexes[last].extend(idx_list);
             } else {
                 uniques.push(weight);
                 counts.push(count);
-                indexes.push(idx_list);
             }
         }
 
@@ -755,10 +867,36 @@ mod tests {
                             hist.total_bits(p),
                             "size model mismatch at k={k} r={r} j={j} h={h}"
                         );
+                        // The full stats — the stream-by-stream breakdown
+                        // the stats-path simulators report — must also be
+                        // byte-identical to the emitted streams.
+                        assert_eq!(
+                            hist.stats(p, 50 * 36),
+                            enc.stats(50 * 36),
+                            "component mismatch at k={k} r={r} j={j} h={h}"
+                        );
                     }
                 }
             }
         }
+    }
+
+    /// The memo fast path (`merge_vector` over cached summaries) must
+    /// accumulate exactly what `add_vector` does.
+    #[test]
+    fn merge_vector_equals_add_vector() {
+        let mut rng = Rng::new(2024);
+        let spec = CoderSpec::new(48);
+        let mut by_add = LayerHistograms::new(spec);
+        let mut by_merge = LayerHistograms::new(spec);
+        for i in 0..60u64 {
+            let zero_p = (i % 10) as f64 / 10.0;
+            let v = random_vector(&mut rng, 48, zero_p, 1 + i % 90);
+            let u = UcrVector::from_weights(&v);
+            by_add.add_vector(&u);
+            by_merge.merge_vector(&u, &VectorSizeStats::collect(&u));
+        }
+        assert_eq!(by_add, by_merge);
     }
 
     #[test]

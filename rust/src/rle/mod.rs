@@ -27,7 +27,7 @@ mod coder;
 pub use coder::{
     decode_layer, decode_vector, encode_layer, encode_layer_refs, encode_vector, CoderSpec,
     EncodedLayer,
-    LayerHistograms, RleParams,
+    LayerHistograms, RleParams, VectorSizeStats, PARAM_HEADER_BITS,
 };
 
 /// Compression summary for one encoded layer.

@@ -80,11 +80,23 @@ pub fn stats_to_json(s: &SweepStats) -> Json {
         ("deduped".into(), Json::usize(s.deduped)),
         ("corrupt".into(), Json::usize(s.corrupt)),
         ("simulated_layers".into(), Json::usize(s.simulated_layers)),
+        ("memo_hits".into(), Json::usize(s.memo_hits)),
+        ("memo_misses".into(), Json::usize(s.memo_misses)),
+        ("wall_ms".into(), Json::u64(s.wall_ms)),
     ])
 }
 
-/// Parse stats back out of a response (client side).
+/// Parse stats back out of a response (client side). The memo/wall
+/// fields default to zero so an upgraded client still reads responses
+/// from a pre-upgrade server that has been running since before they
+/// existed.
 pub fn stats_from_json(j: &Json) -> Result<SweepStats> {
+    let opt_usize = |key: &str| -> Result<usize> {
+        match j.get(key) {
+            Some(v) => v.as_usize(),
+            None => Ok(0),
+        }
+    };
     Ok(SweepStats {
         requested: j.field("requested")?.as_usize()?,
         cache_hits: j.field("cache_hits")?.as_usize()?,
@@ -92,6 +104,12 @@ pub fn stats_from_json(j: &Json) -> Result<SweepStats> {
         deduped: j.field("deduped")?.as_usize()?,
         corrupt: j.field("corrupt")?.as_usize()?,
         simulated_layers: j.field("simulated_layers")?.as_usize()?,
+        memo_hits: opt_usize("memo_hits")?,
+        memo_misses: opt_usize("memo_misses")?,
+        wall_ms: match j.get("wall_ms") {
+            Some(v) => v.as_u64()?,
+            None => 0,
+        },
     })
 }
 
@@ -205,9 +223,13 @@ mod tests {
             deduped: 1,
             corrupt: 2,
             simulated_layers: 37,
+            memo_hits: 120,
+            memo_misses: 30,
+            wall_ms: 251,
         };
         let back = stats_from_json(&stats_to_json(&s)).unwrap();
         assert_eq!(back, s);
+        assert_eq!(back.memo_hit_rate(), Some(0.8));
     }
 
     #[test]

@@ -23,9 +23,11 @@ use super::store::{CacheKey, LoadOutcome, ResultStore};
 use crate::arch::MemConfig;
 use crate::coordinator::{pool, Arch, SweepResults, SweepStats};
 use crate::models::{Model, SweepGroup, Workload};
-use crate::sim::{simulate_model, ModelResult};
+use crate::reuse::memo;
+use crate::sim::{simulate_model, Accelerator, LayerResult, ModelResult};
 use std::collections::{HashMap, HashSet};
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 /// One grid point, addressed by indices into the request plus its store
 /// key.
@@ -91,6 +93,8 @@ impl Scheduler {
         archs: &[Arch],
         seed: u64,
     ) -> SweepResults {
+        let t0 = Instant::now();
+        let (memo_h0, memo_m0) = memo::global().counters();
         let mem = MemConfig::default();
         let mut stats = SweepStats::default();
         let mut found: HashMap<(usize, usize, usize), ModelResult> = HashMap::new();
@@ -164,8 +168,11 @@ impl Scheduler {
             }
         }
 
-        // Phase 3: batch claimed points by (model, group) and fan out over
-        // the coordinator pool; each batch synthesizes its weights once.
+        // Phase 3: batch claimed points by (model, group) so each
+        // workload is synthesized once, then fan the *layers* out — one
+        // pool task per (point, layer). This is what lets a narrow grid
+        // (e.g. a single-model `warm` with three archs) use every worker
+        // instead of running the designs serially on one.
         if !to_compute.is_empty() {
             let mut batches: Vec<Batch> = Vec::new();
             let mut by_pair: HashMap<(usize, usize), usize> = HashMap::new();
@@ -180,34 +187,55 @@ impl Scheduler {
                 });
                 batches[slot].points.push(p);
             }
-            let computed = pool::parallel_map(&batches, |batch| {
+            let workloads = pool::parallel_map(&batches, |batch| {
                 let (unique, density) = batch.group.knobs();
-                let workload = Workload::generate(batch.model, unique, density, seed);
-                batch
-                    .points
-                    .iter()
-                    .map(|p| {
-                        let acc = archs[p.ai].build();
-                        let result = simulate_model(acc.as_ref(), &workload, &batch.group.label());
-                        if let Err(e) = self.store.save(&p.key, &result) {
-                            eprintln!("warn: failed to persist {}: {e:#}", p.key.file_stem());
-                        }
-                        // Release this point's claim as soon as it is
-                        // persisted: a request waiting on just this point
-                        // must not block behind the rest of our grid.
-                        // (The guard's redundant remove at the end is a
-                        // no-op.)
-                        self.inflight.lock().unwrap().remove(&p.key.fingerprint);
-                        self.released.notify_all();
-                        result
-                    })
-                    .collect::<Vec<_>>()
+                Workload::generate(batch.model, unique, density, seed)
             });
-            for (batch, results) in batches.iter().zip(computed) {
-                for (p, r) in batch.points.iter().zip(results) {
+            let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
+            for (bi, batch) in batches.iter().enumerate() {
+                let n_layers = workloads[bi].conv_layers().count();
+                for pi in 0..batch.points.len() {
+                    for li in 0..n_layers {
+                        tasks.push((bi, pi, li));
+                    }
+                }
+            }
+            let layer_results = pool::parallel_map(&tasks, |&(bi, pi, li)| {
+                let acc = archs[batches[bi].points[pi].ai].build();
+                let (spec, w) = workloads[bi]
+                    .conv_layers()
+                    .nth(li)
+                    .expect("task layer index");
+                acc.simulate_layer(spec, w)
+            });
+            // Reassemble per point (tasks are in (batch, point, layer)
+            // order and parallel_map preserves it), persist, and release
+            // each claim as its point is saved. Note the trade against
+            // the pre-fan-out code: claims release after the whole
+            // parallel_map barrier rather than per point mid-flight, so
+            // a concurrent request waiting on one of our points waits
+            // for this grid's compute to finish — in exchange the grid
+            // itself finishes far sooner (per-layer parallelism). See
+            // ROADMAP "Streaming claim release".
+            let mut remaining = layer_results.into_iter();
+            for (bi, batch) in batches.iter().enumerate() {
+                let n_layers = workloads[bi].conv_layers().count();
+                for p in &batch.points {
+                    let layers: Vec<LayerResult> = remaining.by_ref().take(n_layers).collect();
+                    let result = ModelResult {
+                        arch: archs[p.ai].name().to_string(),
+                        model: batch.model.name.to_string(),
+                        group: batch.group.label(),
+                        layers,
+                    };
+                    if let Err(e) = self.store.save(&p.key, &result) {
+                        eprintln!("warn: failed to persist {}: {e:#}", p.key.file_stem());
+                    }
+                    self.inflight.lock().unwrap().remove(&p.key.fingerprint);
+                    self.released.notify_all();
                     stats.computed += 1;
-                    stats.simulated_layers += r.layers.len();
-                    found.insert((p.mi, p.gi, p.ai), r);
+                    stats.simulated_layers += result.layers.len();
+                    found.insert((p.mi, p.gi, p.ai), result);
                 }
             }
         }
@@ -232,6 +260,10 @@ impl Scheduler {
                 }
             }
         }
+        let (memo_h1, memo_m1) = memo::global().counters();
+        stats.memo_hits = (memo_h1 - memo_h0) as usize;
+        stats.memo_misses = (memo_m1 - memo_m0) as usize;
+        stats.wall_ms = t0.elapsed().as_millis() as u64;
         SweepResults { results, stats }
     }
 

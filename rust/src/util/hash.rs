@@ -1,0 +1,100 @@
+//! Fast non-cryptographic hashing for in-memory caches (the offline
+//! registry has no `rustc-hash`/`fxhash`). The algorithm is the rotate ·
+//! xor · multiply word mixer rustc uses for its interning tables — weak
+//! against adversarial keys, which is fine here: the only user is the
+//! weight-vector memo, whose keys are verified byte-for-byte by the map's
+//! `Eq` on lookup, so a collision can never alias two different vectors.
+
+use std::hash::{BuildHasher, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// FxHash-style streaming hasher over 64-bit words.
+#[derive(Clone, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            // Zero-pad the tail; slice hashing already mixes the length,
+            // so trailing-zero ambiguity cannot alias keys.
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+/// `BuildHasher` plugging [`FxHasher`] into `std::collections::HashMap`.
+#[derive(Clone, Copy, Default)]
+pub struct FxBuildHasher;
+
+impl BuildHasher for FxBuildHasher {
+    type Hasher = FxHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> FxHasher {
+        FxHasher::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hash::Hash;
+
+    fn hash_of(bytes: &[i8]) -> u64 {
+        let mut h = FxBuildHasher.build_hasher();
+        bytes.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn deterministic_and_content_sensitive() {
+        let a = [1i8, 2, 3, 0, -5, 7, 9, 11, 13];
+        assert_eq!(hash_of(&a), hash_of(&a));
+        let mut b = a;
+        b[4] = -6;
+        assert_ne!(hash_of(&a), hash_of(&b));
+    }
+
+    #[test]
+    fn length_disambiguates_zero_tails() {
+        // [1, 0] vs [1, 0, 0]: the slice-length prefix must keep these
+        // distinct even though the padded tail words agree.
+        assert_ne!(hash_of(&[1, 0]), hash_of(&[1, 0, 0]));
+        assert_ne!(hash_of(&[]), hash_of(&[0]));
+    }
+
+    #[test]
+    fn works_as_hashmap_hasher() {
+        let mut m: std::collections::HashMap<Box<[i8]>, u32, FxBuildHasher> =
+            std::collections::HashMap::with_hasher(FxBuildHasher);
+        m.insert(vec![3i8, 1, 4].into_boxed_slice(), 1);
+        m.insert(vec![1i8, 5, 9].into_boxed_slice(), 2);
+        let probe: &[i8] = &[3, 1, 4];
+        assert_eq!(m.get(probe), Some(&1));
+        let missing: &[i8] = &[3, 1, 5];
+        assert_eq!(m.get(missing), None);
+    }
+}

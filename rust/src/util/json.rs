@@ -110,6 +110,48 @@ impl Json {
         }
     }
 
+    /// Render with two-space indentation. Committed artifacts (e.g.
+    /// `BENCH_hotpath.json`) are diffed by humans; the wire and store
+    /// formats stay compact via `Display`.
+    pub fn to_pretty_string(&self) -> String {
+        let mut out = String::new();
+        self.write_pretty(&mut out, 0);
+        out
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        let pad = |out: &mut String, n: usize| {
+            for _ in 0..n {
+                out.push_str("  ");
+            }
+        };
+        match self {
+            Json::Arr(xs) if !xs.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in xs.iter().enumerate() {
+                    pad(out, indent + 1);
+                    x.write_pretty(out, indent + 1);
+                    out.push_str(if i + 1 < xs.len() { ",\n" } else { "\n" });
+                }
+                pad(out, indent);
+                out.push(']');
+            }
+            Json::Obj(pairs) if !pairs.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    pad(out, indent + 1);
+                    out.push_str(&Json::Str(k.clone()).to_string());
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 1);
+                    out.push_str(if i + 1 < pairs.len() { ",\n" } else { "\n" });
+                }
+                pad(out, indent);
+                out.push('}');
+            }
+            leaf => out.push_str(&leaf.to_string()),
+        }
+    }
+
     /// Parse one JSON document (trailing whitespace allowed, nothing else).
     pub fn parse(text: &str) -> Result<Json> {
         let bytes = text.as_bytes();
@@ -468,6 +510,17 @@ mod tests {
     fn depth_limit_blocks_stack_abuse() {
         let deep = "[".repeat(100) + &"]".repeat(100);
         assert!(Json::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn pretty_output_reparses_identically() {
+        let v = Json::parse(r#"{"a":[1,2.5,{"b":null}],"c":"x","empty":[],"o":{}}"#).unwrap();
+        let pretty = v.to_pretty_string();
+        assert!(pretty.contains('\n'));
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+        // Leaves render exactly as the compact form.
+        assert_eq!(Json::f64(2.0).to_pretty_string(), "2.0");
+        assert_eq!(Json::parse("[]").unwrap().to_pretty_string(), "[]");
     }
 
     #[test]

@@ -4,5 +4,6 @@
 
 pub mod bench;
 pub mod check;
+pub mod hash;
 pub mod json;
 pub mod rng;
