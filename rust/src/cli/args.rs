@@ -80,6 +80,22 @@ impl Args {
     pub fn addr(&self) -> &str {
         self.get("addr").unwrap_or(crate::serve::DEFAULT_ADDR)
     }
+
+    /// Result-store size cap in mebibytes (`--store-cap-mb`; `None` =
+    /// unbounded). Zero is rejected — a cap that evicts every save is a
+    /// configuration error, not a policy.
+    pub fn store_cap_mb(&self) -> Result<Option<u64>> {
+        match self.get("store-cap-mb") {
+            None => Ok(None),
+            Some(s) => {
+                let mb: u64 = s.parse().context("--store-cap-mb must be an integer")?;
+                if mb == 0 {
+                    bail!("--store-cap-mb must be at least 1");
+                }
+                Ok(Some(mb))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -140,5 +156,20 @@ mod tests {
         assert_eq!(a.store_dir(), PathBuf::from("/tmp/s"));
         assert_eq!(a.addr(), "127.0.0.1:9");
         assert!(Args::parse(&sv(&["--fresh", "--wait"])).is_ok());
+    }
+
+    #[test]
+    fn store_cap_parsing() {
+        assert_eq!(Args::parse(&[]).unwrap().store_cap_mb().unwrap(), None);
+        let a = Args::parse(&sv(&["--store-cap-mb", "256"])).unwrap();
+        assert_eq!(a.store_cap_mb().unwrap(), Some(256));
+        assert!(Args::parse(&sv(&["--store-cap-mb", "0"]))
+            .unwrap()
+            .store_cap_mb()
+            .is_err());
+        assert!(Args::parse(&sv(&["--store-cap-mb", "lots"]))
+            .unwrap()
+            .store_cap_mb()
+            .is_err());
     }
 }

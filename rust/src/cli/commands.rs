@@ -259,13 +259,21 @@ pub fn golden(_args: &Args) -> Result<String> {
 }
 
 /// `codr serve` — run the persistent sweep service (blocks until a
-/// `shutdown` request).
+/// `shutdown` request). `--store-cap-mb` bounds the store on disk
+/// (oldest packs evicted first); the vector memo is restored from /
+/// snapshotted to `<store>/memo.snapshot` across restarts.
 pub fn serve(args: &Args) -> Result<String> {
     let store_dir = args.store_dir();
-    let server = Server::bind(args.addr(), &store_dir)?;
+    let cap = args.store_cap_mb()?;
+    let store = ResultStore::open_capped(&store_dir, cap.map(|mb| mb << 20))?;
+    let server = Server::bind_with(args.addr(), store)?;
     // Announce before blocking so scripts can wait for readiness.
+    let cap_note = match cap {
+        Some(mb) => format!(", cap {mb} MiB"),
+        None => String::new(),
+    };
     println!(
-        "codr serve: listening on {} (store: {})",
+        "codr serve: listening on {} (store: {}{cap_note})",
         server.local_addr()?,
         store_dir.display()
     );
@@ -403,7 +411,23 @@ pub fn warm(args: &Args) -> Result<String> {
         None => Arch::all().to_vec(),
     };
     let store = ResultStore::open(args.store_dir())?;
+    // Local warms bracket the sweep with the persistent vector memo, so
+    // repeated `codr warm` processes share transforms the way a
+    // long-running `codr serve` does. Best-effort both ways: a missing
+    // or damaged snapshot is just a cold memo.
+    let snapshot = crate::serve::memo_snapshot_path(store.dir());
+    if let Some(p) = &snapshot {
+        if let Ok(n) = crate::reuse::memo::global().load_snapshot(p) {
+            if n > 0 {
+                eprintln!("memo: restored {n} vectors from {}", p.display());
+            }
+        }
+    }
     let results = run_sweep_with(&models, &groups, &archs, args.seed()?, Some(&store));
+    if let Some(p) = &snapshot {
+        let _ = crate::reuse::memo::global()
+            .save_snapshot(p, crate::reuse::memo::snapshot_cap_bytes());
+    }
     Ok(format!(
         "warm ({}): {}",
         store.dir().display(),

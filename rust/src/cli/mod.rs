@@ -6,7 +6,7 @@
 //! codr simulate --model <name> [--arch <CoDR|UCNN|SCNN>] [opts]
 //! codr compress --model <name> [--seed N]
 //! codr golden [--artifacts DIR] [--seed N]
-//! codr serve [--addr HOST:PORT] [--store DIR]
+//! codr serve [--addr HOST:PORT] [--store DIR] [--store-cap-mb N]
 //! codr submit [--addr HOST:PORT] [grid opts] [--wait]
 //! codr warm [--addr HOST:PORT | --store DIR] [grid opts]
 //! codr bench [--quick] [--out FILE] [grid opts]
@@ -50,6 +50,7 @@ OPTIONS:
     --seed N           Workload seed                (default 42)
     --artifacts DIR    Artifact directory           (default artifacts)
     --store DIR        Result store ($CODR_STORE, default results/store)
+    --store-cap-mb N   serve: store size cap in MiB (oldest packs evicted)
     --addr HOST:PORT   Sweep service address        (default 127.0.0.1:7878)
     --fresh            Ignore the result store for this run
     --wait             submit: poll until the job finishes

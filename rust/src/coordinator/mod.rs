@@ -9,10 +9,13 @@
 //! layer) simulation, so even one sweep point keeps every worker busy.
 //!
 //! [`run_sweep_with`] threads an optional [`ResultStore`] through the
-//! sweep: points already in the store are loaded instead of simulated,
-//! and newly computed points are persisted. [`SweepStats`] reports what
-//! happened — `simulated_layers == 0` is the proof that a warm store
-//! served the whole grid without a single `simulate_layer` call.
+//! sweep: points already in the store are loaded instead of simulated
+//! (format v2 reads one packed group file per (model, group), so a warm
+//! grid of P points across G groups costs G reads, not P), and newly
+//! computed points are persisted into their packs as each one's last
+//! layer completes. [`SweepStats`] reports what happened —
+//! `simulated_layers == 0` is the proof that a warm store served the
+//! whole grid without a single `simulate_layer` call.
 
 pub mod pool;
 

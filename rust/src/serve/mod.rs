@@ -5,10 +5,14 @@
 //! later figure. This module turns that determinism into a system:
 //!
 //! * [`store`] — content-addressed, corruption-tolerant on-disk cache of
-//!   [`crate::sim::ModelResult`]s (versioned JSON, atomic writes);
-//! * [`scheduler`] — diffs a requested grid against the store, batches
-//!   missing points that share a workload, dedups identical in-flight
-//!   requests, and fans out over [`crate::coordinator::pool`];
+//!   [`crate::sim::ModelResult`]s (packed per-(model, group, seed) group
+//!   files, per-entry integrity checks, atomic writes, read-through v1
+//!   migration, optional size cap with oldest-first eviction);
+//! * [`scheduler`] — diffs a requested grid against the store (one pack
+//!   read per (model, group)), batches missing points that share a
+//!   workload, dedups identical in-flight requests with per-point
+//!   streaming claim release, and fans out over
+//!   [`crate::coordinator::pool`];
 //! * [`server`] / [`proto`] — `codr serve`, a long-running TCP service
 //!   speaking line-delimited JSON (`submit` / `status` / `result` /
 //!   `warm`), with `codr submit` / `codr warm` as clients.
@@ -24,8 +28,8 @@ pub mod store;
 
 pub use proto::{GridRequest, DEFAULT_ADDR};
 pub use scheduler::Scheduler;
-pub use server::Server;
-pub use store::{CacheKey, LoadOutcome, ResultStore, STORE_FORMAT_VERSION};
+pub use server::{memo_snapshot_path, Server};
+pub use store::{CacheKey, LoadOutcome, ResultStore, StoreStats, STORE_FORMAT_VERSION};
 
 use std::path::PathBuf;
 

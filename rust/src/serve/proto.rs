@@ -12,9 +12,18 @@
 //! ← {"ok":true,"job":1}
 //! → {"verb":"status","job":1}
 //! ← {"ok":true,"state":"running"}
+//! → {"verb":"status"}
+//! ← {"ok":true,"jobs":1,"running":0,"store_entries":6,
+//!    "store":{"entries":6,"packed_files":2,"v1_files":0,"bytes":...,"cap_bytes":null},
+//!    "memo":{"entries":...,"hits":...,"misses":...,"evictions":...}}
 //! → {"verb":"result","model":"tiny","group":"Orig","arch":"CoDR","seed":42}
 //! ← {"ok":true,"cycles":...,"energy_uj":...,"bits_per_weight":...}
 //! ```
+//!
+//! The server-wide `status` reply keeps the flat `store_entries` field
+//! for pre-v2 clients; the structured `store` / `memo` objects are the
+//! forward surface (store occupancy in packed-v2 terms, memo counters
+//! including evictions).
 
 use crate::coordinator::{Arch, SweepStats};
 use crate::models::{parse_group_list, parse_model_list, Model, SweepGroup};

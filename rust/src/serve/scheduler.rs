@@ -1,10 +1,12 @@
 //! Incremental grid scheduler: diff a requested (model × group × arch)
 //! grid against the result store and simulate only what is missing.
 //!
-//! Three properties matter here:
+//! Four properties matter here:
 //!
 //! 1. **Incrementality** — points already in the store are loaded, not
-//!    simulated; corrupt entries are recomputed and overwritten.
+//!    simulated; corrupt entries are recomputed and overwritten. The
+//!    diff reads one *pack* per (model, group) ([`ResultStore::load_group`]),
+//!    not one file per point.
 //! 2. **Workload batching** — missing points that share a (model, group)
 //!    pair are dispatched as one batch so the synthetic weights are
 //!    generated once and reused by every design, mirroring the
@@ -14,6 +16,11 @@
 //!    first instead of burning a second simulation; claims are released
 //!    on unwind, so a failed claimant degrades to the waiter computing
 //!    the point itself, never to a hung server.
+//! 4. **Streaming claim release** — the per-(arch, layer) fan-out keeps
+//!    per-point completion counters, so the worker finishing a point's
+//!    *last* layer assembles it, persists it, and releases its claim
+//!    right there. A concurrent request waiting on one point wakes as
+//!    soon as that point is done, not after the claimant's whole grid.
 //!
 //! Results are returned in (model × group) then arch order — identical to
 //! the storeless sweep, so figure output is byte-for-byte the same
@@ -26,6 +33,7 @@ use crate::models::{Model, SweepGroup, Workload};
 use crate::reuse::memo;
 use crate::sim::{simulate_model, Accelerator, LayerResult, ModelResult};
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
@@ -42,7 +50,17 @@ struct Point {
 struct Batch<'a> {
     model: &'a Model,
     group: SweepGroup,
-    points: Vec<Point>,
+}
+
+/// Per-point assembly state for the layer fan-out: workers drop their
+/// layer results into `layers`, and whoever decrements `remaining` to
+/// zero assembles/persists the point and releases its claim.
+struct PointSlot {
+    bi: usize,
+    point: Point,
+    layers: Vec<Mutex<Option<LayerResult>>>,
+    remaining: AtomicUsize,
+    result: Mutex<Option<ModelResult>>,
 }
 
 /// Long-lived scheduler over one result store. `codr serve` keeps a
@@ -54,16 +72,39 @@ pub struct Scheduler {
     released: Condvar,
 }
 
-/// Releases claimed fingerprints even if the claimant unwinds.
+/// Tracks claimed fingerprints; releases the remainder even if the
+/// claimant unwinds. [`Self::release_one`] streams individual claims
+/// back mid-flight (and is safe to race with the final drop — a
+/// fingerprint leaves the list exactly once).
 struct ClaimGuard<'a> {
     sched: &'a Scheduler,
-    claims: Vec<u64>,
+    claims: Mutex<Vec<u64>>,
+}
+
+impl ClaimGuard<'_> {
+    /// Release one claim now (point finished or turned out to be a hit),
+    /// waking every waiter.
+    fn release_one(&self, fp: u64) {
+        {
+            let mut claims = self.claims.lock().unwrap();
+            let Some(i) = claims.iter().position(|&c| c == fp) else {
+                return; // already released
+            };
+            claims.swap_remove(i);
+        }
+        self.sched.inflight.lock().unwrap().remove(&fp);
+        self.sched.released.notify_all();
+    }
 }
 
 impl Drop for ClaimGuard<'_> {
     fn drop(&mut self) {
+        let claims: Vec<u64> = std::mem::take(self.claims.get_mut().unwrap());
+        if claims.is_empty() {
+            return;
+        }
         let mut inflight = self.sched.inflight.lock().unwrap();
-        for c in &self.claims {
+        for c in &claims {
             inflight.remove(c);
         }
         drop(inflight);
@@ -100,21 +141,28 @@ impl Scheduler {
         let mut found: HashMap<(usize, usize, usize), ModelResult> = HashMap::new();
         let mut misses: Vec<Point> = Vec::new();
 
-        // Phase 1: diff the grid against the store.
+        // Phase 1: diff the grid against the store — one packed-file read
+        // per (model, group) covers every arch of that point.
         for (mi, model) in models.iter().enumerate() {
             for (gi, group) in groups.iter().enumerate() {
-                for (ai, arch) in archs.iter().enumerate() {
+                let keys: Vec<CacheKey> = archs
+                    .iter()
+                    .map(|arch| {
+                        CacheKey::for_point(
+                            model.name,
+                            group,
+                            arch.name(),
+                            &arch.build().tile_config(),
+                            &mem,
+                            seed,
+                        )
+                    })
+                    .collect();
+                let outcomes = self.store.load_group(&keys);
+                for (ai, (key, outcome)) in keys.into_iter().zip(outcomes).enumerate() {
                     stats.requested += 1;
-                    let key = CacheKey::for_point(
-                        model.name,
-                        group,
-                        arch.name(),
-                        &arch.build().tile_config(),
-                        &mem,
-                        seed,
-                    );
                     let point = Point { mi, gi, ai, key };
-                    match self.store.load(&point.key) {
+                    match outcome {
                         LoadOutcome::Hit(r) => {
                             stats.cache_hits += 1;
                             found.insert((mi, gi, ai), *r);
@@ -131,17 +179,18 @@ impl Scheduler {
 
         // Phase 2: claim what no other request is already computing. The
         // guard releases claims even if a later phase unwinds.
-        let mut guard = ClaimGuard {
+        let guard = ClaimGuard {
             sched: self,
-            claims: Vec::new(),
+            claims: Mutex::new(Vec::new()),
         };
         let mut claimed: Vec<Point> = Vec::new();
         let mut waited: Vec<Point> = Vec::new();
         {
             let mut inflight = self.inflight.lock().unwrap();
+            let mut claims = guard.claims.lock().unwrap();
             for p in misses {
                 if inflight.insert(p.key.fingerprint) {
-                    guard.claims.push(p.key.fingerprint);
+                    claims.push(p.key.fingerprint);
                     claimed.push(p);
                 } else {
                     waited.push(p);
@@ -159,9 +208,7 @@ impl Scheduler {
             match self.store.load(&p.key) {
                 LoadOutcome::Hit(r) => {
                     stats.cache_hits += 1;
-                    self.inflight.lock().unwrap().remove(&p.key.fingerprint);
-                    self.released.notify_all();
-                    guard.claims.retain(|&f| f != p.key.fingerprint);
+                    guard.release_one(p.key.fingerprint);
                     found.insert((p.mi, p.gi, p.ai), *r);
                 }
                 _ => to_compute.push(p),
@@ -172,74 +219,94 @@ impl Scheduler {
         // workload is synthesized once, then fan the *layers* out — one
         // pool task per (point, layer). This is what lets a narrow grid
         // (e.g. a single-model `warm` with three archs) use every worker
-        // instead of running the designs serially on one.
+        // instead of running the designs serially on one. Each point
+        // carries a completion counter: the worker that finishes its
+        // last layer assembles it, persists it, and releases its claim
+        // immediately, so concurrent requests waiting on one of our
+        // points wake per point, not after this whole grid (ROADMAP
+        // "Streaming claim release" — closed).
         if !to_compute.is_empty() {
             let mut batches: Vec<Batch> = Vec::new();
             let mut by_pair: HashMap<(usize, usize), usize> = HashMap::new();
+            let mut pending: Vec<(usize, Point)> = Vec::new();
             for p in to_compute {
-                let slot = *by_pair.entry((p.mi, p.gi)).or_insert_with(|| {
+                let bi = *by_pair.entry((p.mi, p.gi)).or_insert_with(|| {
                     batches.push(Batch {
                         model: &models[p.mi],
                         group: groups[p.gi],
-                        points: Vec::new(),
                     });
                     batches.len() - 1
                 });
-                batches[slot].points.push(p);
+                pending.push((bi, p));
             }
             let workloads = pool::parallel_map(&batches, |batch| {
                 let (unique, density) = batch.group.knobs();
                 Workload::generate(batch.model, unique, density, seed)
             });
-            let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
-            for (bi, batch) in batches.iter().enumerate() {
-                let n_layers = workloads[bi].conv_layers().count();
-                for pi in 0..batch.points.len() {
-                    for li in 0..n_layers {
-                        tasks.push((bi, pi, li));
+            let slots: Vec<PointSlot> = pending
+                .into_iter()
+                .map(|(bi, point)| {
+                    let n_layers = workloads[bi].conv_layers().count();
+                    PointSlot {
+                        bi,
+                        point,
+                        layers: (0..n_layers).map(|_| Mutex::new(None)).collect(),
+                        remaining: AtomicUsize::new(n_layers),
+                        result: Mutex::new(None),
                     }
+                })
+                .collect();
+            let mut tasks: Vec<(usize, usize)> = Vec::new();
+            for (si, slot) in slots.iter().enumerate() {
+                for li in 0..slot.layers.len() {
+                    tasks.push((si, li));
                 }
             }
-            let layer_results = pool::parallel_map(&tasks, |&(bi, pi, li)| {
-                let acc = archs[batches[bi].points[pi].ai].build();
-                let (spec, w) = workloads[bi]
+            pool::parallel_map(&tasks, |&(si, li)| {
+                let slot = &slots[si];
+                let acc = archs[slot.point.ai].build();
+                let (spec, w) = workloads[slot.bi]
                     .conv_layers()
                     .nth(li)
                     .expect("task layer index");
-                acc.simulate_layer(spec, w)
-            });
-            // Reassemble per point (tasks are in (batch, point, layer)
-            // order and parallel_map preserves it), persist, and release
-            // each claim as its point is saved. Note the trade against
-            // the pre-fan-out code: claims release after the whole
-            // parallel_map barrier rather than per point mid-flight, so
-            // a concurrent request waiting on one of our points waits
-            // for this grid's compute to finish — in exchange the grid
-            // itself finishes far sooner (per-layer parallelism). See
-            // ROADMAP "Streaming claim release".
-            let mut remaining = layer_results.into_iter();
-            for (bi, batch) in batches.iter().enumerate() {
-                let n_layers = workloads[bi].conv_layers().count();
-                for p in &batch.points {
-                    let layers: Vec<LayerResult> = remaining.by_ref().take(n_layers).collect();
-                    let result = ModelResult {
-                        arch: archs[p.ai].name().to_string(),
-                        model: batch.model.name.to_string(),
-                        group: batch.group.label(),
-                        layers,
-                    };
-                    if let Err(e) = self.store.save(&p.key, &result) {
-                        eprintln!("warn: failed to persist {}: {e:#}", p.key.file_stem());
+                let lr = acc.simulate_layer(spec, w);
+                *slot.layers[li].lock().unwrap() = Some(lr);
+                if slot.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    let result = assemble(slot, &batches, archs);
+                    if let Err(e) = self.store.save(&slot.point.key, &result) {
+                        eprintln!(
+                            "warn: failed to persist {}: {e:#}",
+                            slot.point.key.file_stem()
+                        );
                     }
-                    self.inflight.lock().unwrap().remove(&p.key.fingerprint);
-                    self.released.notify_all();
-                    stats.computed += 1;
-                    stats.simulated_layers += result.layers.len();
-                    found.insert((p.mi, p.gi, p.ai), result);
+                    // Save attempt done (either way): waiters may now
+                    // read the store or take the point over themselves.
+                    guard.release_one(slot.point.key.fingerprint);
+                    *slot.result.lock().unwrap() = Some(result);
                 }
+            });
+            for slot in &slots {
+                let assembled = slot.result.lock().unwrap().take();
+                let result = assembled.unwrap_or_else(|| {
+                    // A zero-conv-layer model fans out no tasks; its
+                    // (empty) result is assembled here and persisted for
+                    // parity with the seed behavior.
+                    let result = assemble(slot, &batches, archs);
+                    if let Err(e) = self.store.save(&slot.point.key, &result) {
+                        eprintln!(
+                            "warn: failed to persist {}: {e:#}",
+                            slot.point.key.file_stem()
+                        );
+                    }
+                    guard.release_one(slot.point.key.fingerprint);
+                    result
+                });
+                stats.computed += 1;
+                stats.simulated_layers += result.layers.len();
+                found.insert((slot.point.mi, slot.point.gi, slot.point.ai), result);
             }
         }
-        drop(guard); // release remaining claims, wake waiters
+        drop(guard); // release any remaining claims, wake waiters
 
         // Phase 4: points another request was already computing — wait for
         // the claim to clear, then read the store. If the claimant failed
@@ -297,7 +364,7 @@ impl Scheduler {
                     }
                     let guard = ClaimGuard {
                         sched: self,
-                        claims: vec![p.key.fingerprint],
+                        claims: Mutex::new(vec![p.key.fingerprint]),
                     };
                     let group = groups[p.gi];
                     let (unique, density) = group.knobs();
@@ -317,9 +384,25 @@ impl Scheduler {
     }
 }
 
+/// Build a point's [`ModelResult`] from its filled layer slots.
+fn assemble(slot: &PointSlot, batches: &[Batch], archs: &[Arch]) -> ModelResult {
+    let layers: Vec<LayerResult> = slot
+        .layers
+        .iter()
+        .map(|m| m.lock().unwrap().take().expect("assembled layer"))
+        .collect();
+    ModelResult {
+        arch: archs[slot.point.ai].name().to_string(),
+        model: batches[slot.bi].model.name.to_string(),
+        group: batches[slot.bi].group.label(),
+        layers,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::run_sweep;
     use crate::models::tiny_cnn;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
@@ -346,6 +429,10 @@ mod tests {
         assert_eq!(cold.stats.computed, 6);
         assert_eq!(cold.stats.cache_hits, 0);
         assert!(cold.stats.simulated_layers > 0);
+        assert!(
+            sched.inflight.lock().unwrap().is_empty(),
+            "every claim must be released by the end of the grid"
+        );
 
         let warm = sched.run_grid(&models, &groups, &archs, 11);
         assert_eq!(warm.stats.cache_hits, 6);
@@ -415,6 +502,105 @@ mod tests {
         // Every point was computed exactly once across all four requests
         // (the rest were cache hits or waited on the in-flight claimant).
         assert_eq!(total_computed.load(Ordering::Relaxed), 3);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    /// Two concurrent requests sharing one point (one a wide grid, one a
+    /// single point): the shared point is computed exactly once, the
+    /// narrow request always completes with the right result, and the
+    /// streaming release means it never has to outlive the wide grid's
+    /// barrier to do so (the old code woke it only after the whole
+    /// batch-set's parallel map).
+    #[test]
+    fn narrow_request_sharing_a_point_with_a_wide_grid() {
+        let store = temp_store("stream");
+        let sched = Arc::new(Scheduler::new(store.clone()));
+        let models = Arc::new([tiny_cnn()]);
+        let groups = [
+            SweepGroup::Original,
+            SweepGroup::Density(75),
+            SweepGroup::Density(50),
+            SweepGroup::Density(25),
+        ];
+
+        let wide = {
+            let sched = Arc::clone(&sched);
+            let models = Arc::clone(&models);
+            std::thread::spawn(move || sched.run_grid(&models[..], &groups, &Arch::all(), 21))
+        };
+        let narrow = {
+            let sched = Arc::clone(&sched);
+            let models = Arc::clone(&models);
+            std::thread::spawn(move || {
+                sched.run_grid(&models[..], &[SweepGroup::Original], &[Arch::Codr], 21)
+            })
+        };
+        let wide = wide.join().unwrap();
+        let narrow = narrow.join().unwrap();
+        assert_eq!(wide.results.len(), 12);
+        assert_eq!(narrow.results.len(), 1);
+        // Exactly-once across both requests, however the race fell.
+        assert_eq!(wide.stats.computed + narrow.stats.computed, 12);
+        // The shared point is identical from both vantage points and
+        // equal to the storeless truth.
+        let shared = wide
+            .get("tiny", SweepGroup::Original, Arch::Codr)
+            .expect("wide grid covers the shared point");
+        assert_eq!(&narrow.results[0], shared);
+        let fresh = run_sweep(&models[..], &[SweepGroup::Original], &[Arch::Codr], 21);
+        assert_eq!(narrow.results[0], fresh.results[0]);
+        assert!(sched.inflight.lock().unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    /// A claimant that cannot persist anything (its pack path is blocked,
+    /// so every save fails) must leave waiters able to claim and compute
+    /// the point themselves — never a hung server, never a corrupt hit.
+    #[test]
+    fn waiters_recover_when_claimant_cannot_persist() {
+        let store = temp_store("nopersist");
+        let models = Arc::new([tiny_cnn()]);
+        let key = CacheKey::for_point(
+            "tiny",
+            &SweepGroup::Original,
+            Arch::Codr.name(),
+            &Arch::Codr.build().tile_config(),
+            &MemConfig::default(),
+            13,
+        );
+        // A non-empty directory at the pack path makes the atomic rename
+        // fail for every save of this point.
+        std::fs::create_dir_all(store.pack_path_for(&key).join("blocker")).unwrap();
+
+        let sched = Arc::new(Scheduler::new(store.clone()));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let sched = Arc::clone(&sched);
+            let models = Arc::clone(&models);
+            handles.push(std::thread::spawn(move || {
+                sched.run_grid(&models[..], &[SweepGroup::Original], &[Arch::Codr], 13)
+            }));
+        }
+        let results: Vec<SweepResults> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let fresh = run_sweep(&models[..], &[SweepGroup::Original], &[Arch::Codr], 13);
+        for r in &results {
+            assert_eq!(r.results.len(), 1);
+            assert_eq!(r.results[0], fresh.results[0], "never a corrupt or empty hit");
+        }
+        // Nothing could persist, so each request simulated the point
+        // itself (a waiter that found no store entry after the claim
+        // cleared took the computation over).
+        let total: usize = results.iter().map(|r| r.stats.computed).sum();
+        assert_eq!(total, 2);
+        assert!(sched.inflight.lock().unwrap().is_empty(), "no leaked claims");
+        // And the failed saves left no temp files behind.
+        let leftovers: Vec<String> = std::fs::read_dir(store.dir())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp-"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
         let _ = std::fs::remove_dir_all(store.dir());
     }
 }

@@ -17,6 +17,7 @@ use super::store::{CacheKey, LoadOutcome, ResultStore};
 use crate::arch::MemConfig;
 use crate::coordinator::{Arch, SweepStats};
 use crate::models::parse_group_list;
+use crate::reuse::memo;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -49,11 +50,27 @@ pub struct Server {
     shared: Arc<Shared>,
 }
 
+/// Where the persistent memo snapshot for a store lives, honoring
+/// `CODR_MEMO_SNAPSHOT` (`off`/`0`/empty disables, any other value is a
+/// path override; unset defaults to `<store>/memo.snapshot`).
+pub fn memo_snapshot_path(store_dir: &Path) -> Option<std::path::PathBuf> {
+    match std::env::var("CODR_MEMO_SNAPSHOT") {
+        Ok(v) if v.is_empty() || v == "off" || v == "0" => None,
+        Ok(v) => Some(std::path::PathBuf::from(v)),
+        Err(_) => Some(store_dir.join("memo.snapshot")),
+    }
+}
+
 impl Server {
     /// Bind the service. `addr` may use port 0 to pick a free port (the
     /// tests do); `store_dir` is created if missing.
     pub fn bind(addr: &str, store_dir: &Path) -> Result<Server> {
-        let store = ResultStore::open(store_dir)?;
+        Self::bind_with(addr, ResultStore::open(store_dir)?)
+    }
+
+    /// Bind the service over an already-opened store (the CLI uses this
+    /// to apply `--store-cap-mb`).
+    pub fn bind_with(addr: &str, store: ResultStore) -> Result<Server> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding codr serve to {addr}"))?;
         Ok(Server {
@@ -73,12 +90,33 @@ impl Server {
 
     /// Accept-and-serve until a `shutdown` request arrives. Consumes the
     /// server; each connection runs on its own thread.
+    ///
+    /// The persistent vector memo brackets the accept loop: a snapshot
+    /// from a previous process is restored lazily (on a background
+    /// thread — binding and first requests never wait on it; until it
+    /// lands, lookups simply miss and recompute), and the memo is
+    /// snapshotted back on clean shutdown so the next process starts
+    /// warm.
     pub fn run(self) -> Result<()> {
+        let snapshot = memo_snapshot_path(self.shared.sched.store().dir());
+        if let Some(path) = snapshot.clone() {
+            std::thread::spawn(move || match memo::global().load_snapshot(&path) {
+                Ok(n) if n > 0 => eprintln!("memo: restored {n} vectors from {}", path.display()),
+                Ok(_) => {}
+                Err(e) => eprintln!("warn: memo snapshot unusable ({e:#}); starting cold"),
+            });
+        }
         self.listener
             .set_nonblocking(true)
             .context("setting listener nonblocking")?;
         loop {
             if self.shared.stop.load(Ordering::SeqCst) {
+                if let Some(path) = &snapshot {
+                    match memo::global().save_snapshot(path, memo::snapshot_cap_bytes()) {
+                        Ok(n) => eprintln!("memo: snapshotted {n} vectors to {}", path.display()),
+                        Err(e) => eprintln!("warn: failed to snapshot memo: {e:#}"),
+                    }
+                }
                 return Ok(());
             }
             match self.listener.accept() {
@@ -152,18 +190,18 @@ fn handle_request(msg: &Json, shared: &Arc<Shared>) -> Json {
 }
 
 /// `warm`: run the requested grid synchronously, reply with stats.
+/// Store occupancy is deliberately NOT included here: counting packed
+/// entries parses every pack file (an O(store-bytes) walk that belongs
+/// on the `status` path, not on every warm request).
 fn warm(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     let grid = GridRequest::from_json(msg)?;
     let results = shared
         .sched
         .run_grid(&grid.models, &grid.groups, &grid.archs, grid.seed);
-    Ok(ok_response(vec![
-        ("stats".into(), stats_to_json(&results.stats)),
-        (
-            "store_entries".into(),
-            Json::usize(shared.sched.store().len()),
-        ),
-    ]))
+    Ok(ok_response(vec![(
+        "stats".into(),
+        stats_to_json(&results.stats),
+    )]))
 }
 
 /// `submit`: run the grid on a worker thread, reply immediately with a
@@ -241,12 +279,40 @@ fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
         .values()
         .filter(|s| matches!(s, JobState::Running))
         .count();
+    let store = shared.sched.store();
+    let st = store.stats();
+    let cache = memo::global();
+    let (memo_hits, memo_misses) = cache.counters();
     Ok(ok_response(vec![
         ("jobs".into(), Json::usize(jobs.len())),
         ("running".into(), Json::usize(running)),
+        // Kept for pre-v2 clients; the structured `store` object is the
+        // forward surface.
+        ("store_entries".into(), Json::usize(st.entries)),
         (
-            "store_entries".into(),
-            Json::usize(shared.sched.store().len()),
+            "store".into(),
+            Json::Obj(vec![
+                ("entries".into(), Json::usize(st.entries)),
+                ("packed_files".into(), Json::usize(st.packed_files)),
+                ("v1_files".into(), Json::usize(st.v1_files)),
+                ("bytes".into(), Json::u64(st.bytes)),
+                (
+                    "cap_bytes".into(),
+                    match store.cap_bytes() {
+                        Some(b) => Json::u64(b),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+        ),
+        (
+            "memo".into(),
+            Json::Obj(vec![
+                ("entries".into(), Json::usize(cache.len())),
+                ("hits".into(), Json::u64(memo_hits)),
+                ("misses".into(), Json::u64(memo_misses)),
+                ("evictions".into(), Json::u64(cache.evictions())),
+            ]),
         ),
     ]))
 }

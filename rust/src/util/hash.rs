@@ -4,8 +4,26 @@
 //! against adversarial keys, which is fine here: the only user is the
 //! weight-vector memo, whose keys are verified byte-for-byte by the map's
 //! `Eq` on lookup, so a collision can never alias two different vectors.
+//!
+//! [`fnv1a64`] is the *stable* companion: unlike the Fx mixer it is a
+//! published algorithm with fixed test vectors, so it is safe to persist
+//! (store fingerprints, packed-entry checks, memo-snapshot checksums)
+//! and compare across processes and releases.
 
 use std::hash::{BuildHasher, Hasher};
+
+/// 64-bit FNV-1a — stable, dependency-free content hash. Used for store
+/// cache-key fingerprints, packed-entry integrity checks, and memo
+/// snapshot checksums; never change the constants (on-disk data depends
+/// on them).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
 
 const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
 
@@ -84,6 +102,15 @@ mod tests {
         // distinct even though the padded tail words agree.
         assert_ne!(hash_of(&[1, 0]), hash_of(&[1, 0, 0]));
         assert_ne!(hash_of(&[]), hash_of(&[0]));
+    }
+
+    #[test]
+    fn fnv_reference_vectors() {
+        // Published FNV-1a 64 test vectors — pins the constants that the
+        // on-disk store fingerprints and snapshot checksums depend on.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
     }
 
     #[test]

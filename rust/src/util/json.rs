@@ -66,6 +66,29 @@ impl Json {
         self.get(key).with_context(|| format!("missing field `{key}`"))
     }
 
+    /// Consume an object and extract one field *by value* (first match).
+    /// The packed result store rewrites multi-megabyte group files on
+    /// every save; moving the `entries` subtree out of the parse instead
+    /// of cloning it keeps the read-modify-write cycle allocation-flat.
+    pub fn take(self, key: &str) -> Result<Json> {
+        match self {
+            Json::Obj(pairs) => pairs
+                .into_iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v)
+                .with_context(|| format!("missing field `{key}`")),
+            other => bail!("expected object with field `{key}`, got {other}"),
+        }
+    }
+
+    /// Consume an array into its elements (by value, no clone).
+    pub fn into_arr(self) -> Result<Vec<Json>> {
+        match self {
+            Json::Arr(xs) => Ok(xs),
+            other => bail!("expected array, got {other}"),
+        }
+    }
+
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -487,6 +510,17 @@ mod tests {
         assert_eq!(v.get("c").unwrap().as_str().unwrap(), "x");
         let round = Json::parse(&v.to_string()).unwrap();
         assert_eq!(round, v);
+    }
+
+    #[test]
+    fn take_and_into_arr_move_subtrees() {
+        let v = Json::parse(r#"{"entries":[{"a":1},{"a":2}],"version":2}"#).unwrap();
+        let entries = v.clone().take("entries").unwrap().into_arr().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[1].get("a").unwrap().as_u64().unwrap(), 2);
+        assert!(v.clone().take("absent").is_err());
+        assert!(Json::Null.take("x").is_err());
+        assert!(Json::parse("3").unwrap().into_arr().is_err());
     }
 
     #[test]

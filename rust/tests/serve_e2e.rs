@@ -126,11 +126,23 @@ fn serve_submit_status_result_warm_shutdown() {
     assert!(!ok(&bad_model));
     assert!(bad_model.get("error").unwrap().as_str().unwrap().contains("unknown model"));
 
-    // Server-wide status sees the job table and the populated store.
+    // Server-wide status sees the job table and the populated store —
+    // both the legacy flat counter and the structured v2 objects.
     let status = proto::request(&addr, &obj(&[("verb", Json::str("status"))])).unwrap();
     assert!(ok(&status), "{status}");
     assert_eq!(status.get("jobs").unwrap().as_u64().unwrap(), 1);
     assert_eq!(status.get("store_entries").unwrap().as_u64().unwrap(), 6);
+    let st = status.get("store").unwrap();
+    assert_eq!(st.get("entries").unwrap().as_u64().unwrap(), 6);
+    // 6 points over 2 (model, group, seed) packs → 2 packed files, no v1.
+    assert_eq!(st.get("packed_files").unwrap().as_u64().unwrap(), 2);
+    assert_eq!(st.get("v1_files").unwrap().as_u64().unwrap(), 0);
+    assert!(st.get("bytes").unwrap().as_u64().unwrap() > 0);
+    assert_eq!(st.get("cap_bytes").unwrap(), &Json::Null);
+    let memo = status.get("memo").unwrap();
+    for field in ["entries", "hits", "misses", "evictions"] {
+        assert!(memo.get(field).unwrap().as_u64().is_ok(), "{status}");
+    }
 
     // shutdown stops the accept loop; run() returns cleanly.
     let bye = proto::request(&addr, &obj(&[("verb", Json::str("shutdown"))])).unwrap();

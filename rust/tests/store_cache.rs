@@ -32,6 +32,13 @@ fn warm_store_serves_figures_without_simulating() {
     assert!(cold.stats.simulated_layers > 0);
     assert_eq!(store.len(), 6);
 
+    // Packed layout: 6 points across 2 (model, group, seed) packs means
+    // exactly 2 files on disk, not 6.
+    let stats = store.stats();
+    assert_eq!(stats.packed_files, 2, "{stats:?}");
+    assert_eq!(stats.v1_files, 0, "{stats:?}");
+    assert_eq!(stats.entries, 6, "{stats:?}");
+
     // Warm run: zero simulate_layer calls, per the sweep stats.
     let warm = run_sweep_with(&models, &groups, &Arch::all(), 42, Some(&store));
     assert_eq!(warm.stats.cache_hits, 6);
@@ -53,7 +60,7 @@ fn warm_store_serves_figures_without_simulating() {
 }
 
 #[test]
-fn corrupt_entries_recompute_instead_of_crashing() {
+fn corrupt_packs_and_entries_recompute_instead_of_crashing() {
     let dir = temp_dir("corrupt");
     let store = ResultStore::open(&dir).unwrap();
     let models = [tiny_cnn()];
@@ -62,8 +69,6 @@ fn corrupt_entries_recompute_instead_of_crashing() {
     let cold = run_sweep_with(&models, &groups, &Arch::all(), 7, Some(&store));
     assert_eq!(cold.stats.computed, 3);
 
-    // Vandalize one entry three different ways across three re-runs:
-    // truncation, garbage, and an empty file.
     let key = CacheKey::for_point(
         "tiny",
         &SweepGroup::Original,
@@ -72,21 +77,79 @@ fn corrupt_entries_recompute_instead_of_crashing() {
         &MemConfig::default(),
         7,
     );
-    let path = store.path_for(&key);
-    assert!(path.exists(), "cold run must have persisted the point");
-    let original = std::fs::read_to_string(&path).unwrap();
+    let path = store.pack_path_for(&key);
+    assert!(path.exists(), "cold run must have persisted the pack");
 
+    // File-level vandalism (truncation, garbage, an empty file) takes
+    // the whole pack down: all three entries degrade to Corrupt and
+    // recompute — and the recompute heals the pack.
+    let original = std::fs::read_to_string(&path).unwrap();
     for vandalism in [&original[..original.len() / 3], "}{ not json", ""] {
         std::fs::write(&path, vandalism).unwrap();
         assert!(matches!(store.load(&key), LoadOutcome::Corrupt));
         let rerun = run_sweep_with(&models, &groups, &Arch::all(), 7, Some(&store));
-        assert_eq!(rerun.stats.corrupt, 1, "one corrupt entry detected");
-        assert_eq!(rerun.stats.computed, 1, "only the corrupt point recomputes");
-        assert_eq!(rerun.stats.cache_hits, 2);
+        assert_eq!(rerun.stats.corrupt, 3, "the whole pack is one unit of damage");
+        assert_eq!(rerun.stats.computed, 3);
+        assert_eq!(rerun.stats.cache_hits, 0);
         assert_eq!(rerun.results, cold.results, "recompute restores the data");
-        // The store healed: next load is a clean hit.
         assert!(matches!(store.load(&key), LoadOutcome::Hit(_)));
     }
+
+    // Entry-level vandalism (flip one entry's check hash; the file stays
+    // valid JSON): only that entry recomputes, its siblings stay hits.
+    let healed = std::fs::read_to_string(&path).unwrap();
+    let pos = healed.find("\"check\":").unwrap() + "\"check\":".len();
+    let mut bytes = healed.into_bytes();
+    bytes[pos] = if bytes[pos] == b'9' { b'1' } else { b'9' };
+    std::fs::write(&path, &bytes).unwrap();
+    let rerun = run_sweep_with(&models, &groups, &Arch::all(), 7, Some(&store));
+    assert_eq!(rerun.stats.corrupt, 1, "one damaged entry detected");
+    assert_eq!(rerun.stats.computed, 1, "only the damaged entry recomputes");
+    assert_eq!(rerun.stats.cache_hits, 2, "siblings in the pack survive");
+    assert_eq!(rerun.results, cold.results);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn v1_store_migrates_to_packed_v2_with_hits_not_recomputes() {
+    let dir = temp_dir("v1migrate");
+    let store = ResultStore::open(&dir).unwrap();
+    let models = [tiny_cnn()];
+    let groups = [SweepGroup::Original];
+
+    // Seed a legacy v1-format store: one single-point file per arch,
+    // exactly what a pre-v2 binary (or CODR_STORE_WRITE_V1=1) leaves.
+    let fresh = run_sweep(&models, &groups, &Arch::all(), 7);
+    for arch in Arch::all() {
+        let key = CacheKey::for_point(
+            "tiny",
+            &SweepGroup::Original,
+            arch.name(),
+            &arch.build().tile_config(),
+            &MemConfig::default(),
+            7,
+        );
+        let result = fresh.get("tiny", SweepGroup::Original, arch).unwrap();
+        store.save_v1(&key, result).unwrap();
+    }
+    let before = store.stats();
+    assert_eq!((before.v1_files, before.packed_files), (3, 0));
+
+    // A warm run over the v1 store: every point HITS (no recompute — the
+    // key fingerprints are unchanged across the format bump) and the
+    // directory converges to packed v2 files.
+    let warm = run_sweep_with(&models, &groups, &Arch::all(), 7, Some(&store));
+    assert_eq!(warm.stats.cache_hits, 3, "{:?}", warm.stats);
+    assert_eq!(warm.stats.computed, 0, "{:?}", warm.stats);
+    assert_eq!(warm.stats.simulated_layers, 0);
+    assert_eq!(warm.results, fresh.results, "migrated data is bit-identical");
+    let after = store.stats();
+    assert_eq!(
+        (after.v1_files, after.packed_files, after.entries),
+        (0, 1, 3),
+        "read-through migration must converge the directory"
+    );
 
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -132,10 +195,12 @@ fn seed_and_group_isolate_cache_entries() {
 
     run_sweep_with(&models, &[SweepGroup::Original], &[Arch::Codr], 1, Some(&store));
     // Different seed: distinct point, no false hit.
-    let other_seed = run_sweep_with(&models, &[SweepGroup::Original], &[Arch::Codr], 2, Some(&store));
+    let other_seed =
+        run_sweep_with(&models, &[SweepGroup::Original], &[Arch::Codr], 2, Some(&store));
     assert_eq!(other_seed.stats.cache_hits, 0);
     // Different group: likewise.
-    let other_group = run_sweep_with(&models, &[SweepGroup::Density(25)], &[Arch::Codr], 1, Some(&store));
+    let other_group =
+        run_sweep_with(&models, &[SweepGroup::Density(25)], &[Arch::Codr], 1, Some(&store));
     assert_eq!(other_group.stats.cache_hits, 0);
     // Original point still hits.
     let again = run_sweep_with(&models, &[SweepGroup::Original], &[Arch::Codr], 1, Some(&store));
