@@ -10,7 +10,7 @@ pub struct Args {
     switches: Vec<String>,
 }
 
-const SWITCHES: &[&str] = &["save", "functional", "verbose", "fresh", "wait", "quick"];
+const SWITCHES: &[&str] = &["save", "functional", "verbose", "fresh", "wait", "watch", "quick"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -79,6 +79,23 @@ impl Args {
     /// Serve/submit/warm address (`--addr`, default 127.0.0.1:7878).
     pub fn addr(&self) -> &str {
         self.get("addr").unwrap_or(crate::serve::DEFAULT_ADDR)
+    }
+
+    /// Shutdown drain budget in seconds (`--drain-secs`, default 30).
+    /// Zero is allowed and means "abandon in-flight work immediately".
+    pub fn drain_secs(&self) -> Result<u64> {
+        match self.get("drain-secs") {
+            None => Ok(crate::serve::DEFAULT_DRAIN_SECS),
+            Some(s) => s.parse().context("--drain-secs must be an integer"),
+        }
+    }
+
+    /// Job id for `codr watch` (`--job`).
+    pub fn job(&self) -> Result<u64> {
+        self.get("job")
+            .context("--job required (the id `codr submit` printed)")?
+            .parse()
+            .context("--job must be an integer job id")
     }
 
     /// Result-store size cap in mebibytes (`--store-cap-mb`; `None` =
@@ -156,6 +173,22 @@ mod tests {
         assert_eq!(a.store_dir(), PathBuf::from("/tmp/s"));
         assert_eq!(a.addr(), "127.0.0.1:9");
         assert!(Args::parse(&sv(&["--fresh", "--wait"])).is_ok());
+    }
+
+    #[test]
+    fn drain_and_job_parsing() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.drain_secs().unwrap(), crate::serve::DEFAULT_DRAIN_SECS);
+        assert!(a.job().is_err());
+        let a = Args::parse(&sv(&["--drain-secs", "0", "--job", "7", "--watch"])).unwrap();
+        assert_eq!(a.drain_secs().unwrap(), 0);
+        assert_eq!(a.job().unwrap(), 7);
+        assert!(a.flag("watch"));
+        assert!(Args::parse(&sv(&["--drain-secs", "soon"]))
+            .unwrap()
+            .drain_secs()
+            .is_err());
+        assert!(Args::parse(&sv(&["--job", "first"])).unwrap().job().is_err());
     }
 
     #[test]

@@ -259,14 +259,16 @@ pub fn golden(_args: &Args) -> Result<String> {
 }
 
 /// `codr serve` — run the persistent sweep service (blocks until a
-/// `shutdown` request). `--store-cap-mb` bounds the store on disk
-/// (oldest packs evicted first); the vector memo is restored from /
+/// `shutdown` request, which drains in-flight jobs for up to
+/// `--drain-secs` before exiting). `--store-cap-mb` bounds the store on
+/// disk (oldest packs evicted first); the vector memo is restored from /
 /// snapshotted to `<store>/memo.snapshot` across restarts.
 pub fn serve(args: &Args) -> Result<String> {
     let store_dir = args.store_dir();
     let cap = args.store_cap_mb()?;
     let store = ResultStore::open_capped(&store_dir, cap.map(|mb| mb << 20))?;
-    let server = Server::bind_with(args.addr(), store)?;
+    let mut server = Server::bind_with(args.addr(), store)?;
+    server.set_drain_secs(args.drain_secs()?);
     // Announce before blocking so scripts can wait for readiness.
     let cap_note = match cap {
         Some(mb) => format!(", cap {mb} MiB"),
@@ -347,8 +349,47 @@ fn render_stats(stats: &SweepStats) -> String {
     )
 }
 
-/// `codr submit` — send a grid to a running `codr serve` and poll until
-/// done (with `--wait`) or return the job id immediately.
+/// `codr watch --job N` — attach to a submitted job and stream its
+/// per-point progress (events to stderr, final stats as the result).
+pub fn watch(args: &Args) -> Result<String> {
+    watch_to_end(args.addr(), args.job()?)
+}
+
+/// Attach to `job` on `addr`, narrate `point` events to stderr, and
+/// render the terminal `end` event (shared by `codr watch` and
+/// `codr submit --watch`).
+fn watch_to_end(addr: &str, job: u64) -> Result<String> {
+    let end = proto::watch(addr, job, |ev| {
+        if matches!(ev.get("event").map(|e| e.as_str()), Some(Ok("point"))) {
+            let num = |k: &str| ev.get(k).and_then(|v| v.as_u64().ok()).unwrap_or(0);
+            let txt = |k: &str| {
+                ev.get(k)
+                    .and_then(|v| v.as_str().ok())
+                    .unwrap_or("?")
+                    .to_string()
+            };
+            let hit = matches!(ev.get("cache_hit").and_then(|v| v.as_bool().ok()), Some(true));
+            eprintln!(
+                "job {job}: {}/{} {} {} {}{}",
+                num("done"),
+                num("total"),
+                txt("model"),
+                txt("group"),
+                txt("arch"),
+                if hit { " (cache hit)" } else { "" }
+            );
+        }
+    })?;
+    if let Some(err) = end.get("error").and_then(|e| e.as_str().ok()) {
+        bail!("job {job} failed: {err}");
+    }
+    let stats = proto::stats_from_json(end.field("stats")?)?;
+    Ok(format!("job {job} done: {}", render_stats(&stats)))
+}
+
+/// `codr submit` — send a grid to a running `codr serve`; then stream
+/// progress (`--watch`), poll until done (`--wait`), or return the job
+/// id immediately.
 pub fn submit(args: &Args) -> Result<String> {
     let addr = args.addr();
     let mut fields = vec![("verb".into(), Json::str("submit"))];
@@ -357,10 +398,13 @@ pub fn submit(args: &Args) -> Result<String> {
     expect_ok(&resp)?;
     let job = resp.field("job")?.as_u64()?;
     let points = resp.field("points")?.as_u64()?;
+    if args.flag("watch") {
+        return watch_to_end(addr, job);
+    }
     if !args.flag("wait") {
         return Ok(format!(
-            "submitted job {job} ({points} points) to {addr} — poll with \
-             `codr submit --wait` or the status verb"
+            "submitted job {job} ({points} points) to {addr} — stream with \
+             `codr watch --job {job}`, or poll with `codr submit --wait` / the status verb"
         ));
     }
     loop {
@@ -386,6 +430,10 @@ pub fn submit(args: &Args) -> Result<String> {
                     .unwrap_or("unknown");
                 bail!("job {job} failed: {err}");
             }
+            "expired" => bail!(
+                "job {job} finished but was pruned from the job table before this poll \
+                 (its results are in the store)"
+            ),
             other => bail!("job {job}: unexpected state `{other}`"),
         }
     }
@@ -425,8 +473,7 @@ pub fn warm(args: &Args) -> Result<String> {
     }
     let results = run_sweep_with(&models, &groups, &archs, args.seed()?, Some(&store));
     if let Some(p) = &snapshot {
-        let _ = crate::reuse::memo::global()
-            .save_snapshot(p, crate::reuse::memo::snapshot_cap_bytes());
+        let _ = crate::reuse::memo::global().save_snapshot_if_warm(p);
     }
     Ok(format!(
         "warm ({}): {}",
@@ -798,5 +845,14 @@ mod tests {
         // Port 1 is never listening; the client must error, not hang.
         let a = Args::parse(&sv(&["--addr", "127.0.0.1:1", "--models", "tiny"])).unwrap();
         assert!(submit(&a).is_err());
+    }
+
+    #[test]
+    fn watch_without_server_fails_cleanly() {
+        let a = Args::parse(&sv(&["--addr", "127.0.0.1:1", "--job", "1"])).unwrap();
+        assert!(watch(&a).is_err());
+        // And --job is validated before any connection is attempted.
+        let a = Args::parse(&sv(&["--addr", "127.0.0.1:1"])).unwrap();
+        assert!(watch(&a).unwrap_err().to_string().contains("--job"));
     }
 }

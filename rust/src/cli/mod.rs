@@ -6,8 +6,9 @@
 //! codr simulate --model <name> [--arch <CoDR|UCNN|SCNN>] [opts]
 //! codr compress --model <name> [--seed N]
 //! codr golden [--artifacts DIR] [--seed N]
-//! codr serve [--addr HOST:PORT] [--store DIR] [--store-cap-mb N]
-//! codr submit [--addr HOST:PORT] [grid opts] [--wait]
+//! codr serve [--addr HOST:PORT] [--store DIR] [--store-cap-mb N] [--drain-secs N]
+//! codr submit [--addr HOST:PORT] [grid opts] [--watch | --wait]
+//! codr watch --job N [--addr HOST:PORT]
 //! codr warm [--addr HOST:PORT | --store DIR] [grid opts]
 //! codr bench [--quick] [--out FILE] [grid opts]
 //! codr info
@@ -35,7 +36,9 @@ COMMANDS:
     golden          Verify the CoDR datapath against the XLA golden model
                     (needs a build with --features pjrt)
     serve           Run the persistent sweep service (TCP, line-JSON)
-    submit          Send a sweep grid to a running server (--wait to poll)
+    submit          Send a sweep grid to a running server
+                    (--watch to stream progress, --wait to poll)
+    watch           Stream a submitted job's per-point progress (--job N)
     warm            Populate the result store (locally, or via --addr)
     bench           Time the simulation hot path (reference vs memoized),
                     write BENCH_hotpath.json
@@ -51,8 +54,11 @@ OPTIONS:
     --artifacts DIR    Artifact directory           (default artifacts)
     --store DIR        Result store ($CODR_STORE, default results/store)
     --store-cap-mb N   serve: store size cap in MiB (oldest packs evicted)
+    --drain-secs N     serve: shutdown drain bound in seconds (default 30)
     --addr HOST:PORT   Sweep service address        (default 127.0.0.1:7878)
+    --job N            watch: job id to attach to
     --fresh            Ignore the result store for this run
+    --watch            submit: stream per-point progress until done
     --wait             submit: poll until the job finishes
     --save             Also write reports under results/
     --quick            bench: tiny grid for CI smoke runs
@@ -93,6 +99,7 @@ fn dispatch(argv: &[String]) -> Result<String> {
         "golden" => commands::golden(&Args::parse(rest)?),
         "serve" => commands::serve(&Args::parse(rest)?),
         "submit" => commands::submit(&Args::parse(rest)?),
+        "watch" => commands::watch(&Args::parse(rest)?),
         "warm" => commands::warm(&Args::parse(rest)?),
         "bench" => commands::bench(&Args::parse(rest)?),
         "info" => Ok(commands::info()),

@@ -18,8 +18,10 @@
 //!   the off-by-default `pjrt` feature — the `xla` crate is absent from
 //!   the offline registry);
 //! * the **persistent sweep service** ([`serve`]): a content-addressed
-//!   result store, an incremental grid scheduler, and the `codr serve`
-//!   TCP service with `codr submit` / `codr warm` clients.
+//!   result store (multi-writer safe via advisory pack locks), an
+//!   incremental grid scheduler with per-point progress observation,
+//!   and the `codr serve` TCP service (streaming `watch`, draining
+//!   shutdown) with `codr submit` / `codr watch` / `codr warm` clients.
 //!
 //! The Python side (`python/compile/`) authors the JAX + Pallas golden
 //! model and AOT-lowers it to HLO text in `artifacts/`; it never runs at

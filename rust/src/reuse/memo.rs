@@ -267,6 +267,19 @@ impl VectorCache {
         Ok(written)
     }
 
+    /// [`Self::save_snapshot`] under the standard cap
+    /// ([`snapshot_cap_bytes`]), unless the memo is empty — an empty
+    /// save would clobber a possibly-warm on-disk snapshot with a cold
+    /// one. The single policy point for every snapshot writer (serve
+    /// shutdown, the periodic background writer, local `codr warm`).
+    /// Returns the entries written; `Ok(0)` means skipped-or-nothing.
+    pub fn save_snapshot_if_warm(&self, path: &Path) -> Result<usize> {
+        if self.is_empty() {
+            return Ok(0);
+        }
+        self.save_snapshot(path, snapshot_cap_bytes())
+    }
+
     /// Restore entries from a snapshot written by [`Self::save_snapshot`].
     /// A missing file is an empty snapshot (`Ok(0)`). Damage degrades by
     /// the smallest recoverable unit: a check-mismatched or structurally

@@ -11,11 +11,14 @@
 //! * [`scheduler`] — diffs a requested grid against the store (one pack
 //!   read per (model, group)), batches missing points that share a
 //!   workload, dedups identical in-flight requests with per-point
-//!   streaming claim release, and fans out over
+//!   streaming claim release (observable per point via
+//!   [`scheduler::Progress`]), and fans out over
 //!   [`crate::coordinator::pool`];
 //! * [`server`] / [`proto`] — `codr serve`, a long-running TCP service
-//!   speaking line-delimited JSON (`submit` / `status` / `result` /
-//!   `warm`), with `codr submit` / `codr warm` as clients.
+//!   speaking line-delimited JSON (`submit` / `watch` / `status` /
+//!   `result` / `warm`), with `codr submit` / `codr watch` /
+//!   `codr warm` as clients; `shutdown` drains in-flight jobs and open
+//!   watchers (bounded by `--drain-secs`) before snapshotting the memo.
 //!
 //! The CLI figure path reads through the same store, so
 //! `codr warm --models tiny` followed by `codr figure headline --models
@@ -28,7 +31,7 @@ pub mod store;
 
 pub use proto::{GridRequest, DEFAULT_ADDR};
 pub use scheduler::Scheduler;
-pub use server::{memo_snapshot_path, Server};
+pub use server::{memo_snapshot_path, Server, DEFAULT_DRAIN_SECS};
 pub use store::{CacheKey, LoadOutcome, ResultStore, StoreStats, STORE_FORMAT_VERSION};
 
 use std::path::PathBuf;

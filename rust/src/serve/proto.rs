@@ -18,12 +18,27 @@
 //!    "memo":{"entries":...,"hits":...,"misses":...,"evictions":...}}
 //! → {"verb":"result","model":"tiny","group":"Orig","arch":"CoDR","seed":42}
 //! ← {"ok":true,"cycles":...,"energy_uj":...,"bits_per_weight":...}
+//! → {"verb":"watch","job":1}
+//! ← {"ok":true,"job":1,"watching":true,"total":3}
+//! ← {"event":"point","job":1,"done":1,"total":3,"model":"alexnet",
+//!    "group":"Orig","arch":"CoDR","cache_hit":false}
+//! ← {"event":"point","job":1,"done":2,"total":3,...}
+//! ← {"event":"point","job":1,"done":3,"total":3,...}
+//! ← {"event":"end","job":1,"stats":{...}}
 //! ```
+//!
+//! `watch` is the one verb that **streams**: after the `ok` ack the
+//! server pushes one `point` event per completed sweep point (replaying
+//! history first, so a late watcher sees the same sequence) and a
+//! terminal `end` event whose `stats` equal the job's final `status`
+//! stats (or an `error` field if the job failed / the server shut down
+//! first). After `end`, the connection returns to request/response
+//! framing.
 //!
 //! The server-wide `status` reply keeps the flat `store_entries` field
 //! for pre-v2 clients; the structured `store` / `memo` objects are the
 //! forward surface (store occupancy in packed-v2 terms, memo counters
-//! including evictions).
+//! including evictions, open watcher count).
 
 use crate::coordinator::{Arch, SweepStats};
 use crate::models::{parse_group_list, parse_model_list, Model, SweepGroup};
@@ -181,6 +196,43 @@ pub fn request(addr: &str, msg: &Json) -> Result<Json> {
     let mut reader = BufReader::new(stream);
     write_message(&mut writer, msg)?;
     read_message(&mut reader)?.context("server closed the connection without replying")
+}
+
+/// Client helper: attach to a submitted job and stream its progress.
+/// `on_event` fires for every event (including the terminal `end`,
+/// which is also returned). Errors on transport failure or if the
+/// server refuses the attach (unknown/expired job).
+pub fn watch(addr: &str, job: u64, mut on_event: impl FnMut(&Json)) -> Result<Json> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to codr serve at {addr}"))?;
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(600)))
+        .ok();
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let mut reader = BufReader::new(stream);
+    write_message(
+        &mut writer,
+        &Json::Obj(vec![
+            ("verb".into(), Json::str("watch")),
+            ("job".into(), Json::u64(job)),
+        ]),
+    )?;
+    let ack = read_message(&mut reader)?.context("server closed without acking the watch")?;
+    if !matches!(ack.get("ok").and_then(|o| o.as_bool().ok()), Some(true)) {
+        let err = ack
+            .get("error")
+            .and_then(|e| e.as_str().ok().map(|s| s.to_string()))
+            .unwrap_or_else(|| ack.to_string());
+        anyhow::bail!("watch refused: {err}");
+    }
+    loop {
+        let event = read_message(&mut reader)?.context("server closed the stream mid-watch")?;
+        let is_end = matches!(event.get("event").map(|e| e.as_str()), Some(Ok("end")));
+        on_event(&event);
+        if is_end {
+            return Ok(event);
+        }
+    }
 }
 
 #[cfg(test)]

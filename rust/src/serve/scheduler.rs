@@ -25,6 +25,12 @@
 //! Results are returned in (model × group) then arch order — identical to
 //! the storeless sweep, so figure output is byte-for-byte the same
 //! whether it came from silicon^W simulation or from disk.
+//!
+//! Completed points can additionally be *observed*:
+//! [`Scheduler::run_grid_observed`] fires a [`Progress`] callback the
+//! moment each point resolves (store hit, streaming per-point assembly,
+//! or dedup) — the serve `submit` path publishes these into per-job
+//! broadcast channels, which is what the `watch` verb streams.
 
 use super::store::{CacheKey, LoadOutcome, ResultStore};
 use crate::arch::MemConfig;
@@ -45,6 +51,24 @@ struct Point {
     ai: usize,
     key: CacheKey,
 }
+
+/// One completed grid point, as reported to a [`Progress`] observer the
+/// moment the point resolves (store hit, streaming per-point assembly,
+/// or dedup against another request).
+pub struct PointDone<'a> {
+    pub model: &'a str,
+    pub group: String,
+    pub arch: &'a str,
+    /// The point came from the store (or another request's computation)
+    /// rather than being simulated by this grid run.
+    pub cache_hit: bool,
+}
+
+/// Per-point completion observer. `Sync` because computed points report
+/// from inside the worker pool — the thread finishing a point's last
+/// layer fires the callback right after releasing the point's claim, so
+/// observers see progress as it streams, not after the grid.
+pub type Progress<'a> = &'a (dyn Fn(&PointDone<'_>) + Sync);
 
 /// Missing points sharing one (model, group) — one workload synthesis.
 struct Batch<'a> {
@@ -134,6 +158,30 @@ impl Scheduler {
         archs: &[Arch],
         seed: u64,
     ) -> SweepResults {
+        self.run_grid_observed(models, groups, archs, seed, None)
+    }
+
+    /// [`Self::run_grid`] with a per-point completion observer. The serve
+    /// `submit` path publishes each callback into the job's broadcast
+    /// channel, which is what the `watch` verb streams to clients.
+    pub fn run_grid_observed(
+        &self,
+        models: &[Model],
+        groups: &[SweepGroup],
+        archs: &[Arch],
+        seed: u64,
+        progress: Option<Progress<'_>>,
+    ) -> SweepResults {
+        let emit = |mi: usize, gi: usize, ai: usize, cache_hit: bool| {
+            if let Some(f) = progress {
+                f(&PointDone {
+                    model: models[mi].name,
+                    group: groups[gi].label(),
+                    arch: archs[ai].name(),
+                    cache_hit,
+                });
+            }
+        };
         let t0 = Instant::now();
         let (memo_h0, memo_m0) = memo::global().counters();
         let mem = MemConfig::default();
@@ -165,6 +213,7 @@ impl Scheduler {
                     match outcome {
                         LoadOutcome::Hit(r) => {
                             stats.cache_hits += 1;
+                            emit(mi, gi, ai, true);
                             found.insert((mi, gi, ai), *r);
                         }
                         LoadOutcome::Corrupt => {
@@ -209,6 +258,7 @@ impl Scheduler {
                 LoadOutcome::Hit(r) => {
                     stats.cache_hits += 1;
                     guard.release_one(p.key.fingerprint);
+                    emit(p.mi, p.gi, p.ai, true);
                     found.insert((p.mi, p.gi, p.ai), *r);
                 }
                 _ => to_compute.push(p),
@@ -282,6 +332,7 @@ impl Scheduler {
                     // Save attempt done (either way): waiters may now
                     // read the store or take the point over themselves.
                     guard.release_one(slot.point.key.fingerprint);
+                    emit(slot.point.mi, slot.point.gi, slot.point.ai, false);
                     *slot.result.lock().unwrap() = Some(result);
                 }
             });
@@ -299,6 +350,7 @@ impl Scheduler {
                         );
                     }
                     guard.release_one(slot.point.key.fingerprint);
+                    emit(slot.point.mi, slot.point.gi, slot.point.ai, false);
                     result
                 });
                 stats.computed += 1;
@@ -312,7 +364,8 @@ impl Scheduler {
         // the claim to clear, then read the store. If the claimant failed
         // (no entry appeared), claim and compute the point ourselves.
         for p in waited {
-            let result = self.wait_for_point(&p, models, groups, archs, seed, &mut stats);
+            let (result, deduped) = self.wait_for_point(&p, models, groups, archs, seed, &mut stats);
+            emit(p.mi, p.gi, p.ai, deduped);
             found.insert((p.mi, p.gi, p.ai), result);
         }
 
@@ -334,6 +387,9 @@ impl Scheduler {
         SweepResults { results, stats }
     }
 
+    /// Returns the point's result plus whether it arrived by dedup (the
+    /// claimant persisted it; `true`) or by this request taking the
+    /// computation over (`false`).
     fn wait_for_point(
         &self,
         p: &Point,
@@ -342,7 +398,7 @@ impl Scheduler {
         archs: &[Arch],
         seed: u64,
         stats: &mut SweepStats,
-    ) -> ModelResult {
+    ) -> (ModelResult, bool) {
         loop {
             // Wait until no request holds a claim on this point.
             {
@@ -354,7 +410,7 @@ impl Scheduler {
             match self.store.load(&p.key) {
                 LoadOutcome::Hit(r) => {
                     stats.deduped += 1;
-                    return *r;
+                    return (*r, true);
                 }
                 _ => {
                     // Claimant died or failed to persist: try to take over.
@@ -377,7 +433,7 @@ impl Scheduler {
                     stats.computed += 1;
                     stats.simulated_layers += result.layers.len();
                     drop(guard);
-                    return result;
+                    return (result, false);
                 }
             }
         }

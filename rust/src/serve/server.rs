@@ -7,12 +7,29 @@
 //! warming the same grid simulate it once.
 //!
 //! Verbs: `ping`, `warm` (synchronous sweep), `submit` (async job),
-//! `status` (job or server), `result` (store lookup), `shutdown`.
+//! `watch` (stream a job's per-point progress), `status` (job or
+//! server), `result` (store lookup), `shutdown`.
+//!
+//! **Job progress is a broadcast, not a poll.** Every submitted job owns
+//! a [`JobChannel`]: the scheduler's per-point completion path (the
+//! worker that finishes a point's last layer) publishes one `point`
+//! event into it, and any number of `watch` connections replay the
+//! event history and then stream live until the terminal `end` event.
+//! A watcher that attaches late — even after the job finished — sees
+//! the identical sequence.
+//!
+//! **Shutdown drains.** A `shutdown` request stops intake (new `submit`
+//! and `warm` requests are refused, the accept loop exits), then waits —
+//! bounded by `--drain-secs` — for running jobs to finish, joins their
+//! worker threads, force-closes the channels of anything still running
+//! so watchers terminate, and only then snapshots the memo. Results of
+//! in-flight work are persisted, workers are never orphaned mid-sweep,
+//! and the snapshot is written once, after the memo stopped changing.
 
 use super::proto::{
     error_response, ok_response, read_message, stats_to_json, write_message, GridRequest,
 };
-use super::scheduler::Scheduler;
+use super::scheduler::{PointDone, Scheduler};
 use super::store::{CacheKey, LoadOutcome, ResultStore};
 use crate::arch::MemConfig;
 use crate::coordinator::{Arch, SweepStats};
@@ -20,12 +37,18 @@ use crate::models::parse_group_list;
 use crate::reuse::memo;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
-use std::collections::HashMap;
-use std::io::BufReader;
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Default bound on how long `shutdown` waits for in-flight jobs and
+/// open watchers before abandoning them (`--drain-secs` overrides; 0
+/// skips the wait entirely).
+pub const DEFAULT_DRAIN_SECS: u64 = 30;
 
 /// Progress of one submitted job.
 #[derive(Clone, Debug)]
@@ -35,11 +58,113 @@ enum JobState {
     Failed(String),
 }
 
+/// Per-job broadcast channel: the submit worker publishes one `point`
+/// event per completed sweep point and a terminal `end` event; watchers
+/// replay the buffered history and then block for live events. Events
+/// are buffered for the job's lifetime (a job is at most the paper grid
+/// — tens of points — so the history is small), which is what makes a
+/// late `watch` identical to an early one.
+struct JobChannel {
+    total: usize,
+    inner: Mutex<ChannelInner>,
+    cond: Condvar,
+}
+
+struct ChannelInner {
+    events: Vec<Json>,
+    /// Completed points so far — assigned under the lock, so `done` in
+    /// the event stream is strictly increasing even when pool workers
+    /// finish points concurrently.
+    points: usize,
+    closed: bool,
+}
+
+impl JobChannel {
+    fn new(total: usize) -> JobChannel {
+        JobChannel {
+            total,
+            inner: Mutex::new(ChannelInner {
+                events: Vec::new(),
+                points: 0,
+                closed: false,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Publish one completed point.
+    fn publish_point(&self, job: u64, p: &PointDone<'_>) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return;
+        }
+        inner.points += 1;
+        let event = Json::Obj(vec![
+            ("event".into(), Json::str("point")),
+            ("job".into(), Json::u64(job)),
+            ("done".into(), Json::usize(inner.points)),
+            ("total".into(), Json::usize(self.total)),
+            ("model".into(), Json::str(p.model)),
+            ("group".into(), Json::str(p.group.as_str())),
+            ("arch".into(), Json::str(p.arch)),
+            ("cache_hit".into(), Json::Bool(p.cache_hit)),
+        ]);
+        inner.events.push(event);
+        self.cond.notify_all();
+    }
+
+    /// Append the terminal event and close the channel. Idempotent: the
+    /// first close wins (the drain's force-close never clobbers a real
+    /// `end` that already landed).
+    fn close(&self, end: Json) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return;
+        }
+        inner.events.push(end);
+        inner.closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Event at `cursor`, blocking until it exists. `None` once the
+    /// channel is closed and the history is exhausted.
+    fn next(&self, cursor: usize) -> Option<Json> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if cursor < inner.events.len() {
+                return Some(inner.events[cursor].clone());
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cond.wait(inner).unwrap();
+        }
+    }
+}
+
+/// One submitted job: its state for `status`, its channel for `watch`.
+struct Job {
+    state: JobState,
+    chan: Arc<JobChannel>,
+}
+
 /// Shared server state: the scheduler (store + in-flight claims) plus the
-/// job table.
+/// job table and shutdown bookkeeping.
 struct Shared {
     sched: Scheduler,
-    jobs: Mutex<HashMap<u64, JobState>>,
+    jobs: Mutex<HashMap<u64, Job>>,
+    /// Recently pruned terminal job ids — `status` answers `expired` for
+    /// these instead of `unknown job N`, so a slow poller stops retrying.
+    expired: Mutex<VecDeque<u64>>,
+    /// Handles of submit worker threads, joined by the shutdown drain so
+    /// process exit never orphans a worker mid-sweep.
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Synchronous `warm` sweeps currently running on connection
+    /// threads; the drain waits for these exactly like jobs (they
+    /// simulate and mutate the memo just the same).
+    warms: AtomicUsize,
+    /// Open `watch` streams; the drain waits for them to flush.
+    watchers: AtomicUsize,
     next_job: AtomicU64,
     stop: AtomicBool,
 }
@@ -48,6 +173,7 @@ struct Shared {
 pub struct Server {
     listener: TcpListener,
     shared: Arc<Shared>,
+    drain: Duration,
 }
 
 /// Where the persistent memo snapshot for a store lives, honoring
@@ -60,6 +186,31 @@ pub fn memo_snapshot_path(store_dir: &Path) -> Option<std::path::PathBuf> {
         Err(_) => Some(store_dir.join("memo.snapshot")),
     }
 }
+
+/// Interval between periodic background memo snapshots, honoring
+/// `CODR_MEMO_SNAPSHOT_SECS` (default 300; `0`/`off` disables the
+/// periodic writer — the clean-shutdown snapshot still happens).
+fn memo_snapshot_period() -> Option<Duration> {
+    match std::env::var("CODR_MEMO_SNAPSHOT_SECS") {
+        Ok(v) if v == "0" || v == "off" => None,
+        Ok(v) => v.parse::<u64>().ok().map(Duration::from_secs),
+        Err(_) => Some(Duration::from_secs(300)),
+    }
+}
+
+/// Finished jobs retained for `status` polling; beyond this the oldest
+/// terminal entries are pruned (their ids move to the expired ring).
+/// `CODR_SERVE_MAX_JOBS` overrides for tests.
+fn max_retained_jobs() -> usize {
+    std::env::var("CODR_SERVE_MAX_JOBS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 2)
+        .unwrap_or(256)
+}
+
+/// Pruned terminal ids remembered for `status`/`watch` answers.
+const EXPIRED_RING: usize = 256;
 
 impl Server {
     /// Bind the service. `addr` may use port 0 to pick a free port (the
@@ -78,41 +229,106 @@ impl Server {
             shared: Arc::new(Shared {
                 sched: Scheduler::new(store),
                 jobs: Mutex::new(HashMap::new()),
+                expired: Mutex::new(VecDeque::new()),
+                workers: Mutex::new(Vec::new()),
+                warms: AtomicUsize::new(0),
+                watchers: AtomicUsize::new(0),
                 next_job: AtomicU64::new(1),
                 stop: AtomicBool::new(false),
             }),
+            drain: Duration::from_secs(DEFAULT_DRAIN_SECS),
         })
+    }
+
+    /// Bound on how long `shutdown` drains in-flight jobs and watchers
+    /// (`--drain-secs`; 0 abandons them immediately).
+    pub fn set_drain_secs(&mut self, secs: u64) {
+        self.drain = Duration::from_secs(secs);
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
         self.listener.local_addr().context("reading bound address")
     }
 
-    /// Accept-and-serve until a `shutdown` request arrives. Consumes the
-    /// server; each connection runs on its own thread.
+    /// Accept-and-serve until a `shutdown` request arrives, then drain
+    /// and snapshot. Consumes the server; each connection runs on its
+    /// own thread.
     ///
     /// The persistent vector memo brackets the accept loop: a snapshot
     /// from a previous process is restored lazily (on a background
     /// thread — binding and first requests never wait on it; until it
-    /// lands, lookups simply miss and recompute), and the memo is
-    /// snapshotted back on clean shutdown so the next process starts
-    /// warm.
+    /// lands, lookups simply miss and recompute), a periodic writer
+    /// re-snapshots every `CODR_MEMO_SNAPSHOT_SECS` so a crash loses at
+    /// most one interval of warm state, and a final snapshot lands on
+    /// clean shutdown *after* the drain (so it includes everything the
+    /// drained jobs computed). The restore thread is joined before any
+    /// save, and an empty memo is never saved — a fast shutdown cannot
+    /// clobber a warm on-disk snapshot with a cold one.
     pub fn run(self) -> Result<()> {
         let snapshot = memo_snapshot_path(self.shared.sched.store().dir());
-        if let Some(path) = snapshot.clone() {
-            std::thread::spawn(move || match memo::global().load_snapshot(&path) {
-                Ok(n) if n > 0 => eprintln!("memo: restored {n} vectors from {}", path.display()),
-                Ok(_) => {}
-                Err(e) => eprintln!("warn: memo snapshot unusable ({e:#}); starting cold"),
-            });
-        }
+        let restore_done = Arc::new(AtomicBool::new(snapshot.is_none()));
+        let restore = snapshot.clone().map(|path| {
+            let done = Arc::clone(&restore_done);
+            std::thread::spawn(move || {
+                match memo::global().load_snapshot(&path) {
+                    Ok(n) if n > 0 => {
+                        eprintln!("memo: restored {n} vectors from {}", path.display())
+                    }
+                    Ok(_) => {}
+                    Err(e) => eprintln!("warn: memo snapshot unusable ({e:#}); starting cold"),
+                }
+                done.store(true, Ordering::SeqCst);
+            })
+        });
+        let periodic = match (&snapshot, memo_snapshot_period()) {
+            (Some(path), Some(period)) => {
+                let path = path.clone();
+                let shared = Arc::clone(&self.shared);
+                let restored = Arc::clone(&restore_done);
+                Some(std::thread::spawn(move || {
+                    let mut last = Instant::now();
+                    while !shared.stop.load(Ordering::SeqCst) {
+                        std::thread::sleep(Duration::from_millis(200));
+                        if last.elapsed() < period {
+                            continue;
+                        }
+                        last = Instant::now();
+                        // Wait for the restore to land first — saving a
+                        // pre-restore memo over the snapshot being
+                        // restored would shed its warm state.
+                        if !restored.load(Ordering::SeqCst) {
+                            continue;
+                        }
+                        match memo::global().save_snapshot_if_warm(&path) {
+                            Ok(0) => {}
+                            Ok(n) => eprintln!(
+                                "memo: periodic snapshot of {n} vectors to {}",
+                                path.display()
+                            ),
+                            Err(e) => eprintln!("warn: periodic memo snapshot failed: {e:#}"),
+                        }
+                    }
+                }))
+            }
+            _ => None,
+        };
         self.listener
             .set_nonblocking(true)
             .context("setting listener nonblocking")?;
         loop {
             if self.shared.stop.load(Ordering::SeqCst) {
+                self.drain_inflight();
+                if let Some(h) = restore {
+                    let _ = h.join();
+                }
+                if let Some(h) = periodic {
+                    let _ = h.join();
+                }
                 if let Some(path) = &snapshot {
-                    match memo::global().save_snapshot(path, memo::snapshot_cap_bytes()) {
+                    match memo::global().save_snapshot_if_warm(path) {
+                        Ok(0) => {
+                            eprintln!("memo: empty at shutdown; keeping the existing snapshot")
+                        }
                         Ok(n) => eprintln!("memo: snapshotted {n} vectors to {}", path.display()),
                         Err(e) => eprintln!("warn: failed to snapshot memo: {e:#}"),
                     }
@@ -135,6 +351,89 @@ impl Server {
             }
         }
     }
+
+    /// The shutdown drain, bounded by `--drain-secs`: wait for running
+    /// jobs to reach a terminal state, join their worker threads, force-
+    /// close the channels of anything abandoned so watchers terminate,
+    /// then give open watchers a moment to flush.
+    fn drain_inflight(&self) {
+        let shared = &self.shared;
+        let deadline = Instant::now() + self.drain;
+        loop {
+            let running = shared
+                .jobs
+                .lock()
+                .unwrap()
+                .values()
+                .filter(|j| matches!(j.state, JobState::Running))
+                .count();
+            let warming = shared.warms.load(Ordering::SeqCst);
+            if running == 0 && warming == 0 {
+                break;
+            }
+            if Instant::now() >= deadline {
+                eprintln!(
+                    "warn: drain deadline passed with {running} job(s) and {warming} warm(s) \
+                     still running; abandoning them"
+                );
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // Join worker threads. After the wait above a worker is either
+        // done or abandoned; `join` is only called on finished threads so
+        // the bound holds even for stragglers (their handles are dropped,
+        // i.e. detached — exactly the pre-drain behavior, but now it is
+        // the bounded exception rather than the rule).
+        let handles: Vec<_> = std::mem::take(&mut *shared.workers.lock().unwrap());
+        for h in handles {
+            while !h.is_finished() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            if h.is_finished() {
+                let _ = h.join();
+            }
+        }
+        {
+            let jobs = shared.jobs.lock().unwrap();
+            for (id, job) in jobs.iter() {
+                if matches!(job.state, JobState::Running) {
+                    job.chan.close(Json::Obj(vec![
+                        ("event".into(), Json::str("end")),
+                        ("job".into(), Json::u64(*id)),
+                        (
+                            "error".into(),
+                            Json::str("server shut down before the job finished"),
+                        ),
+                    ]));
+                }
+            }
+        }
+        // Watchers exit once their channel closes; give them a bounded
+        // window to write their final events.
+        let flush_deadline = deadline.max(Instant::now() + Duration::from_millis(500));
+        while shared.watchers.load(Ordering::SeqCst) > 0 && Instant::now() < flush_deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+/// Decrements the open-watcher count even if the stream unwinds.
+struct WatcherGuard<'a>(&'a Shared);
+
+impl Drop for WatcherGuard<'_> {
+    fn drop(&mut self) {
+        self.0.watchers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Decrements the in-flight-warm count even if the sweep unwinds.
+struct WarmGuard<'a>(&'a Shared);
+
+impl Drop for WarmGuard<'_> {
+    fn drop(&mut self) {
+        self.0.warms.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 fn serve_connection(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
@@ -154,10 +453,58 @@ fn serve_connection(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
                 return Ok(());
             }
         };
-        let response = handle_request(&msg, shared);
-        write_message(&mut writer, &response)?;
+        // `watch` is the one verb that streams: it takes over the writer
+        // until the job's channel closes, then the connection returns to
+        // normal request/response framing.
+        if matches!(msg.get("verb").map(|v| v.as_str()), Some(Ok("watch"))) {
+            match watch_attach(&msg, shared) {
+                Ok((ack, chan)) => {
+                    write_message(&mut writer, &ack)?;
+                    shared.watchers.fetch_add(1, Ordering::SeqCst);
+                    let _guard = WatcherGuard(shared);
+                    stream_events(&chan, &mut writer)?;
+                }
+                Err(e) => write_message(&mut writer, &error_response(format!("{e:#}")))?,
+            }
+        } else {
+            let response = handle_request(&msg, shared);
+            write_message(&mut writer, &response)?;
+        }
         if shared.stop.load(Ordering::SeqCst) {
             return Ok(());
+        }
+    }
+}
+
+/// Replay a job channel from the start and stream until it closes. The
+/// last event written is always the terminal `end`.
+fn stream_events(chan: &JobChannel, writer: &mut impl Write) -> Result<()> {
+    let mut cursor = 0;
+    while let Some(event) = chan.next(cursor) {
+        cursor += 1;
+        write_message(writer, &event)?;
+    }
+    Ok(())
+}
+
+/// Resolve a `watch` request to its ack response and job channel.
+fn watch_attach(msg: &Json, shared: &Arc<Shared>) -> Result<(Json, Arc<JobChannel>)> {
+    let id = msg.field("job")?.as_u64()?;
+    let jobs = shared.jobs.lock().unwrap();
+    match jobs.get(&id) {
+        Some(job) => Ok((
+            ok_response(vec![
+                ("job".into(), Json::u64(id)),
+                ("watching".into(), Json::Bool(true)),
+                ("total".into(), Json::usize(job.chan.total)),
+            ]),
+            Arc::clone(&job.chan),
+        )),
+        None => {
+            if shared.expired.lock().unwrap().contains(&id) {
+                anyhow::bail!("job {id} expired (pruned from the job table); resubmit it")
+            }
+            anyhow::bail!("unknown job {id}")
         }
     }
 }
@@ -177,16 +524,23 @@ fn handle_request(msg: &Json, shared: &Arc<Shared>) -> Json {
         "result" => result_lookup(msg, shared),
         "shutdown" => {
             shared.stop.store(true, Ordering::SeqCst);
-            Ok(ok_response(vec![(
-                "stopping".into(),
-                Json::Bool(true),
-            )]))
+            Ok(ok_response(vec![
+                ("stopping".into(), Json::Bool(true)),
+                ("draining".into(), Json::Bool(true)),
+            ]))
         }
         other => Err(anyhow::anyhow!(
-            "unknown verb `{other}` (use ping|warm|submit|status|result|shutdown)"
+            "unknown verb `{other}` (use ping|warm|submit|watch|status|result|shutdown)"
         )),
     };
     result.unwrap_or_else(|e| error_response(format!("{e:#}")))
+}
+
+fn refuse_if_stopping(shared: &Shared) -> Result<()> {
+    if shared.stop.load(Ordering::SeqCst) {
+        anyhow::bail!("server is shutting down; not accepting new work");
+    }
+    Ok(())
 }
 
 /// `warm`: run the requested grid synchronously, reply with stats.
@@ -194,6 +548,14 @@ fn handle_request(msg: &Json, shared: &Arc<Shared>) -> Json {
 /// entries parses every pack file (an O(store-bytes) walk that belongs
 /// on the `status` path, not on every warm request).
 fn warm(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
+    // Register before the stop check (SeqCst totally orders both): a
+    // `shutdown` either happened first — this check refuses — or the
+    // drain's counter read happens after the increment and waits for
+    // this warm like any job. No window where an accepted warm is
+    // invisible to the drain.
+    shared.warms.fetch_add(1, Ordering::SeqCst);
+    let _guard = WarmGuard(shared);
+    refuse_if_stopping(shared)?;
     let grid = GridRequest::from_json(msg)?;
     let results = shared
         .sched
@@ -204,48 +566,90 @@ fn warm(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     )]))
 }
 
-/// `submit`: run the grid on a worker thread, reply immediately with a
-/// job id for `status` polling.
-/// Finished jobs retained for `status` polling; beyond this the oldest
-/// terminal entries are pruned so a long-lived server's job table stays
-/// bounded.
-const MAX_RETAINED_JOBS: usize = 256;
-
+/// `submit`: run the grid on a tracked worker thread, reply immediately
+/// with a job id for `status` polling or `watch` streaming.
 fn submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     let grid = GridRequest::from_json(msg)?;
+    let points = grid.points();
+    let chan = Arc::new(JobChannel::new(points));
     let id = shared.next_job.fetch_add(1, Ordering::SeqCst);
     {
         let mut jobs = shared.jobs.lock().unwrap();
-        if jobs.len() >= MAX_RETAINED_JOBS {
+        // Checked under the jobs lock: the drain reads this table only
+        // after `stop` is set, so either it observes the job inserted
+        // below, or this check observes the stop and refuses — a job id
+        // is never handed out for work the drain cannot see.
+        refuse_if_stopping(shared)?;
+        if jobs.len() >= max_retained_jobs() {
             let mut finished: Vec<u64> = jobs
                 .iter()
-                .filter(|(_, s)| !matches!(s, JobState::Running))
+                .filter(|(_, j)| !matches!(j.state, JobState::Running))
                 .map(|(&jid, _)| jid)
                 .collect();
             finished.sort_unstable();
-            let excess = jobs.len() + 1 - MAX_RETAINED_JOBS;
+            let excess = jobs.len() + 1 - max_retained_jobs();
+            let mut expired = shared.expired.lock().unwrap();
             for old in finished.into_iter().take(excess) {
                 jobs.remove(&old);
+                if expired.len() == EXPIRED_RING {
+                    expired.pop_front();
+                }
+                expired.push_back(old);
             }
         }
-        jobs.insert(id, JobState::Running);
+        jobs.insert(
+            id,
+            Job {
+                state: JobState::Running,
+                chan: Arc::clone(&chan),
+            },
+        );
     }
     let shared_worker = Arc::clone(shared);
-    std::thread::spawn(move || {
+    let worker_chan = Arc::clone(&chan);
+    let handle = std::thread::spawn(move || {
+        let progress = |p: &PointDone<'_>| worker_chan.publish_point(id, p);
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            shared_worker
-                .sched
-                .run_grid(&grid.models, &grid.groups, &grid.archs, grid.seed)
+            shared_worker.sched.run_grid_observed(
+                &grid.models,
+                &grid.groups,
+                &grid.archs,
+                grid.seed,
+                Some(&progress),
+            )
         }));
-        let state = match outcome {
-            Ok(results) => JobState::Done(results.stats),
-            Err(_) => JobState::Failed("sweep worker panicked".into()),
+        let (state, end) = match outcome {
+            Ok(results) => (
+                JobState::Done(results.stats),
+                Json::Obj(vec![
+                    ("event".into(), Json::str("end")),
+                    ("job".into(), Json::u64(id)),
+                    ("stats".into(), stats_to_json(&results.stats)),
+                ]),
+            ),
+            Err(_) => (
+                JobState::Failed("sweep worker panicked".into()),
+                Json::Obj(vec![
+                    ("event".into(), Json::str("end")),
+                    ("job".into(), Json::u64(id)),
+                    ("error".into(), Json::str("sweep worker panicked")),
+                ]),
+            ),
         };
-        shared_worker.jobs.lock().unwrap().insert(id, state);
+        if let Some(job) = shared_worker.jobs.lock().unwrap().get_mut(&id) {
+            job.state = state;
+        }
+        worker_chan.close(end);
     });
+    let mut workers = shared.workers.lock().unwrap();
+    // Reap handles of long-finished workers so the list stays bounded on
+    // a long-lived server (dropping a finished handle just detaches it).
+    workers.retain(|h| !h.is_finished());
+    workers.push(handle);
+    drop(workers);
     Ok(ok_response(vec![
         ("job".into(), Json::u64(id)),
-        ("points".into(), Json::usize(grid.points())),
+        ("points".into(), Json::usize(points)),
     ]))
 }
 
@@ -253,23 +657,26 @@ fn submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
 fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     if let Some(job) = msg.get("job") {
         let id = job.as_u64()?;
-        let state = shared
-            .jobs
-            .lock()
-            .unwrap()
-            .get(&id)
-            .cloned()
-            .with_context(|| format!("unknown job {id}"))?;
+        let state = shared.jobs.lock().unwrap().get(&id).map(|j| j.state.clone());
         let mut fields = vec![("job".into(), Json::u64(id))];
         match state {
-            JobState::Running => fields.push(("state".into(), Json::str("running"))),
-            JobState::Done(stats) => {
+            Some(JobState::Running) => fields.push(("state".into(), Json::str("running"))),
+            Some(JobState::Done(stats)) => {
                 fields.push(("state".into(), Json::str("done")));
                 fields.push(("stats".into(), stats_to_json(&stats)));
             }
-            JobState::Failed(err) => {
+            Some(JobState::Failed(err)) => {
                 fields.push(("state".into(), Json::str("failed")));
                 fields.push(("error".into(), Json::Str(err)));
+            }
+            None => {
+                // A pruned terminal id and a never-issued id are
+                // different answers: the former is a completed job the
+                // client was too slow to poll, the latter a client bug.
+                if !shared.expired.lock().unwrap().contains(&id) {
+                    anyhow::bail!("unknown job {id}");
+                }
+                fields.push(("state".into(), Json::str("expired")));
             }
         }
         return Ok(ok_response(fields));
@@ -277,15 +684,25 @@ fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     let jobs = shared.jobs.lock().unwrap();
     let running = jobs
         .values()
-        .filter(|s| matches!(s, JobState::Running))
+        .filter(|j| matches!(j.state, JobState::Running))
         .count();
+    let jobs_len = jobs.len();
+    drop(jobs);
     let store = shared.sched.store();
     let st = store.stats();
     let cache = memo::global();
     let (memo_hits, memo_misses) = cache.counters();
     Ok(ok_response(vec![
-        ("jobs".into(), Json::usize(jobs.len())),
+        ("jobs".into(), Json::usize(jobs_len)),
         ("running".into(), Json::usize(running)),
+        (
+            "warming".into(),
+            Json::usize(shared.warms.load(Ordering::SeqCst)),
+        ),
+        (
+            "watchers".into(),
+            Json::usize(shared.watchers.load(Ordering::SeqCst)),
+        ),
         // Kept for pre-v2 clients; the structured `store` object is the
         // forward surface.
         ("store_entries".into(), Json::usize(st.entries)),

@@ -40,6 +40,7 @@ use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 // Re-exported from `util::hash` (it moved there so the codec and the
 // memo snapshot can share it); existing `store::fnv1a64` callers keep
@@ -192,11 +193,132 @@ enum Pack {
     Entries(Vec<Json>),
 }
 
+/// How long a pack's advisory `.lock` file may sit untouched before a
+/// contender treats its holder as dead and takes the lock over. Real
+/// holds last milliseconds (one pack rewrite); anything this old
+/// belongs to a crashed process.
+const LOCK_STALE: Duration = Duration::from_secs(30);
+
+/// Upper bound on waiting for a pack lock. Past it the save proceeds
+/// unlocked: the lock is advisory, and the fallback is the pre-lock
+/// last-writer-wins behavior — a lost sibling entry recomputes later,
+/// never corruption (writes stay atomic either way).
+const LOCK_MAX_WAIT: Duration = Duration::from_secs(60);
+
+/// The advisory lock file guarding one pack's read-modify-write. In-
+/// process writers already serialize on [`ResultStore::save_lock`]; this
+/// extends the same guarantee across *processes* sharing a store
+/// directory, so two servers saving into one pack merge their entries
+/// instead of the last rename winning.
+///
+/// Protocol: create `<pack>.json.lock` with `create_new` (exclusive on
+/// every platform std supports); on contention, poll until the holder
+/// releases, taking over locks older than [`LOCK_STALE`] (takeover is
+/// rename-then-delete, so exactly one contender wins the removal).
+struct PackLock {
+    path: PathBuf,
+}
+
+impl PackLock {
+    fn acquire(pack_path: &Path) -> Option<PackLock> {
+        Self::acquire_with(pack_path, LOCK_STALE, LOCK_MAX_WAIT)
+    }
+
+    fn acquire_with(pack_path: &Path, stale: Duration, max_wait: Duration) -> Option<PackLock> {
+        let path = lock_path(pack_path);
+        let t0 = Instant::now();
+        let mut first = true;
+        loop {
+            if !first && t0.elapsed() >= max_wait {
+                return None;
+            }
+            first = false;
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(mut f) => {
+                    use std::io::Write as _;
+                    // Holder identity, for humans debugging a wedged store.
+                    let _ = write!(f, "{}", std::process::id());
+                    return Some(PackLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let age = std::fs::metadata(&path)
+                        .and_then(|md| md.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok());
+                    match age {
+                        Some(age) if age >= stale => {
+                            // Stale takeover: rename first so exactly one
+                            // contender owns the removal — two processes
+                            // can both see the lock as stale, but only
+                            // the successful renamer deletes it. The stat
+                            // and the rename are not atomic, though: a
+                            // rival takeover may complete (and a fresh
+                            // lock appear) in between, so re-verify age
+                            // on the grave — which IS exclusively ours —
+                            // and put a live lock back if we stole one.
+                            let grave = path
+                                .with_extension(format!("lock.stale-{}", std::process::id()));
+                            if std::fs::rename(&path, &grave).is_ok() {
+                                let still_stale = std::fs::metadata(&grave)
+                                    .and_then(|md| md.modified())
+                                    .ok()
+                                    .and_then(|t| t.elapsed().ok())
+                                    .is_some_and(|a| a >= stale);
+                                if still_stale {
+                                    let _ = std::fs::remove_file(&grave);
+                                    continue; // race the other contenders for create_new
+                                }
+                                // Stole a live lock: restore it (or drop
+                                // the grave if yet another lock already
+                                // took the path) and keep waiting.
+                                if std::fs::rename(&grave, &path).is_err() {
+                                    let _ = std::fs::remove_file(&grave);
+                                }
+                            }
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        // Lock held and fresh — or released between the
+                        // open and the stat, or its mtime is unreadable/
+                        // in the future (clock skew on a shared
+                        // filesystem). Retry, but never busy-spin.
+                        _ => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+                // Unwritable store directory: stay advisory — the save
+                // itself will surface the real error if it matters.
+                Err(_) => return None,
+            }
+        }
+    }
+}
+
+impl Drop for PackLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// `<pack>.json` → `<pack>.json.lock`. The suffix keeps lock files out
+/// of everything that walks `*.json` (stats, cap eviction, loads).
+fn lock_path(pack_path: &Path) -> PathBuf {
+    let mut os = pack_path.as_os_str().to_owned();
+    os.push(".lock");
+    PathBuf::from(os)
+}
+
 /// On-disk result store rooted at one directory. Cheap to clone; safe to
 /// share across threads (writers serialize on a shared lock so two
 /// in-process saves to one pack cannot drop each other's entries, and
 /// every write is temp-file + rename so readers and mid-write crashes
-/// see either the old pack or the new one, never a torn file).
+/// see either the old pack or the new one, never a torn file) — and
+/// safe to share across **processes**: pack read-modify-writes take an
+/// advisory `<pack>.json.lock` file (create-exclusive, stale-by-age
+/// takeover), so two servers saving into one store merge their entries
+/// instead of last-writer-wins.
 #[derive(Clone, Debug)]
 pub struct ResultStore {
     dir: PathBuf,
@@ -228,7 +350,12 @@ impl ResultStore {
             for e in rd.flatten() {
                 let name = e.file_name();
                 let name = name.to_string_lossy();
-                if name.starts_with('.') && name.contains(".tmp-") {
+                // `.lock.stale-*` graves are transient takeover artifacts
+                // (rename-then-delete); one left behind means the taking-
+                // over process died between the two steps.
+                if (name.starts_with('.') && name.contains(".tmp-"))
+                    || name.contains(".lock.stale-")
+                {
                     let _ = std::fs::remove_file(e.path());
                 }
             }
@@ -387,6 +514,19 @@ impl ResultStore {
     ) -> Result<()> {
         let guard = self.save_lock.lock().unwrap();
         let path = self.pack_path_for(pack_key);
+        // In-process writers serialize on `save_lock`; the advisory file
+        // lock extends the read-modify-write to writers in *other
+        // processes* sharing this directory, so concurrent saves merge
+        // instead of the last rename winning. Failing to take it (60s of
+        // contention, unwritable dir) degrades to the old last-writer-
+        // wins race — a lost entry recomputes, nothing corrupts.
+        let file_lock = PackLock::acquire(&path);
+        if file_lock.is_none() {
+            eprintln!(
+                "warn: proceeding without {} — concurrent pack writers may drop entries",
+                lock_path(&path).display()
+            );
+        }
         // Existing entries keyed by fingerprint. A pack that fails to
         // parse wholesale starts fresh (its data was unreachable anyway);
         // entries whose fingerprint is unreadable are dropped on rewrite
@@ -426,6 +566,7 @@ impl ResultStore {
         for p in v1_cleanup {
             let _ = std::fs::remove_file(p);
         }
+        drop(file_lock);
         drop(guard);
         self.enforce_cap(&path);
         Ok(())
@@ -930,10 +1071,59 @@ mod tests {
     }
 
     #[test]
+    fn pack_lock_excludes_holders_and_releases_on_drop() {
+        let store = temp_store("lock");
+        let (key, result) = tiny_point();
+        let pack = store.pack_path_for(&key);
+        store.save(&key, &result).unwrap();
+        // No lock file survives a completed save.
+        assert!(!lock_path(&pack).exists());
+
+        let held = PackLock::acquire_with(&pack, LOCK_STALE, Duration::from_millis(200))
+            .expect("uncontended acquire");
+        assert!(lock_path(&pack).exists());
+        // A second contender times out while the lock is held (the
+        // holder is fresh, so no stale takeover).
+        assert!(
+            PackLock::acquire_with(&pack, LOCK_STALE, Duration::from_millis(60)).is_none(),
+            "held lock must exclude a second writer"
+        );
+        drop(held);
+        assert!(!lock_path(&pack).exists(), "drop must release the lock");
+        // Released: the next acquire is immediate.
+        let again = PackLock::acquire_with(&pack, LOCK_STALE, Duration::from_millis(200));
+        assert!(again.is_some());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn pack_lock_takes_over_stale_holders() {
+        let store = temp_store("staleLock");
+        let (key, result) = tiny_point();
+        let pack = store.pack_path_for(&key);
+        // A crashed writer's leftover: a lock file nobody will release.
+        std::fs::write(lock_path(&pack), "99999").unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        // With a 20ms staleness bound the leftover is taken over at once;
+        // the save then proceeds under the fresh lock.
+        let lock = PackLock::acquire_with(&pack, Duration::from_millis(20), Duration::from_secs(5))
+            .expect("stale lock must be taken over");
+        drop(lock);
+        store.save(&key, &result).unwrap();
+        assert!(matches!(store.load(&key), LoadOutcome::Hit(_)));
+        assert!(!lock_path(&pack).exists());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
     fn open_sweeps_stale_temp_files() {
         let store = temp_store("tmpsweep");
         let stale = store.dir().join(".orphan.pack.json.tmp-12345-0");
         std::fs::write(&stale, "half-written").unwrap();
+        // A takeover grave left by a process that died between its
+        // rename and delete is reaped too.
+        let grave = store.dir().join("orphan.pack.json.lock.stale-12345");
+        std::fs::write(&grave, "9").unwrap();
         // Non-temp hidden files and real data survive the sweep.
         let hidden = store.dir().join(".keepme");
         std::fs::write(&hidden, "x").unwrap();
@@ -941,6 +1131,7 @@ mod tests {
         store.save(&key, &result).unwrap();
         let reopened = ResultStore::open(store.dir()).unwrap();
         assert!(!stale.exists(), "stale temp file must be reaped at open");
+        assert!(!grave.exists(), "takeover grave must be reaped at open");
         assert!(hidden.exists());
         assert!(matches!(reopened.load(&key), LoadOutcome::Hit(_)));
         let _ = std::fs::remove_dir_all(store.dir());

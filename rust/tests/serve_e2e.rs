@@ -2,7 +2,10 @@
 //! ephemeral localhost port, driven through the line-delimited JSON
 //! protocol exactly as the `codr submit` / `codr warm` clients drive it.
 
-use codr::serve::{proto, Server};
+use codr::arch::MemConfig;
+use codr::coordinator::Arch;
+use codr::models::SweepGroup;
+use codr::serve::{proto, CacheKey, LoadOutcome, ResultStore, Server};
 use codr::util::json::Json;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
@@ -149,6 +152,162 @@ fn serve_submit_status_result_warm_shutdown() {
     assert!(ok(&bye), "{bye}");
     handle.join().unwrap().unwrap();
 
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `watch` verb end to end: one `point` event per completed sweep
+/// point with a strictly increasing `done` counter, a terminal `end`
+/// whose stats equal the job's final `status` stats, and a byte-for-byte
+/// identical replay for a watcher that attaches after the job finished.
+#[test]
+fn watch_streams_ordered_events_and_end_stats_match_status() {
+    let dir = temp_dir("watch");
+    let server = Server::bind("127.0.0.1:0", &dir).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    // 1 model × 2 groups × 3 archs = 6 points, all cold.
+    let submitted = proto::request(
+        &addr,
+        &obj(&[
+            ("verb", Json::str("submit")),
+            ("models", Json::str("tiny")),
+            ("groups", Json::str("Orig,D=50%")),
+            ("seed", Json::u64(31)),
+        ]),
+    )
+    .unwrap();
+    assert!(ok(&submitted), "{submitted}");
+    let job = submitted.get("job").unwrap().as_u64().unwrap();
+
+    let mut events = Vec::new();
+    let end = proto::watch(&addr, job, |ev| events.push(ev.clone())).unwrap();
+    let points: Vec<&Json> = events
+        .iter()
+        .filter(|e| matches!(e.get("event").map(|v| v.as_str()), Some(Ok("point"))))
+        .collect();
+    assert_eq!(points.len(), 6, "one event per sweep point: {events:?}");
+    for (i, ev) in points.iter().enumerate() {
+        assert_eq!(ev.get("job").unwrap().as_u64().unwrap(), job);
+        assert_eq!(
+            ev.get("done").unwrap().as_u64().unwrap(),
+            i as u64 + 1,
+            "done must increase strictly in stream order: {ev}"
+        );
+        assert_eq!(ev.get("total").unwrap().as_u64().unwrap(), 6);
+        assert_eq!(ev.get("model").unwrap().as_str().unwrap(), "tiny");
+        assert!(ev.get("group").is_some() && ev.get("arch").is_some());
+        assert!(ev.get("cache_hit").unwrap().as_bool().is_ok());
+    }
+    // The last event of the stream is the end, and its stats equal what
+    // `status` reports for the finished job.
+    assert_eq!(events.last().unwrap(), &end);
+    let end_stats = end.get("stats").expect("end carries stats").clone();
+    assert_eq!(end_stats.get("requested").unwrap().as_u64().unwrap(), 6);
+    let status = proto::request(
+        &addr,
+        &obj(&[("verb", Json::str("status")), ("job", Json::u64(job))]),
+    )
+    .unwrap();
+    assert_eq!(status.get("state").unwrap().as_str().unwrap(), "done");
+    assert_eq!(status.get("stats").unwrap(), &end_stats);
+
+    // A late watcher replays the identical sequence.
+    let mut replay = Vec::new();
+    let end2 = proto::watch(&addr, job, |ev| replay.push(ev.clone())).unwrap();
+    assert_eq!(replay, events, "late watch must replay the same history");
+    assert_eq!(end2, end);
+
+    // Watching a job that was never issued is a clean protocol error.
+    assert!(proto::watch(&addr, 4242, |_| {}).is_err());
+
+    let bye = proto::request(&addr, &obj(&[("verb", Json::str("shutdown"))])).unwrap();
+    assert!(ok(&bye));
+    handle.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `shutdown` right after `submit`: the drain lets the job finish, its
+/// results are persisted before `run()` returns, a watcher attached
+/// across the shutdown still receives the real terminal `end` (with
+/// stats, not an abort error), and no temp files leak.
+#[test]
+fn shutdown_drains_running_jobs_and_persists_results() {
+    let dir = temp_dir("drain");
+    let server = Server::bind("127.0.0.1:0", &dir).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    let submitted = proto::request(
+        &addr,
+        &obj(&[
+            ("verb", Json::str("submit")),
+            ("models", Json::str("tiny")),
+            ("groups", Json::str("D=25%")),
+            ("seed", Json::u64(17)),
+        ]),
+    )
+    .unwrap();
+    assert!(ok(&submitted), "{submitted}");
+    let job = submitted.get("job").unwrap().as_u64().unwrap();
+
+    // Attach a watcher on a raw stream (ack read before shutdown, so the
+    // stream provably spans the drain window).
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).ok();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = std::io::BufReader::new(stream);
+    proto::write_message(
+        &mut w,
+        &obj(&[("verb", Json::str("watch")), ("job", Json::u64(job))]),
+    )
+    .unwrap();
+    let ack = proto::read_message(&mut r).unwrap().unwrap();
+    assert!(ok(&ack), "{ack}");
+
+    // Shutdown immediately — almost certainly while the job still runs.
+    let bye = proto::request(&addr, &obj(&[("verb", Json::str("shutdown"))])).unwrap();
+    assert!(ok(&bye), "{bye}");
+
+    // The watcher stream still terminates with a real end event.
+    let end = loop {
+        let ev = proto::read_message(&mut r)
+            .unwrap()
+            .expect("stream must end with an end event, not EOF");
+        if matches!(ev.get("event").map(|v| v.as_str()), Some(Ok("end"))) {
+            break ev;
+        }
+    };
+    assert!(
+        end.get("stats").is_some(),
+        "drained job must end with stats, not an abort: {end}"
+    );
+
+    // run() returned only after the drain: the job's points are on disk.
+    handle.join().unwrap().unwrap();
+    let store = ResultStore::open(&dir).unwrap();
+    for arch in Arch::all() {
+        let key = CacheKey::for_point(
+            "tiny",
+            &SweepGroup::Density(25),
+            arch.name(),
+            &arch.build().tile_config(),
+            &MemConfig::default(),
+            17,
+        );
+        assert!(
+            matches!(store.load(&key), LoadOutcome::Hit(_)),
+            "drain must persist {} before exit",
+            arch.name()
+        );
+    }
+    let leftovers: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.contains(".tmp-") || n.contains(".lock"))
+        .collect();
+    assert!(leftovers.is_empty(), "{leftovers:?}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 

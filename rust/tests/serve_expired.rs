@@ -1,0 +1,99 @@
+//! Pruned-job-id semantics: a terminal job pruned from the bounded job
+//! table must answer `state:"expired"` — not `unknown job N` — so slow
+//! pollers stop retrying, while a never-issued id stays a hard error.
+//!
+//! Lives in its own test binary because it shrinks the retention bound
+//! via `CODR_SERVE_MAX_JOBS`, and env vars are process-wide: the other
+//! serve tests must never observe it.
+
+use codr::serve::{proto, Server};
+use codr::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn obj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+fn ok(resp: &Json) -> bool {
+    matches!(resp.get("ok").and_then(|o| o.as_bool().ok()), Some(true))
+}
+
+/// Submit a one-point grid and poll it to a terminal state.
+fn submit_and_finish(addr: &str) -> u64 {
+    let submitted = proto::request(
+        addr,
+        &obj(&[
+            ("verb", Json::str("submit")),
+            ("models", Json::str("tiny")),
+            ("groups", Json::str("Orig")),
+            ("archs", Json::str("codr")),
+            ("seed", Json::u64(23)),
+        ]),
+    )
+    .unwrap();
+    assert!(ok(&submitted), "{submitted}");
+    let job = submitted.get("job").unwrap().as_u64().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        assert!(Instant::now() < deadline, "job {job} never finished");
+        let status = proto::request(
+            addr,
+            &obj(&[("verb", Json::str("status")), ("job", Json::u64(job))]),
+        )
+        .unwrap();
+        assert!(ok(&status), "{status}");
+        match status.get("state").unwrap().as_str().unwrap() {
+            "running" => std::thread::sleep(Duration::from_millis(10)),
+            "done" => return job,
+            other => panic!("job {job} entered state {other}: {status}"),
+        }
+    }
+}
+
+#[test]
+fn pruned_job_ids_answer_expired_not_unknown() {
+    // Must be set before the server handles any submit; this test binary
+    // has exactly one test, so nothing else can race the env.
+    std::env::set_var("CODR_SERVE_MAX_JOBS", "3");
+    let dir = std::env::temp_dir().join(format!("codr-serve-expired-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let server = Server::bind("127.0.0.1:0", &dir).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    // Fill the table to its bound, then one more: the oldest terminal
+    // job (the first) is pruned into the expired ring.
+    let first = submit_and_finish(&addr);
+    for _ in 0..3 {
+        submit_and_finish(&addr);
+    }
+
+    // The pruned id answers ok with state "expired"...
+    let s = proto::request(
+        &addr,
+        &obj(&[("verb", Json::str("status")), ("job", Json::u64(first))]),
+    )
+    .unwrap();
+    assert!(ok(&s), "expired must be a normal answer, not an error: {s}");
+    assert_eq!(s.get("state").unwrap().as_str().unwrap(), "expired");
+
+    // ...a never-issued id stays a hard error...
+    let s = proto::request(
+        &addr,
+        &obj(&[("verb", Json::str("status")), ("job", Json::u64(4242))]),
+    )
+    .unwrap();
+    assert!(!ok(&s), "{s}");
+    assert!(s.get("error").unwrap().as_str().unwrap().contains("unknown job"));
+
+    // ...and watch distinguishes them the same way.
+    let err = proto::watch(&addr, first, |_| {}).unwrap_err().to_string();
+    assert!(err.contains("expired"), "{err}");
+    let err = proto::watch(&addr, 4242, |_| {}).unwrap_err().to_string();
+    assert!(err.contains("unknown job"), "{err}");
+
+    let bye = proto::request(&addr, &obj(&[("verb", Json::str("shutdown"))])).unwrap();
+    assert!(ok(&bye));
+    handle.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

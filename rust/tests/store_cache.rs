@@ -187,6 +187,66 @@ fn store_round_trips_every_result_type_field() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Two independently-opened store handles over one directory — the
+/// in-process model of two *processes* sharing a store (each handle has
+/// its own save mutex, so nothing in-process serializes them) — save
+/// interleaved entries into the same pack concurrently. The advisory
+/// pack file lock must make the read-modify-writes merge: every entry
+/// survives, none is lost to a last-writer-wins rewrite.
+#[test]
+fn two_store_handles_merge_concurrent_saves_into_one_pack() {
+    let dir = temp_dir("multiwriter");
+    let a = ResultStore::open(&dir).unwrap();
+    let b = ResultStore::open(&dir).unwrap();
+
+    // One real result reused for every entry; the identities differ by
+    // fingerprint (same (model, group, seed) → same pack file).
+    fn key_for(i: u64) -> CacheKey {
+        CacheKey {
+            model: "tiny".into(),
+            group: "Orig".into(),
+            arch: format!("W{i}"),
+            seed: 3,
+            fingerprint: 0xbeef_0000 + i,
+        }
+    }
+    const N: u64 = 16;
+    let fresh = run_sweep(&[tiny_cnn()], &[SweepGroup::Original], &[Arch::Codr], 3);
+    let result = fresh.results[0].clone();
+
+    let spawn_writer = |store: ResultStore, result: codr::sim::ModelResult, offset: u64| {
+        std::thread::spawn(move || {
+            for i in (offset..N).step_by(2) {
+                store.save(&key_for(i), &result).unwrap();
+            }
+        })
+    };
+    let ta = spawn_writer(a.clone(), result.clone(), 0);
+    let tb = spawn_writer(b.clone(), result.clone(), 1);
+    ta.join().unwrap();
+    tb.join().unwrap();
+
+    // Merge, not clobber: all 16 entries are present and loadable.
+    for i in 0..N {
+        assert!(
+            matches!(a.load(&key_for(i)), LoadOutcome::Hit(_)),
+            "entry {i} lost to a concurrent rewrite"
+        );
+    }
+    let stats = a.stats();
+    assert_eq!(stats.entries, N as usize, "{stats:?}");
+    assert_eq!(stats.packed_files, 1, "one shared pack: {stats:?}");
+    // And no lock or temp files survive the writers.
+    let leftovers: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|f| f.contains(".tmp-") || f.contains(".lock"))
+        .collect();
+    assert!(leftovers.is_empty(), "{leftovers:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn seed_and_group_isolate_cache_entries() {
     let dir = temp_dir("isolate");
