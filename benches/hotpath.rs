@@ -1,9 +1,11 @@
 //! End-to-end hot-path benchmark: the seed (reference) simulation
-//! pipeline versus the memoized, emission-free one, over the full
-//! (model × group × arch × layer) grid.
+//! pipeline versus the fingerprint-memoized, emission-free one, over
+//! the full (model × group × arch × layer) grid.
 //!
 //! Thin wrapper over the `codr bench` subcommand so `cargo bench --bench
-//! hotpath` and the CLI produce the same `BENCH_hotpath.json`:
+//! hotpath` and the CLI produce the same `BENCH_hotpath.json` (format
+//! v2: per-pass L1/L2 memo breakdown, lock-wait counters, and
+//! extract / transform / price phase wall times):
 //!
 //! ```text
 //! cargo bench --bench hotpath -- --quick --out /tmp/hotpath.json

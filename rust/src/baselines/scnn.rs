@@ -149,11 +149,20 @@ impl Accelerator for Scnn {
     }
 
     /// Hot path: one allocation-free pass over the raw weights yields
-    /// both the compression stats and the non-zero count.
+    /// both the compression stats and the non-zero count. The zero-run
+    /// state carries across the whole flat weight buffer, so the scan
+    /// stays a single sequential chunk in the coordinator's tile-chunk
+    /// fan-out (it is the cheapest of the three extraction paths by far
+    /// — chunk-merging the run state would buy nothing).
     fn simulate_layer(&self, spec: &LayerSpec, weights: &Weights) -> LayerResult {
+        let t0 = std::time::Instant::now();
         let (entries, nnz) = scan(weights.data());
+        crate::util::bench::phases().add_extract(t0.elapsed());
+        let t1 = std::time::Instant::now();
         let compression = stats_from_entries(entries, weights.data().len());
-        layer_result(self, spec, compression, nnz)
+        let res = layer_result(self, spec, compression, nnz);
+        crate::util::bench::phases().add_price(t1.elapsed());
+        res
     }
 }
 

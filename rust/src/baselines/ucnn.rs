@@ -18,11 +18,14 @@
 
 use crate::arch::{CactiLite, MemConfig, MemoryKind, TileConfig};
 use crate::models::LayerSpec;
-use crate::reuse::{memo, UcrVector};
+use crate::reuse::memo::{self, Fp128};
+use crate::reuse::UcrVector;
 use crate::rle::bitstream::BitWriter;
 use crate::rle::{CoderSpec, CompressionStats, VectorSizeStats};
 use crate::sim::{Accelerator, LayerResult};
 use crate::tensor::Weights;
+use crate::util::bench;
+use std::time::Instant;
 
 /// Fixed RLE bit-length UCNN uses for weights and indexes (§V-B).
 pub const UCNN_RLE_BITS: u32 = 5;
@@ -276,6 +279,93 @@ pub fn simulate_layer_reference(design: &Ucnn, spec: &LayerSpec, weights: &Weigh
     layer_result(design, spec, compression, total_uniques, total_nnz)
 }
 
+/// One tile-chunk's extraction totals: every field is a plain sum, so
+/// chunks merge by addition in any order and reproduce the sequential
+/// walk exactly (pinned by `chunked_extraction_equals_whole_layer`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct UcnnExtract {
+    pub delta_bits: u64,
+    pub index_bits: u64,
+    pub n_vectors: usize,
+    pub total_uniques: u64,
+    pub total_nnz: u64,
+}
+
+/// Extract the m-tile range `[mt0, mt1)` (m-tile step `T_M`): linearize
+/// each `(m-tile, n-tile)` vector, fingerprint it once at extraction,
+/// resolve it through the two-level memo, and price its streams
+/// arithmetically from the cached per-vector summary — no `BitWriter`,
+/// no per-vector allocation.
+pub fn extract_chunk(
+    design: &Ucnn,
+    spec: &LayerSpec,
+    weights: &Weights,
+    mt0: usize,
+    mt1: usize,
+) -> UcnnExtract {
+    let t0 = Instant::now();
+    let cfg = &design.cfg;
+    let kernel = spec.r_k * spec.r_k;
+    let coder = CoderSpec::new(cfg.t_m * cfg.t_n * kernel);
+    let cache = memo::global();
+    let data = weights.data();
+    let mut scratch: Vec<i8> = Vec::with_capacity(cfg.t_m * cfg.t_n * kernel);
+    let mut acc = UcnnExtract::default();
+    for mt in mt0..mt1 {
+        let m0 = mt * cfg.t_m;
+        let tm = cfg.t_m.min(spec.m - m0);
+        for n0 in (0..spec.n).step_by(cfg.t_n) {
+            let tn = cfg.t_n.min(spec.n - n0);
+            scratch.clear();
+            // Same linearization as ucnn_vectors: T_N input channels'
+            // kernels concatenated, inner loop over output channels.
+            for n in n0..n0 + tn {
+                for m in m0..m0 + tm {
+                    let off = (m * spec.n + n) * kernel;
+                    scratch.extend_from_slice(&data[off..off + kernel]);
+                }
+            }
+            let fp = Fp128::of_i8(&scratch);
+            let entry = cache.get_or_insert_keyed(fp, &scratch);
+            let (db, ib) = vector_stream_bits(&entry.size, entry.ucr.uniques.len(), coder);
+            acc.delta_bits += db;
+            acc.index_bits += ib;
+            acc.n_vectors += 1;
+            acc.total_uniques += entry.ucr.uniques.len() as u64;
+            acc.total_nnz += entry.ucr.nnz() as u64;
+        }
+    }
+    bench::phases().add_extract(t0.elapsed());
+    acc
+}
+
+/// The pricing back half: sum the chunks' totals and run the shared
+/// traffic/datapath accounting.
+pub fn price_extracted(design: &Ucnn, spec: &LayerSpec, chunks: &[UcnnExtract]) -> LayerResult {
+    let t0 = Instant::now();
+    let coder = CoderSpec::new(design.cfg.t_m * design.cfg.t_n * spec.r_k * spec.r_k);
+    let mut total = UcnnExtract::default();
+    for c in chunks {
+        total.delta_bits += c.delta_bits;
+        total.index_bits += c.index_bits;
+        total.n_vectors += c.n_vectors;
+        total.total_uniques += c.total_uniques;
+        total.total_nnz += c.total_nnz;
+    }
+    let header_bits = total.n_vectors * coder.len_bits() as usize;
+    let compression = CompressionStats {
+        num_weights: spec.num_weights(),
+        encoded_bits: total.delta_bits as usize + total.index_bits as usize + header_bits,
+        delta_bits: total.delta_bits as usize,
+        count_bits: 0,
+        index_bits: total.index_bits as usize,
+        header_bits,
+    };
+    let res = layer_result(design, spec, compression, total.total_uniques, total.total_nnz);
+    bench::phases().add_price(t0.elapsed());
+    res
+}
+
 impl Accelerator for Ucnn {
     fn name(&self) -> &'static str {
         "UCNN"
@@ -285,54 +375,13 @@ impl Accelerator for Ucnn {
         self.cfg
     }
 
-    /// Memoized hot path: per-tile vectors come from the global
-    /// [`memo`] and their encoded sizes from the cached per-vector
-    /// summaries — no `BitWriter`, no per-vector allocation.
+    /// Memoized hot path: one full-range [`extract_chunk`] +
+    /// [`price_extracted`]. The coordinator splits big layers into
+    /// several chunks over the pool instead.
     fn simulate_layer(&self, spec: &LayerSpec, weights: &Weights) -> LayerResult {
-        let cfg = &self.cfg;
-        let kernel = spec.r_k * spec.r_k;
-        let coder = CoderSpec::new(cfg.t_m * cfg.t_n * kernel);
-        let cache = memo::global();
-        let data = weights.data();
-        let mut scratch: Vec<i8> = Vec::with_capacity(cfg.t_m * cfg.t_n * kernel);
-        let mut delta_bits = 0u64;
-        let mut index_bits = 0u64;
-        let mut n_vectors = 0usize;
-        let mut total_uniques = 0u64;
-        let mut total_nnz = 0u64;
-        for m0 in (0..spec.m).step_by(cfg.t_m) {
-            let tm = cfg.t_m.min(spec.m - m0);
-            for n0 in (0..spec.n).step_by(cfg.t_n) {
-                let tn = cfg.t_n.min(spec.n - n0);
-                scratch.clear();
-                // Same linearization as ucnn_vectors: T_N input channels'
-                // kernels concatenated, inner loop over output channels.
-                for n in n0..n0 + tn {
-                    for m in m0..m0 + tm {
-                        let off = (m * spec.n + n) * kernel;
-                        scratch.extend_from_slice(&data[off..off + kernel]);
-                    }
-                }
-                let entry = cache.get_or_insert(&scratch);
-                let (db, ib) =
-                    vector_stream_bits(&entry.size, entry.ucr.uniques.len(), coder);
-                delta_bits += db;
-                index_bits += ib;
-                n_vectors += 1;
-                total_uniques += entry.ucr.uniques.len() as u64;
-                total_nnz += entry.ucr.nnz() as u64;
-            }
-        }
-        let header_bits = n_vectors * coder.len_bits() as usize;
-        let compression = CompressionStats {
-            num_weights: spec.num_weights(),
-            encoded_bits: delta_bits as usize + index_bits as usize + header_bits,
-            delta_bits: delta_bits as usize,
-            count_bits: 0,
-            index_bits: index_bits as usize,
-            header_bits,
-        };
-        layer_result(self, spec, compression, total_uniques, total_nnz)
+        let m_tiles = spec.m.div_ceil(self.cfg.t_m);
+        let chunk = extract_chunk(self, spec, weights, 0, m_tiles);
+        price_extracted(self, spec, &[chunk])
     }
 }
 
@@ -463,6 +512,31 @@ mod tests {
             let oracle = simulate_layer_reference(&design, &s, &w);
             assert_eq!(design.simulate_layer(&s, &w), oracle, "seed {seed}");
             assert_eq!(design.simulate_layer(&s, &w), oracle, "warm, seed {seed}");
+        }
+    }
+
+    #[test]
+    fn chunked_extraction_equals_whole_layer() {
+        // Any m-tile split must price to the identical LayerResult.
+        let s = spec(13, 11, 12, 3, 0.5); // M=11: clipped range math
+        let mut rng = Rng::new(23);
+        let w = synthesize_weights(&s, &mut rng);
+        let design = Ucnn::default();
+        let whole = design.simulate_layer(&s, &w);
+        let m_tiles = s.m.div_ceil(design.cfg.t_m);
+        for n_chunks in [1usize, 2, 4, m_tiles] {
+            let chunks: Vec<UcnnExtract> = (0..n_chunks)
+                .map(|ci| {
+                    extract_chunk(
+                        &design,
+                        &s,
+                        &w,
+                        m_tiles * ci / n_chunks,
+                        m_tiles * (ci + 1) / n_chunks,
+                    )
+                })
+                .collect();
+            assert_eq!(price_extracted(&design, &s, &chunks), whole, "split {n_chunks}");
         }
     }
 

@@ -332,7 +332,13 @@ fn expect_ok(resp: &Json) -> Result<()> {
 
 fn render_stats(stats: &SweepStats) -> String {
     let memo = match stats.memo_hit_rate() {
-        Some(rate) => format!("{:.0}% memo hits", rate * 100.0),
+        Some(rate) => format!(
+            "{:.0}% memo hits ({} L1 / {} L2, {} lock waits)",
+            rate * 100.0,
+            stats.l1_hits,
+            stats.l2_hits,
+            stats.lock_waits
+        ),
         None => "no memo lookups".to_string(),
     };
     format!(
@@ -485,6 +491,9 @@ pub fn warm(args: &Args) -> Result<String> {
 /// `codr bench` — time the simulation hot path on the model zoo and
 /// write a machine-readable snapshot (`BENCH_hotpath.json` by default;
 /// `--out` overrides, `--quick` shrinks the grid for CI smoke runs).
+/// Snapshot format v2: each optimized pass reports the two-level memo
+/// breakdown (L1/L2 hits, collision verifies, double computes, lock
+/// waits) and per-phase wall times (extract / transform / price).
 ///
 /// Three passes over the same per-layer task list establish the perf
 /// trajectory:
@@ -505,7 +514,7 @@ pub fn bench(args: &Args) -> Result<String> {
     use crate::models::SweepGroup;
     use crate::reuse::memo;
     use crate::sim::Accelerator;
-    use crate::util::bench::Bencher;
+    use crate::util::bench::{phases, Bencher, PhaseSnapshot};
     use std::time::{Duration, Instant};
 
     let quick = args.flag("quick");
@@ -567,8 +576,9 @@ pub fn bench(args: &Args) -> Result<String> {
     .sum();
     let ref_ms = t_ref.elapsed().as_millis() as u64;
 
-    let optimized_pass = || -> (u64, u64, u64, u64) {
-        let (h0, m0) = memo::global().counters();
+    let optimized_pass = || -> (u64, u64, memo::MemoCounters, PhaseSnapshot) {
+        let memo0 = memo::global().breakdown();
+        let phases0 = phases().snapshot();
         let t = Instant::now();
         let cycles: u64 = pool::parallel_map(&tasks, |&(pi, ai, li)| {
             let acc = archs[ai].build();
@@ -578,19 +588,38 @@ pub fn bench(args: &Args) -> Result<String> {
         .iter()
         .sum();
         let ms = t.elapsed().as_millis() as u64;
-        let (h1, m1) = memo::global().counters();
-        (ms, cycles, h1 - h0, m1 - m0)
+        (
+            ms,
+            cycles,
+            memo::global().breakdown().since(&memo0),
+            phases().snapshot().since(&phases0),
+        )
     };
 
     // Pass 2: optimized, memo cold. Pass 3: optimized, memo warm.
     memo::global().flush();
-    let (cold_ms, cold_cycles, cold_hits, cold_misses) = optimized_pass();
-    let (warm_ms, warm_cycles, warm_hits, warm_misses) = optimized_pass();
+    let (cold_ms, cold_cycles, cold_memo, cold_phases) = optimized_pass();
+    let (warm_ms, warm_cycles, warm_memo, warm_phases) = optimized_pass();
     if cold_cycles != reference_cycles || warm_cycles != reference_cycles {
         bail!(
             "hot path diverged from reference (cycles {cold_cycles}/{warm_cycles} \
              vs {reference_cycles}) — run the invariance tests"
         );
+    }
+    // Counter conservation: every lookup resolves at exactly one level,
+    // so a standalone bench run (the pool joins between snapshots) must
+    // see `lookups == l1 + l2 + misses` per pass — the CI quick-bench
+    // smoke asserts it on the emitted JSON. In-process we only warn:
+    // concurrent users of the global memo (e.g. parallel unit tests)
+    // can legitimately skew a window's deltas by their in-flight
+    // lookups.
+    for (pass, m) in [("cold", &cold_memo), ("warm", &warm_memo)] {
+        if m.lookups != m.l1_hits + m.l2_hits + m.misses {
+            eprintln!(
+                "warn: memo counter deltas skewed in the {pass} pass \
+                 (concurrent memo users?): {m:?}"
+            );
+        }
     }
 
     // Micro benches on the largest conv layer of the first workload.
@@ -615,19 +644,57 @@ pub fn bench(args: &Args) -> Result<String> {
         micro.push(s2);
     }
 
-    let pass_json = |ms: u64, hits: u64, misses: u64| {
-        let total = hits + misses;
+    // Bench snapshot v2: each optimized pass carries the two-level memo
+    // breakdown and the per-phase wall times (extract ⊃ transform, plus
+    // price), so a regression is attributable from the JSON alone.
+    let pass_json = |ms: u64, m: &memo::MemoCounters, ph: &PhaseSnapshot| {
+        let total = m.hits() + m.misses;
         let rate = if total == 0 {
             Json::Null
         } else {
-            Json::f64(hits as f64 / total as f64)
+            Json::f64(m.hits() as f64 / total as f64)
+        };
+        let l1_rate = if m.lookups == 0 {
+            Json::Null
+        } else {
+            Json::f64(m.l1_hits as f64 / m.lookups as f64)
         };
         Json::Obj(vec![
             ("wall_ms".into(), Json::u64(ms)),
             ("layers_per_sec".into(), Json::f64(layers_per_sec(ms))),
-            ("memo_hits".into(), Json::u64(hits)),
-            ("memo_misses".into(), Json::u64(misses)),
-            ("memo_hit_rate".into(), rate),
+            // Flat totals kept from v1 for easy diffing across versions.
+            ("memo_hits".into(), Json::u64(m.hits())),
+            ("memo_misses".into(), Json::u64(m.misses)),
+            ("memo_hit_rate".into(), rate.clone()),
+            (
+                "memo".into(),
+                Json::Obj(vec![
+                    ("lookups".into(), Json::u64(m.lookups)),
+                    ("l1_hits".into(), Json::u64(m.l1_hits)),
+                    ("l2_hits".into(), Json::u64(m.l2_hits)),
+                    ("misses".into(), Json::u64(m.misses)),
+                    ("l1_hit_rate".into(), l1_rate),
+                    ("hit_rate".into(), rate),
+                    ("collision_verifies".into(), Json::u64(m.collision_verifies)),
+                    ("double_computes".into(), Json::u64(m.double_computes)),
+                    ("lock_waits".into(), Json::u64(m.lock_waits)),
+                    ("evictions".into(), Json::u64(m.evictions)),
+                ]),
+            ),
+            (
+                "phases".into(),
+                Json::Obj(vec![
+                    (
+                        "extract_ms".into(),
+                        Json::f64(ph.extract_ns as f64 / 1e6),
+                    ),
+                    (
+                        "transform_ms".into(),
+                        Json::f64(ph.transform_ns as f64 / 1e6),
+                    ),
+                    ("price_ms".into(), Json::f64(ph.price_ns as f64 / 1e6)),
+                ]),
+            ),
         ])
     };
     let ratio = |num: u64, den: u64| {
@@ -639,7 +706,7 @@ pub fn bench(args: &Args) -> Result<String> {
     };
     let json = Json::Obj(vec![
         ("bench".into(), Json::str("hotpath")),
-        ("version".into(), Json::u64(1)),
+        ("version".into(), Json::u64(2)),
         (
             "note".into(),
             Json::str(
@@ -678,8 +745,14 @@ pub fn bench(args: &Args) -> Result<String> {
                 ("layers_per_sec".into(), Json::f64(layers_per_sec(ref_ms))),
             ]),
         ),
-        ("optimized_cold".into(), pass_json(cold_ms, cold_hits, cold_misses)),
-        ("optimized_warm".into(), pass_json(warm_ms, warm_hits, warm_misses)),
+        (
+            "optimized_cold".into(),
+            pass_json(cold_ms, &cold_memo, &cold_phases),
+        ),
+        (
+            "optimized_warm".into(),
+            pass_json(warm_ms, &warm_memo, &warm_phases),
+        ),
         ("speedup_cold".into(), ratio(ref_ms, cold_ms)),
         ("speedup_warm".into(), ratio(ref_ms, warm_ms)),
         (
@@ -716,8 +789,8 @@ pub fn bench(args: &Args) -> Result<String> {
     Ok(format!(
         "hot path over {} layer sims ({} threads):\n\
          \u{20} reference       {:>8} ms  ({:.1} layers/s)\n\
-         \u{20} optimized cold  {:>8} ms  ({:.1} layers/s, {:.1}x, memo {}/{} hits)\n\
-         \u{20} optimized warm  {:>8} ms  ({:.1} layers/s, {:.1}x, memo {}/{} hits)\n\
+         \u{20} optimized cold  {:>8} ms  ({:.1} layers/s, {:.1}x, memo {}/{} hits, {} L1)\n\
+         \u{20} optimized warm  {:>8} ms  ({:.1} layers/s, {:.1}x, memo {}/{} hits, {} L1)\n\
          wrote {}",
         n_layer_sims,
         pool::default_threads(),
@@ -726,13 +799,15 @@ pub fn bench(args: &Args) -> Result<String> {
         cold_ms,
         layers_per_sec(cold_ms),
         speedup(cold_ms),
-        cold_hits,
-        cold_hits + cold_misses,
+        cold_memo.hits(),
+        cold_memo.lookups,
+        cold_memo.l1_hits,
         warm_ms,
         layers_per_sec(warm_ms),
         speedup(warm_ms),
-        warm_hits,
-        warm_hits + warm_misses,
+        warm_memo.hits(),
+        warm_memo.lookups,
+        warm_memo.l1_hits,
         out_path
     ))
 }
@@ -835,8 +910,33 @@ mod tests {
         assert!(summary.contains("optimized cold"), "{summary}");
         let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
         assert_eq!(j.field("bench").unwrap().as_str().unwrap(), "hotpath");
+        assert_eq!(j.field("version").unwrap().as_u64().unwrap(), 2);
         assert!(j.get("speedup_cold").is_some());
-        assert!(j.field("optimized_warm").unwrap().get("memo_hits").is_some());
+        let warm = j.field("optimized_warm").unwrap();
+        assert!(warm.get("memo_hits").is_some());
+        // v2 structure: per-pass memo breakdown + phase wall times.
+        // (Strict counter conservation is asserted by the CI smoke on a
+        // standalone run — in-process, concurrently running tests that
+        // share the global memo can skew a window's deltas.)
+        for pass in ["optimized_cold", "optimized_warm"] {
+            let memo = j.field(pass).unwrap().field("memo").unwrap();
+            for k in [
+                "lookups",
+                "l1_hits",
+                "l2_hits",
+                "misses",
+                "collision_verifies",
+                "double_computes",
+                "lock_waits",
+                "evictions",
+            ] {
+                assert!(memo.field(k).unwrap().as_u64().is_ok(), "{pass} {k}");
+            }
+            let phases = j.field(pass).unwrap().field("phases").unwrap();
+            for k in ["extract_ms", "transform_ms", "price_ms"] {
+                assert!(phases.get(k).is_some(), "{pass} missing {k}");
+            }
+        }
         let _ = std::fs::remove_file(&out);
     }
 

@@ -15,13 +15,16 @@
 use super::Codr;
 use crate::arch::MemoryKind;
 use crate::models::LayerSpec;
-use crate::reuse::{memo, transform_layer_ucr, UcrVector};
+use crate::reuse::memo::{self, Fp128};
+use crate::reuse::{transform_layer_ucr, UcrVector};
 use crate::rle::{
     encode_layer_refs, CoderSpec, CompressionStats, EncodedLayer, LayerHistograms, RleParams,
 };
 use crate::sim::LayerResult;
 use crate::tensor::Weights;
+use crate::util::bench;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Per-vector quantities the dataflow loop needs (derived once from the
 /// UCR vectors + chosen RLE parameters, and memoized per distinct vector
@@ -106,31 +109,44 @@ pub(crate) fn spatial_classes(r_o: usize, c_o: usize, t_ro: usize, t_co: usize) 
     classes
 }
 
-/// Simulate one conv layer on the CoDR design. See module docs.
+/// One tile-chunk's extraction state: a private histogram plus the
+/// chunk's memo entries in tile-major order. Chunks of one layer merge
+/// in chunk order ([`price_extracted`]) and reproduce the sequential
+/// walk bit for bit — every histogram field is an integer sum.
 ///
-/// This is the memoized hot path: each tile's linearized weight vector is
-/// looked up in the global [`memo`] (transforming only distinct vectors),
-/// the layer's encoded size comes from the histogram size model (no
-/// bitstreams are emitted — the model is asserted bit-identical to
-/// emission), and per-vector dataflow metadata is shared through the
-/// memo. A steady-state call (all vectors cached) performs no transient
-/// allocation besides the per-layer meta table.
-pub fn simulate_layer(design: &Codr, spec: &LayerSpec, weights: &Weights) -> LayerResult {
+/// Entries borrow from the process-wide arena-interned memo, so a chunk
+/// is `'static` and freely crosses pool-task boundaries without cloning
+/// anything per vector.
+pub struct CodrExtract {
+    pub hist: LayerHistograms,
+    pub cached: Vec<&'static memo::CachedVector>,
+}
+
+/// Extract the m-tile range `[mt0, mt1)` of a layer: linearize each
+/// per-input-channel vector into a reusable scratch buffer, fingerprint
+/// it ONCE ([`Fp128::of_i8`] at extraction — shard selection, map
+/// bucketing, and equality all reuse it), and resolve it through the
+/// two-level memo. The flat `cached` table is tile-major: vector
+/// (mt, n) sits at `(mt − mt0)·N + n`.
+pub fn extract_chunk(
+    design: &Codr,
+    spec: &LayerSpec,
+    weights: &Weights,
+    mt0: usize,
+    mt1: usize,
+) -> CodrExtract {
+    let t0 = Instant::now();
     let cfg = &design.cfg;
     assert_eq!(weights.shape(), &[spec.m, spec.n, spec.r_k, spec.r_k]);
     let kernel = spec.r_k * spec.r_k;
-    let coder_spec = CoderSpec::new(cfg.t_m * kernel);
     let cache = memo::global();
     let data = weights.data();
-    let n_m_tiles = spec.m.div_ceil(cfg.t_m);
-
-    // Walk the tiles in transform_layer_ucr order (m-tile outer, n-tile
-    // inner), linearizing into one reusable scratch buffer. The flat
-    // `cached` table is tile-major: vector (mt, n) sits at mt·N + n.
-    let mut hist = LayerHistograms::new(coder_spec);
-    let mut cached: Vec<Arc<memo::CachedVector>> = Vec::with_capacity(n_m_tiles * spec.n);
+    let mut hist = LayerHistograms::new(CoderSpec::new(cfg.t_m * kernel));
+    let mut cached: Vec<&'static memo::CachedVector> =
+        Vec::with_capacity((mt1 - mt0) * spec.n);
     let mut scratch: Vec<i8> = Vec::with_capacity(cfg.t_m * kernel);
-    for m0 in (0..spec.m).step_by(cfg.t_m) {
+    for mt in mt0..mt1 {
+        let m0 = mt * cfg.t_m;
         let tm = cfg.t_m.min(spec.m - m0);
         // CoDR builds one vector per single input channel, so iterating
         // the channels directly equals transform_layer_ucr's n-tile walk
@@ -143,19 +159,53 @@ pub fn simulate_layer(design: &Codr, spec: &LayerSpec, weights: &Weights) -> Lay
                 let off = (m * spec.n + n) * kernel;
                 scratch.extend_from_slice(&data[off..off + kernel]);
             }
-            let entry = cache.get_or_insert(&scratch);
+            let fp = Fp128::of_i8(&scratch);
+            let entry = cache.get_or_insert_keyed(fp, &scratch);
             hist.merge_vector(&entry.ucr, &entry.size);
             cached.push(entry);
         }
     }
+    bench::phases().add_extract(t0.elapsed());
+    CodrExtract { hist, cached }
+}
 
+/// The pricing back half: merge the chunks' histograms (chunk order),
+/// search parameters, derive per-vector metadata through the memo, and
+/// walk the loop nest.
+pub fn price_extracted(design: &Codr, spec: &LayerSpec, chunks: &[&CodrExtract]) -> LayerResult {
+    let t0 = Instant::now();
+    let cfg = &design.cfg;
+    let kernel = spec.r_k * spec.r_k;
+    let mut hist = LayerHistograms::new(CoderSpec::new(cfg.t_m * kernel));
+    for c in chunks {
+        hist.merge(&c.hist);
+    }
     let params = hist.best_params();
     let compression = hist.stats(params, spec.num_weights());
-    let metas: Vec<Arc<VectorMeta>> = cached
+    let metas: Vec<Arc<VectorMeta>> = chunks
         .iter()
+        .flat_map(|c| c.cached.iter())
         .map(|e| e.meta_for(params.delta_bits, params.count_bits, cfg.t_m, kernel))
         .collect();
-    simulate_loop_nest(design, spec, &metas, params, compression)
+    let res = simulate_loop_nest(design, spec, &metas, params, compression);
+    bench::phases().add_price(t0.elapsed());
+    res
+}
+
+/// Simulate one conv layer on the CoDR design. See module docs.
+///
+/// This is the memoized hot path: each tile's linearized weight vector
+/// is fingerprinted once and looked up in the global [`memo`]
+/// (transforming only distinct vectors), the layer's encoded size comes
+/// from the histogram size model (no bitstreams are emitted — the model
+/// is asserted bit-identical to emission), and per-vector dataflow
+/// metadata is shared through the memo. Equivalent to one full-range
+/// [`extract_chunk`] + [`price_extracted`]; the coordinator splits big
+/// layers into several chunks over the pool instead.
+pub fn simulate_layer(design: &Codr, spec: &LayerSpec, weights: &Weights) -> LayerResult {
+    let n_m_tiles = spec.m.div_ceil(design.cfg.t_m);
+    let chunk = extract_chunk(design, spec, weights, 0, n_m_tiles);
+    price_extracted(design, spec, &[&chunk])
 }
 
 /// The seed implementation, kept verbatim as the oracle: transform every
@@ -512,6 +562,47 @@ mod tests {
             assert_eq!(fast, oracle, "layer {} seed {seed}", spec.name);
             // And again, fully memo-warm.
             assert_eq!(design.simulate_layer(&spec, &w), oracle);
+        }
+    }
+
+    #[test]
+    fn chunked_extraction_equals_whole_layer_bit_for_bit() {
+        // The coordinator splits big layers into m-tile chunk tasks;
+        // any split must price to the identical LayerResult (mem, alu,
+        // cycles, compression, energy), including clipped edge tiles.
+        for (spec, seed) in [
+            (layer(10, 14, 12, 3, 1, 1), 31u64),
+            (layer(16, 37, 14, 3, 1, 1), 32), // M not a multiple of T_M
+            (layer(3, 9, 23, 11, 4, 0), 33),
+        ] {
+            let mut rng = Rng::new(seed);
+            let w = synthesize_weights(&spec, &mut rng);
+            let design = Codr::default();
+            let whole = design.simulate_layer(&spec, &w);
+            let n_m_tiles = spec.m.div_ceil(design.cfg.t_m);
+            for n_chunks in [1usize, 2, 3, n_m_tiles] {
+                if n_chunks == 0 || n_chunks > n_m_tiles {
+                    continue;
+                }
+                let chunks: Vec<CodrExtract> = (0..n_chunks)
+                    .map(|ci| {
+                        extract_chunk(
+                            &design,
+                            &spec,
+                            &w,
+                            n_m_tiles * ci / n_chunks,
+                            n_m_tiles * (ci + 1) / n_chunks,
+                        )
+                    })
+                    .collect();
+                let refs: Vec<&CodrExtract> = chunks.iter().collect();
+                assert_eq!(
+                    price_extracted(&design, &spec, &refs),
+                    whole,
+                    "layer {} seed {seed} split {n_chunks}",
+                    spec.name
+                );
+            }
         }
     }
 

@@ -10,7 +10,8 @@
 
 use super::Codr;
 use crate::models::LayerSpec;
-use crate::reuse::{transform_layer, UcrVector, WeightVector};
+use crate::reuse::memo::{self, Fp128};
+use crate::reuse::{tile_layer, UcrVector, WeightVector};
 use crate::rle::{decode_layer, encode_layer, CoderSpec};
 use crate::tensor::{Accum, Activations, Tensor, Weights};
 
@@ -36,15 +37,30 @@ pub fn run_layer(
     assert_eq!(bias.len(), spec.m);
 
     // ---- offline compression ------------------------------------------
-    let tiled = transform_layer(spec, weights, cfg.t_n, cfg.t_m);
+    // The UCR transform of each vector comes from the process-wide memo
+    // (fingerprinted at extraction like the stats path) — the functional
+    // simulator shares transforms with every other pipeline instead of
+    // redoing them per call. The encode → decode round trip below still
+    // runs on the REAL streams; only the pure sort/densify/unify step is
+    // memoized, and the memo is pinned bit-identical to a fresh
+    // transform.
+    let tiles = tile_layer(spec, weights, cfg.t_n, cfg.t_m);
     let coder_spec = CoderSpec::new(cfg.t_m * spec.r_k * spec.r_k);
-    let owned: Vec<UcrVector> = tiled.iter().flat_map(|(_, v)| v.iter().cloned()).collect();
+    let cache = memo::global();
+    let owned: Vec<UcrVector> = tiles
+        .iter()
+        .flat_map(|t| t.vectors.iter())
+        .map(|v| {
+            let fp = Fp128::of_i8(&v.weights);
+            cache.get_or_insert_keyed(fp, &v.weights).ucr.clone()
+        })
+        .collect();
     let enc = encode_layer(&owned, coder_spec);
     // The hardware re-decodes the stream every spatial pass; decoding once
     // is equivalent (stream decode determinism is tested separately).
-    let lens: Vec<usize> = tiled
+    let lens: Vec<usize> = tiles
         .iter()
-        .flat_map(|(t, _)| t.vectors.iter().map(|v| v.len()))
+        .flat_map(|t| t.vectors.iter().map(|v| v.len()))
         .collect();
     let decoded = decode_layer(&enc, &lens);
 
@@ -75,9 +91,9 @@ pub fn run_layer(
     let t_co_eff = cfg.t_co_eff(spec.r_k, spec.stride);
     let mut flat = 0usize; // vector cursor into `decoded`, tile order
     let mut tile_vectors: Vec<(&crate::reuse::Tile, &[UcrVector])> = Vec::new();
-    for (tile, vs) in &tiled {
-        tile_vectors.push((tile, &decoded[flat..flat + vs.len()]));
-        flat += vs.len();
+    for tile in &tiles {
+        tile_vectors.push((tile, &decoded[flat..flat + tile.vectors.len()]));
+        flat += tile.vectors.len();
     }
 
     for ro0 in (0..r_o).step_by(t_ro_eff) {

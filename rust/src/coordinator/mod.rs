@@ -1,12 +1,14 @@
 //! Sweep coordinator: fans the (model × sweep-group × architecture ×
-//! layer) grid out over a thread pool, caches per-point results, and
-//! computes the paper's headline aggregates.
+//! layer × tile-chunk) grid out over a thread pool, caches per-point
+//! results, and computes the paper's headline aggregates.
 //!
 //! tokio is unavailable in the offline registry; the pool is
-//! `std::thread::scope` over a lock-free work queue (atomic cursor),
-//! which is the right shape for this embarrassingly parallel sweep.
-//! Since the intra-point fan-out, the task unit is a single (arch,
-//! layer) simulation, so even one sweep point keeps every worker busy.
+//! `std::thread::scope` over per-worker work-stealing ranges. The task
+//! unit is a *tile chunk* of one (arch, layer) simulation
+//! ([`layer_chunks`] splits big layers over their m-tile ranges, merged
+//! exactly by [`finalize_layer`]), so one giant conv layer no longer
+//! serializes the tail of a sweep point — its chunks spread across the
+//! pool and stragglers get stolen.
 //!
 //! [`run_sweep_with`] threads an optional [`ResultStore`] through the
 //! sweep: points already in the store are loaded instead of simulated
@@ -19,12 +21,14 @@
 
 pub mod pool;
 
-use crate::baselines::{Scnn, Ucnn};
-use crate::codr::Codr;
-use crate::models::{Model, SweepGroup, Workload};
+use crate::arch::TileConfig;
+use crate::baselines::{ucnn, Scnn, Ucnn};
+use crate::codr::{dataflow, Codr};
+use crate::models::{LayerSpec, Model, SweepGroup, Workload};
 use crate::reuse::memo;
 use crate::serve::{ResultStore, Scheduler};
 use crate::sim::{Accelerator, LayerResult, ModelResult};
+use crate::tensor::Weights;
 use anyhow::{bail, Result};
 use std::time::Instant;
 
@@ -76,6 +80,106 @@ impl Arch {
     }
 }
 
+/// Smallest per-chunk extraction grain worth a task of its own: below
+/// this, task bookkeeping beats the parallelism.
+const CHUNK_MIN_WEIGHTS: usize = 1 << 15;
+
+/// Fan-out bound per layer (tasks, not threads — the pool balances).
+const MAX_LAYER_CHUNKS: usize = 8;
+
+/// One tile-chunk's worth of a layer simulation, produced by
+/// [`simulate_layer_chunk`] and reduced by [`finalize_layer`].
+pub enum LayerPartial {
+    Codr(dataflow::CodrExtract),
+    Ucnn(ucnn::UcnnExtract),
+    /// Designs whose extraction does not chunk (SCNN's zero-run scan is
+    /// one sequential pass and already the cheapest path) simulate
+    /// whole in their single chunk.
+    Whole(LayerResult),
+}
+
+/// How many tile-chunk tasks this (arch, layer) simulation splits into.
+/// Deterministic in the layer alone (never in thread count or timing),
+/// so chunked results are reproducible across machines; `1` for small
+/// layers and for SCNN.
+pub fn layer_chunks(arch: Arch, spec: &LayerSpec) -> usize {
+    let m_tiles = match arch {
+        Arch::Codr => spec.m.div_ceil(TileConfig::codr().t_m),
+        Arch::Ucnn => spec.m.div_ceil(TileConfig::ucnn().t_m),
+        Arch::Scnn => return 1,
+    };
+    if spec.num_weights() < 2 * CHUNK_MIN_WEIGHTS {
+        return 1;
+    }
+    (spec.num_weights() / CHUNK_MIN_WEIGHTS).clamp(1, MAX_LAYER_CHUNKS.min(m_tiles))
+}
+
+/// The m-tile sub-range of chunk `ci` of `n` (balanced split).
+fn chunk_range(total: usize, ci: usize, n: usize) -> (usize, usize) {
+    (total * ci / n, total * (ci + 1) / n)
+}
+
+/// Run chunk `ci` of `n_chunks` of one (arch, layer) simulation.
+pub fn simulate_layer_chunk(
+    arch: Arch,
+    spec: &LayerSpec,
+    weights: &Weights,
+    ci: usize,
+    n_chunks: usize,
+) -> LayerPartial {
+    match arch {
+        Arch::Codr => {
+            let design = Codr::default();
+            let m_tiles = spec.m.div_ceil(design.cfg.t_m);
+            let (mt0, mt1) = chunk_range(m_tiles, ci, n_chunks);
+            LayerPartial::Codr(dataflow::extract_chunk(&design, spec, weights, mt0, mt1))
+        }
+        Arch::Ucnn => {
+            let design = Ucnn::default();
+            let m_tiles = spec.m.div_ceil(design.cfg.t_m);
+            let (mt0, mt1) = chunk_range(m_tiles, ci, n_chunks);
+            LayerPartial::Ucnn(ucnn::extract_chunk(&design, spec, weights, mt0, mt1))
+        }
+        Arch::Scnn => {
+            debug_assert_eq!(n_chunks, 1, "SCNN never chunks");
+            LayerPartial::Whole(Scnn::default().simulate_layer(spec, weights))
+        }
+    }
+}
+
+/// Reduce a layer's chunk partials (in chunk order) to its
+/// [`LayerResult`]. Bit-identical to the unchunked `simulate_layer` for
+/// every design (pinned by the dataflow/ucnn chunk tests and the
+/// determinism sweep test).
+pub fn finalize_layer(arch: Arch, spec: &LayerSpec, parts: &[LayerPartial]) -> LayerResult {
+    match arch {
+        Arch::Codr => {
+            let chunks: Vec<&dataflow::CodrExtract> = parts
+                .iter()
+                .map(|p| match p {
+                    LayerPartial::Codr(c) => c,
+                    _ => unreachable!("CoDR layer carried a foreign partial"),
+                })
+                .collect();
+            dataflow::price_extracted(&Codr::default(), spec, &chunks)
+        }
+        Arch::Ucnn => {
+            let chunks: Vec<ucnn::UcnnExtract> = parts
+                .iter()
+                .map(|p| match p {
+                    LayerPartial::Ucnn(c) => *c,
+                    _ => unreachable!("UCNN layer carried a foreign partial"),
+                })
+                .collect();
+            ucnn::price_extracted(&Ucnn::default(), spec, &chunks)
+        }
+        Arch::Scnn => match parts {
+            [LayerPartial::Whole(r)] => r.clone(),
+            _ => unreachable!("SCNN layer must be a single whole partial"),
+        },
+    }
+}
+
 /// What the sweep did for each requested point — the cache-hit counters
 /// the acceptance checks and the `serve` status verb report.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -95,9 +199,19 @@ pub struct SweepStats {
     pub simulated_layers: usize,
     /// Weight-vector memo hits/misses during this sweep (deltas of the
     /// process-wide [`memo`] counters — approximate when sweeps run
-    /// concurrently, exact otherwise).
+    /// concurrently, exact otherwise). `memo_hits = l1_hits + l2_hits`.
     pub memo_hits: usize,
     pub memo_misses: usize,
+    /// Memo hits resolved in the thread-local L1 front table (no shared
+    /// state touched).
+    pub l1_hits: usize,
+    /// Memo hits that took a shard of the L2 map.
+    pub l2_hits: usize,
+    /// Byte-verification fallbacks behind detected fingerprint
+    /// collisions — zero on any collision-free workload.
+    pub collision_verifies: usize,
+    /// Memo shard-mutex acquisitions that had to wait (lock contention).
+    pub lock_waits: usize,
     /// Wall-clock of the whole sweep call, in milliseconds.
     pub wall_ms: u64,
 }
@@ -169,7 +283,7 @@ pub fn run_sweep_with(
         return Scheduler::new(store.clone()).run_grid(models, groups, archs, seed);
     }
     let t0 = Instant::now();
-    let (memo_h0, memo_m0) = memo::global().counters();
+    let memo0 = memo::global().breakdown();
 
     // Phase 1: synthesize each (model × group) workload once, in
     // parallel — the weights are shared by every design (regenerating
@@ -185,23 +299,36 @@ pub fn run_sweep_with(
         Workload::generate(model, unique, density, seed)
     });
 
-    // Phase 2: fan the *layers* out — one task per (point, arch, layer),
-    // so even a single-point sweep saturates the pool instead of running
-    // the three designs serially on one worker. `parallel_map` preserves
-    // task order, so results are deterministic regardless of scheduling.
-    let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
+    // Phase 2: fan the layers out as tile-chunk tasks — one pool task
+    // per (point, arch, layer, chunk) — then reduce each layer in a
+    // second parallel pass. Chunking keeps the tail of a sweep point
+    // parallel: one giant VGG16 conv used to ride a single task and
+    // serialize the grid's last seconds. `parallel_map` preserves task
+    // order and chunk reduction is exact integer merging, so results
+    // are deterministic regardless of scheduling.
+    let mut chunk_tasks: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
+    let mut layer_index: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
     for (pi, wl) in workloads.iter().enumerate() {
-        let n_layers = wl.conv_layers().count();
         for ai in 0..archs.len() {
-            for li in 0..n_layers {
-                tasks.push((pi, ai, li));
+            for (li, (spec, _)) in wl.conv_layers().enumerate() {
+                let n_chunks = layer_chunks(archs[ai], spec);
+                layer_index.push((pi, ai, li, chunk_tasks.len(), n_chunks));
+                for ci in 0..n_chunks {
+                    chunk_tasks.push((pi, ai, li, ci, n_chunks));
+                }
             }
         }
     }
-    let layer_results = pool::parallel_map(&tasks, |&(pi, ai, li)| {
-        let acc = archs[ai].build();
+    let partials = pool::parallel_map(&chunk_tasks, |&(pi, ai, li, ci, n_chunks)| {
         let (spec, w) = workloads[pi].conv_layers().nth(li).expect("task layer index");
-        acc.simulate_layer(spec, w)
+        simulate_layer_chunk(archs[ai], spec, w, ci, n_chunks)
+    });
+    let layer_results = pool::parallel_map(&layer_index, |&(pi, ai, li, start, n)| {
+        let (spec, _) = workloads[pi]
+            .conv_layers()
+            .nth(li)
+            .expect("finalize layer index");
+        finalize_layer(archs[ai], spec, &partials[start..start + n])
     });
 
     // Phase 3: reassemble in (model × group) then arch order — the same
@@ -221,13 +348,17 @@ pub fn run_sweep_with(
         }
     }
     let simulated_layers = results.iter().map(|r| r.layers.len()).sum();
-    let (memo_h1, memo_m1) = memo::global().counters();
+    let memo = memo::global().breakdown().since(&memo0);
     let stats = SweepStats {
         requested: results.len(),
         computed: results.len(),
         simulated_layers,
-        memo_hits: (memo_h1 - memo_h0) as usize,
-        memo_misses: (memo_m1 - memo_m0) as usize,
+        memo_hits: memo.hits() as usize,
+        memo_misses: memo.misses as usize,
+        l1_hits: memo.l1_hits as usize,
+        l2_hits: memo.l2_hits as usize,
+        collision_verifies: memo.collision_verifies as usize,
+        lock_waits: memo.lock_waits as usize,
         wall_ms: t0.elapsed().as_millis() as u64,
         ..Default::default()
     };
@@ -348,6 +479,49 @@ mod tests {
         // Unknown model likewise.
         let full = run_sweep(&models, &[SweepGroup::Original], &Arch::all(), 7);
         assert!(headline(&full, &["alexnet"]).is_err());
+    }
+
+    #[test]
+    fn layer_chunking_policy_bounds() {
+        use crate::models::{alexnet, LayerKind};
+        // Small layers never chunk; SCNN never chunks; chunk counts are
+        // bounded, deterministic, and chunk ranges tile the m-tiles.
+        for model in [tiny_cnn(), alexnet()] {
+            for spec in model.layers.iter().filter(|l| l.kind == LayerKind::Conv) {
+                for arch in Arch::all() {
+                    let n = layer_chunks(arch, spec);
+                    assert!((1..=MAX_LAYER_CHUNKS).contains(&n), "{} {n}", spec.name);
+                    assert_eq!(n, layer_chunks(arch, spec), "deterministic");
+                    if arch == Arch::Scnn || spec.num_weights() < 2 * CHUNK_MIN_WEIGHTS {
+                        assert_eq!(n, 1, "{} must not chunk", spec.name);
+                    }
+                    let m_tiles = match arch {
+                        Arch::Codr => spec.m.div_ceil(TileConfig::codr().t_m),
+                        Arch::Ucnn => spec.m.div_ceil(TileConfig::ucnn().t_m),
+                        Arch::Scnn => 1,
+                    };
+                    assert!(n <= m_tiles);
+                    // Ranges partition [0, m_tiles) in order.
+                    let mut prev = 0;
+                    for ci in 0..n {
+                        let (lo, hi) = chunk_range(m_tiles, ci, n);
+                        assert_eq!(lo, prev);
+                        assert!(hi >= lo);
+                        prev = hi;
+                    }
+                    assert_eq!(prev, m_tiles);
+                }
+            }
+        }
+        // The zoo's big convs actually fan out.
+        let big = alexnet();
+        let widest = big
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Conv)
+            .max_by_key(|l| l.num_weights())
+            .unwrap();
+        assert!(layer_chunks(Arch::Codr, widest) > 1, "{}", widest.name);
     }
 
     #[test]

@@ -8,46 +8,67 @@
 //! ([`VectorMeta::new`]) is a pure function of the linearized weight
 //! bytes (plus, for the metadata, the chosen encoding parameters and
 //! tile geometry). So the transform of each **distinct** vector is done
-//! exactly once per process and shared:
+//! exactly once per process and shared across tiles, layers, models,
+//! sweep points, and every connection of a long-running `codr serve`.
 //!
-//! * across tiles of one layer (sparse layers repeat vectors heavily —
-//!   the all-zero vector alone can be a double-digit share at D=25%);
-//! * across layers and models within a sweep;
-//! * across sweep points and repeated requests (same seed ⇒ same base
-//!   weights), including every connection of a long-running `codr serve`.
+//! **Lookup path (this PR's rework).** Keys are 128-bit content
+//! fingerprints ([`Fp128`]: two independent FNV/Fx streams), computed
+//! once when a vector is linearized and reused for everything — L1
+//! indexing, shard selection, map bucketing, and equality. A lookup
+//! goes through two levels:
 //!
-//! Keys are the raw weight bytes — candidates are compared
-//! byte-for-byte by the map's `Eq` on lookup, so a hash collision can
-//! never alias two different vectors and cached results are exactly what
-//! a fresh transform would produce. Hit/miss counters feed
-//! `SweepStats::{memo_hits, memo_misses}`.
+//! 1. **L1** — a small thread-local direct-mapped table of
+//!    `(fingerprint → arena handle)`. Repeated vectors within a tile
+//!    (the all-zero vector alone can be a double-digit share at D=25%)
+//!    resolve here without touching any shared state or lock.
+//! 2. **L2** — the sharded `fingerprint → handle` map. Shards are
+//!    selected by the high bits of the Fx half, map buckets by the FNV
+//!    half, so the two indexes stay uncorrelated. Shard mutexes are
+//!    `try_lock`-first; contended acquisitions are counted
+//!    (`lock_waits`).
 //!
-//! Two long-running-service concerns live here too:
+//! Equality is fingerprint equality plus a length guard. A 128-bit
+//! match with a *different* length is a detected collision: the lookup
+//! falls back to byte verification over the shard's same-fingerprint
+//! side chain, and every such verification is counted
+//! (`collision_verifies` — zero on any collision-free workload, which a
+//! test pins). A same-length collision across both independent 64-bit
+//! streams (~2⁻¹²⁸ per pair) is the accepted residual risk.
 //!
-//! * **Eviction** — at capacity the cache evicts with a second-chance
-//!   (clock) policy inside the incoming key's shard instead of refusing
-//!   inserts, so a `codr serve` whose grid overflows `CODR_MEMO_CAP`
-//!   keeps a warm hit rate on the vectors that are hot *now*;
-//! * **Persistence** — [`VectorCache::save_snapshot`] /
-//!   [`VectorCache::load_snapshot`] write/restore the memo as a compact
-//!   binary file (size-capped, per-entry checksummed), so a restarted
-//!   `codr serve` starts with yesterday's transforms instead of a cold
-//!   cache. Loaded entries enter the same byte-keyed map, so lookups
-//!   stay byte-verified exactly like the in-memory path.
+//! Entries live in an **append-only arena** of [`CachedVector`]s keyed
+//! by `u32` handles: lookups return `&CachedVector` borrows instead of
+//! cloning an `Arc`, per-entry overhead drops to 20 map bytes (the old
+//! map boxed the full weight bytes per key), and snapshot save is a
+//! bulk arena walk that never holds a shard lock. Eviction (second
+//! chance at `CODR_MEMO_CAP`, unchanged policy) unlinks entries from
+//! the map and tombstones them in the arena; the storage is reclaimed
+//! only at process exit, which keeps outstanding borrows and stale L1
+//! handles valid forever — a stale L1 hit still returns the *correct*
+//! transform for those bytes.
+//!
+//! Persistence ([`VectorCache::save_snapshot`] /
+//! [`VectorCache::load_snapshot`]) keeps the PR 3 on-disk format:
+//! entries serialize their weight bytes (reconstructed losslessly from
+//! the UCR form), so snapshots written by older builds restore into the
+//! fingerprint-keyed map and vice versa.
 
 use super::UcrVector;
 use crate::codr::dataflow::VectorMeta;
 use crate::rle::VectorSizeStats;
-use crate::util::hash::{fnv1a64, FxBuildHasher};
+use crate::util::bench;
+use crate::util::hash::fnv1a64;
+pub use crate::util::hash::Fp128;
 use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
 use std::collections::HashMap;
-use std::hash::{BuildHasher, Hash, Hasher};
+use std::hash::{BuildHasher, Hasher};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
-/// Lock striping: vectors hash uniformly, so 64 shards keep the memo
-/// uncontended even with every pool worker hitting it.
+/// Lock striping: fingerprints distribute uniformly, so 64 shards keep
+/// the memo uncontended even with every pool worker hitting it.
 const SHARDS: usize = 64;
 
 /// Default soft cap on cached vectors (entries, not bytes). A 3×3 CoDR
@@ -55,6 +76,16 @@ const SHARDS: usize = 64;
 /// around the low hundreds of MB in the worst case. Override with
 /// `CODR_MEMO_CAP`.
 const DEFAULT_CAPACITY: usize = 1 << 19;
+
+/// Thread-local L1 slots (direct-mapped, indexed by the low bits of the
+/// fingerprint's Fx half — disjoint from the shard index's high bits).
+const L1_SLOTS: usize = 1 << 10;
+
+/// Stripes for the per-lookup counters: each thread is pinned to one
+/// stripe, so the hottest counters (`lookups`, `l1_hits`) are relaxed
+/// adds on a mostly-thread-private cache line instead of a single
+/// contended atomic.
+const COUNTER_STRIPES: usize = 16;
 
 /// `(delta_bits, count_bits, t_m, kernel)` — everything
 /// [`VectorMeta::new`] depends on besides the vector itself.
@@ -75,6 +106,11 @@ pub struct CachedVector {
     /// Second-chance (clock) reference bit: set on every hit, cleared as
     /// the eviction scan passes over the entry.
     hot: AtomicBool,
+    /// Tombstone: the entry was evicted from the map (or served
+    /// uncached at capacity). Its arena slot stays valid — outstanding
+    /// borrows and stale L1 handles keep working — but snapshots skip
+    /// it.
+    dead: AtomicBool,
 }
 
 impl CachedVector {
@@ -93,7 +129,19 @@ impl CachedVector {
             // protection); snapshot-restored entries start cold so an
             // overflowing grid sheds unproven history first.
             hot: AtomicBool::new(hot),
+            dead: AtomicBool::new(false),
         }
+    }
+
+    /// Approximate resident bytes (struct + heap buffers), for the
+    /// arena accounting the serve `status` verb reports.
+    fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<CachedVector>()
+            + self.ucr.uniques.capacity()
+            + self.ucr.counts.capacity() * 4
+            + self.ucr.indexes.capacity() * 2
+            + self.size.deltas.capacity()
+            + self.size.idx_deltas.capacity() * 8
     }
 
     /// Dataflow metadata under the given encoding parameters and tile
@@ -116,15 +164,281 @@ impl CachedVector {
     }
 }
 
-/// One stripe of the cache: weight bytes → transform, FxHash-indexed.
-type Shard = HashMap<Box<[i8]>, Arc<CachedVector>, FxBuildHasher>;
+/// Does `weights` reconstruct exactly to this UCR form? The counted
+/// byte-verification fallback behind a detected fingerprint collision.
+/// Equivalent to `ucr.reconstruct() == weights` without allocating:
+/// every listed position must carry its unique's value, and the
+/// non-zero population must match (positions are distinct by
+/// construction, so matching population ⇒ the unlisted rest is zero on
+/// both sides).
+fn entry_matches(weights: &[i8], ucr: &UcrVector) -> bool {
+    if ucr.len != weights.len() {
+        return false;
+    }
+    let nnz = weights.iter().filter(|&&w| w != 0).count();
+    if nnz != ucr.indexes.len() {
+        return false;
+    }
+    ucr.uniques
+        .iter()
+        .zip(ucr.index_groups())
+        .all(|(&u, group)| group.iter().all(|&i| weights[i as usize] == u))
+}
 
-/// Sharded, capacity-bounded map from weight bytes to [`CachedVector`].
+// ---------------------------------------------------------------------------
+// Arena
+// ---------------------------------------------------------------------------
+
+/// First segment's capacity; segment `s` holds `ARENA_BASE << s`
+/// entries, so capacity doubles per segment and the handle space covers
+/// `ARENA_BASE · (2^SEGMENTS − 1)` entries with a fixed-size spine.
+const ARENA_BASE: usize = 1 << 10;
+const ARENA_SEGMENTS: usize = 22;
+/// ≈ 4.29 G entries — the `u32` handle space is the real bound; memory
+/// exhausts long before either.
+const ARENA_MAX: usize = ARENA_BASE * ((1 << ARENA_SEGMENTS) - 1);
+
+/// Segment + offset of a global arena index.
+#[inline]
+fn arena_locate(idx: usize) -> (usize, usize) {
+    let q = idx / ARENA_BASE + 1;
+    let s = (usize::BITS - 1 - q.leading_zeros()) as usize;
+    (s, idx - ARENA_BASE * ((1 << s) - 1))
+}
+
+/// Append-only, lock-free-on-read entry storage. Segments are allocated
+/// on demand (`OnceLock`), entries are published once (`OnceLock`) and
+/// never move or drop until the arena does, which is what makes `&`
+/// borrows and `u32` handles safe to hold across eviction.
+struct Arena {
+    segments: [OnceLock<Box<[OnceLock<CachedVector>]>>; ARENA_SEGMENTS],
+    next: AtomicUsize,
+    bytes: AtomicU64,
+}
+
+impl Arena {
+    fn new() -> Arena {
+        Arena {
+            segments: std::array::from_fn(|_| OnceLock::new()),
+            next: AtomicUsize::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Publish one entry; returns its handle.
+    fn push(&self, entry: CachedVector) -> u32 {
+        let idx = self.next.fetch_add(1, Ordering::Relaxed);
+        assert!(idx < ARENA_MAX, "vector arena exhausted");
+        let (s, off) = arena_locate(idx);
+        let segment = self.segments[s]
+            .get_or_init(|| (0..(ARENA_BASE << s)).map(|_| OnceLock::new()).collect());
+        self.bytes
+            .fetch_add(entry.approx_bytes() as u64, Ordering::Relaxed);
+        if segment[off].set(entry).is_err() {
+            unreachable!("arena slot {idx} double-published");
+        }
+        idx as u32
+    }
+
+    /// The entry behind a published handle.
+    #[inline]
+    fn get(&self, handle: u32) -> &CachedVector {
+        let (s, off) = arena_locate(handle as usize);
+        self.segments[s].get().expect("arena segment")[off]
+            .get()
+            .expect("arena entry")
+    }
+
+    /// Like [`Self::get`] but tolerant of a slot whose `push` is still
+    /// in flight (index reserved, entry not yet set) — the snapshot
+    /// walk skips those.
+    fn try_get(&self, idx: usize) -> Option<&CachedVector> {
+        let (s, off) = arena_locate(idx);
+        self.segments[s].get()?[off].get()
+    }
+
+    fn len(&self) -> usize {
+        self.next.load(Ordering::Relaxed)
+    }
+
+    fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// L1 front cache (thread-local)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+struct L1Slot {
+    /// Owning cache's id; 0 = empty slot (ids start at 1).
+    cache_id: u64,
+    /// Cache generation at store time; a `flush` bumps the cache's
+    /// generation, invalidating every thread's slots at once.
+    generation: u32,
+    handle: u32,
+    fp: Fp128,
+}
+
+const EMPTY_SLOT: L1Slot = L1Slot {
+    cache_id: 0,
+    generation: 0,
+    handle: 0,
+    fp: Fp128 { lo: 0, hi: 0 },
+};
+
+struct ThreadState {
+    /// This thread's counter stripe (round-robin assigned at first use).
+    stripe: usize,
+    slots: Box<[L1Slot]>,
+}
+
+impl ThreadState {
+    fn new() -> ThreadState {
+        static NEXT_STRIPE: AtomicUsize = AtomicUsize::new(0);
+        ThreadState {
+            stripe: NEXT_STRIPE.fetch_add(1, Ordering::Relaxed) % COUNTER_STRIPES,
+            slots: vec![EMPTY_SLOT; L1_SLOTS].into_boxed_slice(),
+        }
+    }
+}
+
+thread_local! {
+    static L1: RefCell<ThreadState> = RefCell::new(ThreadState::new());
+}
+
+// ---------------------------------------------------------------------------
+// The cache
+// ---------------------------------------------------------------------------
+
+/// Pass-through hasher for [`Fp128`] keys: the fingerprint *is* the
+/// hash, so the map must not hash it again (that second hash was half
+/// the old lookup cost). The derived `Hash` writes `lo` then `hi`;
+/// folding them keeps bucket bits drawn from both halves.
+#[derive(Clone, Copy, Default)]
+struct FpHasher(u64);
+
+impl Hasher for FpHasher {
+    #[inline]
+    fn write(&mut self, _bytes: &[u8]) {
+        unreachable!("Fp128 hashes via write_u64");
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.0 = self.0.rotate_left(32) ^ v;
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[derive(Clone, Copy, Default)]
+struct FpBuildHasher;
+
+impl BuildHasher for FpBuildHasher {
+    type Hasher = FpHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> FpHasher {
+        FpHasher::default()
+    }
+}
+
+/// One stripe of the L2 map.
+#[derive(Default)]
+struct Shard {
+    /// Primary residents: fingerprint → arena handle.
+    map: HashMap<Fp128, u32, FpBuildHasher>,
+    /// Same-fingerprint overflow chain. Every entry here shares its
+    /// fingerprint with a primary resident (the chain dies with its
+    /// primary on eviction); expected empty on real workloads.
+    side: Vec<(Fp128, u32)>,
+}
+
+/// Per-stripe hot counters (padded to a cache line).
+#[repr(align(64))]
+#[derive(Default)]
+struct CounterStripe {
+    lookups: AtomicU64,
+    l1_hits: AtomicU64,
+}
+
+/// Cumulative lookup-path counters, as reported by
+/// [`VectorCache::breakdown`]. All fields are monotonic;
+/// [`MemoCounters::since`] yields the delta across a sweep.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemoCounters {
+    /// Every `get_or_insert` call. At quiescence
+    /// `lookups == l1_hits + l2_hits + misses` exactly (the CI smoke
+    /// asserts it).
+    pub lookups: u64,
+    /// Resolved in the thread-local front table — no shared state.
+    pub l1_hits: u64,
+    /// Resolved in the sharded map under its mutex.
+    pub l2_hits: u64,
+    /// Transformed (or re-found after a racing transform).
+    pub misses: u64,
+    /// Byte-verification fallbacks behind a detected fingerprint
+    /// collision. Zero on any collision-free workload.
+    pub collision_verifies: u64,
+    /// Misses whose post-transform re-check found a racing thread's
+    /// identical entry — the transform was redundant. Observability for
+    /// the unlock/relock window. Below capacity,
+    /// `misses == inserted entries + double_computes` exactly; at
+    /// capacity, misses served uncached (empty shard) add to the left
+    /// side without inserting.
+    pub double_computes: u64,
+    /// Shard-mutex acquisitions that found the lock held (`try_lock`
+    /// failed and the thread had to wait).
+    pub lock_waits: u64,
+    /// Entries evicted by the second-chance policy (zero until the
+    /// cache first fills).
+    pub evictions: u64,
+}
+
+impl MemoCounters {
+    /// L1 + L2 hits.
+    pub fn hits(&self) -> u64 {
+        self.l1_hits + self.l2_hits
+    }
+
+    /// Counter delta since an `earlier` reading.
+    pub fn since(&self, earlier: &MemoCounters) -> MemoCounters {
+        MemoCounters {
+            lookups: self.lookups - earlier.lookups,
+            l1_hits: self.l1_hits - earlier.l1_hits,
+            l2_hits: self.l2_hits - earlier.l2_hits,
+            misses: self.misses - earlier.misses,
+            collision_verifies: self.collision_verifies - earlier.collision_verifies,
+            double_computes: self.double_computes - earlier.double_computes,
+            lock_waits: self.lock_waits - earlier.lock_waits,
+            evictions: self.evictions - earlier.evictions,
+        }
+    }
+}
+
+/// Fingerprint-keyed, two-level, capacity-bounded map from weight
+/// vectors to arena-interned [`CachedVector`]s. See the module docs for
+/// the lookup path.
 pub struct VectorCache {
+    /// Process-unique id tagging this cache's L1 slots (never recycled,
+    /// so a dropped cache's stale slots can never match a live one).
+    id: u64,
+    /// Bumped by `flush` to invalidate every thread's L1 at once.
+    generation: AtomicU32,
     shards: Vec<Mutex<Shard>>,
-    hits: AtomicU64,
+    arena: Arena,
+    stripes: Box<[CounterStripe]>,
+    l2_hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    collision_verifies: AtomicU64,
+    double_computes: AtomicU64,
+    lock_waits: AtomicU64,
     entries: AtomicUsize,
     capacity: usize,
 }
@@ -132,91 +446,248 @@ pub struct VectorCache {
 impl VectorCache {
     /// A cache holding at most ~`capacity` entries. At capacity a new
     /// distinct vector evicts a second-chance victim from its own shard
-    /// (shard selection is hash-uniform, so this approximates global
-    /// random-with-second-chance) instead of being dropped — a
+    /// (shard selection is fingerprint-uniform, so this approximates
+    /// global random-with-second-chance) instead of being dropped — a
     /// long-running `codr serve` keeps a warm hit rate on grids that
     /// overflow the cap. Only when the incoming shard is empty at
     /// capacity is the transform served uncached, which keeps the bound
     /// hard.
     pub fn with_capacity(capacity: usize) -> VectorCache {
+        static NEXT_ID: AtomicU64 = AtomicU64::new(1);
         VectorCache {
-            shards: (0..SHARDS)
-                .map(|_| Mutex::new(HashMap::with_hasher(FxBuildHasher)))
-                .collect(),
-            hits: AtomicU64::new(0),
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            generation: AtomicU32::new(0),
+            shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            arena: Arena::new(),
+            stripes: (0..COUNTER_STRIPES).map(|_| CounterStripe::default()).collect(),
+            l2_hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            collision_verifies: AtomicU64::new(0),
+            double_computes: AtomicU64::new(0),
+            lock_waits: AtomicU64::new(0),
             entries: AtomicUsize::new(0),
             capacity: capacity.max(1),
         }
     }
 
-    /// The shard a weight vector lives in. Shard on the HIGH bits: the
-    /// shard's HashMap buckets on the low bits of this same hash, so
-    /// selecting shards by the low bits would leave every table using
-    /// 1/SHARDS of its buckets.
-    fn shard_for(&self, weights: &[i8]) -> &Mutex<Shard> {
-        let mut hasher = FxBuildHasher.build_hasher();
-        weights.hash(&mut hasher);
-        &self.shards[(hasher.finish() >> 32) as usize % SHARDS]
+    /// The shard a fingerprint lives in: the Fx half's HIGH bits. The
+    /// map buckets on (a fold dominated by) the FNV half and the L1
+    /// indexes on the Fx half's LOW bits, so the three indexes never
+    /// share bit regions.
+    #[inline]
+    fn shard_of(&self, fp: Fp128) -> &Mutex<Shard> {
+        &self.shards[(fp.hi >> 58) as usize % SHARDS]
     }
 
-    /// Look up (or transform and insert) one linearized weight vector.
-    pub fn get_or_insert(&self, weights: &[i8]) -> Arc<CachedVector> {
-        let shard = self.shard_for(weights);
+    /// `try_lock` first so contention is observable: a failed fast
+    /// acquisition counts one `lock_wait`, then blocks normally.
+    fn lock_shard<'a>(&self, shard: &'a Mutex<Shard>) -> std::sync::MutexGuard<'a, Shard> {
+        match shard.try_lock() {
+            Ok(guard) => guard,
+            Err(_) => {
+                self.lock_waits.fetch_add(1, Ordering::Relaxed);
+                shard.lock().unwrap()
+            }
+        }
+    }
+
+    /// Resolve `fp` inside one locked shard. Fingerprint + length is
+    /// the trusted fast path; a length mismatch under an identical
+    /// fingerprint is a detected collision and falls back to counted
+    /// byte verification over the side chain.
+    fn lookup_locked(&self, shard: &Shard, fp: Fp128, weights: &[i8]) -> Option<u32> {
+        let &handle = shard.map.get(&fp)?;
+        if self.arena.get(handle).ucr.len == weights.len() {
+            return Some(handle);
+        }
+        for &(cfp, chandle) in &shard.side {
+            if cfp != fp {
+                continue;
+            }
+            self.collision_verifies.fetch_add(1, Ordering::Relaxed);
+            if entry_matches(weights, &self.arena.get(chandle).ucr) {
+                return Some(chandle);
+            }
+        }
+        None
+    }
+
+    /// Remember `fp → handle` in this thread's L1.
+    fn l1_store(&self, fp: Fp128, generation: u32, handle: u32) {
+        L1.with(|tls| {
+            let mut tls = tls.borrow_mut();
+            tls.slots[(fp.hi as usize) & (L1_SLOTS - 1)] = L1Slot {
+                cache_id: self.id,
+                generation,
+                handle,
+                fp,
+            };
+        });
+    }
+
+    /// Look up (or transform and insert) one linearized weight vector,
+    /// fingerprinting it here. Prefer [`Self::get_or_insert_keyed`]
+    /// when the caller already fingerprinted the bytes at extraction.
+    pub fn get_or_insert(&self, weights: &[i8]) -> &CachedVector {
+        self.get_or_insert_keyed(Fp128::of_i8(weights), weights)
+    }
+
+    /// [`Self::get_or_insert`] with a caller-computed fingerprint. `fp`
+    /// MUST be `Fp128::of_i8(weights)` — the extraction loops compute
+    /// it once per vector and thread it through; tests inject colliding
+    /// values here to pin the fallback path.
+    pub fn get_or_insert_keyed(&self, fp: Fp128, weights: &[i8]) -> &CachedVector {
+        let generation = self.generation.load(Ordering::Relaxed);
+        // L1: thread-local, lock-free, counter on a thread-pinned stripe.
+        let l1 = L1.with(|tls| {
+            let mut tls = tls.borrow_mut();
+            let stripe = &self.stripes[tls.stripe];
+            stripe.lookups.fetch_add(1, Ordering::Relaxed);
+            let slot = &mut tls.slots[(fp.hi as usize) & (L1_SLOTS - 1)];
+            if slot.cache_id == self.id
+                && slot.generation == generation
+                && slot.fp == fp
+                && self.arena.get(slot.handle).ucr.len == weights.len()
+            {
+                stripe.l1_hits.fetch_add(1, Ordering::Relaxed);
+                return Some(slot.handle);
+            }
+            None
+        });
+        if let Some(handle) = l1 {
+            let entry = self.arena.get(handle);
+            entry.hot.store(true, Ordering::Relaxed);
+            return entry;
+        }
+
+        // L2: the sharded map.
+        let shard = self.shard_of(fp);
         {
-            let map = shard.lock().unwrap();
-            if let Some(e) = map.get(weights) {
-                e.hot.store(true, Ordering::Relaxed);
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return Arc::clone(e);
+            let guard = self.lock_shard(shard);
+            if let Some(handle) = self.lookup_locked(&guard, fp, weights) {
+                self.l2_hits.fetch_add(1, Ordering::Relaxed);
+                drop(guard);
+                let entry = self.arena.get(handle);
+                entry.hot.store(true, Ordering::Relaxed);
+                self.l1_store(fp, generation, handle);
+                return entry;
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        // Transform outside the lock; if a racing worker inserted the
-        // same vector meanwhile, its (identical) entry wins.
-        let entry = Arc::new(CachedVector::new(weights));
-        let mut map = shard.lock().unwrap();
-        if let Some(e) = map.get(weights) {
-            return Arc::clone(e);
+
+        // Transform outside the lock, then re-check under it: a racing
+        // worker may have inserted the same vector meanwhile — its
+        // (identical) entry wins and the redundant transform is counted.
+        let t0 = Instant::now();
+        let entry = CachedVector::new(weights);
+        bench::phases().add_transform(t0.elapsed());
+        let mut guard = self.lock_shard(shard);
+        if let Some(handle) = self.lookup_locked(&guard, fp, weights) {
+            self.double_computes.fetch_add(1, Ordering::Relaxed);
+            drop(guard);
+            let entry = self.arena.get(handle);
+            entry.hot.store(true, Ordering::Relaxed);
+            self.l1_store(fp, generation, handle);
+            return entry;
         }
+
+        let handle = self.arena.push(entry);
+        let entry = self.arena.get(handle);
         if self.entries.load(Ordering::Relaxed) >= self.capacity {
             // Second-chance scan: clear reference bits until a cold
             // entry turns up; if every resident was hot, the first one
             // (now cleared) goes.
-            let mut victim: Option<Box<[i8]>> = None;
-            for (k, v) in map.iter() {
-                if v.hot.swap(false, Ordering::Relaxed) {
+            let mut victim: Option<Fp128> = None;
+            for (&k, &h) in guard.map.iter() {
+                if self.arena.get(h).hot.swap(false, Ordering::Relaxed) {
                     continue;
                 }
-                victim = Some(k.clone());
+                victim = Some(k);
                 break;
             }
-            let victim = victim.or_else(|| map.keys().next().cloned());
+            let victim = victim.or_else(|| guard.map.keys().next().copied());
             match victim {
-                Some(k) => {
-                    map.remove(&k);
-                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                Some(vfp) => {
+                    let vhandle = guard.map.remove(&vfp).expect("victim resident");
+                    self.arena.get(vhandle).dead.store(true, Ordering::Relaxed);
+                    let mut removed = 1usize;
+                    // The collision chain dies with its primary.
+                    let arena = &self.arena;
+                    guard.side.retain(|&(cfp, chandle)| {
+                        if cfp == vfp {
+                            arena.get(chandle).dead.store(true, Ordering::Relaxed);
+                            removed += 1;
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    self.evictions.fetch_add(removed as u64, Ordering::Relaxed);
+                    if removed > 1 {
+                        self.entries.fetch_sub(removed - 1, Ordering::Relaxed);
+                    }
+                    if guard.map.contains_key(&fp) {
+                        guard.side.push((fp, handle));
+                    } else {
+                        guard.map.insert(fp, handle);
+                    }
+                    drop(guard);
                 }
-                None => return entry, // empty shard at cap: serve uncached
+                None => {
+                    // Empty shard at cap: no map insert (hard bound).
+                    // The arena entry is tombstoned for snapshots, but
+                    // it still feeds this thread's L1 below — a hot
+                    // vector stuck in an empty-at-cap shard serves from
+                    // the front table instead of re-transforming.
+                    entry.dead.store(true, Ordering::Relaxed);
+                    drop(guard);
+                }
             }
-            map.insert(weights.to_vec().into_boxed_slice(), Arc::clone(&entry));
         } else {
-            map.insert(weights.to_vec().into_boxed_slice(), Arc::clone(&entry));
-            drop(map);
+            // A primary with this fingerprint may exist and simply not
+            // match these bytes (that is what got us past the lookup):
+            // chain the new entry beside it.
+            if guard.map.contains_key(&fp) {
+                guard.side.push((fp, handle));
+            } else {
+                guard.map.insert(fp, handle);
+            }
+            drop(guard);
             self.entries.fetch_add(1, Ordering::Relaxed);
         }
+        // Every branch has released the shard lock by here.
+        self.l1_store(fp, generation, handle);
         entry
     }
 
-    /// Cumulative (hits, misses) since construction. Sweeps report the
-    /// delta across their run; under concurrent sweeps the split between
-    /// them is approximate (the totals are exact).
+    /// Cumulative (hits, misses) since construction — `hits` spans both
+    /// levels. Sweeps report the delta across their run; under
+    /// concurrent sweeps the split between them is approximate (the
+    /// totals are exact).
     pub fn counters(&self) -> (u64, u64) {
-        (
-            self.hits.load(Ordering::Relaxed),
-            self.misses.load(Ordering::Relaxed),
-        )
+        let b = self.breakdown();
+        (b.hits(), b.misses)
+    }
+
+    /// Full lookup-path counter breakdown (see [`MemoCounters`]).
+    pub fn breakdown(&self) -> MemoCounters {
+        let mut lookups = 0u64;
+        let mut l1_hits = 0u64;
+        for stripe in self.stripes.iter() {
+            lookups += stripe.lookups.load(Ordering::Relaxed);
+            l1_hits += stripe.l1_hits.load(Ordering::Relaxed);
+        }
+        MemoCounters {
+            lookups,
+            l1_hits,
+            l2_hits: self.l2_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            collision_verifies: self.collision_verifies.load(Ordering::Relaxed),
+            double_computes: self.double_computes.load(Ordering::Relaxed),
+            lock_waits: self.lock_waits.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
     }
 
     /// Entries evicted by the second-chance policy since construction
@@ -226,27 +697,43 @@ impl VectorCache {
         self.evictions.load(Ordering::Relaxed)
     }
 
+    /// Arena occupancy: `(interned entries, approximate bytes)`. Counts
+    /// tombstoned entries too — the arena is append-only, so this is
+    /// the memo's true memory footprint.
+    pub fn arena_stats(&self) -> (usize, u64) {
+        (self.arena.len(), self.arena.bytes())
+    }
+
     /// Write the memo to `path` as a compact binary snapshot (atomic
-    /// temp-file + rename; the temp file is removed on failure). At most
-    /// `cap_bytes` are written — when the memo is larger, whatever fits
-    /// is snapshotted and the rest simply recomputes next run. Returns
-    /// the number of entries written.
+    /// temp-file + rename; the temp file is removed on failure). The
+    /// walk is over the arena — no shard lock is held, so concurrent
+    /// lookups never stall behind a snapshot. At most `cap_bytes` are
+    /// written; when the memo is larger, whatever fits is snapshotted
+    /// and the rest simply recomputes next run. Returns the number of
+    /// entries written.
     pub fn save_snapshot(&self, path: &Path, cap_bytes: u64) -> Result<usize> {
         let mut buf = Vec::with_capacity(1 << 16);
         buf.extend_from_slice(SNAPSHOT_MAGIC);
         let mut written = 0usize;
-        'shards: for shard in &self.shards {
-            let map = shard.lock().unwrap();
-            for (weights, entry) in map.iter() {
-                let payload = encode_snapshot_entry(weights, entry);
-                if (buf.len() + payload.len() + 12) as u64 > cap_bytes {
-                    break 'shards;
-                }
-                put_u32(&mut buf, payload.len() as u32);
-                buf.extend_from_slice(&payload);
-                put_u64(&mut buf, fnv1a64(&payload));
-                written += 1;
+        for idx in 0..self.arena.len() {
+            // Skip slots whose push is still in flight and tombstones.
+            let Some(entry) = self.arena.try_get(idx) else {
+                continue;
+            };
+            if entry.dead.load(Ordering::Relaxed) {
+                continue;
             }
+            // The UCR form is lossless; the snapshot keeps the PR 3
+            // byte-level format by reconstructing the weights.
+            let weights = entry.ucr.reconstruct();
+            let payload = encode_snapshot_entry(&weights, entry);
+            if (buf.len() + payload.len() + 12) as u64 > cap_bytes {
+                break;
+            }
+            put_u32(&mut buf, payload.len() as u32);
+            buf.extend_from_slice(&payload);
+            put_u64(&mut buf, fnv1a64(&payload));
+            written += 1;
         }
         let dir = path.parent().unwrap_or_else(|| Path::new("."));
         std::fs::create_dir_all(dir)
@@ -280,15 +767,16 @@ impl VectorCache {
         self.save_snapshot(path, snapshot_cap_bytes())
     }
 
-    /// Restore entries from a snapshot written by [`Self::save_snapshot`].
-    /// A missing file is an empty snapshot (`Ok(0)`). Damage degrades by
-    /// the smallest recoverable unit: a check-mismatched or structurally
-    /// invalid entry is skipped, a broken frame ends the restore —
-    /// either way the affected vectors just recompute on first use.
-    /// Restored entries live in the same byte-keyed map as fresh
-    /// transforms, so every later lookup byte-verifies them exactly like
-    /// the in-memory path. Loading stops at capacity and never evicts
-    /// live entries; hit/miss counters are untouched.
+    /// Restore entries from a snapshot written by [`Self::save_snapshot`]
+    /// (this build or a pre-fingerprint one — the byte format is
+    /// unchanged). A missing file is an empty snapshot (`Ok(0)`).
+    /// Damage degrades by the smallest recoverable unit: a
+    /// check-mismatched or structurally invalid entry is skipped, a
+    /// broken frame ends the restore — either way the affected vectors
+    /// just recompute on first use. Restored entries are fingerprinted
+    /// from their stored bytes, so later lookups treat them exactly
+    /// like in-memory inserts. Loading stops at capacity and never
+    /// evicts live entries; hit/miss counters are untouched.
     pub fn load_snapshot(&self, path: &Path) -> Result<usize> {
         let bytes = match std::fs::read(path) {
             Ok(b) => b,
@@ -313,30 +801,49 @@ impl VectorCache {
             let Ok((weights, entry)) = decode_snapshot_entry(payload) else {
                 continue;
             };
-            let mut map = self.shard_for(&weights).lock().unwrap();
-            if map.contains_key(&weights[..]) {
+            let fp = Fp128::of_i8(&weights);
+            let mut guard = self.shard_of(fp).lock().unwrap();
+            if guard.map.contains_key(&fp) {
                 continue;
             }
-            map.insert(weights, Arc::new(entry));
-            drop(map);
+            let handle = self.arena.push(entry);
+            guard.map.insert(fp, handle);
+            drop(guard);
             self.entries.fetch_add(1, Ordering::Relaxed);
             loaded += 1;
         }
         Ok(loaded)
     }
 
-    /// Drop every cached vector (used by `codr bench` to measure the
-    /// cold path). Counters are preserved.
+    /// Unlink every cached vector (used by `codr bench` to measure the
+    /// cold path). Counters are preserved; a generation bump invalidates
+    /// every thread's L1 slots at once. Arena storage is retained
+    /// (append-only), so handles held elsewhere stay valid.
     pub fn flush(&self) {
         for shard in &self.shards {
-            shard.lock().unwrap().clear();
+            let mut guard = shard.lock().unwrap();
+            for &handle in guard.map.values() {
+                self.arena.get(handle).dead.store(true, Ordering::Relaxed);
+            }
+            for &(_, handle) in &guard.side {
+                self.arena.get(handle).dead.store(true, Ordering::Relaxed);
+            }
+            guard.map.clear();
+            guard.side.clear();
         }
         self.entries.store(0, Ordering::Relaxed);
+        self.generation.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Cached distinct vectors.
+    /// Cached distinct vectors (map residents, not arena slots).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards
+            .iter()
+            .map(|s| {
+                let guard = s.lock().unwrap();
+                guard.map.len() + guard.side.len()
+            })
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -346,7 +853,9 @@ impl VectorCache {
 
 /// Snapshot file prefix: magic + format version byte. Bump the trailing
 /// byte on any layout change — old snapshots then fail the magic check
-/// and degrade to a cold cache, never to wrong transforms.
+/// and degrade to a cold cache, never to wrong transforms. (The
+/// fingerprint rework did NOT bump it: entries still serialize their
+/// weight bytes, so snapshots are interchangeable with PR 3/4 builds.)
 const SNAPSHOT_MAGIC: &[u8; 8] = b"CODRMEM\x01";
 
 /// Default snapshot size cap (bytes). Override with
@@ -516,6 +1025,8 @@ pub fn global() -> &'static VectorCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
 
     #[test]
     fn hit_returns_identical_transform() {
@@ -523,11 +1034,33 @@ mod tests {
         let v = [3i8, 0, 1, 3, 0, 1, 1, 4];
         let a = cache.get_or_insert(&v);
         let b = cache.get_or_insert(&v);
-        assert!(Arc::ptr_eq(&a, &b), "second lookup must share the entry");
+        assert!(std::ptr::eq(a, b), "second lookup must share the entry");
         assert_eq!(a.ucr, UcrVector::from_weights(&v));
         assert_eq!(a.size, VectorSizeStats::collect(&a.ucr));
         assert_eq!(cache.counters(), (1, 1));
         assert_eq!(cache.len(), 1);
+        // The repeat resolved in the thread-local L1 (same thread).
+        let b = cache.breakdown();
+        assert_eq!(b.l1_hits, 1);
+        assert_eq!(b.l2_hits, 0);
+        assert_eq!(b.lookups, b.l1_hits + b.l2_hits + b.misses);
+    }
+
+    #[test]
+    fn second_thread_hits_in_l2_not_l1() {
+        let cache = VectorCache::with_capacity(64);
+        let v = [7i8, 0, -2, 7];
+        cache.get_or_insert(&v);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let e = cache.get_or_insert(&v);
+                assert_eq!(e.ucr, UcrVector::from_weights(&v));
+            });
+        });
+        let b = cache.breakdown();
+        // The other thread's L1 was cold; its hit took the shard map.
+        assert_eq!((b.l1_hits, b.l2_hits, b.misses), (0, 1, 1));
+        assert_eq!(b.lookups, 2);
     }
 
     #[test]
@@ -535,13 +1068,124 @@ mod tests {
         let cache = VectorCache::with_capacity(1024);
         let a = cache.get_or_insert(&[1i8, 2, 3]);
         let b = cache.get_or_insert(&[1i8, 2, 4]);
-        assert!(!Arc::ptr_eq(&a, &b));
+        assert!(!std::ptr::eq(a, b));
         assert_eq!(a.ucr.reconstruct(), vec![1, 2, 3]);
         assert_eq!(b.ucr.reconstruct(), vec![1, 2, 4]);
         // Same bytes at a different length are a different vector.
         let c = cache.get_or_insert(&[1i8, 2, 3, 0]);
         assert_eq!(c.ucr.len, 4);
         assert_eq!(cache.len(), 3);
+        // No fingerprint collisions among these, so no byte verifies.
+        assert_eq!(cache.breakdown().collision_verifies, 0);
+    }
+
+    #[test]
+    fn injected_fingerprint_collision_byte_verifies_and_stays_correct() {
+        // Two different vectors forced onto ONE 128-bit fingerprint: the
+        // length guard detects the collision and the counted byte-verify
+        // fallback must return the right entry for each, every time.
+        let cache = VectorCache::with_capacity(64);
+        let fp = Fp128 { lo: 0x1234, hi: 0x5678 };
+        let va = [3i8, 0, 1, 3];
+        let vb = [5i8, 0, 4, 4, -1]; // different length ⇒ detectable
+        let a = cache.get_or_insert_keyed(fp, &va);
+        assert_eq!(a.ucr.reconstruct(), va);
+        let b = cache.get_or_insert_keyed(fp, &vb);
+        assert!(!std::ptr::eq(a, b), "collision must not alias");
+        assert_eq!(b.ucr.reconstruct(), vb);
+        assert_eq!(cache.len(), 2, "both residents (primary + side chain)");
+        // Re-lookups resolve to the correct entries through the fallback.
+        let a2 = cache.get_or_insert_keyed(fp, &va);
+        assert_eq!(a2.ucr.reconstruct(), va);
+        let b2 = cache.get_or_insert_keyed(fp, &vb);
+        assert_eq!(b2.ucr.reconstruct(), vb);
+        let bd = cache.breakdown();
+        assert!(
+            bd.collision_verifies > 0,
+            "the fallback byte-verify must have fired: {bd:?}"
+        );
+        assert_eq!(bd.misses, 2, "each vector transformed exactly once");
+        assert_eq!(bd.lookups, bd.l1_hits + bd.l2_hits + bd.misses);
+    }
+
+    #[test]
+    fn prop_fingerprint_path_matches_direct_transform() {
+        // The fingerprint-keyed path must be bit-for-bit identical to
+        // transforming directly, and a byte-keyed reference map must
+        // agree with the memo's aliasing decisions on every lookup.
+        let cache = VectorCache::with_capacity(4096);
+        let mut reference: std::collections::HashMap<Vec<i8>, *const CachedVector> =
+            std::collections::HashMap::new();
+        check(
+            200,
+            |r, size| {
+                let n = 1 + size % 40;
+                (0..n)
+                    .map(|_| {
+                        if r.chance(0.5) {
+                            0
+                        } else {
+                            (r.below(9) as i16 - 4) as i8
+                        }
+                    })
+                    .collect::<Vec<i8>>()
+            },
+            |v| {
+                let e = cache.get_or_insert(v);
+                let bitwise = e.ucr == UcrVector::from_weights(v)
+                    && e.size == VectorSizeStats::collect(&e.ucr)
+                    && e.ucr.reconstruct() == *v;
+                let stable = match reference.get(v) {
+                    Some(&p) => std::ptr::eq(p, e),
+                    None => {
+                        reference.insert(v.clone(), e as *const CachedVector);
+                        true
+                    }
+                };
+                bitwise && stable
+            },
+        );
+        let b = cache.breakdown();
+        assert_eq!(b.collision_verifies, 0, "no real collisions expected");
+        assert_eq!(b.lookups, b.l1_hits + b.l2_hits + b.misses);
+        assert_eq!(cache.len(), reference.len());
+    }
+
+    #[test]
+    fn concurrent_inserts_conserve_counters_and_never_alias() {
+        let cache = VectorCache::with_capacity(4096);
+        let vectors: Vec<Vec<i8>> = (0..32i8)
+            .map(|i| vec![i, 0, -i, i ^ 5, 0, 2])
+            .collect();
+        std::thread::scope(|s| {
+            for t in 0..8usize {
+                let cache = &cache;
+                let vectors = &vectors;
+                s.spawn(move || {
+                    for round in 0..50usize {
+                        for (vi, v) in vectors.iter().enumerate() {
+                            if (vi + t + round) % 3 == 0 {
+                                continue;
+                            }
+                            let e = cache.get_or_insert(v);
+                            assert_eq!(e.ucr.len, v.len());
+                            assert_eq!(e.ucr.reconstruct(), *v);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.len(), vectors.len());
+        let b = cache.breakdown();
+        // Exact conservation at quiescence, including any racing
+        // double-computes (each is a miss that inserted nothing).
+        assert_eq!(b.lookups, b.l1_hits + b.l2_hits + b.misses);
+        assert_eq!(
+            b.double_computes,
+            b.misses - vectors.len() as u64,
+            "misses == inserted entries + double computes: {b:?}"
+        );
+        assert_eq!(b.collision_verifies, 0);
     }
 
     #[test]
@@ -567,11 +1211,15 @@ mod tests {
         let e = cache.get_or_insert(&[3i8]);
         assert_eq!(e.ucr.reconstruct(), vec![3]);
         assert!(cache.len() <= 2);
-        // Flush resets occupancy.
+        // Flush resets occupancy (and invalidates every thread's L1 via
+        // the generation bump — the relookup below must miss, not serve
+        // a stale front-table hit).
         cache.flush();
         assert!(cache.is_empty());
+        let (_, m0) = cache.counters();
         cache.get_or_insert(&[3i8]);
         assert_eq!(cache.len(), 1);
+        assert_eq!(cache.counters().1, m0 + 1, "post-flush lookup is a miss");
     }
 
     #[test]
@@ -641,6 +1289,25 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_skips_tombstoned_arena_entries() {
+        let a = VectorCache::with_capacity(64);
+        for i in 1..=4i8 {
+            a.get_or_insert(&[i, 0, i]);
+        }
+        a.flush(); // tombstones all four in the arena
+        a.get_or_insert(&[9i8, 9]);
+        let path = snapshot_path("tombstone");
+        let written = a.save_snapshot(&path, DEFAULT_SNAPSHOT_CAP_BYTES).unwrap();
+        assert_eq!(written, 1, "only the live resident is snapshotted");
+        let b = VectorCache::with_capacity(64);
+        assert_eq!(b.load_snapshot(&path).unwrap(), 1);
+        let e = b.get_or_insert(&[9i8, 9]);
+        assert_eq!(e.ucr.reconstruct(), vec![9, 9]);
+        assert_eq!(b.counters(), (1, 0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
     fn snapshot_damage_degrades_to_fewer_entries_never_wrong_ones() {
         let a = VectorCache::with_capacity(64);
         for i in 1..=6i8 {
@@ -701,5 +1368,40 @@ mod tests {
         assert!(loaded <= 3);
         assert!(b.len() <= 3);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn arena_locate_is_a_partition() {
+        // Every index maps into a valid (segment, offset) and the
+        // segment boundaries tile the handle space exactly.
+        let mut expected = (0usize, 0usize);
+        for idx in 0..(ARENA_BASE * 7 + 13) {
+            let (s, off) = arena_locate(idx);
+            assert_eq!((s, off), expected, "idx {idx}");
+            expected = if off + 1 == ARENA_BASE << s {
+                (s + 1, 0)
+            } else {
+                (s, off + 1)
+            };
+            assert!(off < ARENA_BASE << s);
+        }
+        // Spot-check deep indexes.
+        let (s, off) = arena_locate(ARENA_MAX - 1);
+        assert_eq!(s, ARENA_SEGMENTS - 1);
+        assert_eq!(off, (ARENA_BASE << s) - 1);
+    }
+
+    #[test]
+    fn arena_stats_track_interned_entries() {
+        let cache = VectorCache::with_capacity(64);
+        assert_eq!(cache.arena_stats(), (0, 0));
+        cache.get_or_insert(&[1i8, 2]);
+        cache.get_or_insert(&[3i8]);
+        let (entries, bytes) = cache.arena_stats();
+        assert_eq!(entries, 2);
+        assert!(bytes > 0);
+        // Flush tombstones but does not reclaim (append-only).
+        cache.flush();
+        assert_eq!(cache.arena_stats().0, 2);
     }
 }

@@ -111,8 +111,9 @@ impl UcrVector {
     /// scatters positions into the exactly-sized flat index buffer via a
     /// per-value write cursor. This is the whole pipeline's hottest
     /// function (millions of calls per model) — see EXPERIMENTS.md §Perf;
-    /// the cross-tile memo ([`memo`]) ensures each distinct vector runs
-    /// it only once.
+    /// the cross-tile memo ([`memo`], keyed by the 128-bit content
+    /// fingerprint each extraction loop computes per vector) ensures
+    /// each distinct vector runs it only once.
     pub fn from_weights(v: &[i8]) -> Self {
         assert!(v.len() <= u16::MAX as usize + 1, "vector too long for u16 indexes");
         let mut hist = [0u32; 256];

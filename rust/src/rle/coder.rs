@@ -177,6 +177,34 @@ impl LayerHistograms {
         self.n_indexes += s.n_indexes;
     }
 
+    /// Fold another histogram of the SAME coder spec into this one —
+    /// the reduction step of chunked layer extraction: each tile-chunk
+    /// task accumulates a private histogram over its m-tile range, and
+    /// the finalizer merges them in chunk order. Every field is a plain
+    /// integer sum, so any merge order is bit-identical to one
+    /// sequential `add_vector`/`merge_vector` pass (asserted by
+    /// `merged_chunks_equal_sequential_accumulation`).
+    pub fn merge(&mut self, other: &LayerHistograms) {
+        assert_eq!(self.spec, other.spec, "merging histograms of different specs");
+        self.n_vectors += other.n_vectors;
+        self.n_nonempty += other.n_nonempty;
+        self.n_uniques += other.n_uniques;
+        for (d, &n) in other.delta_hist.iter().enumerate() {
+            self.delta_hist[d] += n;
+        }
+        for (c, &n) in other.count_hist.iter().enumerate() {
+            self.count_hist[c] += n;
+        }
+        for (d, &n) in other.idx_delta_hist.iter().enumerate() {
+            self.idx_delta_hist[d] += n;
+        }
+        self.n_idx_abs += other.n_idx_abs;
+        self.n_indexes += other.n_indexes;
+        for (g, &n) in other.vec_unique_hist.iter().enumerate() {
+            self.vec_unique_hist[g] += n;
+        }
+    }
+
     /// Dummy entries created by count overflow at count width `r`.
     ///
     /// Count-field semantics: the all-ones field means "this chunk carries
@@ -878,6 +906,41 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// Chunked extraction folds per-chunk histograms with `merge`; any
+    /// split must reproduce the sequential accumulation bit for bit
+    /// (and hence the same best parameters and priced stats).
+    #[test]
+    fn merged_chunks_equal_sequential_accumulation() {
+        let mut rng = Rng::new(404);
+        let spec = CoderSpec::new(36);
+        let vectors: Vec<UcrVector> = (0..90)
+            .map(|i| {
+                UcrVector::from_weights(&random_vector(&mut rng, 36, (i % 10) as f64 / 10.0, 25))
+            })
+            .collect();
+        let mut whole = LayerHistograms::new(spec);
+        for u in &vectors {
+            whole.add_vector(u);
+        }
+        for n_chunks in [1usize, 2, 3, 7, 90] {
+            let mut merged = LayerHistograms::new(spec);
+            for ci in 0..n_chunks {
+                let (lo, hi) = (90 * ci / n_chunks, 90 * (ci + 1) / n_chunks);
+                let mut part = LayerHistograms::new(spec);
+                for u in &vectors[lo..hi] {
+                    part.add_vector(u);
+                }
+                merged.merge(&part);
+            }
+            assert_eq!(merged, whole, "split into {n_chunks} chunks");
+            assert_eq!(merged.best_params(), whole.best_params());
+            assert_eq!(
+                merged.stats(whole.best_params(), 90 * 36),
+                whole.stats(whole.best_params(), 90 * 36)
+            );
         }
     }
 

@@ -15,7 +15,10 @@
 //! → {"verb":"status"}
 //! ← {"ok":true,"jobs":1,"running":0,"store_entries":6,
 //!    "store":{"entries":6,"packed_files":2,"v1_files":0,"bytes":...,"cap_bytes":null},
-//!    "memo":{"entries":...,"hits":...,"misses":...,"evictions":...}}
+//!    "memo":{"entries":...,"hits":...,"misses":...,"evictions":...,
+//!            "lookups":...,"l1_hits":...,"l2_hits":...,"collision_verifies":...,
+//!            "double_computes":...,"lock_waits":...,
+//!            "arena":{"entries":...,"bytes":...}}}
 //! → {"verb":"result","model":"tiny","group":"Orig","arch":"CoDR","seed":42}
 //! ← {"ok":true,"cycles":...,"energy_uj":...,"bits_per_weight":...}
 //! → {"verb":"watch","job":1}
@@ -37,8 +40,9 @@
 //!
 //! The server-wide `status` reply keeps the flat `store_entries` field
 //! for pre-v2 clients; the structured `store` / `memo` objects are the
-//! forward surface (store occupancy in packed-v2 terms, memo counters
-//! including evictions, open watcher count).
+//! forward surface (store occupancy in packed-v2 terms, the two-level
+//! memo breakdown — L1/L2 hits, collision verifies, double computes,
+//! lock waits, arena occupancy — and the open watcher count).
 
 use crate::coordinator::{Arch, SweepStats};
 use crate::models::{parse_group_list, parse_model_list, Model, SweepGroup};
@@ -106,14 +110,19 @@ pub fn stats_to_json(s: &SweepStats) -> Json {
         ("simulated_layers".into(), Json::usize(s.simulated_layers)),
         ("memo_hits".into(), Json::usize(s.memo_hits)),
         ("memo_misses".into(), Json::usize(s.memo_misses)),
+        ("l1_hits".into(), Json::usize(s.l1_hits)),
+        ("l2_hits".into(), Json::usize(s.l2_hits)),
+        ("collision_verifies".into(), Json::usize(s.collision_verifies)),
+        ("lock_waits".into(), Json::usize(s.lock_waits)),
         ("wall_ms".into(), Json::u64(s.wall_ms)),
     ])
 }
 
 /// Parse stats back out of a response (client side). The memo/wall
-/// fields default to zero so an upgraded client still reads responses
-/// from a pre-upgrade server that has been running since before they
-/// existed.
+/// fields (including the two-level breakdown added with the
+/// fingerprint memo) default to zero so an upgraded client still reads
+/// responses from a pre-upgrade server that has been running since
+/// before they existed.
 pub fn stats_from_json(j: &Json) -> Result<SweepStats> {
     let opt_usize = |key: &str| -> Result<usize> {
         match j.get(key) {
@@ -130,6 +139,10 @@ pub fn stats_from_json(j: &Json) -> Result<SweepStats> {
         simulated_layers: j.field("simulated_layers")?.as_usize()?,
         memo_hits: opt_usize("memo_hits")?,
         memo_misses: opt_usize("memo_misses")?,
+        l1_hits: opt_usize("l1_hits")?,
+        l2_hits: opt_usize("l2_hits")?,
+        collision_verifies: opt_usize("collision_verifies")?,
+        lock_waits: opt_usize("lock_waits")?,
         wall_ms: match j.get("wall_ms") {
             Some(v) => v.as_u64()?,
             None => 0,
@@ -286,11 +299,26 @@ mod tests {
             simulated_layers: 37,
             memo_hits: 120,
             memo_misses: 30,
+            l1_hits: 90,
+            l2_hits: 30,
+            collision_verifies: 0,
+            lock_waits: 3,
             wall_ms: 251,
         };
         let back = stats_from_json(&stats_to_json(&s)).unwrap();
         assert_eq!(back, s);
         assert_eq!(back.memo_hit_rate(), Some(0.8));
+        // Pre-upgrade servers omit the breakdown fields: default zero.
+        let legacy = Json::parse(
+            r#"{"requested":1,"cache_hits":1,"computed":0,"deduped":0,"corrupt":0,
+                "simulated_layers":0}"#
+                .replace('\n', " ")
+                .as_str(),
+        )
+        .unwrap();
+        let back = stats_from_json(&legacy).unwrap();
+        assert_eq!(back.l1_hits, 0);
+        assert_eq!(back.lock_waits, 0);
     }
 
     #[test]

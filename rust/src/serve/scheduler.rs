@@ -16,11 +16,14 @@
 //!    first instead of burning a second simulation; claims are released
 //!    on unwind, so a failed claimant degrades to the waiter computing
 //!    the point itself, never to a hung server.
-//! 4. **Streaming claim release** — the per-(arch, layer) fan-out keeps
-//!    per-point completion counters, so the worker finishing a point's
-//!    *last* layer assembles it, persists it, and releases its claim
-//!    right there. A concurrent request waiting on one point wakes as
-//!    soon as that point is done, not after the claimant's whole grid.
+//! 4. **Streaming claim release** — the per-(arch, layer, tile-chunk)
+//!    fan-out keeps two levels of completion counters: the worker
+//!    finishing a layer's last chunk merges and prices that layer, and
+//!    the worker finishing a point's *last* layer assembles it,
+//!    persists it, and releases its claim right there. A concurrent
+//!    request waiting on one point wakes as soon as that point is done,
+//!    not after the claimant's whole grid — and a point's giant conv
+//!    layers no longer serialize its tail on one worker.
 //!
 //! Results are returned in (model × group) then arch order — identical to
 //! the storeless sweep, so figure output is byte-for-byte the same
@@ -34,7 +37,10 @@
 
 use super::store::{CacheKey, LoadOutcome, ResultStore};
 use crate::arch::MemConfig;
-use crate::coordinator::{pool, Arch, SweepResults, SweepStats};
+use crate::coordinator::{
+    finalize_layer, layer_chunks, pool, simulate_layer_chunk, Arch, LayerPartial, SweepResults,
+    SweepStats,
+};
 use crate::models::{Model, SweepGroup, Workload};
 use crate::reuse::memo;
 use crate::sim::{simulate_model, Accelerator, LayerResult, ModelResult};
@@ -76,14 +82,24 @@ struct Batch<'a> {
     group: SweepGroup,
 }
 
-/// Per-point assembly state for the layer fan-out: workers drop their
-/// layer results into `layers`, and whoever decrements `remaining` to
-/// zero assembles/persists the point and releases its claim.
+/// Per-layer chunk fan-in: tile-chunk tasks drop their partials here,
+/// and whoever decrements `remaining` to zero merges and prices the
+/// layer right there in the pool.
+struct LayerFan {
+    parts: Vec<Mutex<Option<LayerPartial>>>,
+    remaining: AtomicUsize,
+}
+
+/// Per-point assembly state for the two-level fan-out (layers →
+/// tile chunks): chunk finishers reduce their layer into
+/// `layer_results`, and whoever decrements `layers_remaining` to zero
+/// assembles/persists the point and releases its claim.
 struct PointSlot {
     bi: usize,
     point: Point,
-    layers: Vec<Mutex<Option<LayerResult>>>,
-    remaining: AtomicUsize,
+    fans: Vec<LayerFan>,
+    layer_results: Vec<Mutex<Option<LayerResult>>>,
+    layers_remaining: AtomicUsize,
     result: Mutex<Option<ModelResult>>,
 }
 
@@ -183,7 +199,7 @@ impl Scheduler {
             }
         };
         let t0 = Instant::now();
-        let (memo_h0, memo_m0) = memo::global().counters();
+        let memo0 = memo::global().breakdown();
         let mem = MemConfig::default();
         let mut stats = SweepStats::default();
         let mut found: HashMap<(usize, usize, usize), ModelResult> = HashMap::new();
@@ -266,15 +282,17 @@ impl Scheduler {
         }
 
         // Phase 3: batch claimed points by (model, group) so each
-        // workload is synthesized once, then fan the *layers* out — one
-        // pool task per (point, layer). This is what lets a narrow grid
-        // (e.g. a single-model `warm` with three archs) use every worker
-        // instead of running the designs serially on one. Each point
-        // carries a completion counter: the worker that finishes its
-        // last layer assembles it, persists it, and releases its claim
-        // immediately, so concurrent requests waiting on one of our
-        // points wake per point, not after this whole grid (ROADMAP
-        // "Streaming claim release" — closed).
+        // workload is synthesized once, then fan the layers out as
+        // *tile-chunk* tasks — one pool task per (point, layer, chunk).
+        // This is what lets a narrow grid (e.g. a single-model `warm`
+        // with three archs) use every worker, and the chunking keeps a
+        // point's giant conv layers from serializing its tail. Two
+        // completion levels stream the work out: the worker finishing a
+        // layer's last chunk merges and prices that layer; the worker
+        // finishing a point's last layer assembles it, persists it, and
+        // releases its claim immediately, so concurrent requests
+        // waiting on one of our points wake per point, not after this
+        // whole grid (ROADMAP "Streaming claim release" — closed).
         if !to_compute.is_empty() {
             let mut batches: Vec<Batch> = Vec::new();
             let mut by_pair: HashMap<(usize, usize), usize> = HashMap::new();
@@ -296,45 +314,73 @@ impl Scheduler {
             let slots: Vec<PointSlot> = pending
                 .into_iter()
                 .map(|(bi, point)| {
-                    let n_layers = workloads[bi].conv_layers().count();
+                    let arch = archs[point.ai];
+                    let fans: Vec<LayerFan> = workloads[bi]
+                        .conv_layers()
+                        .map(|(spec, _)| {
+                            let n_chunks = layer_chunks(arch, spec);
+                            LayerFan {
+                                parts: (0..n_chunks).map(|_| Mutex::new(None)).collect(),
+                                remaining: AtomicUsize::new(n_chunks),
+                            }
+                        })
+                        .collect();
+                    let n_layers = fans.len();
                     PointSlot {
                         bi,
                         point,
-                        layers: (0..n_layers).map(|_| Mutex::new(None)).collect(),
-                        remaining: AtomicUsize::new(n_layers),
+                        fans,
+                        layer_results: (0..n_layers).map(|_| Mutex::new(None)).collect(),
+                        layers_remaining: AtomicUsize::new(n_layers),
                         result: Mutex::new(None),
                     }
                 })
                 .collect();
-            let mut tasks: Vec<(usize, usize)> = Vec::new();
+            let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
             for (si, slot) in slots.iter().enumerate() {
-                for li in 0..slot.layers.len() {
-                    tasks.push((si, li));
+                for (li, fan) in slot.fans.iter().enumerate() {
+                    for ci in 0..fan.parts.len() {
+                        tasks.push((si, li, ci));
+                    }
                 }
             }
-            pool::parallel_map(&tasks, |&(si, li)| {
+            pool::parallel_map(&tasks, |&(si, li, ci)| {
                 let slot = &slots[si];
-                let acc = archs[slot.point.ai].build();
+                let arch = archs[slot.point.ai];
                 let (spec, w) = workloads[slot.bi]
                     .conv_layers()
                     .nth(li)
                     .expect("task layer index");
-                let lr = acc.simulate_layer(spec, w);
-                *slot.layers[li].lock().unwrap() = Some(lr);
-                if slot.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-                    let result = assemble(slot, &batches, archs);
-                    if let Err(e) = self.store.save(&slot.point.key, &result) {
-                        eprintln!(
-                            "warn: failed to persist {}: {e:#}",
-                            slot.point.key.file_stem()
-                        );
-                    }
-                    // Save attempt done (either way): waiters may now
-                    // read the store or take the point over themselves.
-                    guard.release_one(slot.point.key.fingerprint);
-                    emit(slot.point.mi, slot.point.gi, slot.point.ai, false);
-                    *slot.result.lock().unwrap() = Some(result);
+                let fan = &slot.fans[li];
+                let part = simulate_layer_chunk(arch, spec, w, ci, fan.parts.len());
+                *fan.parts[ci].lock().unwrap() = Some(part);
+                if fan.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
+                    return;
                 }
+                // Last chunk of this layer: merge (chunk order) + price.
+                let parts: Vec<LayerPartial> = fan
+                    .parts
+                    .iter()
+                    .map(|p| p.lock().unwrap().take().expect("chunk partial"))
+                    .collect();
+                let lr = finalize_layer(arch, spec, &parts);
+                *slot.layer_results[li].lock().unwrap() = Some(lr);
+                if slot.layers_remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
+                    return;
+                }
+                // Last layer of the point: assemble, persist, release.
+                let result = assemble(slot, &batches, archs);
+                if let Err(e) = self.store.save(&slot.point.key, &result) {
+                    eprintln!(
+                        "warn: failed to persist {}: {e:#}",
+                        slot.point.key.file_stem()
+                    );
+                }
+                // Save attempt done (either way): waiters may now
+                // read the store or take the point over themselves.
+                guard.release_one(slot.point.key.fingerprint);
+                emit(slot.point.mi, slot.point.gi, slot.point.ai, false);
+                *slot.result.lock().unwrap() = Some(result);
             });
             for slot in &slots {
                 let assembled = slot.result.lock().unwrap().take();
@@ -380,9 +426,13 @@ impl Scheduler {
                 }
             }
         }
-        let (memo_h1, memo_m1) = memo::global().counters();
-        stats.memo_hits = (memo_h1 - memo_h0) as usize;
-        stats.memo_misses = (memo_m1 - memo_m0) as usize;
+        let memo = memo::global().breakdown().since(&memo0);
+        stats.memo_hits = memo.hits() as usize;
+        stats.memo_misses = memo.misses as usize;
+        stats.l1_hits = memo.l1_hits as usize;
+        stats.l2_hits = memo.l2_hits as usize;
+        stats.collision_verifies = memo.collision_verifies as usize;
+        stats.lock_waits = memo.lock_waits as usize;
         stats.wall_ms = t0.elapsed().as_millis() as u64;
         SweepResults { results, stats }
     }
@@ -440,10 +490,10 @@ impl Scheduler {
     }
 }
 
-/// Build a point's [`ModelResult`] from its filled layer slots.
+/// Build a point's [`ModelResult`] from its reduced layer slots.
 fn assemble(slot: &PointSlot, batches: &[Batch], archs: &[Arch]) -> ModelResult {
     let layers: Vec<LayerResult> = slot
-        .layers
+        .layer_results
         .iter()
         .map(|m| m.lock().unwrap().take().expect("assembled layer"))
         .collect();

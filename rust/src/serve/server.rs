@@ -691,7 +691,8 @@ fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     let store = shared.sched.store();
     let st = store.stats();
     let cache = memo::global();
-    let (memo_hits, memo_misses) = cache.counters();
+    let memo = cache.breakdown();
+    let (arena_entries, arena_bytes) = cache.arena_stats();
     Ok(ok_response(vec![
         ("jobs".into(), Json::usize(jobs_len)),
         ("running".into(), Json::usize(running)),
@@ -726,9 +727,24 @@ fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
             "memo".into(),
             Json::Obj(vec![
                 ("entries".into(), Json::usize(cache.len())),
-                ("hits".into(), Json::u64(memo_hits)),
-                ("misses".into(), Json::u64(memo_misses)),
-                ("evictions".into(), Json::u64(cache.evictions())),
+                // `hits` spans both levels (kept for pre-fingerprint
+                // clients); the breakdown fields are the forward surface.
+                ("hits".into(), Json::u64(memo.hits())),
+                ("misses".into(), Json::u64(memo.misses)),
+                ("evictions".into(), Json::u64(memo.evictions)),
+                ("lookups".into(), Json::u64(memo.lookups)),
+                ("l1_hits".into(), Json::u64(memo.l1_hits)),
+                ("l2_hits".into(), Json::u64(memo.l2_hits)),
+                ("collision_verifies".into(), Json::u64(memo.collision_verifies)),
+                ("double_computes".into(), Json::u64(memo.double_computes)),
+                ("lock_waits".into(), Json::u64(memo.lock_waits)),
+                (
+                    "arena".into(),
+                    Json::Obj(vec![
+                        ("entries".into(), Json::usize(arena_entries)),
+                        ("bytes".into(), Json::u64(arena_bytes)),
+                    ]),
+                ),
             ]),
         ),
     ]))

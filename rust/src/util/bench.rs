@@ -7,7 +7,80 @@
 //! renders the one-line summary format the benches print for
 //! EXPERIMENTS.md.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
+
+/// Process-wide per-phase wall-time accumulators for the simulation hot
+/// path, summed across threads (CPU-time style: two threads extracting
+/// for 1 ms each record 2 ms). The phases are recorded at layer / miss
+/// granularity, so the clock costs a handful of `Instant` reads per
+/// layer simulation — negligible against the work it measures.
+///
+/// `transform` is a *subset* of `extract`: vector transforms happen
+/// inside the extraction loop on memo misses, and both spans record
+/// them. `codr bench` v2 reports all three so a regression is
+/// attributable — lookup-bound (extract up, transform flat),
+/// transform-bound (both up), or pricing-bound (price up).
+#[derive(Debug, Default)]
+pub struct PhaseClock {
+    /// Linearize + fingerprint + memo lookup loops (includes transform).
+    extract_ns: AtomicU64,
+    /// Inside `UcrVector` transforms on memo misses (⊂ extract).
+    transform_ns: AtomicU64,
+    /// Parameter search, histogram pricing, and the dataflow loop nest.
+    price_ns: AtomicU64,
+}
+
+/// One point-in-time reading of the [`PhaseClock`] (cumulative nanos).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseSnapshot {
+    pub extract_ns: u64,
+    pub transform_ns: u64,
+    pub price_ns: u64,
+}
+
+impl PhaseSnapshot {
+    /// Nanos accumulated since an `earlier` snapshot.
+    pub fn since(&self, earlier: &PhaseSnapshot) -> PhaseSnapshot {
+        PhaseSnapshot {
+            extract_ns: self.extract_ns - earlier.extract_ns,
+            transform_ns: self.transform_ns - earlier.transform_ns,
+            price_ns: self.price_ns - earlier.price_ns,
+        }
+    }
+}
+
+impl PhaseClock {
+    pub fn add_extract(&self, d: Duration) {
+        self.extract_ns
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_transform(&self, d: Duration) {
+        self.transform_ns
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_price(&self, d: Duration) {
+        self.price_ns
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> PhaseSnapshot {
+        PhaseSnapshot {
+            extract_ns: self.extract_ns.load(Ordering::Relaxed),
+            transform_ns: self.transform_ns.load(Ordering::Relaxed),
+            price_ns: self.price_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The process-wide phase clock every simulator path records into.
+pub fn phases() -> &'static PhaseClock {
+    static CLOCK: OnceLock<PhaseClock> = OnceLock::new();
+    CLOCK.get_or_init(PhaseClock::default)
+}
 
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
@@ -163,6 +236,24 @@ impl Bencher {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn phase_clock_accumulates_and_deltas() {
+        let c = PhaseClock::default();
+        let s0 = c.snapshot();
+        c.add_extract(Duration::from_micros(5));
+        c.add_extract(Duration::from_micros(7));
+        c.add_transform(Duration::from_micros(3));
+        c.add_price(Duration::from_micros(11));
+        let d = c.snapshot().since(&s0);
+        assert_eq!(d.extract_ns, 12_000);
+        assert_eq!(d.transform_ns, 3_000);
+        assert_eq!(d.price_ns, 11_000);
+        // The global clock is a singleton and always usable.
+        let g0 = phases().snapshot();
+        phases().add_price(Duration::from_nanos(1));
+        assert!(phases().snapshot().price_ns > g0.price_ns);
+    }
 
     #[test]
     fn records_samples_and_stats() {

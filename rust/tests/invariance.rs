@@ -78,6 +78,62 @@ fn optimized_layer_results_match_reference_across_zoo_geometries() {
     }
 }
 
+/// The chunked tile-task fan-out (what `run_sweep` schedules) must be
+/// bit-identical to direct unchunked per-layer simulation — including
+/// on zoo layers big enough to actually split into several chunks.
+#[test]
+fn chunked_sweep_equals_direct_layer_simulation_on_big_layers() {
+    use codr::coordinator::layer_chunks;
+    use codr::sim::simulate_model;
+
+    let models = [alexnet()];
+    let group = SweepGroup::Original;
+    let archs = Arch::all();
+    // The premise: at least one alexnet conv fans out into >1 chunk.
+    let widest = models[0]
+        .conv_layers()
+        .max_by_key(|l| l.num_weights())
+        .expect("alexnet has conv layers");
+    assert!(
+        layer_chunks(Arch::Codr, widest) > 1,
+        "{} should chunk",
+        widest.name
+    );
+
+    let sweep = run_sweep(&models, &[group], &archs, 5);
+    let wl = Workload::generate(&models[0], None, None, 5);
+    for arch in archs {
+        let direct = simulate_model(arch.build().as_ref(), &wl, &group.label());
+        let chunked = sweep
+            .get("alexnet", group, arch)
+            .expect("sweep covers the point");
+        assert_eq!(chunked, &direct, "{} chunked != direct", arch.name());
+    }
+}
+
+/// Real weight vectors never collide in the 128-bit fingerprint space:
+/// a whole sweep must complete with ZERO byte-verification fallbacks
+/// (the acceptance pin that warm-path lookups do no byte comparisons),
+/// and the two-level split must account for every reported hit.
+#[test]
+fn sweeps_never_byte_verify_on_collision_free_workloads() {
+    let models = [tiny_cnn()];
+    let groups = [SweepGroup::Original, SweepGroup::Density(25)];
+    let r = run_sweep(&models, &groups, &Arch::all(), 77);
+    assert_eq!(
+        r.stats.collision_verifies, 0,
+        "collision-free workload byte-verified: {:?}",
+        r.stats
+    );
+    assert_eq!(r.stats.memo_hits, r.stats.l1_hits + r.stats.l2_hits);
+    assert!(r.stats.memo_misses > 0, "cold sweep must transform");
+    // Warm repeat: still collision-free, and hits dominate.
+    let r2 = run_sweep(&models, &groups, &Arch::all(), 77);
+    assert_eq!(r2.stats.collision_verifies, 0);
+    assert!(r2.stats.memo_hits > 0);
+    assert_eq!(r.results, r2.results);
+}
+
 /// Identical sweeps share the memo: the second run reports hits and
 /// returns identical results.
 #[test]

@@ -143,9 +143,31 @@ fn serve_submit_status_result_warm_shutdown() {
     assert!(st.get("bytes").unwrap().as_u64().unwrap() > 0);
     assert_eq!(st.get("cap_bytes").unwrap(), &Json::Null);
     let memo = status.get("memo").unwrap();
-    for field in ["entries", "hits", "misses", "evictions"] {
+    for field in [
+        "entries",
+        "hits",
+        "misses",
+        "evictions",
+        "lookups",
+        "l1_hits",
+        "l2_hits",
+        "collision_verifies",
+        "double_computes",
+        "lock_waits",
+    ] {
         assert!(memo.get(field).unwrap().as_u64().is_ok(), "{status}");
     }
+    // Real workloads never collide in the 128-bit fingerprint space.
+    assert_eq!(
+        memo.get("collision_verifies").unwrap().as_u64().unwrap(),
+        0,
+        "{status}"
+    );
+    let arena = memo.get("arena").unwrap();
+    assert!(arena.get("entries").unwrap().as_u64().is_ok(), "{status}");
+    assert!(arena.get("bytes").unwrap().as_u64().is_ok(), "{status}");
+    // The warmed grid interned vectors: the arena is populated.
+    assert!(arena.get("entries").unwrap().as_u64().unwrap() > 0, "{status}");
 
     // shutdown stops the accept loop; run() returns cleanly.
     let bye = proto::request(&addr, &obj(&[("verb", Json::str("shutdown"))])).unwrap();
