@@ -252,6 +252,7 @@ mod tests {
             r_k,
             stride: 1,
             pad: 1,
+            groups: 1,
             sigma_q: 12.0,
             zero_frac,
         }

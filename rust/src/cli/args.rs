@@ -10,7 +10,16 @@ pub struct Args {
     switches: Vec<String>,
 }
 
-const SWITCHES: &[&str] = &["save", "functional", "verbose", "fresh", "wait", "watch", "quick"];
+const SWITCHES: &[&str] = &[
+    "save",
+    "functional",
+    "verbose",
+    "fresh",
+    "wait",
+    "watch",
+    "quick",
+    "json",
+];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -96,6 +105,35 @@ impl Args {
             .context("--job required (the id `codr submit` printed)")?
             .parse()
             .context("--job must be an integer job id")
+    }
+
+    /// Candidate cap for `codr map` (`--max-candidates`, default 512;
+    /// must be at least 1 — the baseline mapping is always evaluated).
+    pub fn max_candidates(&self) -> Result<usize> {
+        match self.get("max-candidates") {
+            None => Ok(512),
+            Some(s) => {
+                let n: usize = s.parse().context("--max-candidates must be an integer")?;
+                if n == 0 {
+                    bail!("--max-candidates must be at least 1");
+                }
+                Ok(n)
+            }
+        }
+    }
+
+    /// The single sweep group for `codr map` (`--group`, default Orig).
+    pub fn single_group(&self) -> Result<crate::models::SweepGroup> {
+        match self.get("group") {
+            None => Ok(crate::models::SweepGroup::Original),
+            Some(spec) => {
+                let gs = crate::models::parse_group_list(spec)?;
+                if gs.len() != 1 {
+                    bail!("--group must name exactly one sweep group");
+                }
+                Ok(gs[0])
+            }
+        }
     }
 
     /// Result-store size cap in mebibytes (`--store-cap-mb`; `None` =
@@ -189,6 +227,26 @@ mod tests {
             .drain_secs()
             .is_err());
         assert!(Args::parse(&sv(&["--job", "first"])).unwrap().job().is_err());
+    }
+
+    #[test]
+    fn map_flags_parse() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.max_candidates().unwrap(), 512);
+        assert_eq!(a.single_group().unwrap(), SweepGroup::Original);
+        let a =
+            Args::parse(&sv(&["--max-candidates", "32", "--group", "D=50%", "--json"])).unwrap();
+        assert_eq!(a.max_candidates().unwrap(), 32);
+        assert_eq!(a.single_group().unwrap(), SweepGroup::Density(50));
+        assert!(a.flag("json"));
+        assert!(Args::parse(&sv(&["--max-candidates", "0"]))
+            .unwrap()
+            .max_candidates()
+            .is_err());
+        assert!(Args::parse(&sv(&["--group", "Orig,D=50%"]))
+            .unwrap()
+            .single_group()
+            .is_err());
     }
 
     #[test]

@@ -179,6 +179,162 @@ pub fn simulate(args: &Args) -> Result<String> {
     ))
 }
 
+/// `codr map --model m [--layer L]` — search one layer's mapping space
+/// and print the Pareto front over (SRAM accesses, energy, utilization).
+/// With `--addr`, submits a `map` job to a running server and streams it;
+/// otherwise the search runs locally through the result store.
+pub fn map(args: &Args) -> Result<String> {
+    let name = args.get("model").context("map: --model required")?;
+    if args.get("addr").is_some() {
+        return map_remote(args, name);
+    }
+    let model = crate::models::parse_model(name)?;
+    let group = args.single_group()?;
+    let seed = args.seed()?;
+    let cfg = crate::mapping::search::SearchConfig {
+        max_candidates: args.max_candidates()?,
+        quick: args.flag("quick"),
+    };
+    // A broken store degrades to an uncached search, like the figures.
+    let store = if args.flag("fresh") {
+        None
+    } else {
+        match ResultStore::open(args.store_dir()) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("warn: result store unavailable ({e:#}); searching uncached");
+                None
+            }
+        }
+    };
+    let (unique, density) = group.knobs();
+    let wl = Workload::generate(&model, unique, density, seed);
+    let layer = args.get("layer");
+    let Some((spec, w)) = wl
+        .conv_layers()
+        .find(|(s, _)| layer.map(|n| s.name == n).unwrap_or(true))
+    else {
+        match layer {
+            Some(n) => bail!("model {name} has no conv layer named `{n}`"),
+            None => bail!("model {name} has no conv layers"),
+        }
+    };
+    let report = crate::mapping::search::search_layer(
+        &crate::codr::Codr::default(),
+        model.name,
+        &group,
+        seed,
+        spec,
+        w,
+        &cfg,
+        store.as_ref(),
+        None,
+    );
+    let j = report.to_json();
+    if args.flag("json") {
+        Ok(j.to_string())
+    } else {
+        render_map_report(model.name, &group.label(), seed, &j)
+    }
+}
+
+/// `codr map --addr`: submit the `map` verb, stream candidate progress
+/// to stderr, render the front from the terminal `end` event. Output is
+/// identical to the local path — both render the same report JSON.
+fn map_remote(args: &Args, name: &str) -> Result<String> {
+    let addr = args.addr();
+    let group = args.single_group()?;
+    let mut fields = vec![
+        ("verb".into(), Json::str("map")),
+        ("model".into(), Json::str(name)),
+        ("group".into(), Json::str(group.label())),
+        ("seed".into(), Json::u64(args.seed()?)),
+        ("max_candidates".into(), Json::usize(args.max_candidates()?)),
+    ];
+    if let Some(l) = args.get("layer") {
+        fields.push(("layer".into(), Json::str(l)));
+    }
+    if args.flag("quick") {
+        fields.push(("quick".into(), Json::Bool(true)));
+    }
+    let resp = proto::request(addr, &Json::Obj(fields))?;
+    expect_ok(&resp)?;
+    let job = resp.field("job")?.as_u64()?;
+    let end = proto::watch(addr, job, |ev| {
+        if matches!(ev.get("event").map(|e| e.as_str()), Some(Ok("point"))) {
+            let num = |k: &str| ev.get(k).and_then(|v| v.as_u64().ok()).unwrap_or(0);
+            let tile = ev.get("group").and_then(|v| v.as_str().ok()).unwrap_or("?");
+            eprintln!("[{}/{}] {tile}", num("done"), num("total"));
+        }
+    })?;
+    if let Some(err) = end.get("error") {
+        bail!("map job {job} failed: {}", err.as_str().unwrap_or("?"));
+    }
+    let map = end.field("map")?;
+    if args.flag("json") {
+        Ok(map.to_string())
+    } else {
+        render_map_report(name, &group.label(), args.seed()?, map)
+    }
+}
+
+/// Render a map search report (the `SearchReport::to_json` shape) as the
+/// human table plus the summary lines the CI smoke greps for.
+fn render_map_report(model: &str, group: &str, seed: u64, j: &Json) -> Result<String> {
+    let layer = j.field("layer")?.as_str()?;
+    let front = j.field("front")?.as_arr()?;
+    let headers = vec![
+        "mapping",
+        "SRAM acc",
+        "energy µJ",
+        "util",
+        "cycles",
+        "in-mc",
+        "in-pass",
+        "w-pass",
+        "reduce",
+    ];
+    let rows: Vec<Vec<String>> = front
+        .iter()
+        .map(|c| -> Result<Vec<String>> {
+            let reuse = c.field("reuse")?;
+            Ok(vec![
+                c.field("tile")?.as_str()?.to_string(),
+                c.field("sram_accesses")?.as_u64()?.to_string(),
+                format!("{:.2}", c.field("energy_uj")?.as_f64()?),
+                format!("{:.3}", c.field("utilization")?.as_f64()?),
+                c.field("cycles")?.as_u64()?.to_string(),
+                format!("{:.0}", reuse.field("input_spatial_multicast")?.as_f64()?),
+                format!("{:.0}", reuse.field("input_temporal_reuse")?.as_f64()?),
+                format!("{:.0}", reuse.field("weight_temporal_reuse")?.as_f64()?),
+                format!("{:.0}", reuse.field("output_temporal_reduction")?.as_f64()?),
+            ])
+        })
+        .collect::<Result<_>>()?;
+    let mut out = report::ascii_table(
+        &format!("mapping Pareto front — {model}/{layer} [{group}] (seed {seed})"),
+        &headers,
+        &rows,
+    );
+    out.push_str(&format!(
+        "\nfront: {} mappings ({} evaluated, {} illegal, {} dropped, {} cache hits)\n",
+        front.len(),
+        j.field("evaluated")?.as_usize()?,
+        j.field("illegal")?.as_usize()?,
+        j.field("dropped")?.as_usize()?,
+        j.field("cache_hits")?.as_usize()?,
+    ));
+    out.push_str(if j.field("baseline_in_front")?.as_bool()? {
+        "baseline: in front\n"
+    } else {
+        "baseline: dominated by front\n"
+    });
+    if let Some(best) = front.first() {
+        out.push_str(&format!("best: {}\n", best.field("mapping")?.as_str()?));
+    }
+    Ok(out)
+}
+
 /// `codr compress --model m` — customized-RLE compression per layer.
 pub fn compress(args: &Args) -> Result<String> {
     let name = args.get("model").context("compress: --model required")?;

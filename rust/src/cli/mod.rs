@@ -4,6 +4,7 @@
 //! ```text
 //! codr figure <fig2|table1|fig6|fig7|fig8|headline|detail|all> [opts]
 //! codr simulate --model <name> [--arch <CoDR|UCNN|SCNN>] [opts]
+//! codr map --model <name> [--layer L] [--group G] [--quick] [--json] [opts]
 //! codr compress --model <name> [--seed N]
 //! codr golden [--artifacts DIR] [--seed N]
 //! codr serve [--addr HOST:PORT] [--store DIR] [--store-cap-mb N] [--drain-secs N]
@@ -32,6 +33,9 @@ COMMANDS:
                     fig2 | table1 | fig6 | fig7 | fig8 | headline | detail | all
                     (reads/writes the result store; --fresh bypasses it)
     simulate        Simulate one model on one design, print per-layer stats
+    map             Search one layer's mapping space (data-centric
+                    directives), print the Pareto front over
+                    (SRAM accesses, energy, PE utilization)
     compress        Compress one model with the customized RLE, print stats
     golden          Verify the CoDR datapath against the XLA golden model
                     (needs a build with --features pjrt)
@@ -57,11 +61,15 @@ OPTIONS:
     --drain-secs N     serve: shutdown drain bound in seconds (default 30)
     --addr HOST:PORT   Sweep service address        (default 127.0.0.1:7878)
     --job N            watch: job id to attach to
+    --layer NAME       map: conv layer to search (default: first conv)
+    --group G          map: single sweep group      (default Orig)
+    --max-candidates N map: cap on evaluated mappings (default 512)
+    --json             map: emit the report as JSON instead of a table
     --fresh            Ignore the result store for this run
     --watch            submit: stream per-point progress until done
     --wait             submit: poll until the job finishes
     --save             Also write reports under results/
-    --quick            bench: tiny grid for CI smoke runs
+    --quick            bench/map: tiny grid for CI smoke runs
     --out FILE         bench: output path (default BENCH_hotpath.json)
 ";
 
@@ -95,6 +103,7 @@ fn dispatch(argv: &[String]) -> Result<String> {
             commands::figure(&rest[0], &args)
         }
         "simulate" => commands::simulate(&Args::parse(rest)?),
+        "map" => commands::map(&Args::parse(rest)?),
         "compress" => commands::compress(&Args::parse(rest)?),
         "golden" => commands::golden(&Args::parse(rest)?),
         "serve" => commands::serve(&Args::parse(rest)?),

@@ -420,6 +420,7 @@ mod tests {
             r_k,
             stride,
             pad,
+            groups: 1,
             sigma_q: 15.0,
             zero_frac: 0.5,
         }

@@ -192,6 +192,7 @@ mod tests {
             r_k,
             stride,
             pad,
+            groups: 1,
             sigma_q: 20.0,
             zero_frac: 0.5,
         }

@@ -103,6 +103,11 @@ pub enum LayerPartial {
 /// so chunked results are reproducible across machines; `1` for small
 /// layers and for SCNN.
 pub fn layer_chunks(arch: Arch, spec: &LayerSpec) -> usize {
+    if spec.groups > 1 {
+        // Grouped convs decompose per group (sim::simulate_layer_grouped),
+        // not per m-tile range; they ride a single whole-layer task.
+        return 1;
+    }
     let m_tiles = match arch {
         Arch::Codr => spec.m.div_ceil(TileConfig::codr().t_m),
         Arch::Ucnn => spec.m.div_ceil(TileConfig::ucnn().t_m),
@@ -127,6 +132,14 @@ pub fn simulate_layer_chunk(
     ci: usize,
     n_chunks: usize,
 ) -> LayerPartial {
+    if spec.groups > 1 {
+        debug_assert_eq!(n_chunks, 1, "grouped layers never chunk");
+        return LayerPartial::Whole(crate::sim::simulate_layer_grouped(
+            arch.build().as_ref(),
+            spec,
+            weights,
+        ));
+    }
     match arch {
         Arch::Codr => {
             let design = Codr::default();
@@ -152,6 +165,11 @@ pub fn simulate_layer_chunk(
 /// every design (pinned by the dataflow/ucnn chunk tests and the
 /// determinism sweep test).
 pub fn finalize_layer(arch: Arch, spec: &LayerSpec, parts: &[LayerPartial]) -> LayerResult {
+    // A single whole-layer partial is already final regardless of design
+    // (SCNN always, and grouped layers on every design).
+    if let [LayerPartial::Whole(r)] = parts {
+        return r.clone();
+    }
     match arch {
         Arch::Codr => {
             let chunks: Vec<&dataflow::CodrExtract> = parts

@@ -30,6 +30,16 @@ impl AluStats {
         self.mults_full + self.mults_low
     }
 
+    /// Multiplier-array utilization over `cycles`: the fraction of
+    /// multiplier-cycles that performed a multiply. One Pareto axis of
+    /// the mapping search (`codr map`).
+    pub fn utilization(&self, total_mults: usize, cycles: u64) -> f64 {
+        if total_mults == 0 || cycles == 0 {
+            return 0.0;
+        }
+        (self.mults() as f64 / (cycles as f64 * total_mults as f64)).min(1.0)
+    }
+
     pub fn add(&mut self, o: &AluStats) {
         self.mults_full += o.mults_full;
         self.mults_low += o.mults_low;

@@ -17,6 +17,10 @@
 //!   [`report`]), plus the PJRT golden-model runtime (`runtime`, behind
 //!   the off-by-default `pjrt` feature — the `xla` crate is absent from
 //!   the offline registry);
+//! * the **mapping-space search engine** ([`mapping`]): data-centric
+//!   `TemporalMap`/`SpatialMap` directives, an analytical reuse engine
+//!   priced through the exact dataflow walk, and a bounded Pareto-front
+//!   explorer (`codr map`);
 //! * the **persistent sweep service** ([`serve`]): a content-addressed
 //!   result store (multi-writer safe via advisory pack locks), an
 //!   incremental grid scheduler with per-point progress observation,
@@ -33,6 +37,7 @@ pub mod cli;
 pub mod codr;
 pub mod coordinator;
 pub mod energy;
+pub mod mapping;
 pub mod models;
 pub mod quant;
 pub mod report;

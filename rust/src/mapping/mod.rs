@@ -1,0 +1,576 @@
+//! Data-centric mapping directives and the analytical reuse engine.
+//!
+//! A *mapping* describes how one conv layer's iteration space is tiled
+//! onto the CoDR substrate, MAESTRO-style: one `TemporalMap(size, offset)`
+//! or `SpatialMap(size, offset)` directive per dimension of
+//! `{K, C, R, S, X', Y'}` (output channels, input channels, kernel rows/
+//! cols, output cols/rows), plus the spatial fan-out (`PU=n`, the number
+//! of processing units the one spatial directive unrolls over).
+//!
+//! The engine is *exact by construction*: a legal mapping lowers to a
+//! derived [`TileConfig`] ([`Mapping::derived_config`]) and is priced by
+//! the existing Fig 5a dataflow walk (`codr::dataflow`) under that
+//! configuration, so every candidate's SRAM-access and energy numbers
+//! come from the same `arch::mem` / `energy` model as the paper figures.
+//! In particular the directive set equivalent to the shipped
+//! input/output-stationary dataflow ([`Mapping::baseline`]) reproduces
+//! the current numbers **bit for bit** — pinned by the
+//! `baseline_mapping_prices_bit_for_bit` test here and the
+//! `baseline_directives_reproduce_fixed_dataflow_bit_for_bit`
+//! integration pin.
+//!
+//! [`reuse_factors`] reports the analytical reuse profile of a candidate
+//! (the four MAESTRO reuse classes as they appear in CoDR: input spatial
+//! multicast across PUs, input temporal reuse across m-groups, weight
+//! temporal reuse across spatial tiles, output temporal reduction across
+//! C·R·S; CoDR has no cross-PE spatial reduction — it is output
+//! stationary).
+//!
+//! [`search`] enumerates the legal mapping space per layer and reduces it
+//! to a Pareto front over (SRAM accesses, energy, PE utilization).
+
+pub mod search;
+
+use crate::arch::{MemConfig, TileConfig};
+use crate::codr::Codr;
+use crate::models::LayerSpec;
+use crate::sim::{simulate_layer_grouped, LayerResult};
+use crate::tensor::Weights;
+use std::fmt;
+
+/// A conv-layer dimension a directive maps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dim {
+    /// Output channels (M in the paper's notation).
+    K,
+    /// Input channels (N).
+    C,
+    /// Kernel rows.
+    R,
+    /// Kernel cols.
+    S,
+    /// Output rows (Y').
+    Yo,
+    /// Output cols (X').
+    Xo,
+}
+
+impl Dim {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dim::K => "K",
+            Dim::C => "C",
+            Dim::R => "R",
+            Dim::S => "S",
+            Dim::Yo => "Y'",
+            Dim::Xo => "X'",
+        }
+    }
+}
+
+/// Temporal (iterate over time on one PE) vs spatial (unroll across PEs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapKind {
+    Temporal,
+    Spatial,
+}
+
+/// One per-dimension mapping directive. `size` is the tile edge along the
+/// dimension (a *cap*: edge tiles clip at the layer boundary, exactly as
+/// the fixed dataflow clips `T_N`/`T_M`); `offset` is the step between
+/// consecutive tiles — equal to `size` everywhere in CoDR's space (the
+/// kernel window overlap lives in the derived input tile, not in the
+/// directive stride).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Directive {
+    pub kind: MapKind,
+    pub dim: Dim,
+    pub size: usize,
+    pub offset: usize,
+}
+
+impl fmt::Display for Directive {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let kind = match self.kind {
+            MapKind::Temporal => "TemporalMap",
+            MapKind::Spatial => "SpatialMap",
+        };
+        write!(f, "{kind}({},{}) {}", self.size, self.offset, self.dim.label())
+    }
+}
+
+/// A complete mapping: the spatial fan-out plus one directive per
+/// dimension, listed outer → inner in the Fig 5a loop order
+/// (④ spatial tile, ③ m-group, ② n-tile, ① kernel walk).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Mapping {
+    /// PUs the spatial directive unrolls over (③'s concurrent width).
+    pub t_pu: usize,
+    pub directives: Vec<Directive>,
+}
+
+impl fmt::Display for Mapping {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PU={}", self.t_pu)?;
+        for d in &self.directives {
+            write!(f, " | {d}")?;
+        }
+        Ok(())
+    }
+}
+
+impl Mapping {
+    /// Build the canonical directive set for a tile-size choice. The
+    /// kernel dims are always fully unrolled temporally (CoDR streams
+    /// whole compressed kernels per vector), so the searched axes are
+    /// `(t_pu, t_m, t_n, t_ro, t_co)`.
+    pub fn from_tiles(
+        spec: &LayerSpec,
+        t_pu: usize,
+        t_m: usize,
+        t_n: usize,
+        t_ro: usize,
+        t_co: usize,
+    ) -> Mapping {
+        let t = |dim, size| Directive {
+            kind: MapKind::Temporal,
+            dim,
+            size,
+            offset: size,
+        };
+        Mapping {
+            t_pu,
+            directives: vec![
+                t(Dim::Yo, t_ro),
+                t(Dim::Xo, t_co),
+                Directive {
+                    kind: MapKind::Spatial,
+                    dim: Dim::K,
+                    size: t_m,
+                    offset: t_m,
+                },
+                t(Dim::C, t_n),
+                t(Dim::R, spec.r_k),
+                t(Dim::S, spec.r_k),
+            ],
+        }
+    }
+
+    /// The directive set equivalent to the shipped input/output-stationary
+    /// dataflow at `cfg` — the mapping whose derived configuration IS
+    /// `cfg`, and whose price equals `Codr::simulate_layer` bit for bit.
+    pub fn baseline(cfg: &TileConfig, spec: &LayerSpec) -> Mapping {
+        Mapping::from_tiles(spec, cfg.t_pu, cfg.t_m, cfg.t_n, cfg.t_ro, cfg.t_co)
+    }
+
+    /// The directive size on `dim`, if present.
+    pub fn size_of(&self, dim: Dim) -> Option<usize> {
+        self.directives.iter().find(|d| d.dim == dim).map(|d| d.size)
+    }
+
+    /// Compact tile label for tables: `PU8 K4 C4 Y'8 X'8`.
+    pub fn tile_label(&self) -> String {
+        format!(
+            "PU{} K{} C{} Y'{} X'{}",
+            self.t_pu,
+            self.size_of(Dim::K).unwrap_or(0),
+            self.size_of(Dim::C).unwrap_or(0),
+            self.size_of(Dim::Yo).unwrap_or(0),
+            self.size_of(Dim::Xo).unwrap_or(0),
+        )
+    }
+
+    /// Lower to the tile configuration the dataflow walk runs under. The
+    /// Input RF window (`t_ri`/`t_ci`) and the total multiplier budget are
+    /// hardware, inherited from `base`; the multipliers redistribute over
+    /// the chosen PU count.
+    pub fn derived_config(&self, base: &TileConfig) -> TileConfig {
+        TileConfig {
+            name: base.name,
+            t_pu: self.t_pu,
+            t_m: self.size_of(Dim::K).unwrap_or(base.t_m),
+            t_n: self.size_of(Dim::C).unwrap_or(base.t_n),
+            t_ro: self.size_of(Dim::Yo).unwrap_or(base.t_ro),
+            t_co: self.size_of(Dim::Xo).unwrap_or(base.t_co),
+            t_ri: base.t_ri,
+            t_ci: base.t_ci,
+            mults_per_pu: (base.total_mults() / self.t_pu.max(1)).max(1),
+        }
+    }
+
+    /// Legality of this mapping for `spec` under the `base` arch and
+    /// `mem` budgets. Returns the first violated constraint.
+    ///
+    /// Checks, in order: directive structure (one directive per dimension,
+    /// exactly one `SpatialMap` and it must sit on K — the Selector routes
+    /// along output channels), positive non-overlapping tiles, full kernel
+    /// unroll, the PE budget (PU fan-out within the multiplier budget),
+    /// the RF budgets (input tile window and per-PU output tile must fit
+    /// `mem.rf_bytes`), and group boundaries (for grouped convs no tile
+    /// may span channels of two groups).
+    pub fn validate(
+        &self,
+        spec: &LayerSpec,
+        base: &TileConfig,
+        mem: &MemConfig,
+    ) -> Result<(), String> {
+        for dim in [Dim::K, Dim::C, Dim::R, Dim::S, Dim::Yo, Dim::Xo] {
+            let n = self.directives.iter().filter(|d| d.dim == dim).count();
+            if n != 1 {
+                return Err(format!("dimension {} mapped {n} times (need 1)", dim.label()));
+            }
+        }
+        let spatial: Vec<&Directive> = self
+            .directives
+            .iter()
+            .filter(|d| d.kind == MapKind::Spatial)
+            .collect();
+        match spatial.as_slice() {
+            [d] if d.dim == Dim::K => {}
+            [d] => {
+                return Err(format!(
+                    "SpatialMap must sit on K (the Selector routes along output \
+                     channels), found it on {}",
+                    d.dim.label()
+                ))
+            }
+            _ => return Err(format!("need exactly 1 SpatialMap, found {}", spatial.len())),
+        }
+        for d in &self.directives {
+            if d.size == 0 {
+                return Err(format!("{} has size 0", d.dim.label()));
+            }
+            if d.offset != d.size {
+                return Err(format!(
+                    "{} offset {} != size {} (overlapping tiles unsupported)",
+                    d.dim.label(),
+                    d.offset,
+                    d.size
+                ));
+            }
+        }
+        for dim in [Dim::R, Dim::S] {
+            if self.size_of(dim) != Some(spec.r_k) {
+                return Err(format!(
+                    "{} must be fully unrolled (TemporalMap({},{}) {})",
+                    dim.label(),
+                    spec.r_k,
+                    spec.r_k,
+                    dim.label()
+                ));
+            }
+        }
+        if self.t_pu == 0 {
+            return Err("PU fan-out is 0".into());
+        }
+        if self.t_pu > base.total_mults() {
+            return Err(format!(
+                "{} PUs exceed the {}-multiplier budget",
+                self.t_pu,
+                base.total_mults()
+            ));
+        }
+        let t_m = self.size_of(Dim::K).unwrap();
+        let t_n = self.size_of(Dim::C).unwrap();
+        let t_ro = self.size_of(Dim::Yo).unwrap();
+        let t_co = self.size_of(Dim::Xo).unwrap();
+        let in_rf = t_n * base.t_ri * base.t_ci;
+        if in_rf as f64 > mem.rf_bytes {
+            return Err(format!(
+                "input tile {t_n}x{}x{} = {in_rf} B exceeds the {} B Input RF",
+                base.t_ri, base.t_ci, mem.rf_bytes
+            ));
+        }
+        // APEs hold t_ro×t_co running 32-bit partials per output channel.
+        let out_rf = t_m * t_ro * t_co * 4;
+        if out_rf as f64 > mem.rf_bytes {
+            return Err(format!(
+                "output tile {t_m}x{t_ro}x{t_co}x4 = {out_rf} B exceeds the {} B Output RF",
+                mem.rf_bytes
+            ));
+        }
+        if spec.groups > 1 {
+            if t_n > spec.n_per_group() {
+                return Err(format!(
+                    "C tile {t_n} spans a group boundary (N/groups = {})",
+                    spec.n_per_group()
+                ));
+            }
+            if t_m > spec.m_per_group() {
+                return Err(format!(
+                    "K tile {t_m} spans a group boundary (M/groups = {})",
+                    spec.m_per_group()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The analytical reuse profile of one (layer, mapping) candidate — the
+/// four MAESTRO reuse classes as they manifest in CoDR's dataflow.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReuseFactors {
+    /// PUs each Input-RF tile is multicast to per fetch (spatial).
+    pub input_spatial_multicast: f64,
+    /// Times each input feature is re-fetched from SRAM over the layer
+    /// (the paper's `M/(T_PU·T_M)` passes).
+    pub input_temporal_reuse: f64,
+    /// Times the compressed weight stream is re-read (once per spatial
+    /// tile — §III-B's deliberate trade).
+    pub weight_temporal_reuse: f64,
+    /// Accumulations folded into each output feature over time
+    /// (`N/groups · R_K²` in a dense walk).
+    pub output_temporal_reduction: f64,
+    /// Cross-PE reduction fan-in per output — 1 for CoDR (output
+    /// stationary: no partial sums ever cross PUs).
+    pub output_spatial_reduction: f64,
+}
+
+/// Compute the reuse factors of a mapping on a layer (per group; every
+/// group of a grouped conv has the identical profile).
+pub fn reuse_factors(spec: &LayerSpec, mapping: &Mapping, base: &TileConfig) -> ReuseFactors {
+    let cfg = mapping.derived_config(base);
+    let t_ro_eff = cfg.t_ro_eff(spec.r_k, spec.stride);
+    let t_co_eff = cfg.t_co_eff(spec.r_k, spec.stride);
+    let r_o = spec.r_o();
+    let n_sp = r_o.div_ceil(t_ro_eff) * r_o.div_ceil(t_co_eff);
+    let m_tiles = spec.m_per_group().div_ceil(cfg.t_m);
+    let m_groups = m_tiles.div_ceil(cfg.t_pu);
+    ReuseFactors {
+        input_spatial_multicast: cfg.t_pu.min(m_tiles) as f64,
+        input_temporal_reuse: m_groups as f64,
+        weight_temporal_reuse: n_sp as f64,
+        output_temporal_reduction: (spec.n_per_group() * spec.r_k * spec.r_k) as f64,
+        output_spatial_reduction: 1.0,
+    }
+}
+
+/// Price one (layer, mapping) candidate through the exact dataflow walk:
+/// lower the mapping to its derived tile configuration and run the same
+/// `codr::dataflow` loop nest (with per-group decomposition for grouped
+/// convs) that prices the paper figures.
+pub fn price_mapping(
+    base: &Codr,
+    spec: &LayerSpec,
+    weights: &Weights,
+    mapping: &Mapping,
+) -> LayerResult {
+    let design = Codr {
+        cfg: mapping.derived_config(&base.cfg),
+        cacti: base.cacti.clone(),
+        mem: base.mem,
+    };
+    simulate_layer_grouped(&design, spec, weights)
+}
+
+/// One priced candidate: its mapping, the three Pareto axes, and the
+/// analytical reuse profile.
+#[derive(Clone, Debug)]
+pub struct CandidateResult {
+    pub mapping: Mapping,
+    /// Fig 7 metric: total SRAM accesses of the layer.
+    pub sram_accesses: u64,
+    /// Total energy of the layer, µJ.
+    pub energy_uj: f64,
+    /// Multiplier-array utilization in [0, 1].
+    pub utilization: f64,
+    pub cycles: u64,
+    pub reuse: ReuseFactors,
+    /// Served from the content-addressed store rather than simulated.
+    pub cache_hit: bool,
+}
+
+impl CandidateResult {
+    /// Assemble from a priced layer result.
+    pub fn from_layer(
+        mapping: Mapping,
+        base: &TileConfig,
+        spec: &LayerSpec,
+        r: &LayerResult,
+        cache_hit: bool,
+    ) -> CandidateResult {
+        let reuse = reuse_factors(spec, &mapping, base);
+        CandidateResult {
+            utilization: r.alu.utilization(base.total_mults(), r.cycles),
+            sram_accesses: r.mem.sram_accesses(),
+            energy_uj: r.energy.total_uj(),
+            cycles: r.cycles,
+            reuse,
+            mapping,
+            cache_hit,
+        }
+    }
+
+    /// `self` Pareto-dominates `other` on (SRAM↓, energy↓, utilization↑).
+    pub fn dominates(&self, other: &CandidateResult) -> bool {
+        let no_worse = self.sram_accesses <= other.sram_accesses
+            && self.energy_uj <= other.energy_uj
+            && self.utilization >= other.utilization;
+        let better = self.sram_accesses < other.sram_accesses
+            || self.energy_uj < other.energy_uj
+            || self.utilization > other.utilization;
+        no_worse && better
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{mobile, synthesize_weights, LayerKind};
+    use crate::util::rng::Rng;
+
+    fn layer(n: usize, m: usize, r_i: usize, r_k: usize, stride: usize) -> LayerSpec {
+        LayerSpec {
+            name: "map-test".into(),
+            kind: LayerKind::Conv,
+            n,
+            m,
+            r_i,
+            r_k,
+            stride,
+            pad: 0,
+            groups: 1,
+            sigma_q: 10.0,
+            zero_frac: 0.5,
+        }
+    }
+
+    #[test]
+    fn baseline_mapping_lowers_to_the_arch_config() {
+        let cfg = TileConfig::codr();
+        let spec = layer(16, 32, 14, 3, 1);
+        let m = Mapping::baseline(&cfg, &spec);
+        assert_eq!(m.derived_config(&cfg), cfg);
+        assert!(m.validate(&spec, &cfg, &MemConfig::default()).is_ok());
+        let s = m.to_string();
+        assert!(s.contains("SpatialMap(4,4) K"), "{s}");
+        assert!(s.contains("TemporalMap(3,3) R"), "{s}");
+    }
+
+    #[test]
+    fn baseline_mapping_prices_bit_for_bit() {
+        // The tentpole invariance pin: fixed dataflow ≡ its directive set.
+        for (spec, seed) in [
+            (layer(10, 14, 12, 3, 1), 41u64),
+            (layer(3, 96, 227, 11, 4), 42), // alexnet conv1 geometry
+        ] {
+            let mut rng = Rng::new(seed);
+            let w = synthesize_weights(&spec, &mut rng);
+            let base = Codr::default();
+            let fixed = crate::codr::dataflow::simulate_layer(&base, &spec, &w);
+            let mapped = price_mapping(&base, &spec, &w, &Mapping::baseline(&base.cfg, &spec));
+            assert_eq!(mapped, fixed, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_malformed_directive_sets() {
+        let cfg = TileConfig::codr();
+        let mem = MemConfig::default();
+        let spec = layer(16, 32, 14, 3, 1);
+        // Spatial on the wrong dimension.
+        let mut m = Mapping::from_tiles(&spec, 8, 4, 4, 8, 8);
+        m.directives[2].kind = MapKind::Temporal;
+        m.directives[3].kind = MapKind::Spatial;
+        assert!(m.validate(&spec, &cfg, &mem).unwrap_err().contains("SpatialMap"));
+        // Overlapping tiles.
+        let mut m = Mapping::from_tiles(&spec, 8, 4, 4, 8, 8);
+        m.directives[0].offset = 4;
+        assert!(m.validate(&spec, &cfg, &mem).unwrap_err().contains("offset"));
+        // Partial kernel unroll.
+        let mut m = Mapping::from_tiles(&spec, 8, 4, 4, 8, 8);
+        m.directives[4].size = 1;
+        m.directives[4].offset = 1;
+        assert!(m.validate(&spec, &cfg, &mem).unwrap_err().contains("unrolled"));
+        // PE budget.
+        let m = Mapping::from_tiles(&spec, 1024, 4, 4, 8, 8);
+        assert!(m.validate(&spec, &cfg, &mem).unwrap_err().contains("budget"));
+        // RF budgets.
+        let m = Mapping::from_tiles(&spec, 8, 4, 64, 8, 8);
+        assert!(m.validate(&spec, &cfg, &mem).unwrap_err().contains("Input RF"));
+        let m = Mapping::from_tiles(&spec, 8, 64, 4, 8, 8);
+        assert!(m.validate(&spec, &cfg, &mem).unwrap_err().contains("Output RF"));
+    }
+
+    #[test]
+    fn validation_enforces_group_boundaries() {
+        let cfg = TileConfig::codr();
+        let mem = MemConfig::default();
+        let zoo = mobile();
+        let dw = zoo.layers.iter().find(|l| l.name == "dw2").unwrap();
+        assert_eq!(dw.n_per_group(), 1, "depthwise");
+        // A C tile wider than one channel would mix groups: reject.
+        let m = Mapping::from_tiles(dw, 8, 1, 4, 8, 8);
+        assert!(m.validate(dw, &cfg, &mem).unwrap_err().contains("group boundary"));
+        // One channel per tile is legal.
+        let m = Mapping::from_tiles(dw, 8, 1, 1, 8, 8);
+        assert!(m.validate(dw, &cfg, &mem).is_ok());
+        // Grouped conv from the zoo stays legal at the baseline tiles.
+        let g3 = zoo.layers.iter().find(|l| l.name == "g3").unwrap();
+        assert_eq!(g3.m_per_group(), 16);
+        let m = Mapping::from_tiles(g3, 8, 4, 4, 8, 8);
+        assert!(m.validate(g3, &cfg, &mem).is_ok());
+        // A K tile wider than the per-group channel count rejects (tight
+        // groups so the RF budget is not the binding constraint).
+        let tight = LayerSpec {
+            groups: 4,
+            ..layer(8, 8, 14, 3, 1)
+        };
+        assert_eq!(tight.m_per_group(), 2);
+        let m = Mapping::from_tiles(&tight, 8, 4, 2, 8, 8);
+        assert!(m.validate(&tight, &cfg, &mem).unwrap_err().contains("group boundary"));
+    }
+
+    #[test]
+    fn reuse_factors_match_paper_formulas() {
+        let cfg = TileConfig::codr();
+        let spec = layer(4, 64, 16, 3, 1);
+        let f = reuse_factors(&spec, &Mapping::baseline(&cfg, &spec), &cfg);
+        // M/(T_PU·T_M) = 64/32 = 2 input passes; full PU multicast.
+        assert_eq!(f.input_temporal_reuse, 2.0);
+        assert_eq!(f.input_spatial_multicast, 8.0);
+        // 14x14 output over the 8x8 (RF-unclipped, 3x3 s1) tiles → 4 tiles.
+        assert_eq!(f.weight_temporal_reuse, 4.0);
+        assert_eq!(f.output_temporal_reduction, (4 * 9) as f64);
+        assert_eq!(f.output_spatial_reduction, 1.0);
+        // Fewer PUs → more input passes, narrower multicast.
+        let small = Mapping::from_tiles(&spec, 2, 4, 4, 8, 8);
+        let f2 = reuse_factors(&spec, &small, &cfg);
+        assert_eq!(f2.input_spatial_multicast, 2.0);
+        assert_eq!(f2.input_temporal_reuse, 8.0);
+    }
+
+    #[test]
+    fn grouped_pricing_decomposes_per_group() {
+        let zoo = mobile();
+        let g3 = zoo.layers.iter().find(|l| l.name == "g3").unwrap();
+        let mut rng = Rng::new(9);
+        let w = synthesize_weights(g3, &mut rng);
+        let base = Codr::default();
+        let r = price_mapping(&base, g3, &w, &Mapping::from_tiles(g3, 8, 4, 4, 8, 8));
+        // Outputs written exactly once across all groups.
+        assert_eq!(r.mem.output_sram.accesses, g3.output_features() as u64);
+        assert!(r.cycles > 0);
+    }
+
+    #[test]
+    fn dominance_is_strict_and_axiswise() {
+        let spec = layer(4, 8, 8, 3, 1);
+        let cfg = TileConfig::codr();
+        let mk = |sram: u64, e: f64, u: f64| CandidateResult {
+            mapping: Mapping::baseline(&cfg, &spec),
+            sram_accesses: sram,
+            energy_uj: e,
+            utilization: u,
+            cycles: 1,
+            reuse: reuse_factors(&spec, &Mapping::baseline(&cfg, &spec), &cfg),
+            cache_hit: false,
+        };
+        let a = mk(100, 1.0, 0.5);
+        assert!(mk(90, 1.0, 0.5).dominates(&a));
+        assert!(!a.dominates(&a), "equal never dominates");
+        assert!(!mk(90, 2.0, 0.5).dominates(&a), "worse on one axis");
+        assert!(mk(100, 1.0, 0.6).dominates(&a));
+    }
+}

@@ -1,0 +1,427 @@
+//! Bounded mapping-space search with Pareto-front reduction.
+//!
+//! [`search_layer`] enumerates a tile-size grid over `(PU, K, C, Y'/X')`,
+//! validates each candidate mapping ([`super::Mapping::validate`]), prices
+//! the legal ones through the exact dataflow walk on the work-stealing
+//! pool, and reduces the results to the Pareto front over
+//! `(SRAM accesses ↓, energy ↓, PE utilization ↑)`.
+//!
+//! Candidates are content-addressed through the [`ResultStore`]: every
+//! candidate of one `(model, layer, group, seed)` search lands in a
+//! single pack keyed by its derived tile configuration, so a repeated
+//! search warms from one pack read. Output ordering is a *stable total
+//! order* — ties on all three axes break on the mapping label — so the
+//! report (and the CI smoke) is byte-identical across runs and machines.
+
+use super::{price_mapping, CandidateResult, Mapping};
+use crate::codr::Codr;
+use crate::coordinator::pool;
+use crate::models::{LayerSpec, SweepGroup};
+use crate::serve::store::{CacheKey, LoadOutcome, ResultStore};
+use crate::sim::{LayerResult, ModelResult};
+use crate::tensor::Weights;
+use crate::util::json::Json;
+
+/// Knobs of one layer search.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchConfig {
+    /// Evaluate at most this many legal candidates (the baseline mapping
+    /// is always kept); the rest are dropped and logged.
+    pub max_candidates: usize,
+    /// Coarse grid for smoke tests (`codr map --quick`).
+    pub quick: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            max_candidates: 512,
+            quick: false,
+        }
+    }
+}
+
+/// Everything one layer search produced.
+#[derive(Clone, Debug)]
+pub struct SearchReport {
+    pub layer: String,
+    /// Pareto-optimal candidates, in the stable report order.
+    pub front: Vec<CandidateResult>,
+    /// Grid points enumerated (legal + illegal + dropped).
+    pub enumerated: usize,
+    /// Candidates actually priced (cache hits included).
+    pub evaluated: usize,
+    /// Legal candidates dropped by `max_candidates`.
+    pub dropped: usize,
+    /// Grid points rejected by mapping validation.
+    pub illegal: usize,
+    /// Evaluated candidates served from the store.
+    pub cache_hits: usize,
+    /// The baseline (fixed-dataflow-equivalent) mapping survived to the
+    /// front. When false, every front entry dominates or ties it.
+    pub baseline_in_front: bool,
+}
+
+impl SearchReport {
+    /// Stable JSON rendering (field order fixed, candidates in report
+    /// order) — `codr map --json` and the serve `map` end event.
+    pub fn to_json(&self) -> Json {
+        let cand = |c: &CandidateResult| {
+            Json::Obj(vec![
+                ("mapping".into(), Json::str(c.mapping.to_string())),
+                ("tile".into(), Json::str(c.mapping.tile_label())),
+                ("sram_accesses".into(), Json::u64(c.sram_accesses)),
+                ("energy_uj".into(), Json::f64(c.energy_uj)),
+                ("utilization".into(), Json::f64(c.utilization)),
+                ("cycles".into(), Json::u64(c.cycles)),
+                (
+                    "reuse".into(),
+                    Json::Obj(vec![
+                        (
+                            "input_spatial_multicast".into(),
+                            Json::f64(c.reuse.input_spatial_multicast),
+                        ),
+                        (
+                            "input_temporal_reuse".into(),
+                            Json::f64(c.reuse.input_temporal_reuse),
+                        ),
+                        (
+                            "weight_temporal_reuse".into(),
+                            Json::f64(c.reuse.weight_temporal_reuse),
+                        ),
+                        (
+                            "output_temporal_reduction".into(),
+                            Json::f64(c.reuse.output_temporal_reduction),
+                        ),
+                        (
+                            "output_spatial_reduction".into(),
+                            Json::f64(c.reuse.output_spatial_reduction),
+                        ),
+                    ]),
+                ),
+                ("cache_hit".into(), Json::Bool(c.cache_hit)),
+            ])
+        };
+        Json::Obj(vec![
+            ("layer".into(), Json::str(&self.layer)),
+            ("enumerated".into(), Json::usize(self.enumerated)),
+            ("evaluated".into(), Json::usize(self.evaluated)),
+            ("dropped".into(), Json::usize(self.dropped)),
+            ("illegal".into(), Json::usize(self.illegal)),
+            ("cache_hits".into(), Json::usize(self.cache_hits)),
+            ("baseline_in_front".into(), Json::Bool(self.baseline_in_front)),
+            ("front".into(), Json::Arr(self.front.iter().map(cand).collect())),
+        ])
+    }
+}
+
+/// The tile-size axes of the searched grid.
+fn grid(quick: bool) -> (&'static [usize], &'static [usize], &'static [usize], &'static [usize]) {
+    if quick {
+        (&[4, 8], &[2, 4], &[2, 4], &[4, 8])
+    } else {
+        (
+            &[1, 2, 4, 8, 16, 32],
+            &[1, 2, 4, 8],
+            &[1, 2, 4, 8],
+            &[2, 4, 8, 16],
+        )
+    }
+}
+
+/// Enumerate the candidate mappings for one layer: the baseline first,
+/// then the legal grid points in grid order, truncated at
+/// `cfg.max_candidates`. Returns `(kept, enumerated, illegal, dropped)`.
+pub fn enumerate_mappings(
+    spec: &LayerSpec,
+    base: &Codr,
+    cfg: &SearchConfig,
+) -> (Vec<Mapping>, usize, usize, usize) {
+    let baseline = Mapping::baseline(&base.cfg, spec);
+    let (pus, ms, ns, sps) = grid(cfg.quick);
+    let mut kept = Vec::new();
+    let mut enumerated = 0usize;
+    let mut illegal = 0usize;
+    let mut dropped = 0usize;
+    // The baseline rides outside the grid when legal (it is for every
+    // dense layer; grouped layers may need narrower tiles).
+    let baseline_kept = baseline.validate(spec, &base.cfg, &base.mem).is_ok();
+    if baseline_kept {
+        enumerated += 1;
+        kept.push(baseline.clone());
+    }
+    for &t_pu in pus {
+        for &t_m in ms {
+            for &t_n in ns {
+                for &t_sp in sps {
+                    let m = Mapping::from_tiles(spec, t_pu, t_m, t_n, t_sp, t_sp);
+                    if baseline_kept && m == baseline {
+                        continue; // already kept, outside the cap count
+                    }
+                    enumerated += 1;
+                    if m.validate(spec, &base.cfg, &base.mem).is_err() {
+                        illegal += 1;
+                    } else if kept.len() < cfg.max_candidates.max(1) {
+                        kept.push(m);
+                    } else {
+                        dropped += 1;
+                    }
+                }
+            }
+        }
+    }
+    (kept, enumerated, illegal, dropped)
+}
+
+/// The stable total order of the report: SRAM ascending, then energy
+/// ascending, then utilization *descending*, then the mapping label —
+/// so equal-cost candidates order identically on every run and machine.
+fn report_order(a: &CandidateResult, b: &CandidateResult) -> std::cmp::Ordering {
+    a.sram_accesses
+        .cmp(&b.sram_accesses)
+        .then_with(|| a.energy_uj.total_cmp(&b.energy_uj))
+        .then_with(|| b.utilization.total_cmp(&a.utilization))
+        .then_with(|| a.mapping.tile_label().cmp(&b.mapping.tile_label()))
+}
+
+/// Reduce sorted candidates to the Pareto front, preserving order.
+fn pareto_front(sorted: &[CandidateResult]) -> Vec<CandidateResult> {
+    sorted
+        .iter()
+        .filter(|c| !sorted.iter().any(|o| o.dominates(c)))
+        .cloned()
+        .collect()
+}
+
+/// Search one layer's mapping space.
+///
+/// `store` enables content-addressed caching: each candidate is keyed by
+/// `(map:{model}/{layer}, group, "CoDR", derived tile config, mem, seed)`
+/// so all candidates of one search share a pack. `progress` fires once
+/// per evaluated candidate (from pool threads, unordered).
+#[allow(clippy::too_many_arguments)]
+pub fn search_layer(
+    base: &Codr,
+    model: &str,
+    group: &SweepGroup,
+    seed: u64,
+    spec: &LayerSpec,
+    weights: &Weights,
+    cfg: &SearchConfig,
+    store: Option<&ResultStore>,
+    progress: Option<&(dyn Fn(&CandidateResult) + Sync)>,
+) -> SearchReport {
+    let (mappings, enumerated, illegal, dropped) = enumerate_mappings(spec, base, cfg);
+    if dropped > 0 {
+        eprintln!(
+            "map[{}/{}]: dropped {dropped} legal candidates past --max-candidates {}",
+            model, spec.name, cfg.max_candidates
+        );
+    }
+    let map_model = format!("map:{model}/{}", spec.name);
+    let keys: Vec<CacheKey> = mappings
+        .iter()
+        .map(|m| {
+            CacheKey::for_point(
+                &map_model,
+                group,
+                "CoDR",
+                &m.derived_config(&base.cfg),
+                &base.mem,
+                seed,
+            )
+        })
+        .collect();
+    // Warm every candidate of the pack in one read.
+    let cached: Vec<Option<LayerResult>> = match store {
+        Some(s) => s
+            .load_group(&keys)
+            .into_iter()
+            .map(|o| match o {
+                LoadOutcome::Hit(r) => r.layers.first().cloned(),
+                _ => None,
+            })
+            .collect(),
+        None => vec![None; mappings.len()],
+    };
+    let cache_hits = cached.iter().filter(|c| c.is_some()).count();
+
+    let jobs: Vec<(usize, &Mapping)> = mappings.iter().enumerate().collect();
+    let mut results: Vec<CandidateResult> = pool::parallel_map(&jobs, |(i, m)| {
+        let (layer, hit) = match &cached[*i] {
+            Some(r) => (r.clone(), true),
+            None => (price_mapping(base, spec, weights, m), false),
+        };
+        let c = CandidateResult::from_layer((*m).clone(), &base.cfg, spec, &layer, hit);
+        if !hit {
+            if let Some(s) = store {
+                let saved = ModelResult {
+                    arch: "CoDR".into(),
+                    model: map_model.clone(),
+                    group: group.label(),
+                    layers: vec![layer],
+                };
+                if let Err(e) = s.save(&keys[*i], &saved) {
+                    eprintln!("map[{}/{}]: store save failed: {e:#}", model, spec.name);
+                }
+            }
+        }
+        if let Some(p) = progress {
+            p(&c);
+        }
+        c
+    });
+
+    results.sort_by(report_order);
+    let front = pareto_front(&results);
+    let baseline = Mapping::baseline(&base.cfg, spec);
+    SearchReport {
+        layer: spec.name.clone(),
+        evaluated: results.len(),
+        baseline_in_front: front.iter().any(|c| c.mapping == baseline),
+        front,
+        enumerated,
+        dropped,
+        illegal,
+        cache_hits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::TileConfig;
+    use crate::models::{synthesize_weights, LayerKind};
+    use crate::util::rng::Rng;
+
+    fn spec() -> LayerSpec {
+        LayerSpec {
+            name: "s1".into(),
+            kind: LayerKind::Conv,
+            n: 8,
+            m: 16,
+            r_i: 12,
+            r_k: 3,
+            stride: 1,
+            pad: 1,
+            groups: 1,
+            sigma_q: 8.0,
+            zero_frac: 0.5,
+        }
+    }
+
+    fn run(cfg: &SearchConfig, store: Option<&ResultStore>) -> SearchReport {
+        let s = spec();
+        let mut rng = Rng::new(7);
+        let w = synthesize_weights(&s, &mut rng);
+        search_layer(
+            &Codr::default(),
+            "tiny",
+            &SweepGroup::Original,
+            7,
+            &s,
+            &w,
+            cfg,
+            store,
+            None,
+        )
+    }
+
+    #[test]
+    fn baseline_rides_outside_the_cap() {
+        let (kept, _, _, dropped) = enumerate_mappings(
+            &spec(),
+            &Codr::default(),
+            &SearchConfig {
+                max_candidates: 3,
+                quick: true,
+            },
+        );
+        assert_eq!(kept[0], Mapping::baseline(&TileConfig::codr(), &spec()));
+        assert_eq!(kept.len(), 1 + 3);
+        assert!(dropped > 0);
+    }
+
+    #[test]
+    fn front_is_nonempty_dominance_free_and_holds_baseline() {
+        let r = run(&SearchConfig::default(), None);
+        assert!(!r.front.is_empty());
+        assert_eq!(r.evaluated + r.illegal + r.dropped, r.enumerated);
+        for a in &r.front {
+            assert!(!r.front.iter().any(|b| b.dominates(a)));
+        }
+        if !r.baseline_in_front {
+            // Price the baseline independently: some front member must
+            // strictly dominate it (else it would have survived).
+            let s = spec();
+            let mut rng = Rng::new(7);
+            let w = synthesize_weights(&s, &mut rng);
+            let base = Codr::default();
+            let bl = Mapping::baseline(&base.cfg, &s);
+            let lr = crate::mapping::price_mapping(&base, &s, &w, &bl);
+            let blc = CandidateResult::from_layer(bl, &base.cfg, &s, &lr, false);
+            assert!(
+                r.front.iter().any(|c| c.dominates(&blc)),
+                "baseline neither in the front nor dominated by it"
+            );
+        }
+    }
+
+    #[test]
+    fn report_is_deterministic_across_runs() {
+        let cfg = SearchConfig {
+            quick: true,
+            ..Default::default()
+        };
+        let a = run(&cfg, None).to_json().to_string();
+        let b = run(&cfg, None).to_json().to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn store_warms_the_second_run() {
+        let dir = std::env::temp_dir().join(format!("codr-map-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ResultStore::open(&dir).unwrap();
+        let cfg = SearchConfig {
+            quick: true,
+            ..Default::default()
+        };
+        let cold = run(&cfg, Some(&store));
+        assert_eq!(cold.cache_hits, 0);
+        let warm = run(&cfg, Some(&store));
+        assert_eq!(warm.cache_hits, warm.evaluated, "all candidates warm");
+        assert_eq!(
+            cold.to_json().to_string(),
+            warm.to_json().to_string(),
+            "cache round-trip must not change the report"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quick_grid_is_a_subset_of_the_full_grid() {
+        let full = run(&SearchConfig::default(), None);
+        let quick = run(
+            &SearchConfig {
+                quick: true,
+                ..Default::default()
+            },
+            None,
+        );
+        assert!(quick.evaluated < full.evaluated);
+        // Every quick grid point exists in the full grid.
+        let (fk, ..) = enumerate_mappings(&spec(), &Codr::default(), &SearchConfig::default());
+        let (qk, ..) = enumerate_mappings(
+            &spec(),
+            &Codr::default(),
+            &SearchConfig {
+                quick: true,
+                ..Default::default()
+            },
+        );
+        for m in &qk {
+            assert!(fk.contains(m), "{m}");
+        }
+    }
+}

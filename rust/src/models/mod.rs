@@ -11,7 +11,7 @@
 
 mod zoo;
 
-pub use zoo::{alexnet, all_models, googlenet, model_by_name, tiny_cnn, vgg16};
+pub use zoo::{alexnet, all_models, googlenet, mobile, model_by_name, tiny_cnn, vgg16};
 
 use crate::quant;
 use crate::tensor::{Tensor, Weights};
@@ -23,7 +23,9 @@ pub fn parse_model(name: &str) -> Result<Model> {
     let name = name.trim();
     model_by_name(name)
         .or_else(|| (name == "tiny").then(tiny_cnn))
-        .with_context(|| format!("unknown model `{name}` (alexnet | vgg16 | googlenet | tiny)"))
+        .with_context(|| {
+            format!("unknown model `{name}` (alexnet | vgg16 | googlenet | mobile | tiny)")
+        })
 }
 
 /// Parse a comma-separated model list.
@@ -73,6 +75,11 @@ pub struct LayerSpec {
     pub r_k: usize,
     pub stride: usize,
     pub pad: usize,
+    /// Convolution groups (1 = dense conv; `n` = depthwise). Each group
+    /// connects `n/groups` input channels to `m/groups` output channels,
+    /// so the weight tensor is `[m, n/groups, r_k, r_k]` and channels
+    /// never mix across a group boundary.
+    pub groups: usize,
     /// Gaussian σ of non-zero weights in quantized (int8) units.
     pub sigma_q: f64,
     /// Probability that a weight is exactly zero (sparsity calibration).
@@ -85,9 +92,19 @@ impl LayerSpec {
         (self.r_i + 2 * self.pad - self.r_k) / self.stride + 1
     }
 
-    /// Number of weights in this layer.
+    /// Input channels seen by one group's filters.
+    pub fn n_per_group(&self) -> usize {
+        self.n / self.groups.max(1)
+    }
+
+    /// Output channels produced by one group.
+    pub fn m_per_group(&self) -> usize {
+        self.m / self.groups.max(1)
+    }
+
+    /// Number of weights in this layer (grouping shrinks the filter depth).
     pub fn num_weights(&self) -> usize {
-        self.m * self.n * self.r_k * self.r_k
+        self.m * self.n_per_group() * self.r_k * self.r_k
     }
 
     /// Number of multiply-accumulates in a dense direct convolution.
@@ -214,7 +231,7 @@ fn erf(x: f64) -> f64 {
 /// `round(N(0, σ_q))` conditioned on being non-zero, tails clamped to ±127.
 pub fn synthesize_weights(spec: &LayerSpec, rng: &mut Rng) -> Weights {
     let sampler = WeightSampler::new(spec.zero_frac, spec.sigma_q);
-    let shape = [spec.m, spec.n, spec.r_k, spec.r_k];
+    let shape = [spec.m, spec.n_per_group(), spec.r_k, spec.r_k];
     Tensor::from_fn(&shape, |_| sampler.sample(rng))
 }
 

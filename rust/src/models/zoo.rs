@@ -31,8 +31,31 @@ fn conv(
         r_k,
         stride,
         pad,
+        groups: 1,
         sigma_q,
         zero_frac,
+    }
+}
+
+/// Grouped convolution: `g` independent filter banks of `n/g → m/g`
+/// channels each (`g = n = m` is depthwise).
+#[allow(clippy::too_many_arguments)]
+fn gconv(
+    name: String,
+    n: usize,
+    m: usize,
+    g: usize,
+    r_i: usize,
+    r_k: usize,
+    stride: usize,
+    pad: usize,
+    sigma_q: f64,
+    zero_frac: f64,
+) -> LayerSpec {
+    assert!(g >= 1 && n % g == 0 && m % g == 0, "groups must divide N and M");
+    LayerSpec {
+        groups: g,
+        ..conv(name, n, m, r_i, r_k, stride, pad, sigma_q, zero_frac)
     }
 }
 
@@ -46,6 +69,7 @@ fn fc(name: String, n: usize, m: usize, sigma_q: f64, zero_frac: f64) -> LayerSp
         r_k: 1,
         stride: 1,
         pad: 0,
+        groups: 1,
         sigma_q,
         zero_frac,
     }
@@ -165,6 +189,24 @@ pub fn googlenet() -> Model {
     }
 }
 
+/// A small post-AlexNet-era block (MobileNet-style): a dense stem, a
+/// depthwise 3×3, its pointwise expansion, and a 4-way grouped 3×3.
+/// Not part of the paper's evaluation grid — it exists so the mapping
+/// search and the group-boundary legality checks see depthwise and
+/// grouped shapes (the paper models are all dense).
+pub fn mobile() -> Model {
+    let s = 8.0;
+    Model {
+        name: "mobile",
+        layers: vec![
+            conv("conv1".into(), 3, 32, 32, 3, 2, 1, s, 0.45),
+            gconv("dw2".into(), 32, 32, 32, 16, 3, 1, 1, s, 0.55),
+            conv("pw2".into(), 32, 64, 16, 1, 1, 0, s, 0.60),
+            gconv("g3".into(), 64, 64, 4, 16, 3, 1, 1, s, 0.60),
+        ],
+    }
+}
+
 /// All three paper benchmarks.
 pub fn all_models() -> Vec<Model> {
     vec![alexnet(), vgg16(), googlenet()]
@@ -176,6 +218,7 @@ pub fn model_by_name(name: &str) -> Option<Model> {
         "alexnet" => Some(alexnet()),
         "vgg16" | "vgg" => Some(vgg16()),
         "googlenet" | "inception" => Some(googlenet()),
+        "mobile" => Some(mobile()),
         _ => None,
     }
 }

@@ -322,6 +322,7 @@ mod tests {
             r_k: 3,
             stride: 1,
             pad: 1,
+            groups: 1,
             sigma_q: 15.0,
             zero_frac: 0.4,
         }

@@ -944,6 +944,69 @@ mod tests {
         }
     }
 
+    /// Degenerate chunks from the tile scheduler: a fresh (all-zero)
+    /// part from an empty m-tile range, and a single-m-tile layer whose
+    /// reduction sees exactly one populated chunk. `merge` must treat
+    /// both as plain sums — identity in either direction.
+    #[test]
+    fn merge_identity_with_empty_and_single_chunks() {
+        let mut rng = Rng::new(31);
+        let spec = CoderSpec::new(36);
+        let mut filled = LayerHistograms::new(spec);
+        for _ in 0..12 {
+            filled.add_vector(&UcrVector::from_weights(&random_vector(&mut rng, 36, 0.4, 15)));
+        }
+        // Folding an empty chunk in changes nothing...
+        let mut a = filled.clone();
+        a.merge(&LayerHistograms::new(spec));
+        assert_eq!(a, filled);
+        // ...and a single-m-tile layer — one populated chunk folded into
+        // the fresh accumulator — reproduces that chunk exactly.
+        let mut b = LayerHistograms::new(spec);
+        b.merge(&filled);
+        assert_eq!(b, filled);
+        // Fresh ⊕ fresh stays fresh.
+        let mut c = LayerHistograms::new(spec);
+        c.merge(&LayerHistograms::new(spec));
+        assert_eq!(c, LayerHistograms::new(spec));
+    }
+
+    /// A chunk of all-zero vectors contributes vector counters only:
+    /// every stream histogram stays untouched, but the per-vector header
+    /// cost still grows.
+    #[test]
+    fn merge_all_zero_chunk_counts_vectors_only() {
+        let spec = CoderSpec::new(36);
+        let mut zeros = LayerHistograms::new(spec);
+        for _ in 0..5 {
+            zeros.add_vector(&UcrVector::from_weights(&[0i8; 36]));
+        }
+        assert_eq!(zeros.n_vectors, 5);
+        assert_eq!(zeros.n_nonempty, 0);
+        assert_eq!(zeros.n_uniques, 0);
+        assert_eq!(zeros.n_indexes, 0);
+        assert_eq!(zeros.vec_unique_hist[0], 5);
+        let mut rng = Rng::new(32);
+        let mut filled = LayerHistograms::new(spec);
+        for _ in 0..4 {
+            filled.add_vector(&UcrVector::from_weights(&random_vector(&mut rng, 36, 0.3, 9)));
+        }
+        let before = filled.clone();
+        filled.merge(&zeros);
+        assert_eq!(filled.n_vectors, before.n_vectors + 5);
+        assert_eq!(filled.vec_unique_hist[0], before.vec_unique_hist[0] + 5);
+        assert_eq!(filled.n_nonempty, before.n_nonempty);
+        assert_eq!(filled.n_uniques, before.n_uniques);
+        assert_eq!(filled.delta_hist, before.delta_hist);
+        assert_eq!(filled.count_hist, before.count_hist);
+        assert_eq!(filled.idx_delta_hist, before.idx_delta_hist);
+        assert_eq!(filled.n_idx_abs, before.n_idx_abs);
+        assert_eq!(filled.n_indexes, before.n_indexes);
+        // The size model prices the extra per-vector headers.
+        let p = before.best_params();
+        assert!(filled.total_bits(p) > before.total_bits(p));
+    }
+
     /// The memo fast path (`merge_vector` over cached summaries) must
     /// accumulate exactly what `add_vector` does.
     #[test]

@@ -40,6 +40,7 @@ impl ArtifactEntry {
             r_k: self.get("rk")?,
             stride: self.get("stride")?,
             pad: self.get("pad")?,
+            groups: 1,
             sigma_q: 20.0,
             zero_frac: 0.5,
         })

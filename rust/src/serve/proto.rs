@@ -21,6 +21,8 @@
 //!            "arena":{"entries":...,"bytes":...}}}
 //! → {"verb":"result","model":"tiny","group":"Orig","arch":"CoDR","seed":42}
 //! ← {"ok":true,"cycles":...,"energy_uj":...,"bits_per_weight":...}
+//! → {"verb":"map","model":"alexnet","layer":"conv1","quick":true}
+//! ← {"ok":true,"job":2,"layer":"conv1","candidates":17}
 //! → {"verb":"watch","job":1}
 //! ← {"ok":true,"job":1,"watching":true,"total":3}
 //! ← {"event":"point","job":1,"done":1,"total":3,"model":"alexnet",
@@ -37,6 +39,14 @@
 //! stats (or an `error` field if the job failed / the server shut down
 //! first). After `end`, the connection returns to request/response
 //! framing.
+//!
+//! `map` submits a **mapping-space search** job (optional fields:
+//! `layer` — defaults to the model's first conv layer; `group`, `seed`,
+//! `max_candidates`, `quick`). Its progress streams through the same
+//! `watch` channel, one `point` event per evaluated candidate (`group`
+//! carries the candidate's tile label, `arch` is always CoDR), and the
+//! terminal `end` event carries the search stats plus the full Pareto
+//! front under `map` (the `codr map --json` report shape).
 //!
 //! The server-wide `status` reply keeps the flat `store_entries` field
 //! for pre-v2 clients; the structured `store` / `memo` objects are the

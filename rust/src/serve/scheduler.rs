@@ -37,13 +37,17 @@
 
 use super::store::{CacheKey, LoadOutcome, ResultStore};
 use crate::arch::MemConfig;
+use crate::codr::Codr;
 use crate::coordinator::{
     finalize_layer, layer_chunks, pool, simulate_layer_chunk, Arch, LayerPartial, SweepResults,
     SweepStats,
 };
+use crate::mapping::search::{search_layer, SearchConfig, SearchReport};
+use crate::mapping::CandidateResult;
 use crate::models::{Model, SweepGroup, Workload};
 use crate::reuse::memo;
 use crate::sim::{simulate_model, Accelerator, LayerResult, ModelResult};
+use anyhow::{bail, Result};
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -435,6 +439,44 @@ impl Scheduler {
         stats.lock_waits = memo.lock_waits as usize;
         stats.wall_ms = t0.elapsed().as_millis() as u64;
         SweepResults { results, stats }
+    }
+
+    /// Run a mapping-space search for one layer of `model` through this
+    /// scheduler's store (every candidate is content-addressed by its
+    /// derived tile configuration, so repeated searches warm from disk).
+    /// `layer = None` searches the model's first conv layer. `progress`
+    /// fires once per evaluated candidate, from pool threads.
+    pub fn run_map(
+        &self,
+        model: &Model,
+        layer: Option<&str>,
+        group: SweepGroup,
+        seed: u64,
+        cfg: &SearchConfig,
+        progress: Option<&(dyn Fn(&CandidateResult) + Sync)>,
+    ) -> Result<SearchReport> {
+        let (unique, density) = group.knobs();
+        let workload = Workload::generate(model, unique, density, seed);
+        let Some((spec, weights)) = workload.conv_layers().find(|(s, _)| match layer {
+            Some(name) => s.name == name,
+            None => true,
+        }) else {
+            match layer {
+                Some(name) => bail!("model {} has no conv layer named `{name}`", model.name),
+                None => bail!("model {} has no conv layers", model.name),
+            }
+        };
+        Ok(search_layer(
+            &Codr::default(),
+            model.name,
+            &group,
+            seed,
+            spec,
+            weights,
+            cfg,
+            Some(&self.store),
+            progress,
+        ))
     }
 
     /// Returns the point's result plus whether it arrived by dedup (the

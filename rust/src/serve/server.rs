@@ -7,8 +7,9 @@
 //! warming the same grid simulate it once.
 //!
 //! Verbs: `ping`, `warm` (synchronous sweep), `submit` (async job),
-//! `watch` (stream a job's per-point progress), `status` (job or
-//! server), `result` (store lookup), `shutdown`.
+//! `map` (async mapping-space search job), `watch` (stream a job's
+//! per-point progress), `status` (job or server), `result` (store
+//! lookup), `shutdown`.
 //!
 //! **Job progress is a broadcast, not a poll.** Every submitted job owns
 //! a [`JobChannel`]: the scheduler's per-point completion path (the
@@ -32,8 +33,10 @@ use super::proto::{
 use super::scheduler::{PointDone, Scheduler};
 use super::store::{CacheKey, LoadOutcome, ResultStore};
 use crate::arch::MemConfig;
+use crate::codr::Codr;
 use crate::coordinator::{Arch, SweepStats};
-use crate::models::parse_group_list;
+use crate::mapping::search::{enumerate_mappings, SearchConfig};
+use crate::models::{parse_group_list, LayerKind, SweepGroup};
 use crate::reuse::memo;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -520,6 +523,7 @@ fn handle_request(msg: &Json, shared: &Arc<Shared>) -> Json {
         "ping" => Ok(ok_response(vec![("pong".into(), Json::Bool(true))])),
         "warm" => warm(msg, shared),
         "submit" => submit(msg, shared),
+        "map" => map_submit(msg, shared),
         "status" => status(msg, shared),
         "result" => result_lookup(msg, shared),
         "shutdown" => {
@@ -530,7 +534,7 @@ fn handle_request(msg: &Json, shared: &Arc<Shared>) -> Json {
             ]))
         }
         other => Err(anyhow::anyhow!(
-            "unknown verb `{other}` (use ping|warm|submit|watch|status|result|shutdown)"
+            "unknown verb `{other}` (use ping|warm|submit|map|watch|status|result|shutdown)"
         )),
     };
     result.unwrap_or_else(|e| error_response(format!("{e:#}")))
@@ -566,45 +570,60 @@ fn warm(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     )]))
 }
 
+/// Allocate a job id and insert a Running job into the table, pruning
+/// old terminal entries past the retention cap. Shared by every
+/// async-job verb (`submit`, `map`).
+fn register_job(shared: &Arc<Shared>, chan: &Arc<JobChannel>) -> Result<u64> {
+    let id = shared.next_job.fetch_add(1, Ordering::SeqCst);
+    let mut jobs = shared.jobs.lock().unwrap();
+    // Checked under the jobs lock: the drain reads this table only
+    // after `stop` is set, so either it observes the job inserted
+    // below, or this check observes the stop and refuses — a job id
+    // is never handed out for work the drain cannot see.
+    refuse_if_stopping(shared)?;
+    if jobs.len() >= max_retained_jobs() {
+        let mut finished: Vec<u64> = jobs
+            .iter()
+            .filter(|(_, j)| !matches!(j.state, JobState::Running))
+            .map(|(&jid, _)| jid)
+            .collect();
+        finished.sort_unstable();
+        let excess = jobs.len() + 1 - max_retained_jobs();
+        let mut expired = shared.expired.lock().unwrap();
+        for old in finished.into_iter().take(excess) {
+            jobs.remove(&old);
+            if expired.len() == EXPIRED_RING {
+                expired.pop_front();
+            }
+            expired.push_back(old);
+        }
+    }
+    jobs.insert(
+        id,
+        Job {
+            state: JobState::Running,
+            chan: Arc::clone(chan),
+        },
+    );
+    Ok(id)
+}
+
+/// Track a spawned job worker so the shutdown drain can join it.
+fn track_worker(shared: &Shared, handle: std::thread::JoinHandle<()>) {
+    let mut workers = shared.workers.lock().unwrap();
+    // Reap handles of long-finished workers so the list stays bounded on
+    // a long-lived server (dropping a finished handle just detaches it).
+    workers.retain(|h| !h.is_finished());
+    workers.push(handle);
+}
+
 /// `submit`: run the grid on a tracked worker thread, reply immediately
 /// with a job id for `status` polling or `watch` streaming.
 fn submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     let grid = GridRequest::from_json(msg)?;
     let points = grid.points();
     let chan = Arc::new(JobChannel::new(points));
-    let id = shared.next_job.fetch_add(1, Ordering::SeqCst);
-    {
-        let mut jobs = shared.jobs.lock().unwrap();
-        // Checked under the jobs lock: the drain reads this table only
-        // after `stop` is set, so either it observes the job inserted
-        // below, or this check observes the stop and refuses — a job id
-        // is never handed out for work the drain cannot see.
-        refuse_if_stopping(shared)?;
-        if jobs.len() >= max_retained_jobs() {
-            let mut finished: Vec<u64> = jobs
-                .iter()
-                .filter(|(_, j)| !matches!(j.state, JobState::Running))
-                .map(|(&jid, _)| jid)
-                .collect();
-            finished.sort_unstable();
-            let excess = jobs.len() + 1 - max_retained_jobs();
-            let mut expired = shared.expired.lock().unwrap();
-            for old in finished.into_iter().take(excess) {
-                jobs.remove(&old);
-                if expired.len() == EXPIRED_RING {
-                    expired.pop_front();
-                }
-                expired.push_back(old);
-            }
-        }
-        jobs.insert(
-            id,
-            Job {
-                state: JobState::Running,
-                chan: Arc::clone(&chan),
-            },
-        );
-    }
+    let id = register_job(shared, &chan)?;
     let shared_worker = Arc::clone(shared);
     let worker_chan = Arc::clone(&chan);
     let handle = std::thread::spawn(move || {
@@ -641,15 +660,135 @@ fn submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
         }
         worker_chan.close(end);
     });
-    let mut workers = shared.workers.lock().unwrap();
-    // Reap handles of long-finished workers so the list stays bounded on
-    // a long-lived server (dropping a finished handle just detaches it).
-    workers.retain(|h| !h.is_finished());
-    workers.push(handle);
-    drop(workers);
+    track_worker(shared, handle);
     Ok(ok_response(vec![
         ("job".into(), Json::u64(id)),
         ("points".into(), Json::usize(points)),
+    ]))
+}
+
+/// `map`: run a mapping-space search for one layer as an async job.
+/// Each evaluated candidate publishes a `point` event on the job's
+/// channel (`group` carries the candidate's tile label, `arch` is always
+/// CoDR); the terminal `end` event carries search stats plus the full
+/// Pareto front as `map`.
+fn map_submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
+    let name = msg.field("model")?.as_str()?;
+    let model = crate::models::parse_model(name)?;
+    let layer: Option<String> = match msg.get("layer") {
+        Some(l) => Some(l.as_str()?.to_string()),
+        None => None,
+    };
+    let group = match msg.get("group") {
+        Some(g) => {
+            let gs = parse_group_list(g.as_str()?)?;
+            if gs.len() != 1 {
+                anyhow::bail!("`group` must name exactly one sweep group");
+            }
+            gs[0]
+        }
+        None => SweepGroup::Original,
+    };
+    let seed = match msg.get("seed") {
+        Some(s) => s.as_u64()?,
+        None => 42,
+    };
+    let mut cfg = SearchConfig::default();
+    if let Some(m) = msg.get("max_candidates") {
+        cfg.max_candidates = m.as_u64()?.max(1) as usize;
+    }
+    if let Some(q) = msg.get("quick") {
+        cfg.quick = q.as_bool()?;
+    }
+    // Resolve the searched layer now (pure — no weights needed) so the
+    // reply and the channel carry the real candidate count.
+    let spec = model
+        .layers
+        .iter()
+        .filter(|l| l.kind == LayerKind::Conv)
+        .find(|l| layer.as_deref().map(|n| l.name == n).unwrap_or(true))
+        .ok_or_else(|| match &layer {
+            Some(n) => anyhow::anyhow!("model {name} has no conv layer named `{n}`"),
+            None => anyhow::anyhow!("model {name} has no conv layers"),
+        })?
+        .clone();
+    let (kept, ..) = enumerate_mappings(&spec, &Codr::default(), &cfg);
+    let candidates = kept.len();
+    let layer_name = spec.name.clone();
+    let chan = Arc::new(JobChannel::new(candidates));
+    let id = register_job(shared, &chan)?;
+    let shared_worker = Arc::clone(shared);
+    let worker_chan = Arc::clone(&chan);
+    let handle = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        let progress = |c: &crate::mapping::CandidateResult| {
+            worker_chan.publish_point(
+                id,
+                &PointDone {
+                    model: model.name,
+                    group: c.mapping.tile_label(),
+                    arch: "CoDR",
+                    cache_hit: c.cache_hit,
+                },
+            );
+        };
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            shared_worker.sched.run_map(
+                &model,
+                Some(spec.name.as_str()),
+                group,
+                seed,
+                &cfg,
+                Some(&progress),
+            )
+        }));
+        let (state, end) = match outcome {
+            Ok(Ok(report)) => {
+                let stats = SweepStats {
+                    requested: report.enumerated,
+                    cache_hits: report.cache_hits,
+                    computed: report.evaluated - report.cache_hits,
+                    wall_ms: t0.elapsed().as_millis() as u64,
+                    ..Default::default()
+                };
+                let end = Json::Obj(vec![
+                    ("event".into(), Json::str("end")),
+                    ("job".into(), Json::u64(id)),
+                    ("stats".into(), stats_to_json(&stats)),
+                    ("map".into(), report.to_json()),
+                ]);
+                (JobState::Done(stats), end)
+            }
+            Ok(Err(e)) => {
+                let msg = format!("{e:#}");
+                (
+                    JobState::Failed(msg.clone()),
+                    Json::Obj(vec![
+                        ("event".into(), Json::str("end")),
+                        ("job".into(), Json::u64(id)),
+                        ("error".into(), Json::Str(msg)),
+                    ]),
+                )
+            }
+            Err(_) => (
+                JobState::Failed("map worker panicked".into()),
+                Json::Obj(vec![
+                    ("event".into(), Json::str("end")),
+                    ("job".into(), Json::u64(id)),
+                    ("error".into(), Json::str("map worker panicked")),
+                ]),
+            ),
+        };
+        if let Some(job) = shared_worker.jobs.lock().unwrap().get_mut(&id) {
+            job.state = state;
+        }
+        worker_chan.close(end);
+    });
+    track_worker(shared, handle);
+    Ok(ok_response(vec![
+        ("job".into(), Json::u64(id)),
+        ("layer".into(), Json::str(layer_name)),
+        ("candidates".into(), Json::usize(candidates)),
     ]))
 }
 

@@ -622,7 +622,10 @@ impl ResultStore {
         if total <= cap {
             return;
         }
-        files.sort_by(|a, b| a.0.cmp(&b.0));
+        // Oldest first; equal mtimes (coarse filesystem clocks stamp a
+        // burst of saves identically) tie-break on the path so the
+        // eviction order is stable across runs and machines.
+        files.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.2.cmp(&b.2)));
         for (_, size, path) in files {
             if total <= cap {
                 break;

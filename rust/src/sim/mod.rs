@@ -8,7 +8,7 @@ use crate::arch::{CactiLite, MemConfig, MemoryStats, TileConfig};
 use crate::energy::{price_layer, AluStats, EnergyBreakdown};
 use crate::models::{LayerSpec, Workload};
 use crate::rle::CompressionStats;
-use crate::tensor::Weights;
+use crate::tensor::{Tensor, Weights};
 
 /// Everything measured while simulating one conv layer on one design.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -90,11 +90,58 @@ pub trait Accelerator: Sync {
     fn simulate_layer(&self, spec: &LayerSpec, weights: &Weights) -> LayerResult;
 }
 
+/// Simulate one conv layer, decomposing grouped convolutions.
+///
+/// A grouped conv (`spec.groups = g > 1`) is `g` independent dense convs
+/// of `n/g → m/g` channels; each group's filter bank is a contiguous
+/// `m/g`-row slice of the `[m, n/g, r_k, r_k]` weight tensor. The dataflow
+/// walks (which assume a dense `[m, n, ...]` tensor) simulate each group
+/// separately and the counters sum — channels never mix across a group
+/// boundary, matching the hardware semantics. Dense layers pass through
+/// untouched.
+pub fn simulate_layer_grouped(
+    acc: &dyn Accelerator,
+    spec: &LayerSpec,
+    weights: &Weights,
+) -> LayerResult {
+    if spec.groups <= 1 {
+        return acc.simulate_layer(spec, weights);
+    }
+    let g = spec.groups;
+    let (mg, ng) = (spec.m_per_group(), spec.n_per_group());
+    let per = mg * ng * spec.r_k * spec.r_k;
+    assert_eq!(weights.len(), g * per, "grouped weight tensor size");
+    let mut total = LayerResult {
+        layer: spec.name.clone(),
+        ..Default::default()
+    };
+    for gi in 0..g {
+        let sub_spec = LayerSpec {
+            name: format!("{}#g{gi}", spec.name),
+            n: ng,
+            m: mg,
+            groups: 1,
+            ..spec.clone()
+        };
+        let sub_w = Tensor::from_vec(
+            &[mg, ng, spec.r_k, spec.r_k],
+            weights.data()[gi * per..(gi + 1) * per].to_vec(),
+        );
+        let r = acc.simulate_layer(&sub_spec, &sub_w);
+        total.mem.add(&r.mem);
+        total.alu.add(&r.alu);
+        total.cycles += r.cycles;
+        total.compression.add(&r.compression);
+        total.energy.add(&r.energy);
+    }
+    total
+}
+
 /// Simulate every conv layer of a workload on `acc`.
 pub fn simulate_model(acc: &dyn Accelerator, workload: &Workload, group: &str) -> ModelResult {
     let layers = workload
         .conv_layers()
-        .map(|(spec, w)| acc.simulate_layer(spec, w))
+        .map(|(spec, w)| simulate_layer_grouped(acc, spec, w))
         .collect();
     ModelResult {
         arch: acc.name().to_string(),

@@ -156,6 +156,37 @@ fn repeated_sweeps_hit_the_memo_and_stay_deterministic() {
     assert!(b.stats.memo_hit_rate().unwrap() > 0.0);
 }
 
+/// The data-centric directive set equivalent to the fixed CoDR dataflow
+/// must reproduce its SRAM-access and energy numbers **bit for bit**:
+/// the mapping lowers to the same derived tile config and is priced by
+/// the same walk. Pinned on every tiny-model conv plus the first conv of
+/// each zoo net — notably alexnet conv1 (11×11 stride 4), the geometry
+/// the `codr map` acceptance criterion names.
+#[test]
+fn baseline_directives_reproduce_fixed_dataflow_bit_for_bit() {
+    use codr::mapping::{price_mapping, Mapping};
+
+    let design = Codr::default();
+    let mut rng = Rng::new(88);
+    let mut specs: Vec<LayerSpec> = tiny_cnn().conv_layers().cloned().collect();
+    for model in [alexnet(), vgg16(), googlenet()] {
+        specs.push(model.conv_layers().next().expect("zoo model has convs").clone());
+    }
+    for spec in &specs {
+        let w = synthesize_weights(spec, &mut rng);
+        let mapping = Mapping::baseline(&design.cfg, spec);
+        mapping
+            .validate(spec, &design.cfg, &design.mem)
+            .unwrap_or_else(|e| panic!("baseline mapping illegal on {}: {e}", spec.name));
+        let direct = design.simulate_layer(spec, &w);
+        let via_directives = price_mapping(&design, spec, &w, &mapping);
+        // Headline axes called out explicitly, then the whole record.
+        assert_eq!(via_directives.mem, direct.mem, "SRAM accesses {}", spec.name);
+        assert_eq!(via_directives.energy, direct.energy, "energy {}", spec.name);
+        assert_eq!(via_directives, direct, "full result {}", spec.name);
+    }
+}
+
 /// Different seeds are different vectors — the memo must key strictly on
 /// content, never collapse distinct weights.
 #[test]

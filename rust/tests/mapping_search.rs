@@ -1,0 +1,185 @@
+//! Integration tests for the mapping-space search engine: the serve
+//! `map` verb end to end, grouped-layer searches through the scheduler,
+//! and the `codr map` CLI surface (table + JSON, deterministic and
+//! store-warmed across runs).
+
+use codr::cli::{commands, Args};
+use codr::mapping::search::SearchConfig;
+use codr::models::{parse_model, SweepGroup};
+use codr::serve::{proto, ResultStore, Scheduler, Server};
+use codr::util::json::Json;
+use std::path::PathBuf;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("codr-map-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn obj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+fn ok(resp: &Json) -> bool {
+    matches!(resp.get("ok").and_then(|o| o.as_bool().ok()), Some(true))
+}
+
+fn sv(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+/// The `map` verb end to end: submit returns the candidate count, the
+/// watch stream carries one point per evaluated mapping (tile label in
+/// the `group` field), the end event's `map` payload holds a non-empty
+/// Pareto front, and an identical second job replays byte-identically
+/// out of the warm store.
+#[test]
+fn serve_map_verb_streams_and_is_deterministic() {
+    let dir = temp_dir("serve");
+    let server = Server::bind("127.0.0.1:0", &dir).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    let req = obj(&[
+        ("verb", Json::str("map")),
+        ("model", Json::str("tiny")),
+        ("group", Json::str("Orig")),
+        ("seed", Json::u64(5)),
+        ("quick", Json::Bool(true)),
+    ]);
+    let run = |req: &Json| {
+        let submitted = proto::request(&addr, req).unwrap();
+        assert!(ok(&submitted), "{submitted}");
+        let job = submitted.get("job").unwrap().as_u64().unwrap();
+        let candidates = submitted.get("candidates").unwrap().as_u64().unwrap();
+        assert!(candidates > 0, "{submitted}");
+        let mut points = 0u64;
+        let end = proto::watch(&addr, job, |ev| {
+            if matches!(ev.get("event").map(|v| v.as_str()), Some(Ok("point"))) {
+                points += 1;
+                assert_eq!(ev.get("arch").unwrap().as_str().unwrap(), "CoDR");
+                // The group field carries the candidate's tile label.
+                assert!(ev.get("group").unwrap().as_str().unwrap().starts_with("PU"));
+            }
+        })
+        .unwrap();
+        assert_eq!(points, candidates, "one point per evaluated mapping");
+        (submitted, end)
+    };
+
+    let (first_sub, first_end) = run(&req);
+    assert_eq!(first_sub.get("layer").unwrap().as_str().unwrap(), "conv1");
+    let map = first_end.get("map").expect("end event carries the report");
+    let front = map.field("front").unwrap().as_arr().unwrap();
+    assert!(!front.is_empty(), "{map}");
+    let stats = first_end.get("stats").unwrap();
+    assert_eq!(stats.get("cache_hits").unwrap().as_u64().unwrap(), 0);
+
+    // Identical job again: all candidates answer from the store and the
+    // report is byte-for-byte the same.
+    let (_, second_end) = run(&req);
+    let stats = second_end.get("stats").unwrap();
+    assert_eq!(stats.get("computed").unwrap().as_u64().unwrap(), 0);
+    assert!(stats.get("cache_hits").unwrap().as_u64().unwrap() > 0);
+    assert_eq!(
+        map.to_string(),
+        second_end.get("map").unwrap().to_string(),
+        "warm report must be byte-identical"
+    );
+
+    // Malformed map requests answer with clean errors.
+    let bad = proto::request(
+        &addr,
+        &obj(&[("verb", Json::str("map")), ("model", Json::str("resnet"))]),
+    )
+    .unwrap();
+    assert!(!ok(&bad), "{bad}");
+    let bad_layer = proto::request(
+        &addr,
+        &obj(&[
+            ("verb", Json::str("map")),
+            ("model", Json::str("tiny")),
+            ("layer", Json::str("fc9")),
+        ]),
+    )
+    .unwrap();
+    assert!(!ok(&bad_layer), "{bad_layer}");
+
+    let bye = proto::request(&addr, &obj(&[("verb", Json::str("shutdown"))])).unwrap();
+    assert!(ok(&bye));
+    handle.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Grouped layers search legally through the scheduler path: every
+/// front candidate of a depthwise layer respects the group boundary
+/// (C tile of 1), and a named-layer miss is a clean error.
+#[test]
+fn run_map_respects_group_boundaries_on_grouped_layers() {
+    let dir = temp_dir("sched");
+    let sched = Scheduler::new(ResultStore::open(&dir).unwrap());
+    let mobile = parse_model("mobile").unwrap();
+    // The full grid (the quick one has no size-1 tiles, and a fully
+    // depthwise layer only admits K=C=1), capped to keep the test fast.
+    let cfg = SearchConfig {
+        max_candidates: 64,
+        quick: false,
+    };
+
+    for layer in ["dw2", "g3"] {
+        let report = sched
+            .run_map(&mobile, Some(layer), SweepGroup::Original, 7, &cfg, None)
+            .unwrap();
+        assert!(!report.front.is_empty(), "{layer}: empty front");
+        assert!(report.illegal > 0, "{layer}: grid should trip group checks");
+        let spec = mobile.conv_layers().find(|l| l.name == layer).unwrap();
+        for c in &report.front {
+            let n_tile = c.mapping.size_of(codr::mapping::Dim::C).unwrap();
+            let m_tile = c.mapping.size_of(codr::mapping::Dim::K).unwrap();
+            assert!(n_tile <= spec.n_per_group(), "{layer}: {}", c.mapping);
+            assert!(m_tile <= spec.m_per_group(), "{layer}: {}", c.mapping);
+        }
+    }
+
+    let err = sched
+        .run_map(&mobile, Some("fc1"), SweepGroup::Original, 7, &cfg, None)
+        .unwrap_err();
+    assert!(err.to_string().contains("fc1"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `codr map` CLI: the table carries the summary lines the CI smoke
+/// greps for, `--json` emits the report verbatim, and two identical
+/// invocations produce byte-identical output (second one store-warm).
+#[test]
+fn cli_map_renders_table_and_json_deterministically() {
+    let dir = temp_dir("cli");
+    let store = dir.to_string_lossy().into_owned();
+    let base = ["--model", "tiny", "--group", "Orig", "--seed", "11", "--store", &store, "--quick"];
+
+    let table = commands::map(&Args::parse(&sv(&base)).unwrap()).unwrap();
+    assert!(table.contains("mapping Pareto front"), "{table}");
+    assert!(table.contains("front: "), "{table}");
+    assert!(table.contains("baseline: "), "{table}");
+    assert!(table.contains("best: "), "{table}");
+
+    let mut json_args = sv(&base);
+    json_args.push("--json".into());
+    let a = commands::map(&Args::parse(&json_args).unwrap()).unwrap();
+    let b = commands::map(&Args::parse(&json_args).unwrap()).unwrap();
+    assert_eq!(a, b, "map report must be byte-stable across runs");
+    let report = Json::parse(&a).unwrap();
+    assert!(!report.field("front").unwrap().as_arr().unwrap().is_empty());
+    // Second run answered from the store it populated in the first.
+    assert!(report.field("evaluated").unwrap().as_u64().unwrap() > 0);
+    let warm = Json::parse(&b).unwrap();
+    assert_eq!(
+        warm.field("cache_hits").unwrap().as_u64().unwrap(),
+        warm.field("evaluated").unwrap().as_u64().unwrap(),
+        "warm run must answer every candidate from the store"
+    );
+
+    // Missing model is a clean error, not a panic.
+    assert!(commands::map(&Args::parse(&sv(&["--quick"])).unwrap()).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
