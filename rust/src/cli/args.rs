@@ -99,6 +99,25 @@ impl Args {
         }
     }
 
+    /// Client retry budget (`--retries`, default 0 = fail fast). Each
+    /// retry backs off exponentially with seeded jitter; `watch`
+    /// reconnects replay the event history and dedup to exactly-once.
+    pub fn retries(&self) -> Result<u32> {
+        match self.get("retries") {
+            None => Ok(0),
+            Some(s) => s.parse().context("--retries must be an integer"),
+        }
+    }
+
+    /// Per-connection socket timeout for `codr serve`
+    /// (`--conn-timeout-secs`; 0 or unset = unbounded).
+    pub fn conn_timeout_secs(&self) -> Result<u64> {
+        match self.get("conn-timeout-secs") {
+            None => Ok(0),
+            Some(s) => s.parse().context("--conn-timeout-secs must be an integer"),
+        }
+    }
+
     /// Job id for `codr watch` (`--job`).
     pub fn job(&self) -> Result<u64> {
         self.get("job")
@@ -246,6 +265,24 @@ mod tests {
         assert!(Args::parse(&sv(&["--group", "Orig,D=50%"]))
             .unwrap()
             .single_group()
+            .is_err());
+    }
+
+    #[test]
+    fn retries_and_conn_timeout_parsing() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.retries().unwrap(), 0);
+        assert_eq!(a.conn_timeout_secs().unwrap(), 0);
+        let a = Args::parse(&sv(&["--retries", "3", "--conn-timeout-secs", "15"])).unwrap();
+        assert_eq!(a.retries().unwrap(), 3);
+        assert_eq!(a.conn_timeout_secs().unwrap(), 15);
+        assert!(Args::parse(&sv(&["--retries", "many"]))
+            .unwrap()
+            .retries()
+            .is_err());
+        assert!(Args::parse(&sv(&["--conn-timeout-secs", "-1"]))
+            .unwrap()
+            .conn_timeout_secs()
             .is_err());
     }
 

@@ -257,10 +257,11 @@ fn map_remote(args: &Args, name: &str) -> Result<String> {
     if args.flag("quick") {
         fields.push(("quick".into(), Json::Bool(true)));
     }
-    let resp = proto::request(addr, &Json::Obj(fields))?;
+    let retry = retry_policy(args)?;
+    let resp = proto::request_retry(addr, &Json::Obj(fields), &retry)?;
     expect_ok(&resp)?;
     let job = resp.field("job")?.as_u64()?;
-    let end = proto::watch(addr, job, |ev| {
+    let end = proto::watch_retry(addr, job, &retry, |ev| {
         if matches!(ev.get("event").map(|e| e.as_str()), Some(Ok("point"))) {
             let num = |k: &str| ev.get(k).and_then(|v| v.as_u64().ok()).unwrap_or(0);
             let tile = ev.get("group").and_then(|v| v.as_str().ok()).unwrap_or("?");
@@ -425,6 +426,7 @@ pub fn serve(args: &Args) -> Result<String> {
     let store = ResultStore::open_capped(&store_dir, cap.map(|mb| mb << 20))?;
     let mut server = Server::bind_with(args.addr(), store)?;
     server.set_drain_secs(args.drain_secs()?);
+    server.set_conn_timeout_secs(args.conn_timeout_secs()?);
     // Announce before blocking so scripts can wait for readiness.
     let cap_note = match cap {
         Some(mb) => format!(", cap {mb} MiB"),
@@ -497,8 +499,15 @@ fn render_stats(stats: &SweepStats) -> String {
         ),
         None => "no memo lookups".to_string(),
     };
+    // `failed` only appears when nonzero, so fully-successful output is
+    // byte-identical to earlier releases (scripts grep these lines).
+    let failed = if stats.failed > 0 {
+        format!("{} FAILED, ", stats.failed)
+    } else {
+        String::new()
+    };
     format!(
-        "{} points — {} cache hits, {} computed, {} deduped, {} corrupt, \
+        "{} points — {} cache hits, {} computed, {} deduped, {} corrupt, {failed}\
          {} layers simulated, {} ({} ms)",
         stats.requested,
         stats.cache_hits,
@@ -514,14 +523,21 @@ fn render_stats(stats: &SweepStats) -> String {
 /// `codr watch --job N` — attach to a submitted job and stream its
 /// per-point progress (events to stderr, final stats as the result).
 pub fn watch(args: &Args) -> Result<String> {
-    watch_to_end(args.addr(), args.job()?)
+    watch_to_end(args.addr(), args.job()?, &retry_policy(args)?)
+}
+
+/// The client retry policy from `--retries` (0 = fail fast).
+fn retry_policy(args: &Args) -> Result<proto::Retry> {
+    Ok(proto::Retry::attempts(args.retries()?))
 }
 
 /// Attach to `job` on `addr`, narrate `point` events to stderr, and
 /// render the terminal `end` event (shared by `codr watch` and
-/// `codr submit --watch`).
-fn watch_to_end(addr: &str, job: u64) -> Result<String> {
-    let end = proto::watch(addr, job, |ev| {
+/// `codr submit --watch`). A dropped stream reconnects under `retry`;
+/// the server's replay plus client-side dedup keeps the narration
+/// exactly-once.
+fn watch_to_end(addr: &str, job: u64, retry: &proto::Retry) -> Result<String> {
+    let end = proto::watch_retry(addr, job, retry, |ev| {
         if matches!(ev.get("event").map(|e| e.as_str()), Some(Ok("point"))) {
             let num = |k: &str| ev.get(k).and_then(|v| v.as_u64().ok()).unwrap_or(0);
             let txt = |k: &str| {
@@ -531,22 +547,31 @@ fn watch_to_end(addr: &str, job: u64) -> Result<String> {
                     .to_string()
             };
             let hit = matches!(ev.get("cache_hit").and_then(|v| v.as_bool().ok()), Some(true));
+            let note = match ev.get("error").and_then(|v| v.as_str().ok()) {
+                Some(err) => format!(" FAILED: {err}"),
+                None if hit => " (cache hit)".to_string(),
+                None => String::new(),
+            };
             eprintln!(
-                "job {job}: {}/{} {} {} {}{}",
+                "job {job}: {}/{} {} {} {}{note}",
                 num("done"),
                 num("total"),
                 txt("model"),
                 txt("group"),
                 txt("arch"),
-                if hit { " (cache hit)" } else { "" }
             );
         }
     })?;
     if let Some(err) = end.get("error").and_then(|e| e.as_str().ok()) {
         bail!("job {job} failed: {err}");
     }
+    let state = end
+        .get("state")
+        .and_then(|s| s.as_str().ok())
+        .unwrap_or("done")
+        .to_string();
     let stats = proto::stats_from_json(end.field("stats")?)?;
-    Ok(format!("job {job} done: {}", render_stats(&stats)))
+    Ok(format!("job {job} {state}: {}", render_stats(&stats)))
 }
 
 /// `codr submit` — send a grid to a running `codr serve`; then stream
@@ -554,14 +579,15 @@ fn watch_to_end(addr: &str, job: u64) -> Result<String> {
 /// id immediately.
 pub fn submit(args: &Args) -> Result<String> {
     let addr = args.addr();
+    let retry = retry_policy(args)?;
     let mut fields = vec![("verb".into(), Json::str("submit"))];
     fields.extend(grid_fields(args)?);
-    let resp = proto::request(addr, &Json::Obj(fields))?;
+    let resp = proto::request_retry(addr, &Json::Obj(fields), &retry)?;
     expect_ok(&resp)?;
     let job = resp.field("job")?.as_u64()?;
     let points = resp.field("points")?.as_u64()?;
     if args.flag("watch") {
-        return watch_to_end(addr, job);
+        return watch_to_end(addr, job, &retry);
     }
     if !args.flag("wait") {
         return Ok(format!(
@@ -571,19 +597,20 @@ pub fn submit(args: &Args) -> Result<String> {
     }
     loop {
         std::thread::sleep(std::time::Duration::from_millis(100));
-        let status = proto::request(
+        let status = proto::request_retry(
             addr,
             &Json::Obj(vec![
                 ("verb".into(), Json::str("status")),
                 ("job".into(), Json::u64(job)),
             ]),
+            &retry,
         )?;
         expect_ok(&status)?;
         match status.field("state")?.as_str()? {
             "running" => continue,
-            "done" => {
+            state @ ("done" | "partial") => {
                 let stats = proto::stats_from_json(status.field("stats")?)?;
-                return Ok(format!("job {job} done: {}", render_stats(&stats)));
+                return Ok(format!("job {job} {state}: {}", render_stats(&stats)));
             }
             "failed" => {
                 let err = status
@@ -609,7 +636,7 @@ pub fn warm(args: &Args) -> Result<String> {
     if args.get("addr").is_some() {
         let mut fields = vec![("verb".into(), Json::str("warm"))];
         fields.extend(grid_fields(args)?);
-        let resp = proto::request(args.addr(), &Json::Obj(fields))?;
+        let resp = proto::request_retry(args.addr(), &Json::Obj(fields), &retry_policy(args)?)?;
         expect_ok(&resp)?;
         let stats = proto::stats_from_json(resp.field("stats")?)?;
         return Ok(format!("warm (via {}): {}", args.addr(), render_stats(&stats)));

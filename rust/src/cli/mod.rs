@@ -8,8 +8,9 @@
 //! codr compress --model <name> [--seed N]
 //! codr golden [--artifacts DIR] [--seed N]
 //! codr serve [--addr HOST:PORT] [--store DIR] [--store-cap-mb N] [--drain-secs N]
-//! codr submit [--addr HOST:PORT] [grid opts] [--watch | --wait]
-//! codr watch --job N [--addr HOST:PORT]
+//!           [--conn-timeout-secs N]
+//! codr submit [--addr HOST:PORT] [grid opts] [--watch | --wait] [--retries N]
+//! codr watch --job N [--addr HOST:PORT] [--retries N]
 //! codr warm [--addr HOST:PORT | --store DIR] [grid opts]
 //! codr bench [--quick] [--out FILE] [grid opts]
 //! codr info
@@ -59,7 +60,11 @@ OPTIONS:
     --store DIR        Result store ($CODR_STORE, default results/store)
     --store-cap-mb N   serve: store size cap in MiB (oldest packs evicted)
     --drain-secs N     serve: shutdown drain bound in seconds (default 30)
+    --conn-timeout-secs N
+                       serve: per-connection socket timeout (0 = unbounded)
     --addr HOST:PORT   Sweep service address        (default 127.0.0.1:7878)
+    --retries N        submit/watch/map: retry transport failures with
+                       exponential backoff (default 0 = fail fast)
     --job N            watch: job id to attach to
     --layer NAME       map: conv layer to search (default: first conv)
     --group G          map: single sweep group      (default Orig)

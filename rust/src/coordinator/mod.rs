@@ -230,6 +230,10 @@ pub struct SweepStats {
     pub collision_verifies: usize,
     /// Memo shard-mutex acquisitions that had to wait (lock contention).
     pub lock_waits: usize,
+    /// Points whose computation panicked (isolated per point — see
+    /// [`pool::run_isolated`]); their results were neither produced nor
+    /// stored, and the job completes as `state:"partial"`.
+    pub failed: usize,
     /// Wall-clock of the whole sweep call, in milliseconds.
     pub wall_ms: u64,
 }

@@ -9,6 +9,7 @@
 //! the input (one giant conv layer's chunks, say) therefore get
 //! redistributed instead of serializing behind whoever drew them.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -16,6 +17,32 @@ use std::sync::Mutex;
 /// Results are returned in input order.
 pub fn parallel_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
     parallel_map_with(items, default_threads(), f)
+}
+
+/// Run `f` with panics contained: a panic (including one injected at
+/// the `pool.worker.panic` fault point) becomes `Err(message)` instead
+/// of unwinding into the caller's bookkeeping. This is the seam the
+/// scheduler wraps around each chunk/finalize/assemble computation, so
+/// one crashing task fails its own sweep point while completion
+/// counters, claim release, and waiter wakeups all still run.
+pub fn run_isolated<T>(f: impl FnOnce() -> T) -> Result<T, String> {
+    catch_unwind(AssertUnwindSafe(|| {
+        crate::faults::panic_point("pool.worker.panic");
+        f()
+    }))
+    .map_err(|payload| panic_message(payload.as_ref()))
+}
+
+/// Best-effort text of a panic payload (`panic!` with a literal or a
+/// formatted string covers everything this codebase throws).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic (non-string payload)".to_string()
+    }
 }
 
 /// Number of worker threads used by [`parallel_map`].
@@ -37,19 +64,36 @@ pub fn parallel_map_with<T: Sync, R: Send>(
     }
     let queue = StealQueue::new(items.len(), threads);
     let slots: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
+    // A panicking item must not tear down the pool mid-map: the worker
+    // catches it, the remaining items still run, and the first payload
+    // re-raises after the join — same contract as before (the caller
+    // sees the panic), but siblings complete and the queue drains, so a
+    // crash never strands work that later bookkeeping depends on.
+    let first_panic: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
     std::thread::scope(|scope| {
         for worker in 0..threads {
             let queue = &queue;
             let slots = &slots;
             let f = &f;
+            let first_panic = &first_panic;
             scope.spawn(move || {
                 while let Some(i) = queue.pop(worker) {
-                    let r = f(&items[i]);
-                    *slots[i].lock().unwrap() = Some(r);
+                    match catch_unwind(AssertUnwindSafe(|| f(&items[i]))) {
+                        Ok(r) => *slots[i].lock().unwrap() = Some(r),
+                        Err(payload) => {
+                            let mut slot = first_panic.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(payload);
+                            }
+                        }
+                    }
                 }
             });
         }
     });
+    if let Some(payload) = first_panic.into_inner().unwrap() {
+        resume_unwind(payload);
+    }
     slots
         .into_iter()
         .map(|s| s.into_inner().unwrap().expect("worker skipped a slot"))
@@ -236,5 +280,37 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn panicking_item_does_not_strand_its_siblings() {
+        // Containment: every non-panicking item still runs to completion
+        // before the original panic re-raises out of the map.
+        let calls = AtomicU64::new(0);
+        let xs: Vec<u32> = (0..32).collect();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_map_with(&xs, 4, |&x| {
+                if x == 3 {
+                    panic!("early boom");
+                }
+                calls.fetch_add(1, Ordering::Relaxed);
+                x
+            })
+        }));
+        assert!(caught.is_err(), "the panic must still propagate");
+        assert_eq!(
+            calls.load(Ordering::Relaxed),
+            31,
+            "all siblings of the panicking item must have run"
+        );
+    }
+
+    #[test]
+    fn run_isolated_contains_panics_as_errors() {
+        assert_eq!(run_isolated(|| 41 + 1), Ok(42));
+        let err = run_isolated(|| -> u32 { panic!("chunk exploded") }).unwrap_err();
+        assert_eq!(err, "chunk exploded");
+        let err = run_isolated(|| -> u32 { panic!("formatted {}", 7) }).unwrap_err();
+        assert_eq!(err, "formatted 7");
     }
 }

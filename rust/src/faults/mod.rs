@@ -1,0 +1,290 @@
+//! Deterministic fault injection for the serve/store/memo stack.
+//!
+//! Production code is instrumented with **named injection points** at
+//! its durability seams (`store.pack_write.torn`,
+//! `memo.snapshot.bitflip`, `pool.worker.panic`, `serve.conn.stall`,
+//! `serve.watch.drop`, `sched.point.slow`). Each point is a single
+//! `faults::…_point(…)` call whose unarmed fast path is one `#[inline]`
+//! load of a `OnceLock` that resolves to `None` — no spec parsing, no
+//! locking, no RNG — so shipping the hooks costs nothing.
+//!
+//! Arming is process-wide via the `CODR_FAULTS` environment variable,
+//! read once on first use:
+//!
+//! ```text
+//! CODR_FAULTS="pool.worker.panic:1,store.pack_write.torn:3@0.5,seed=7"
+//! ```
+//!
+//! The spec is a comma-separated list of clauses:
+//!
+//! * `name:count` — the point fires on its first `count` *eligible*
+//!   evaluations, then disarms (count defaults to 1 if omitted);
+//! * `name:count@prob` — each evaluation is eligible with probability
+//!   `prob` drawn from the seeded RNG (default 1.0, i.e. always);
+//! * `seed=N` — seeds the RNG shared by probability draws and byte
+//!   manglers (default 42), so a failing chaos run reproduces exactly.
+//!
+//! The registry deliberately does not validate names against a list:
+//! points live at seams spread across modules, and an unknown name in
+//! the spec simply never fires. Tests construct [`Registry`] directly
+//! (the global is env-armed once per process, which parallel in-process
+//! tests must not fight over).
+
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// One armed injection point: how many more times it fires, and with
+/// what per-evaluation probability.
+struct PointState {
+    remaining: AtomicU64,
+    prob: f64,
+}
+
+/// A parsed `CODR_FAULTS` spec. The process-global instance lives in a
+/// `OnceLock<Option<Registry>>`; tests build their own.
+pub struct Registry {
+    points: HashMap<String, PointState>,
+    rng: Mutex<Rng>,
+}
+
+impl Registry {
+    /// Parse a fault spec. Errors name the offending clause so a typo in
+    /// `CODR_FAULTS` fails loudly at serve startup instead of silently
+    /// disarming the chaos run.
+    pub fn parse(spec: &str) -> Result<Registry, String> {
+        let mut points = HashMap::new();
+        let mut seed = 42u64;
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(s) = clause.strip_prefix("seed=") {
+                seed = s
+                    .parse()
+                    .map_err(|_| format!("bad fault seed `{clause}`"))?;
+                continue;
+            }
+            let (name_count, prob) = match clause.split_once('@') {
+                Some((nc, p)) => {
+                    let p: f64 = p
+                        .parse()
+                        .map_err(|_| format!("bad probability in `{clause}`"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("probability out of [0,1] in `{clause}`"));
+                    }
+                    (nc, p)
+                }
+                None => (clause, 1.0),
+            };
+            let (name, count) = match name_count.split_once(':') {
+                Some((n, c)) => (
+                    n,
+                    c.parse::<u64>()
+                        .map_err(|_| format!("bad count in `{clause}`"))?,
+                ),
+                None => (name_count, 1),
+            };
+            if name.is_empty() {
+                return Err(format!("empty point name in `{clause}`"));
+            }
+            points.insert(
+                name.to_string(),
+                PointState {
+                    remaining: AtomicU64::new(count),
+                    prob,
+                },
+            );
+        }
+        Ok(Registry {
+            points,
+            rng: Mutex::new(Rng::new(seed)),
+        })
+    }
+
+    /// Should `name` fire now? Decrements the point's budget on a hit.
+    pub fn fire(&self, name: &str) -> bool {
+        let Some(p) = self.points.get(name) else {
+            return false;
+        };
+        if p.remaining.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        if p.prob < 1.0 && !self.rng.lock().unwrap().chance(p.prob) {
+            return false;
+        }
+        // Claim one shot; a concurrent evaluation that raced us past the
+        // load above loses here and stays clean.
+        p.remaining
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |r| r.checked_sub(1))
+            .is_ok()
+    }
+
+    /// A seeded draw in `[0, bound)` for byte manglers, decorrelated per
+    /// point name so two manglers armed together damage independently.
+    fn draw(&self, name: &str, bound: u64) -> u64 {
+        self.rng.lock().unwrap().fork(name).below(bound)
+    }
+}
+
+static REGISTRY: OnceLock<Option<Registry>> = OnceLock::new();
+
+fn registry() -> Option<&'static Registry> {
+    REGISTRY
+        .get_or_init(|| {
+            let spec = std::env::var("CODR_FAULTS").ok()?;
+            if spec.trim().is_empty() {
+                return None;
+            }
+            match Registry::parse(&spec) {
+                Ok(r) => {
+                    eprintln!("faults: armed from CODR_FAULTS ({} points)", r.points.len());
+                    Some(r)
+                }
+                Err(e) => {
+                    // A malformed spec must not silently run a "chaos"
+                    // test with no chaos in it.
+                    panic!("invalid CODR_FAULTS spec: {e}");
+                }
+            }
+        })
+        .as_ref()
+}
+
+/// Is any fault armed in this process?
+#[inline]
+pub fn armed() -> bool {
+    registry().is_some()
+}
+
+/// Evaluate the injection point `name`: true iff it fires now. The
+/// unarmed fast path is a single static load.
+#[inline]
+pub fn point(name: &str) -> bool {
+    match registry() {
+        None => false,
+        Some(r) => r.fire(name),
+    }
+}
+
+/// Panic (an injected worker crash) if `name` fires.
+#[inline]
+pub fn panic_point(name: &str) {
+    if point(name) {
+        panic!("fault injected: {name}");
+    }
+}
+
+/// Sleep for `dur` if `name` fires — models a stalled peer or a slow
+/// worker (also used to widen kill-windows deterministically in tests).
+#[inline]
+pub fn sleep_point(name: &str, dur: Duration) {
+    if point(name) {
+        std::thread::sleep(dur);
+    }
+}
+
+/// Torn-write mangler: if `name` fires, truncate `buf` to a seeded
+/// prefix (at least one byte shorter) — what a crash between `write`
+/// and `fsync` leaves behind. Returns whether it fired.
+#[inline]
+pub fn torn_point(name: &str, buf: &mut Vec<u8>) -> bool {
+    match registry() {
+        None => false,
+        Some(r) => {
+            if buf.is_empty() || !r.fire(name) {
+                return false;
+            }
+            let keep = r.draw(name, buf.len() as u64) as usize;
+            buf.truncate(keep);
+            eprintln!("faults: {name} fired (truncated to {keep} bytes)");
+            true
+        }
+    }
+}
+
+/// Bit-rot mangler: if `name` fires, flip one seeded bit of `buf`.
+/// Returns whether it fired.
+#[inline]
+pub fn bitflip_point(name: &str, buf: &mut [u8]) -> bool {
+    match registry() {
+        None => false,
+        Some(r) => {
+            if buf.is_empty() || !r.fire(name) {
+                return false;
+            }
+            let bit = r.draw(name, buf.len() as u64 * 8);
+            buf[(bit / 8) as usize] ^= 1 << (bit % 8);
+            eprintln!("faults: {name} fired (flipped bit {bit})");
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_points_never_fire() {
+        // The test harness never sets CODR_FAULTS; the global registry
+        // must resolve to None and every point stay cold.
+        assert!(!armed());
+        assert!(!point("pool.worker.panic"));
+        panic_point("pool.worker.panic"); // must not panic
+        let mut buf = b"intact".to_vec();
+        assert!(!torn_point("store.pack_write.torn", &mut buf));
+        assert!(!bitflip_point("memo.snapshot.bitflip", &mut buf));
+        assert_eq!(buf, b"intact");
+    }
+
+    #[test]
+    fn counts_bound_firings() {
+        let r = Registry::parse("a.b:2,c.d").unwrap();
+        assert!(r.fire("a.b"));
+        assert!(r.fire("a.b"));
+        assert!(!r.fire("a.b"), "count budget must exhaust");
+        assert!(r.fire("c.d"), "count defaults to 1");
+        assert!(!r.fire("c.d"));
+        assert!(!r.fire("never.named"));
+    }
+
+    #[test]
+    fn probability_gates_are_seeded_and_reproducible() {
+        let fired = |seed: u64| {
+            let r = Registry::parse(&format!("p.q:1000000@0.25,seed={seed}")).unwrap();
+            (0..10_000).filter(|_| r.fire("p.q")).count()
+        };
+        let a = fired(7);
+        assert_eq!(a, fired(7), "same seed, same schedule");
+        assert_ne!(a, fired(8), "different seed, different schedule");
+        // Roughly a quarter of evaluations fire.
+        assert!((1500..3500).contains(&a), "{a} of 10000 at p=0.25");
+    }
+
+    #[test]
+    fn spec_errors_name_the_clause() {
+        for bad in ["x:y", "x:1@2.0", "x:1@p", ":3", "seed=soon"] {
+            let err = Registry::parse(bad).unwrap_err();
+            assert!(!err.is_empty(), "{bad}");
+        }
+        // Empty/whitespace clauses are tolerated (trailing commas).
+        assert!(Registry::parse("a:1,,").is_ok());
+        assert!(Registry::parse("").unwrap().points.is_empty());
+    }
+
+    #[test]
+    fn concurrent_fires_never_exceed_the_budget() {
+        let r = Registry::parse("hot.point:100").unwrap();
+        let hits: usize = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| s.spawn(|| (0..1000).filter(|_| r.fire("hot.point")).count()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        assert_eq!(hits, 100, "exactly the budget, no double-spend");
+    }
+}

@@ -21,6 +21,10 @@
 //!   `TemporalMap`/`SpatialMap` directives, an analytical reuse engine
 //!   priced through the exact dataflow walk, and a bounded Pareto-front
 //!   explorer (`codr map`);
+//! * the **fault-injection harness** ([`faults`]): named, seeded
+//!   injection points at the durability seams (torn pack writes, memo
+//!   snapshot bit-rot, worker panics, stalled connections), armed via
+//!   `CODR_FAULTS`, zero-cost when unarmed;
 //! * the **persistent sweep service** ([`serve`]): a content-addressed
 //!   result store (multi-writer safe via advisory pack locks), an
 //!   incremental grid scheduler with per-point progress observation,
@@ -37,6 +41,7 @@ pub mod cli;
 pub mod codr;
 pub mod coordinator;
 pub mod energy;
+pub mod faults;
 pub mod mapping;
 pub mod models;
 pub mod quant;

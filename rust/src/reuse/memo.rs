@@ -743,6 +743,10 @@ impl VectorCache {
             .map(|n| n.to_string_lossy().into_owned())
             .unwrap_or_default();
         let tmp = dir.join(format!(".{name}.tmp-{}", std::process::id()));
+        // Injection seam: snapshot bit-rot on disk. The per-entry FNV
+        // checksums make a flipped bit cost one entry (or one frame) on
+        // the next restore — never a wrong transform.
+        crate::faults::bitflip_point("memo.snapshot.bitflip", &mut buf);
         if let Err(e) = std::fs::write(&tmp, &buf) {
             let _ = std::fs::remove_file(&tmp);
             return Err(e).with_context(|| format!("writing {}", tmp.display()));

@@ -1,0 +1,337 @@
+//! Crash-restart job journal: `<store>/jobs.journal`.
+//!
+//! `codr serve` records every accepted sweep job at two points — on
+//! submission (with the full grid request) and at its terminal state —
+//! as append-only, checksummed line-JSON:
+//!
+//! ```text
+//! {"check":<fnv1a64 of rec's bytes>,"rec":{"kind":"submit","job":1,"grid":{...}}}
+//! {"check":...,"rec":{"kind":"end","job":1,"state":"done"}}
+//! ```
+//!
+//! On startup the journal is replayed: a submit without a matching end
+//! is a job the previous process accepted but never finished (it was
+//! killed mid-grid), and the server re-queues it through the normal
+//! submit path under a fresh id — recomputation is cheap because the
+//! store diff turns everything the dead process persisted into hits.
+//! The re-queue writes an `end` record with `state:"requeued"` for the
+//! old id, so a *second* restart does not replay it again; the journal
+//! is then compacted (atomic rewrite keeping only still-open records).
+//!
+//! Damage tolerance follows the store's discipline: every record
+//! carries a checksum of its own bytes, and because the file is
+//! append-only, a torn or corrupt line can only be the tail — replay
+//! stops there and loses at most the record being written during the
+//! crash. Appends are fsynced: a submission is journaled before its
+//! `ok` response leaves the server.
+//!
+//! `map` jobs are deliberately NOT journaled: their results are store
+//! candidates keyed the same way, but the report lives only in the job
+//! channel — a crashed map search is simply re-run by the client (its
+//! candidates replay as store hits).
+
+use crate::util::hash::fnv1a64;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Journal file name inside the store directory.
+pub const JOURNAL_FILE: &str = "jobs.journal";
+
+/// A journaled job the previous process never finished.
+#[derive(Clone, Debug)]
+pub struct Recovered {
+    /// The job id the dead process assigned (for log correlation only —
+    /// the re-queue runs under a fresh id).
+    pub job: u64,
+    /// The original grid request, as submitted.
+    pub grid: Json,
+}
+
+/// Append-only journal handle. Writers serialize on the internal lock;
+/// appends are line-atomic from the reader's perspective because replay
+/// stops at the first damaged line.
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<std::fs::File>,
+}
+
+impl Journal {
+    /// Journal path for a store directory.
+    pub fn path_in(store_dir: &Path) -> PathBuf {
+        store_dir.join(JOURNAL_FILE)
+    }
+
+    /// Open (creating if needed) the journal in `store_dir`, replay it,
+    /// compact away everything terminal, and return the open jobs for
+    /// re-queueing. The compacted rewrite is atomic (tmp + rename), so
+    /// a crash during open leaves either the old journal or the
+    /// compacted one — never a half-written file.
+    pub fn open(store_dir: &Path) -> Result<(Journal, Vec<Recovered>)> {
+        std::fs::create_dir_all(store_dir)
+            .with_context(|| format!("creating store dir {}", store_dir.display()))?;
+        let path = Self::path_in(store_dir);
+        let open_jobs = match std::fs::read_to_string(&path) {
+            Ok(text) => replay(&text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            // Unreadable journal: recover nothing rather than refuse to
+            // serve — the store itself is intact either way.
+            Err(e) => {
+                eprintln!("warn: jobs.journal unreadable ({e}); starting with no recovery");
+                Vec::new()
+            }
+        };
+        // Compact: only still-open submits survive the rewrite. (They
+        // are re-queued right after open; the requeued `end` records
+        // then append to this fresh file.)
+        let mut compacted = String::new();
+        for r in &open_jobs {
+            compacted.push_str(&frame(&submit_rec(r.job, &r.grid)));
+            compacted.push('\n');
+        }
+        let tmp = store_dir.join(format!(".{JOURNAL_FILE}.tmp-{}", std::process::id()));
+        if let Err(e) = std::fs::write(&tmp, &compacted) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e).with_context(|| format!("writing {}", tmp.display()));
+        }
+        if let Err(e) = std::fs::rename(&tmp, &path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e).with_context(|| format!("renaming to {}", path.display()));
+        }
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening {} for append", path.display()))?;
+        Ok((
+            Journal {
+                path,
+                file: Mutex::new(file),
+            },
+            open_jobs,
+        ))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Journal a job submission. Called before the `ok` response is
+    /// written, so an acked job is always recoverable.
+    pub fn record_submit(&self, job: u64, grid: &Json) {
+        self.append(&submit_rec(job, grid));
+    }
+
+    /// Journal a job's terminal state (`done`, `partial`, `failed`, or
+    /// `requeued` for the old id of a recovered job).
+    pub fn record_end(&self, job: u64, state: &str) {
+        self.append(&Json::Obj(vec![
+            ("kind".into(), Json::str("end")),
+            ("job".into(), Json::u64(job)),
+            ("state".into(), Json::str(state)),
+        ]));
+    }
+
+    /// Append one framed record and fsync. Best-effort by policy: a
+    /// full disk must degrade recovery, not take the server down.
+    fn append(&self, rec: &Json) {
+        let mut guard = self.file.lock().unwrap();
+        let line = frame(rec);
+        if let Err(e) = writeln!(guard, "{line}").and_then(|_| guard.sync_data()) {
+            eprintln!(
+                "warn: jobs.journal append failed ({e}); this job will not survive a crash"
+            );
+        }
+    }
+}
+
+/// Wrap a record with its checksum. The check covers the record's exact
+/// serialized bytes, and our own writer is the only producer, so
+/// verify re-serializes the parsed record and compares.
+fn frame(rec: &Json) -> String {
+    let body = rec.to_string();
+    Json::Obj(vec![
+        ("check".into(), Json::u64(fnv1a64(body.as_bytes()))),
+        ("rec".into(), rec.clone()),
+    ])
+    .to_string()
+}
+
+/// Replay journal text into the list of still-open jobs, in submission
+/// order. Stops at the first damaged line (append-only ⇒ only the tail
+/// can be torn).
+fn replay(text: &str) -> Vec<Recovered> {
+    let mut open: Vec<Recovered> = Vec::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Some(rec) = verify(line) else {
+            break; // torn tail: everything before it already replayed
+        };
+        let kind = rec.get("kind").and_then(|k| k.as_str().ok());
+        let job = rec.get("job").and_then(|j| j.as_u64().ok());
+        match (kind, job) {
+            (Some("submit"), Some(job)) => {
+                if let Some(grid) = rec.get("grid") {
+                    open.push(Recovered {
+                        job,
+                        grid: grid.clone(),
+                    });
+                }
+            }
+            (Some("end"), Some(job)) => open.retain(|r| r.job != job),
+            // Unknown kinds are skipped, not fatal: a future build may
+            // append record types this one does not know.
+            _ => {}
+        }
+    }
+    open
+}
+
+/// Parse + checksum-verify one journal line.
+fn verify(line: &str) -> Option<Json> {
+    let j = Json::parse(line.trim()).ok()?;
+    let check = j.get("check")?.as_u64().ok()?;
+    let rec = j.get("rec")?;
+    if fnv1a64(rec.to_string().as_bytes()) != check {
+        return None;
+    }
+    Some(rec.clone())
+}
+
+fn submit_rec(job: u64, grid: &Json) -> Json {
+    Json::Obj(vec![
+        ("kind".into(), Json::str("submit")),
+        ("job".into(), Json::u64(job)),
+        ("grid".into(), grid.clone()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "codr-journal-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn grid(models: &str) -> Json {
+        Json::Obj(vec![("models".into(), Json::str(models))])
+    }
+
+    #[test]
+    fn open_jobs_survive_a_restart_and_terminal_ones_do_not() {
+        let dir = temp_dir("roundtrip");
+        {
+            let (j, recovered) = Journal::open(&dir).unwrap();
+            assert!(recovered.is_empty());
+            j.record_submit(1, &grid("tiny"));
+            j.record_submit(2, &grid("alexnet"));
+            j.record_end(1, "done");
+        }
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].job, 2);
+        assert_eq!(
+            recovered[0].grid.get("models").unwrap().as_str().unwrap(),
+            "alexnet"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn requeued_state_closes_the_old_id() {
+        let dir = temp_dir("requeue");
+        {
+            let (j, _) = Journal::open(&dir).unwrap();
+            j.record_submit(7, &grid("tiny"));
+        }
+        {
+            let (j, recovered) = Journal::open(&dir).unwrap();
+            assert_eq!(recovered.len(), 1);
+            // The server re-queues under a fresh id and closes the old.
+            j.record_submit(1, &recovered[0].grid);
+            j.record_end(7, "requeued");
+            j.record_end(1, "done");
+        }
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        assert!(recovered.is_empty(), "{recovered:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_bounds_the_file_across_restarts() {
+        let dir = temp_dir("compact");
+        {
+            let (j, _) = Journal::open(&dir).unwrap();
+            for n in 1..=50 {
+                j.record_submit(n, &grid("tiny"));
+                j.record_end(n, "done");
+            }
+            j.record_submit(51, &grid("tiny"));
+        }
+        let before = std::fs::metadata(Journal::path_in(&dir)).unwrap().len();
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        let after = std::fs::metadata(Journal::path_in(&dir)).unwrap().len();
+        assert_eq!(recovered.len(), 1);
+        assert!(
+            after < before / 10,
+            "compaction must drop terminal records ({before} -> {after})"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_loses_only_the_last_record() {
+        let dir = temp_dir("torn");
+        {
+            let (j, _) = Journal::open(&dir).unwrap();
+            j.record_submit(1, &grid("tiny"));
+            j.record_submit(2, &grid("alexnet"));
+        }
+        // Tear the last line mid-record, as a crash mid-append would.
+        let path = Journal::path_in(&dir);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let keep = text.trim_end().rfind('\n').unwrap() + 20;
+        std::fs::write(&path, &text[..keep]).unwrap();
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        assert_eq!(recovered.len(), 1, "{recovered:?}");
+        assert_eq!(recovered[0].job, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_line_stops_replay_without_panicking() {
+        let dir = temp_dir("corrupt");
+        {
+            let (j, _) = Journal::open(&dir).unwrap();
+            j.record_submit(1, &grid("tiny"));
+        }
+        let path = Journal::path_in(&dir);
+        // Flip a byte inside the record body: the checksum catches it.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] = bytes[mid].wrapping_add(1);
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, recovered) = Journal::open(&dir).unwrap();
+        assert!(recovered.is_empty(), "damaged record must not replay");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_journal_is_an_empty_one() {
+        let dir = temp_dir("fresh");
+        let (j, recovered) = Journal::open(&dir).unwrap();
+        assert!(recovered.is_empty());
+        assert!(j.path().exists(), "open must create the journal");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

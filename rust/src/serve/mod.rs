@@ -18,17 +18,23 @@
 //!   speaking line-delimited JSON (`submit` / `watch` / `status` /
 //!   `result` / `warm`), with `codr submit` / `codr watch` /
 //!   `codr warm` as clients; `shutdown` drains in-flight jobs and open
-//!   watchers (bounded by `--drain-secs`) before snapshotting the memo.
+//!   watchers (bounded by `--drain-secs`) before snapshotting the memo;
+//! * [`journal`] — append-only, checksummed record of accepted sweep
+//!   jobs; on restart after a crash, journaled jobs that never reached a
+//!   terminal state are re-queued (the store diff turns the dead
+//!   process's persisted points into hits).
 //!
 //! The CLI figure path reads through the same store, so
 //! `codr warm --models tiny` followed by `codr figure headline --models
 //! tiny` renders the figure without a single `simulate_layer` call.
 
+pub mod journal;
 pub mod proto;
 pub mod scheduler;
 pub mod server;
 pub mod store;
 
+pub use journal::Journal;
 pub use proto::{GridRequest, DEFAULT_ADDR};
 pub use scheduler::Scheduler;
 pub use server::{memo_snapshot_path, Server, DEFAULT_DRAIN_SECS};

@@ -58,6 +58,7 @@ use crate::coordinator::{Arch, SweepStats};
 use crate::models::{parse_group_list, parse_model_list, Model, SweepGroup};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
+use std::fmt;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
@@ -107,6 +108,45 @@ impl GridRequest {
     pub fn points(&self) -> usize {
         self.models.len() * self.groups.len() * self.archs.len()
     }
+
+    /// Serialize back to the request shape [`Self::from_json`] parses —
+    /// the job journal stores this, so a re-queued job is re-parsed by
+    /// the exact code path a fresh submit takes.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "models".into(),
+                Json::str(
+                    self.models
+                        .iter()
+                        .map(|m| m.name)
+                        .collect::<Vec<_>>()
+                        .join(","),
+                ),
+            ),
+            (
+                "groups".into(),
+                Json::str(
+                    self.groups
+                        .iter()
+                        .map(|g| g.label())
+                        .collect::<Vec<_>>()
+                        .join(","),
+                ),
+            ),
+            (
+                "archs".into(),
+                Json::str(
+                    self.archs
+                        .iter()
+                        .map(|a| a.name())
+                        .collect::<Vec<_>>()
+                        .join(","),
+                ),
+            ),
+            ("seed".into(), Json::u64(self.seed)),
+        ])
+    }
 }
 
 /// Serialize sweep stats for a response.
@@ -124,6 +164,7 @@ pub fn stats_to_json(s: &SweepStats) -> Json {
         ("l2_hits".into(), Json::usize(s.l2_hits)),
         ("collision_verifies".into(), Json::usize(s.collision_verifies)),
         ("lock_waits".into(), Json::usize(s.lock_waits)),
+        ("failed".into(), Json::usize(s.failed)),
         ("wall_ms".into(), Json::u64(s.wall_ms)),
     ])
 }
@@ -153,6 +194,7 @@ pub fn stats_from_json(j: &Json) -> Result<SweepStats> {
         l2_hits: opt_usize("l2_hits")?,
         collision_verifies: opt_usize("collision_verifies")?,
         lock_waits: opt_usize("lock_waits")?,
+        failed: opt_usize("failed")?,
         wall_ms: match j.get("wall_ms") {
             Some(v) => v.as_u64()?,
             None => 0,
@@ -205,6 +247,45 @@ pub fn write_message(writer: &mut impl Write, msg: &Json) -> Result<()> {
     Ok(())
 }
 
+/// Client-side retry policy: `attempts` extra tries after the first
+/// failure, exponential backoff from `base` doubling per attempt, plus
+/// seeded jitter in `[0, base)` so a thundering herd of reconnecting
+/// clients decorrelates. `Retry::none()` (zero attempts) is the
+/// default — behavior is bit-for-bit the pre-retry client.
+#[derive(Clone, Debug)]
+pub struct Retry {
+    pub attempts: u32,
+    pub base: std::time::Duration,
+    pub jitter_seed: u64,
+}
+
+impl Retry {
+    pub fn none() -> Retry {
+        Retry::attempts(0)
+    }
+
+    /// `n` retries with the standard base backoff (250 ms), seeded from
+    /// the process id so two clients launched together jitter apart.
+    pub fn attempts(n: u32) -> Retry {
+        Retry {
+            attempts: n,
+            base: std::time::Duration::from_millis(250),
+            jitter_seed: std::process::id() as u64,
+        }
+    }
+
+    /// Backoff before retry number `attempt` (1-based): exponential in
+    /// the attempt with one seeded jitter draw added.
+    fn backoff(&self, attempt: u32) -> std::time::Duration {
+        let exp = self.base.saturating_mul(1u32 << (attempt - 1).min(10));
+        let base_ms = self.base.as_millis().max(1) as u64;
+        let jitter = crate::util::rng::Rng::new(self.jitter_seed)
+            .fork(&format!("retry.{attempt}"))
+            .below(base_ms);
+        exp + std::time::Duration::from_millis(jitter)
+    }
+}
+
 /// Client helper: open a fresh connection, send one request, read one
 /// response. Errors if the server reports `ok:false`? No — transport
 /// errors only; callers inspect `ok` themselves so they can surface the
@@ -221,11 +302,109 @@ pub fn request(addr: &str, msg: &Json) -> Result<Json> {
     read_message(&mut reader)?.context("server closed the connection without replying")
 }
 
+/// [`request`] with retries: transport failures (connect refused, reset,
+/// timeout, truncated reply) back off and retry; an `ok:false` response
+/// returns immediately — the server answered, retrying won't change its
+/// mind. Safe for the verbs the CLI retries (`status` and `watch` are
+/// read-only; `submit`/`map` ONLY retry the connect-and-send when no
+/// response arrived, which can at worst enqueue a duplicate grid — the
+/// store dedups its points, so the cost is bounded).
+pub fn request_retry(addr: &str, msg: &Json, retry: &Retry) -> Result<Json> {
+    let mut attempt = 0u32;
+    loop {
+        match request(addr, msg) {
+            Ok(resp) => return Ok(resp),
+            Err(e) => {
+                attempt += 1;
+                if attempt > retry.attempts {
+                    return Err(e);
+                }
+                let pause = retry.backoff(attempt);
+                eprintln!(
+                    "retry {attempt}/{}: {e:#} — backing off {}ms",
+                    retry.attempts,
+                    pause.as_millis()
+                );
+                std::thread::sleep(pause);
+            }
+        }
+    }
+}
+
 /// Client helper: attach to a submitted job and stream its progress.
 /// `on_event` fires for every event (including the terminal `end`,
-/// which is also returned). Errors on transport failure or if the
-/// server refuses the attach (unknown/expired job).
-pub fn watch(addr: &str, job: u64, mut on_event: impl FnMut(&Json)) -> Result<Json> {
+/// which is also returned). Errors on transport failure — including a
+/// server EOF before the terminal `end` event ("stream truncated": the
+/// job is NOT known to have finished) — or if the server refuses the
+/// attach (unknown/expired job).
+pub fn watch(addr: &str, job: u64, on_event: impl FnMut(&Json)) -> Result<Json> {
+    watch_retry(addr, job, &Retry::none(), on_event)
+}
+
+/// [`watch`] with reconnect-with-replay. A truncated stream (server
+/// EOF, reset, read timeout before `end`) reconnects after backoff and
+/// re-attaches: the server replays the job's full event history, and
+/// `skip` suppresses the events this client already delivered, so
+/// `on_event` sees every event exactly once even across reconnects
+/// (replay is byte-identical — the job channel records history). A
+/// refused attach (unknown/expired job) is not retried.
+pub fn watch_retry(
+    addr: &str,
+    job: u64,
+    retry: &Retry,
+    mut on_event: impl FnMut(&Json),
+) -> Result<Json> {
+    let mut delivered = 0usize;
+    let mut attempt = 0u32;
+    loop {
+        match watch_once(addr, job, &mut delivered, &mut on_event) {
+            Ok(end) => return Ok(end),
+            Err(e) => {
+                // Protocol-level refusals are final; only transport
+                // failures reconnect.
+                if e.downcast_ref::<WatchRefused>().is_some() {
+                    return Err(e);
+                }
+                attempt += 1;
+                if attempt > retry.attempts {
+                    return Err(e);
+                }
+                let pause = retry.backoff(attempt);
+                eprintln!(
+                    "watch retry {attempt}/{}: {e:#} — backing off {}ms",
+                    retry.attempts,
+                    pause.as_millis()
+                );
+                std::thread::sleep(pause);
+            }
+        }
+    }
+}
+
+/// Marker for a server-side attach refusal (vs a transport failure):
+/// retrying an unknown/expired job cannot succeed.
+#[derive(Debug)]
+struct WatchRefused;
+
+impl fmt::Display for WatchRefused {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("watch refused")
+    }
+}
+
+impl std::error::Error for WatchRefused {}
+
+/// One watch attach. The first `*delivered` events of the stream were
+/// already handed to `on_event` on a previous connection (the server
+/// replays history from the start) and are suppressed; the counter
+/// advances per delivered event, so a reconnect resumes exactly where
+/// this attach died.
+fn watch_once(
+    addr: &str,
+    job: u64,
+    delivered: &mut usize,
+    on_event: &mut impl FnMut(&Json),
+) -> Result<Json> {
     let stream = TcpStream::connect(addr)
         .with_context(|| format!("connecting to codr serve at {addr}"))?;
     stream
@@ -246,12 +425,22 @@ pub fn watch(addr: &str, job: u64, mut on_event: impl FnMut(&Json)) -> Result<Js
             .get("error")
             .and_then(|e| e.as_str().ok().map(|s| s.to_string()))
             .unwrap_or_else(|| ack.to_string());
-        anyhow::bail!("watch refused: {err}");
+        return Err(anyhow::Error::new(WatchRefused).context(format!("watch refused: {err}")));
     }
+    let mut seen = 0usize;
     loop {
-        let event = read_message(&mut reader)?.context("server closed the stream mid-watch")?;
+        let event = read_message(&mut reader)?.with_context(|| {
+            format!(
+                "stream truncated: server closed after {seen} events without \
+                 a terminal `end` — job {job} is not known to have finished"
+            )
+        })?;
         let is_end = matches!(event.get("event").map(|e| e.as_str()), Some(Ok("end")));
-        on_event(&event);
+        seen += 1;
+        if seen > *delivered {
+            on_event(&event);
+            *delivered = seen;
+        }
         if is_end {
             return Ok(event);
         }
@@ -313,6 +502,7 @@ mod tests {
             l2_hits: 30,
             collision_verifies: 0,
             lock_waits: 3,
+            failed: 1,
             wall_ms: 251,
         };
         let back = stats_from_json(&stats_to_json(&s)).unwrap();
@@ -329,6 +519,63 @@ mod tests {
         let back = stats_from_json(&legacy).unwrap();
         assert_eq!(back.l1_hits, 0);
         assert_eq!(back.lock_waits, 0);
+        assert_eq!(back.failed, 0);
+    }
+
+    #[test]
+    fn grid_request_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"models":"tiny","groups":"Orig,D=50%","archs":"CoDR,SCNN","seed":7}"#,
+        )
+        .unwrap();
+        let g = GridRequest::from_json(&j).unwrap();
+        let back = GridRequest::from_json(&g.to_json()).unwrap();
+        assert_eq!(back.models[0].name, "tiny");
+        assert_eq!(back.groups, g.groups);
+        assert_eq!(back.archs, g.archs);
+        assert_eq!(back.seed, 7);
+        // The round trip is a fixed point: journaled jobs re-serialize
+        // identically however often they are recovered.
+        assert_eq!(back.to_json().to_string(), g.to_json().to_string());
+    }
+
+    #[test]
+    fn retry_backoff_grows_and_jitters_deterministically() {
+        let r = Retry {
+            attempts: 3,
+            base: std::time::Duration::from_millis(100),
+            jitter_seed: 9,
+        };
+        let b1 = r.backoff(1);
+        let b2 = r.backoff(2);
+        let b3 = r.backoff(3);
+        // Exponential base with jitter bounded by one base unit.
+        assert!((100..200).contains(&(b1.as_millis() as u64)), "{b1:?}");
+        assert!((200..300).contains(&(b2.as_millis() as u64)), "{b2:?}");
+        assert!((400..500).contains(&(b3.as_millis() as u64)), "{b3:?}");
+        // Same seed, same schedule; a different seed jitters apart.
+        assert_eq!(b1, r.backoff(1));
+        let other = Retry { jitter_seed: 10, ..r.clone() };
+        assert_ne!(
+            (b1, b2, b3),
+            (other.backoff(1), other.backoff(2), other.backoff(3))
+        );
+    }
+
+    #[test]
+    fn request_retry_gives_up_after_its_budget() {
+        // Port 1 never listens: every attempt fails at connect. Zero
+        // retries must fail immediately; the backoff schedule is unit-
+        // tested above (not exercised here to keep the test fast).
+        let t0 = std::time::Instant::now();
+        let err = request_retry(
+            "127.0.0.1:1",
+            &Json::parse(r#"{"verb":"status"}"#).unwrap(),
+            &Retry::none(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("connecting"), "{err:#}");
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
     }
 
     #[test]

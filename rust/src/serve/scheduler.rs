@@ -1,7 +1,7 @@
 //! Incremental grid scheduler: diff a requested (model × group × arch)
 //! grid against the result store and simulate only what is missing.
 //!
-//! Four properties matter here:
+//! Five properties matter here:
 //!
 //! 1. **Incrementality** — points already in the store are loaded, not
 //!    simulated; corrupt entries are recomputed and overwritten. The
@@ -24,6 +24,12 @@
 //!    request waiting on one point wakes as soon as that point is done,
 //!    not after the claimant's whole grid — and a point's giant conv
 //!    layers no longer serialize its tail on one worker.
+//! 5. **Panic isolation** — every chunk/finalize/assemble computation
+//!    runs under [`pool::run_isolated`]; a panicking task dooms only its
+//!    own point (reported with the panic message via [`PointDone::error`]
+//!    and counted in [`SweepStats::failed`]), while its completion
+//!    counters, claim release, and waiter wakeups all still run. One
+//!    crashing chunk can no longer hang the server or strand a grid.
 //!
 //! Results are returned in (model × group) then arch order — identical to
 //! the storeless sweep, so figure output is byte-for-byte the same
@@ -72,6 +78,11 @@ pub struct PointDone<'a> {
     /// The point came from the store (or another request's computation)
     /// rather than being simulated by this grid run.
     pub cache_hit: bool,
+    /// Set when the point's computation panicked (contained by
+    /// [`pool::run_isolated`]): the panic message. The point produced no
+    /// result, nothing was persisted, and the grid completes with
+    /// `stats.failed > 0` (`state:"partial"` over the wire).
+    pub error: Option<&'a str>,
 }
 
 /// Per-point completion observer. `Sync` because computed points report
@@ -105,6 +116,30 @@ struct PointSlot {
     layer_results: Vec<Mutex<Option<LayerResult>>>,
     layers_remaining: AtomicUsize,
     result: Mutex<Option<ModelResult>>,
+    /// First panic message from any of this point's tasks. Once set the
+    /// point is doomed: remaining chunks still run (and decrement the
+    /// counters — waiters depend on that), but finalize/assemble/save
+    /// are skipped and the point reports as failed instead of done.
+    error: Mutex<Option<String>>,
+}
+
+impl PointSlot {
+    /// Record the first failure; later ones lose (one message per point
+    /// is enough, and the first is usually the root cause).
+    fn fail(&self, msg: String) {
+        let mut e = self.error.lock().unwrap();
+        if e.is_none() {
+            *e = Some(msg);
+        }
+    }
+
+    /// Visibility contract: a chunk stores its error *before* its
+    /// counter decrement (AcqRel), so whoever observes the final
+    /// decrement of a fan — or of `layers_remaining` — sees every error
+    /// recorded by the tasks that decrement fed into it.
+    fn failure(&self) -> Option<String> {
+        self.error.lock().unwrap().clone()
+    }
 }
 
 /// Long-lived scheduler over one result store. `codr serve` keeps a
@@ -192,13 +227,14 @@ impl Scheduler {
         seed: u64,
         progress: Option<Progress<'_>>,
     ) -> SweepResults {
-        let emit = |mi: usize, gi: usize, ai: usize, cache_hit: bool| {
+        let emit = |mi: usize, gi: usize, ai: usize, cache_hit: bool, error: Option<&str>| {
             if let Some(f) = progress {
                 f(&PointDone {
                     model: models[mi].name,
                     group: groups[gi].label(),
                     arch: archs[ai].name(),
                     cache_hit,
+                    error,
                 });
             }
         };
@@ -233,7 +269,7 @@ impl Scheduler {
                     match outcome {
                         LoadOutcome::Hit(r) => {
                             stats.cache_hits += 1;
-                            emit(mi, gi, ai, true);
+                            emit(mi, gi, ai, true, None);
                             found.insert((mi, gi, ai), *r);
                         }
                         LoadOutcome::Corrupt => {
@@ -278,7 +314,7 @@ impl Scheduler {
                 LoadOutcome::Hit(r) => {
                     stats.cache_hits += 1;
                     guard.release_one(p.key.fingerprint);
-                    emit(p.mi, p.gi, p.ai, true);
+                    emit(p.mi, p.gi, p.ai, true, None);
                     found.insert((p.mi, p.gi, p.ai), *r);
                 }
                 _ => to_compute.push(p),
@@ -337,6 +373,7 @@ impl Scheduler {
                         layer_results: (0..n_layers).map(|_| Mutex::new(None)).collect(),
                         layers_remaining: AtomicUsize::new(n_layers),
                         result: Mutex::new(None),
+                        error: Mutex::new(None),
                     }
                 })
                 .collect();
@@ -356,37 +393,98 @@ impl Scheduler {
                     .nth(li)
                     .expect("task layer index");
                 let fan = &slot.fans[li];
-                let part = simulate_layer_chunk(arch, spec, w, ci, fan.parts.len());
-                *fan.parts[ci].lock().unwrap() = Some(part);
+                // Each computation runs isolated: a panic (organic, or
+                // injected at `pool.worker.panic`) dooms this point but
+                // the bookkeeping below ALWAYS runs — counters
+                // decrement, the claim releases, waiters wake. The
+                // `sched.point.slow` seam stretches the compute window
+                // so crash tests can kill the process mid-grid.
+                crate::faults::sleep_point(
+                    "sched.point.slow",
+                    std::time::Duration::from_millis(250),
+                );
+                match pool::run_isolated(|| {
+                    simulate_layer_chunk(arch, spec, w, ci, fan.parts.len())
+                }) {
+                    Ok(part) => *fan.parts[ci].lock().unwrap() = Some(part),
+                    Err(msg) => slot.fail(msg),
+                }
                 if fan.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
                     return;
                 }
-                // Last chunk of this layer: merge (chunk order) + price.
-                let parts: Vec<LayerPartial> = fan
-                    .parts
-                    .iter()
-                    .map(|p| p.lock().unwrap().take().expect("chunk partial"))
-                    .collect();
-                let lr = finalize_layer(arch, spec, &parts);
-                *slot.layer_results[li].lock().unwrap() = Some(lr);
+                // Last chunk of this layer: merge (chunk order) + price —
+                // unless a chunk of THIS fan panicked (its error is
+                // visible here, per the PointSlot::failure contract) and
+                // left a hole in the partials.
+                if slot.failure().is_none() {
+                    match pool::run_isolated(|| {
+                        let parts: Vec<LayerPartial> = fan
+                            .parts
+                            .iter()
+                            .map(|p| p.lock().unwrap().take().expect("chunk partial"))
+                            .collect();
+                        finalize_layer(arch, spec, &parts)
+                    }) {
+                        Ok(lr) => *slot.layer_results[li].lock().unwrap() = Some(lr),
+                        Err(msg) => slot.fail(msg),
+                    }
+                }
                 if slot.layers_remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
                     return;
                 }
                 // Last layer of the point: assemble, persist, release.
-                let result = assemble(slot, &batches, archs);
-                if let Err(e) = self.store.save(&slot.point.key, &result) {
-                    eprintln!(
-                        "warn: failed to persist {}: {e:#}",
-                        slot.point.key.file_stem()
+                // A failed point skips assembly and persistence but still
+                // releases its claim (waiters recompute it themselves,
+                // exactly as if the claimant process had died) and still
+                // reports — with the error — so watchers see it resolve.
+                if let Some(msg) = slot.failure() {
+                    guard.release_one(slot.point.key.fingerprint);
+                    emit(
+                        slot.point.mi,
+                        slot.point.gi,
+                        slot.point.ai,
+                        false,
+                        Some(&msg),
                     );
+                    return;
                 }
-                // Save attempt done (either way): waiters may now
-                // read the store or take the point over themselves.
-                guard.release_one(slot.point.key.fingerprint);
-                emit(slot.point.mi, slot.point.gi, slot.point.ai, false);
-                *slot.result.lock().unwrap() = Some(result);
+                match pool::run_isolated(|| assemble(slot, &batches, archs)) {
+                    Ok(result) => {
+                        if let Err(e) = self.store.save(&slot.point.key, &result) {
+                            eprintln!(
+                                "warn: failed to persist {}: {e:#}",
+                                slot.point.key.file_stem()
+                            );
+                        }
+                        // Save attempt done (either way): waiters may now
+                        // read the store or take the point over themselves.
+                        guard.release_one(slot.point.key.fingerprint);
+                        emit(slot.point.mi, slot.point.gi, slot.point.ai, false, None);
+                        *slot.result.lock().unwrap() = Some(result);
+                    }
+                    Err(msg) => {
+                        slot.fail(msg);
+                        let msg = slot.failure().expect("just failed");
+                        guard.release_one(slot.point.key.fingerprint);
+                        emit(
+                            slot.point.mi,
+                            slot.point.gi,
+                            slot.point.ai,
+                            false,
+                            Some(&msg),
+                        );
+                    }
+                }
             });
             for slot in &slots {
+                if let Some(msg) = slot.failure() {
+                    stats.failed += 1;
+                    eprintln!(
+                        "warn: point {} failed: {msg}",
+                        slot.point.key.file_stem()
+                    );
+                    continue; // nothing to insert — the job is partial
+                }
                 let assembled = slot.result.lock().unwrap().take();
                 let result = assembled.unwrap_or_else(|| {
                     // A zero-conv-layer model fans out no tasks; its
@@ -400,7 +498,7 @@ impl Scheduler {
                         );
                     }
                     guard.release_one(slot.point.key.fingerprint);
-                    emit(slot.point.mi, slot.point.gi, slot.point.ai, false);
+                    emit(slot.point.mi, slot.point.gi, slot.point.ai, false, None);
                     result
                 });
                 stats.computed += 1;
@@ -415,7 +513,7 @@ impl Scheduler {
         // (no entry appeared), claim and compute the point ourselves.
         for p in waited {
             let (result, deduped) = self.wait_for_point(&p, models, groups, archs, seed, &mut stats);
-            emit(p.mi, p.gi, p.ai, deduped);
+            emit(p.mi, p.gi, p.ai, deduped, None);
             found.insert((p.mi, p.gi, p.ai), result);
         }
 

@@ -26,7 +26,18 @@
 //! so watchers terminate, and only then snapshots the memo. Results of
 //! in-flight work are persisted, workers are never orphaned mid-sweep,
 //! and the snapshot is written once, after the memo stopped changing.
+//!
+//! **Crash restart is journaled.** Accepted sweep jobs are recorded in
+//! an append-only, checksummed journal (`<store>/jobs.journal`, see
+//! [`super::journal`]); at startup, jobs the previous process never
+//! finished are re-queued under fresh ids, and the store diff turns
+//! whatever the dead process persisted into cache hits. A sweep whose
+//! points partially panicked (contained per point by the scheduler)
+//! finishes as `state:"partial"`. `--conn-timeout-secs` bounds
+//! per-connection socket reads and writes so a stalled client cannot
+//! pin its thread forever.
 
+use super::journal::Journal;
 use super::proto::{
     error_response, ok_response, read_message, stats_to_json, write_message, GridRequest,
 };
@@ -102,7 +113,7 @@ impl JobChannel {
             return;
         }
         inner.points += 1;
-        let event = Json::Obj(vec![
+        let mut fields = vec![
             ("event".into(), Json::str("point")),
             ("job".into(), Json::u64(job)),
             ("done".into(), Json::usize(inner.points)),
@@ -111,8 +122,13 @@ impl JobChannel {
             ("group".into(), Json::str(p.group.as_str())),
             ("arch".into(), Json::str(p.arch)),
             ("cache_hit".into(), Json::Bool(p.cache_hit)),
-        ]);
-        inner.events.push(event);
+        ];
+        // A point whose computation panicked still resolves — with the
+        // panic message — so watchers see it counted, not hung.
+        if let Some(err) = p.error {
+            fields.push(("error".into(), Json::str(err)));
+        }
+        inner.events.push(Json::Obj(fields));
         self.cond.notify_all();
     }
 
@@ -170,6 +186,12 @@ struct Shared {
     watchers: AtomicUsize,
     next_job: AtomicU64,
     stop: AtomicBool,
+    /// Crash-restart job journal (`None` when the store dir cannot host
+    /// one — serving continues, jobs just do not survive a crash).
+    /// Sweep jobs are journaled; `map` jobs are not (their report lives
+    /// only in the channel — a crashed search is simply re-run by the
+    /// client, and its candidates replay as store hits).
+    journal: Option<Journal>,
 }
 
 /// A bound, not-yet-running sweep service.
@@ -177,6 +199,10 @@ pub struct Server {
     listener: TcpListener,
     shared: Arc<Shared>,
     drain: Duration,
+    conn_timeout: Option<Duration>,
+    /// Journaled jobs the previous process never finished; re-queued at
+    /// the top of [`Server::run`].
+    recovered: Vec<super::journal::Recovered>,
 }
 
 /// Where the persistent memo snapshot for a store lives, honoring
@@ -227,6 +253,15 @@ impl Server {
     pub fn bind_with(addr: &str, store: ResultStore) -> Result<Server> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding codr serve to {addr}"))?;
+        let (journal, recovered) = match Journal::open(store.dir()) {
+            Ok((j, r)) => (Some(j), r),
+            Err(e) => {
+                eprintln!(
+                    "warn: job journal unavailable ({e:#}); jobs will not survive a restart"
+                );
+                (None, Vec::new())
+            }
+        };
         Ok(Server {
             listener,
             shared: Arc::new(Shared {
@@ -238,8 +273,11 @@ impl Server {
                 watchers: AtomicUsize::new(0),
                 next_job: AtomicU64::new(1),
                 stop: AtomicBool::new(false),
+                journal,
             }),
             drain: Duration::from_secs(DEFAULT_DRAIN_SECS),
+            conn_timeout: None,
+            recovered,
         })
     }
 
@@ -247,6 +285,14 @@ impl Server {
     /// (`--drain-secs`; 0 abandons them immediately).
     pub fn set_drain_secs(&mut self, secs: u64) {
         self.drain = Duration::from_secs(secs);
+    }
+
+    /// Per-connection socket read/write timeout (`--conn-timeout-secs`;
+    /// 0 leaves connections unbounded). A client that stalls mid-request
+    /// — or parks an idle connection past the bound — is reaped instead
+    /// of pinning its thread forever.
+    pub fn set_conn_timeout_secs(&mut self, secs: u64) {
+        self.conn_timeout = (secs > 0).then(|| Duration::from_secs(secs));
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -315,6 +361,30 @@ impl Server {
             }
             _ => None,
         };
+        // Re-queue journaled jobs the previous process never finished.
+        // Each runs under a fresh id through the normal submit path (so
+        // it is journaled, watchable, and drainable like any job); the
+        // old id is closed with `requeued` so a second restart does not
+        // replay it again. The store diff makes this cheap: everything
+        // the dead process persisted comes back as cache hits.
+        for rec in &self.recovered {
+            let requeued = GridRequest::from_json(&rec.grid)
+                .and_then(|grid| spawn_grid_job(&self.shared, grid));
+            match requeued {
+                Ok((id, points)) => eprintln!(
+                    "journal: recovered job {} (never finished); re-queued as job {id} \
+                     ({points} points)",
+                    rec.job
+                ),
+                Err(e) => eprintln!(
+                    "warn: journaled job {} could not be re-queued: {e:#}",
+                    rec.job
+                ),
+            }
+            if let Some(j) = &self.shared.journal {
+                j.record_end(rec.job, "requeued");
+            }
+        }
         self.listener
             .set_nonblocking(true)
             .context("setting listener nonblocking")?;
@@ -341,8 +411,9 @@ impl Server {
             match self.listener.accept() {
                 Ok((stream, _peer)) => {
                     let shared = Arc::clone(&self.shared);
+                    let timeout = self.conn_timeout;
                     std::thread::spawn(move || {
-                        if let Err(e) = serve_connection(stream, &shared) {
+                        if let Err(e) = serve_connection(stream, &shared, timeout) {
                             eprintln!("warn: connection ended with error: {e:#}");
                         }
                     });
@@ -439,10 +510,20 @@ impl Drop for WarmGuard<'_> {
     }
 }
 
-fn serve_connection(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
+fn serve_connection(
+    stream: TcpStream,
+    shared: &Arc<Shared>,
+    timeout: Option<Duration>,
+) -> Result<()> {
     stream
         .set_nonblocking(false)
         .context("setting stream blocking")?;
+    stream
+        .set_read_timeout(timeout)
+        .context("setting read timeout")?;
+    stream
+        .set_write_timeout(timeout)
+        .context("setting write timeout")?;
     let mut writer = stream.try_clone().context("cloning stream")?;
     let mut reader = BufReader::new(stream);
     loop {
@@ -450,12 +531,20 @@ fn serve_connection(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
             Ok(Some(m)) => m,
             Ok(None) => return Ok(()), // clean EOF
             Err(e) => {
-                // Malformed request: answer with the error, then drop the
-                // connection (framing may be lost).
+                // An idle or stalled connection hitting
+                // `--conn-timeout-secs` is reaped quietly; anything else
+                // is malformed input — answer with the error, then drop
+                // the connection (framing may be lost).
+                if is_timeout(&e) {
+                    return Ok(());
+                }
                 let _ = write_message(&mut writer, &error_response(format!("{e:#}")));
                 return Ok(());
             }
         };
+        // Injection seam: a server that goes quiet mid-conversation.
+        // Clients must survive this via their own timeouts + retries.
+        crate::faults::sleep_point("serve.conn.stall", Duration::from_secs(2));
         // `watch` is the one verb that streams: it takes over the writer
         // until the job's channel closes, then the connection returns to
         // normal request/response framing.
@@ -479,6 +568,19 @@ fn serve_connection(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
     }
 }
 
+/// Does this error bottom out in a socket-timeout io error?
+fn is_timeout(e: &anyhow::Error) -> bool {
+    e.root_cause()
+        .downcast_ref::<std::io::Error>()
+        .map(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+        })
+        .unwrap_or(false)
+}
+
 /// Replay a job channel from the start and stream until it closes. The
 /// last event written is always the terminal `end`.
 fn stream_events(chan: &JobChannel, writer: &mut impl Write) -> Result<()> {
@@ -486,6 +588,12 @@ fn stream_events(chan: &JobChannel, writer: &mut impl Write) -> Result<()> {
     while let Some(event) = chan.next(cursor) {
         cursor += 1;
         write_message(writer, &event)?;
+        // Injection seam: the server drops a watch stream mid-flight
+        // (crash, LB reap, network partition). The client's reconnect
+        // path must replay and dedup to exactly-once delivery.
+        if crate::faults::point("serve.watch.drop") {
+            anyhow::bail!("fault injected: serve.watch.drop");
+        }
     }
     Ok(())
 }
@@ -621,9 +729,24 @@ fn track_worker(shared: &Shared, handle: std::thread::JoinHandle<()>) {
 /// with a job id for `status` polling or `watch` streaming.
 fn submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     let grid = GridRequest::from_json(msg)?;
+    let (id, points) = spawn_grid_job(shared, grid)?;
+    Ok(ok_response(vec![
+        ("job".into(), Json::u64(id)),
+        ("points".into(), Json::usize(points)),
+    ]))
+}
+
+/// Register + journal + spawn one sweep job. Shared by the `submit`
+/// verb and by journal recovery at startup. The submit record lands
+/// (fsynced) before this returns, so an acked job is always
+/// recoverable; the worker writes the terminal record.
+fn spawn_grid_job(shared: &Arc<Shared>, grid: GridRequest) -> Result<(u64, usize)> {
     let points = grid.points();
     let chan = Arc::new(JobChannel::new(points));
     let id = register_job(shared, &chan)?;
+    if let Some(j) = &shared.journal {
+        j.record_submit(id, &grid.to_json());
+    }
     let shared_worker = Arc::clone(shared);
     let worker_chan = Arc::clone(&chan);
     let handle = std::thread::spawn(move || {
@@ -637,20 +760,32 @@ fn submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
                 Some(&progress),
             )
         }));
-        let (state, end) = match outcome {
-            Ok(results) => (
-                JobState::Done(results.stats),
-                Json::Obj(vec![
+        let (state, terminal, end) = match outcome {
+            Ok(results) => {
+                // `partial`: the grid finished but some points' compute
+                // panicked (isolated) — their results were neither
+                // produced nor stored. Still terminal: resubmitting
+                // retries just the failed points (the rest are hits).
+                let terminal = if results.stats.failed > 0 {
+                    "partial"
+                } else {
+                    "done"
+                };
+                let end = Json::Obj(vec![
                     ("event".into(), Json::str("end")),
                     ("job".into(), Json::u64(id)),
+                    ("state".into(), Json::str(terminal)),
                     ("stats".into(), stats_to_json(&results.stats)),
-                ]),
-            ),
+                ]);
+                (JobState::Done(results.stats), terminal, end)
+            }
             Err(_) => (
                 JobState::Failed("sweep worker panicked".into()),
+                "failed",
                 Json::Obj(vec![
                     ("event".into(), Json::str("end")),
                     ("job".into(), Json::u64(id)),
+                    ("state".into(), Json::str("failed")),
                     ("error".into(), Json::str("sweep worker panicked")),
                 ]),
             ),
@@ -658,13 +793,13 @@ fn submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
         if let Some(job) = shared_worker.jobs.lock().unwrap().get_mut(&id) {
             job.state = state;
         }
+        if let Some(j) = &shared_worker.journal {
+            j.record_end(id, terminal);
+        }
         worker_chan.close(end);
     });
     track_worker(shared, handle);
-    Ok(ok_response(vec![
-        ("job".into(), Json::u64(id)),
-        ("points".into(), Json::usize(points)),
-    ]))
+    Ok((id, points))
 }
 
 /// `map`: run a mapping-space search for one layer as an async job.
@@ -729,6 +864,7 @@ fn map_submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
                     group: c.mapping.tile_label(),
                     arch: "CoDR",
                     cache_hit: c.cache_hit,
+                    error: None,
                 },
             );
         };
@@ -754,6 +890,7 @@ fn map_submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
                 let end = Json::Obj(vec![
                     ("event".into(), Json::str("end")),
                     ("job".into(), Json::u64(id)),
+                    ("state".into(), Json::str("done")),
                     ("stats".into(), stats_to_json(&stats)),
                     ("map".into(), report.to_json()),
                 ]);
@@ -766,6 +903,7 @@ fn map_submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
                     Json::Obj(vec![
                         ("event".into(), Json::str("end")),
                         ("job".into(), Json::u64(id)),
+                        ("state".into(), Json::str("failed")),
                         ("error".into(), Json::Str(msg)),
                     ]),
                 )
@@ -775,6 +913,7 @@ fn map_submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
                 Json::Obj(vec![
                     ("event".into(), Json::str("end")),
                     ("job".into(), Json::u64(id)),
+                    ("state".into(), Json::str("failed")),
                     ("error".into(), Json::str("map worker panicked")),
                 ]),
             ),
@@ -801,7 +940,8 @@ fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
         match state {
             Some(JobState::Running) => fields.push(("state".into(), Json::str("running"))),
             Some(JobState::Done(stats)) => {
-                fields.push(("state".into(), Json::str("done")));
+                let state = if stats.failed > 0 { "partial" } else { "done" };
+                fields.push(("state".into(), Json::str(state)));
                 fields.push(("stats".into(), stats_to_json(&stats)));
             }
             Some(JobState::Failed(err)) => {

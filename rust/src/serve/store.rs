@@ -586,7 +586,20 @@ impl ResultStore {
             std::process::id(),
             TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
         ));
-        if let Err(e) = std::fs::write(&tmp, text) {
+        // Injection seam: a torn pack write (crash between write and
+        // rename landing only a prefix). The per-entry check hashes turn
+        // the damage into a recompute on the next read, never bad data.
+        // The copy is taken only when faults are armed.
+        let mangled;
+        let bytes: &[u8] = if crate::faults::armed() {
+            let mut b = text.as_bytes().to_vec();
+            crate::faults::torn_point("store.pack_write.torn", &mut b);
+            mangled = b;
+            &mangled
+        } else {
+            text.as_bytes()
+        };
+        if let Err(e) = std::fs::write(&tmp, bytes) {
             let _ = std::fs::remove_file(&tmp);
             return Err(e).with_context(|| format!("writing {}", tmp.display()));
         }

@@ -542,8 +542,23 @@ mod tests {
 
     #[test]
     fn depth_limit_blocks_stack_abuse() {
-        let deep = "[".repeat(100) + &"]".repeat(100);
-        assert!(Json::parse(&deep).is_err());
+        let arrays = |n: usize| "[".repeat(n) + &"]".repeat(n);
+        assert!(Json::parse(&arrays(100)).is_err());
+        // Objects nest through the same guard as arrays.
+        let objects = "{\"k\":".repeat(100) + "1" + &"}".repeat(100);
+        assert!(Json::parse(&objects).is_err());
+        // The boundary is exact: the root sits at depth 0 and the guard
+        // rejects depth > MAX_DEPTH, so MAX_DEPTH + 1 nested containers
+        // parse and one more does not.
+        assert!(Json::parse(&arrays(MAX_DEPTH + 1)).is_ok());
+        assert!(Json::parse(&arrays(MAX_DEPTH + 2)).is_err());
+        // Burying the deep subtree inside a shallow wrapper must not
+        // reset the count — depth is absolute, not per-container.
+        let wrapped = format!("{{\"a\":{}}}", arrays(MAX_DEPTH + 1));
+        assert!(Json::parse(&wrapped).is_err());
+        // A rejected document reports the limit, not a parser crash.
+        let err = Json::parse(&arrays(500)).unwrap_err().to_string();
+        assert!(err.contains("nested deeper"), "{err}");
     }
 
     #[test]

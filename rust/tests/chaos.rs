@@ -1,0 +1,267 @@
+//! Chaos suite: real `codr` subprocesses with `CODR_FAULTS` armed at the
+//! durability seams. Each scenario injects one failure class — a worker
+//! panic, a dropped watch stream, a torn pack write — and pins the
+//! degrade-then-heal contract: the process answers (never hangs, never
+//! crashes the server), the damage is visible in the structured output,
+//! and a clean follow-up run converges back to all-hits.
+//!
+//! The faults are armed in the *subprocess* only (via `.env()`), so the
+//! test binary's own in-process registry stays cold and the tests can
+//! run in parallel.
+
+use codr::serve::proto;
+use codr::util::json::Json;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_codr")
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("codr-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn obj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+fn ok(resp: &Json) -> bool {
+    matches!(resp.get("ok").and_then(|o| o.as_bool().ok()), Some(true))
+}
+
+/// A `codr serve` subprocess with a fault spec armed. Killed on drop so
+/// a failing assertion cannot leak servers past the test run.
+struct ServeProc {
+    child: Child,
+    addr: String,
+}
+
+impl ServeProc {
+    fn spawn(store: &Path, faults: &str) -> ServeProc {
+        let mut cmd = Command::new(bin());
+        cmd.args(["serve", "--addr", "127.0.0.1:0", "--store"])
+            .arg(store)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null());
+        if !faults.is_empty() {
+            cmd.env("CODR_FAULTS", faults);
+        }
+        let mut child = cmd.spawn().expect("spawn codr serve");
+        // The announce line carries the ephemeral port.
+        let mut line = String::new();
+        BufReader::new(child.stdout.take().expect("piped stdout"))
+            .read_line(&mut line)
+            .expect("read serve announce line");
+        let addr = line
+            .split("listening on ")
+            .nth(1)
+            .and_then(|rest| rest.split_whitespace().next())
+            .unwrap_or_else(|| panic!("unparseable announce line {line:?}"))
+            .to_string();
+        ServeProc { child, addr }
+    }
+
+    fn request(&self, req: &Json) -> Json {
+        proto::request(&self.addr, req).expect("request")
+    }
+
+    fn submit(&self, groups: &str, seed: u64) -> u64 {
+        let resp = self.request(&obj(&[
+            ("verb", Json::str("submit")),
+            ("models", Json::str("tiny")),
+            ("groups", Json::str(groups)),
+            ("seed", Json::u64(seed)),
+        ]));
+        assert!(ok(&resp), "{resp}");
+        resp.get("job").unwrap().as_u64().unwrap()
+    }
+
+    fn shutdown(mut self) {
+        let bye = self.request(&obj(&[("verb", Json::str("shutdown"))]));
+        assert!(ok(&bye), "{bye}");
+        let status = self.child.wait().expect("serve exit status");
+        assert!(status.success(), "serve exited {status}");
+    }
+}
+
+impl Drop for ServeProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn is_point(ev: &Json) -> bool {
+    matches!(ev.get("event").map(|e| e.as_str()), Some(Ok("point")))
+}
+
+/// An injected worker panic fails exactly its own sweep point: the job
+/// terminates `partial` (not a deadlocked `running`, not a whole-job
+/// `failed`), the failed point is visible in the stream and the stats,
+/// and resubmitting — the fault budget now spent — recomputes only the
+/// failed point while the survivors answer from the store.
+#[test]
+fn injected_worker_panic_degrades_the_job_to_partial_and_resubmit_heals() {
+    let dir = temp_dir("panic");
+    let srv = ServeProc::spawn(&dir, "pool.worker.panic:1");
+
+    let job = srv.submit("Orig", 11); // 1 model × 1 group × 3 archs
+    let mut failed_events = 0usize;
+    let end = proto::watch(&srv.addr, job, |ev| {
+        if is_point(ev) {
+            if let Some(err) = ev.get("error") {
+                failed_events += 1;
+                let msg = err.as_str().unwrap();
+                assert!(msg.contains("fault injected"), "{msg}");
+            }
+        }
+    })
+    .expect("watch to end");
+    assert_eq!(end.get("state").unwrap().as_str().unwrap(), "partial", "{end}");
+    let stats = end.get("stats").unwrap();
+    assert_eq!(stats.get("failed").unwrap().as_u64().unwrap(), 1, "{end}");
+    assert_eq!(failed_events, 1, "exactly one point event carries the error");
+
+    // Polling agrees with the stream.
+    let status = srv.request(&obj(&[("verb", Json::str("status")), ("job", Json::u64(job))]));
+    assert_eq!(status.get("state").unwrap().as_str().unwrap(), "partial", "{status}");
+
+    // Heal: the two persisted points hit, only the casualty recomputes.
+    let job2 = srv.submit("Orig", 11);
+    let end2 = proto::watch(&srv.addr, job2, |_| {}).expect("second watch");
+    assert_eq!(end2.get("state").unwrap().as_str().unwrap(), "done", "{end2}");
+    let stats2 = end2.get("stats").unwrap();
+    assert_eq!(stats2.get("failed").unwrap().as_u64().unwrap(), 0, "{end2}");
+    assert_eq!(stats2.get("cache_hits").unwrap().as_u64().unwrap(), 2, "{end2}");
+    assert_eq!(stats2.get("computed").unwrap().as_u64().unwrap(), 1, "{end2}");
+
+    srv.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A server-side dropped watch stream: without retries the CLI fails
+/// hard with "stream truncated" (EOF is never a silent success); with
+/// `--retries` the reconnect replays the history, and the client-side
+/// dedup keeps delivery exactly-once.
+#[test]
+fn dropped_watch_stream_truncates_without_retries_and_replays_with_them() {
+    let dir = temp_dir("watchdrop");
+    // Three drop shots: one per watcher below.
+    let srv = ServeProc::spawn(&dir, "serve.watch.drop:3");
+
+    // 1 model × 2 groups × 3 archs = 6 points. Poll to done over the
+    // status verb (the drop fault only bites watch streams).
+    let job = srv.submit("Orig,D=50%", 31);
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        assert!(Instant::now() < deadline, "job {job} never finished");
+        let status =
+            srv.request(&obj(&[("verb", Json::str("status")), ("job", Json::u64(job))]));
+        assert!(ok(&status), "{status}");
+        match status.get("state").unwrap().as_str().unwrap() {
+            "running" => std::thread::sleep(Duration::from_millis(50)),
+            "done" => break,
+            other => panic!("job entered state {other}: {status}"),
+        }
+    }
+
+    // Un-retried CLI watch: the injected drop is a hard error + nonzero
+    // exit, naming the truncation.
+    let out = Command::new(bin())
+        .args(["watch", "--job", &job.to_string(), "--addr", &srv.addr])
+        .output()
+        .expect("run codr watch");
+    assert!(!out.status.success(), "a truncated stream must fail the CLI");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("stream truncated"), "{stderr}");
+
+    // With --retries the second attempt replays to the real end.
+    let out = Command::new(bin())
+        .args([
+            "watch",
+            "--job",
+            &job.to_string(),
+            "--addr",
+            &srv.addr,
+            "--retries",
+            "3",
+        ])
+        .output()
+        .expect("run codr watch --retries");
+    assert!(
+        out.status.success(),
+        "retried watch must survive the drop: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains(&format!("job {job} done:")), "{stdout}");
+
+    // Event-level exactly-once: the last drop shot hits this watcher's
+    // first attempt; the replayed reconnect must not re-deliver.
+    let mut events = Vec::new();
+    let end = proto::watch_retry(&srv.addr, job, &proto::Retry::attempts(3), |ev| {
+        events.push(ev.clone())
+    })
+    .expect("watch_retry to end");
+    let points: Vec<&Json> = events.iter().filter(|e| is_point(e)).collect();
+    assert_eq!(points.len(), 6, "{events:?}");
+    for (i, ev) in points.iter().enumerate() {
+        assert_eq!(
+            ev.get("done").unwrap().as_u64().unwrap(),
+            i as u64 + 1,
+            "reconnect must dedup, not replay twice: {ev}"
+        );
+    }
+    assert_eq!(end.get("state").unwrap().as_str().unwrap(), "done", "{end}");
+
+    srv.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A torn pack write (crash between write and fsync) costs recompute
+/// time, never correctness: the next warm run loads what survived,
+/// recomputes the rest, and the run after that is all cache hits.
+#[test]
+fn torn_pack_write_recomputes_and_converges_to_all_hits() {
+    let dir = temp_dir("torn");
+    let run_warm = |faults: Option<&str>| {
+        let mut cmd = Command::new(bin());
+        cmd.args(["warm", "--models", "tiny", "--groups", "Orig", "--seed", "3", "--store"])
+            .arg(&dir);
+        if let Some(f) = faults {
+            cmd.env("CODR_FAULTS", f);
+        }
+        cmd.output().expect("run codr warm")
+    };
+
+    let first = run_warm(Some("store.pack_write.torn:1"));
+    assert!(first.status.success(), "{first:?}");
+    let stderr = String::from_utf8_lossy(&first.stderr);
+    // Guard against a silently-unarmed "chaos" run.
+    assert!(stderr.contains("faults: armed from CODR_FAULTS"), "{stderr}");
+    assert!(stderr.contains("store.pack_write.torn fired"), "{stderr}");
+
+    // The damaged store degrades to recompute — exit 0, no panic.
+    let second = run_warm(None);
+    assert!(
+        second.status.success(),
+        "torn pack must degrade, not crash: {}",
+        String::from_utf8_lossy(&second.stderr)
+    );
+
+    // And the store has healed: the third run computes nothing.
+    let third = run_warm(None);
+    assert!(third.status.success(), "{third:?}");
+    let stdout = String::from_utf8_lossy(&third.stdout);
+    assert!(
+        stdout.contains("3 cache hits") && stdout.contains("0 computed"),
+        "healed store must answer every point: {stdout}"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

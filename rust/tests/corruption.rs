@@ -1,0 +1,230 @@
+//! Property-style corruption sweeps over the two on-disk caches — packed
+//! result files and the vector-memo snapshot. Seeded bit flips and
+//! truncations at arbitrary offsets must *degrade* (the damaged entry
+//! recomputes) — never panic, and never serve data that differs from a
+//! clean computation. A broken cache can cost time, never correctness.
+
+use codr::arch::MemConfig;
+use codr::coordinator::{run_sweep_with, Arch};
+use codr::models::{tiny_cnn, SweepGroup};
+use codr::reuse::memo::{VectorCache, DEFAULT_SNAPSHOT_CAP_BYTES};
+use codr::serve::{CacheKey, LoadOutcome, ResultStore};
+use codr::sim::{Accelerator, ModelResult};
+use codr::util::rng::Rng;
+use std::path::PathBuf;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("codr-corrupt-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The store keys of the tiny × Orig × all-archs grid.
+fn grid_keys(seed: u64) -> Vec<CacheKey> {
+    Arch::all()
+        .iter()
+        .map(|arch| {
+            CacheKey::for_point(
+                "tiny",
+                &SweepGroup::Original,
+                arch.name(),
+                &arch.build().tile_config(),
+                &MemConfig::default(),
+                seed,
+            )
+        })
+        .collect()
+}
+
+/// Populate a store with the grid, return its per-key baseline results.
+fn warm_baseline(dir: &PathBuf, seed: u64) -> Vec<Box<ModelResult>> {
+    let store = ResultStore::open(dir).expect("open store");
+    run_sweep_with(
+        &[tiny_cnn()],
+        &[SweepGroup::Original],
+        &Arch::all(),
+        seed,
+        Some(&store),
+    );
+    grid_keys(seed)
+        .iter()
+        .map(|k| match store.load(k) {
+            LoadOutcome::Hit(r) => r,
+            other => panic!("baseline must hit, got {other:?}"),
+        })
+        .collect()
+}
+
+fn pack_files(dir: &PathBuf) -> Vec<PathBuf> {
+    let packs: Vec<PathBuf> = std::fs::read_dir(dir)
+        .expect("read store dir")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.to_string_lossy().ends_with(".pack.json"))
+        .collect();
+    assert!(!packs.is_empty(), "warmed store must hold a pack file");
+    packs
+}
+
+/// Damage the store with `mangle`, then check every key either hits with
+/// the exact baseline result or degrades — counting the degrades.
+fn check_loads(
+    dir: &PathBuf,
+    keys: &[CacheKey],
+    baseline: &[Box<ModelResult>],
+    degraded: &mut usize,
+) {
+    let store = ResultStore::open(dir).expect("reopen damaged store");
+    for (k, base) in keys.iter().zip(baseline) {
+        match store.load(k) {
+            LoadOutcome::Hit(r) => {
+                assert_eq!(&r, base, "damage must never alter a served result");
+            }
+            LoadOutcome::Miss | LoadOutcome::Corrupt => *degraded += 1,
+        }
+    }
+}
+
+/// After the damage trials, one sweep over the store must recompute the
+/// casualties and restore every key to its baseline value.
+fn check_heals(dir: &PathBuf, seed: u64, keys: &[CacheKey], baseline: &[Box<ModelResult>]) {
+    let store = ResultStore::open(dir).expect("reopen for healing");
+    let results = run_sweep_with(
+        &[tiny_cnn()],
+        &[SweepGroup::Original],
+        &Arch::all(),
+        seed,
+        Some(&store),
+    );
+    assert_eq!(results.stats.requested, 3);
+    assert_eq!(results.stats.failed, 0);
+    assert_eq!(
+        results.stats.cache_hits + results.stats.computed,
+        3,
+        "{:?}",
+        results.stats
+    );
+    for (k, base) in keys.iter().zip(baseline) {
+        match store.load(k) {
+            LoadOutcome::Hit(r) => assert_eq!(&r, base, "healed entry must match baseline"),
+            other => panic!("store must heal under a sweep, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn pack_bit_flips_never_panic_and_never_serve_wrong_data() {
+    let dir = temp_dir("packflip");
+    let seed = 13;
+    let baseline = warm_baseline(&dir, seed);
+    let keys = grid_keys(seed);
+    let packs = pack_files(&dir);
+    let clean: Vec<Vec<u8>> = packs.iter().map(|p| std::fs::read(p).unwrap()).collect();
+
+    let mut rng = Rng::new(0xC0D2);
+    let mut degraded = 0usize;
+    for _trial in 0..64 {
+        for (p, bytes) in packs.iter().zip(&clean) {
+            let mut bent = bytes.clone();
+            let bit = rng.below(bent.len() as u64 * 8);
+            bent[(bit / 8) as usize] ^= 1 << (bit % 8);
+            std::fs::write(p, &bent).unwrap();
+        }
+        check_loads(&dir, &keys, &baseline, &mut degraded);
+    }
+    // Structural chars, checksum digits, payload — wherever the flip
+    // lands, at least some trials must detect damage; zero means the
+    // verification chain is dead.
+    assert!(degraded > 0, "no flip was ever detected");
+
+    check_heals(&dir, seed, &keys, &baseline);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pack_truncations_never_panic_and_never_serve_wrong_data() {
+    let dir = temp_dir("packtrunc");
+    let seed = 17;
+    let baseline = warm_baseline(&dir, seed);
+    let keys = grid_keys(seed);
+    let packs = pack_files(&dir);
+    let clean: Vec<Vec<u8>> = packs.iter().map(|p| std::fs::read(p).unwrap()).collect();
+
+    let mut rng = Rng::new(0x7A11);
+    let mut degraded = 0usize;
+    for _trial in 0..64 {
+        for (p, bytes) in packs.iter().zip(&clean) {
+            let mut bent = bytes.clone();
+            // Keep a strict prefix, down to and including zero bytes —
+            // what a crash mid-write (or mid-`ftruncate`) leaves behind.
+            bent.truncate(rng.below(bent.len() as u64) as usize);
+            std::fs::write(p, &bent).unwrap();
+        }
+        check_loads(&dir, &keys, &baseline, &mut degraded);
+    }
+    assert!(degraded > 0, "no truncation was ever detected");
+
+    check_heals(&dir, seed, &keys, &baseline);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Memo snapshot damage: every entry is length-framed and checksummed,
+/// so a flipped bit costs one entry (or the frame tail) on restore —
+/// and a restored cache must transform every vector exactly like a
+/// clean one (a corrupt entry may vanish, never alias to wrong bytes).
+#[test]
+fn snapshot_damage_degrades_to_cold_entries_never_wrong_transforms() {
+    let dir = temp_dir("snapshot");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("memo.snapshot");
+
+    // Populate a private cache with seeded weight vectors, snapshot it.
+    let reference = VectorCache::with_capacity(4096);
+    let mut gen = Rng::new(7);
+    let mut vectors: Vec<Vec<i8>> = Vec::new();
+    for _ in 0..40 {
+        let n = 4 + gen.below(60) as usize;
+        let v: Vec<i8> = (0..n).map(|_| (gen.below(17) as i64 - 8) as i8).collect();
+        reference.get_or_insert(&v);
+        vectors.push(v);
+    }
+    reference
+        .save_snapshot(&path, DEFAULT_SNAPSHOT_CAP_BYTES)
+        .expect("save snapshot");
+    let clean = std::fs::read(&path).unwrap();
+
+    let mut rng = Rng::new(0xBADC0DE);
+    let mut restored_total = 0usize;
+    for trial in 0..64 {
+        let mut bent = clean.clone();
+        if trial % 2 == 0 {
+            let bit = rng.below(bent.len() as u64 * 8);
+            bent[(bit / 8) as usize] ^= 1 << (bit % 8);
+        } else {
+            bent.truncate(rng.below(bent.len() as u64) as usize);
+        }
+        std::fs::write(&path, &bent).unwrap();
+
+        let restored = VectorCache::with_capacity(4096);
+        // Damage degrades: fewer entries or a clean error — never a
+        // panic, never more entries than were saved.
+        let loaded = restored.load_snapshot(&path).unwrap_or(0);
+        assert!(loaded <= vectors.len(), "{loaded} entries from 40 saved");
+        restored_total += loaded;
+        // Whatever survived must transform identically: each lookup is
+        // either a restored hit or a fresh recompute, and both must
+        // equal the clean reference.
+        for v in &vectors {
+            assert_eq!(
+                restored.get_or_insert(v).ucr,
+                reference.get_or_insert(v).ucr,
+                "a damaged snapshot must never alias to a wrong transform"
+            );
+        }
+    }
+    // Per-entry framing: most single-bit flips cost one entry, not the
+    // whole snapshot.
+    assert!(restored_total > 0, "every damaged snapshot restored nothing");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,154 @@
+//! Kill -9 `codr serve` mid-job, restart on the same store: the
+//! journaled job must be re-queued under a fresh id, run to completion,
+//! and leave a compacted journal behind. This is the pin for the
+//! crash-restart contract — an acked submit survives the process.
+
+use codr::serve::{proto, Journal};
+use codr::util::json::Json;
+use std::io::{BufRead, BufReader, Read};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_codr")
+}
+
+fn obj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+fn ok(resp: &Json) -> bool {
+    matches!(resp.get("ok").and_then(|o| o.as_bool().ok()), Some(true))
+}
+
+/// Spawn `codr serve` on an ephemeral port and parse the announce line.
+fn spawn_serve(store: &PathBuf, faults: Option<&str>, capture_stderr: bool) -> (Child, String) {
+    let mut cmd = Command::new(bin());
+    cmd.args(["serve", "--addr", "127.0.0.1:0", "--store"])
+        .arg(store)
+        .stdout(Stdio::piped())
+        .stderr(if capture_stderr {
+            Stdio::piped()
+        } else {
+            Stdio::null()
+        });
+    if let Some(f) = faults {
+        cmd.env("CODR_FAULTS", f);
+    }
+    let mut child = cmd.spawn().expect("spawn codr serve");
+    let mut line = String::new();
+    BufReader::new(child.stdout.take().expect("piped stdout"))
+        .read_line(&mut line)
+        .expect("read serve announce line");
+    let addr = line
+        .split("listening on ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("unparseable announce line {line:?}"))
+        .to_string();
+    (child, addr)
+}
+
+#[test]
+fn kill_dash_nine_mid_job_requeues_from_the_journal_on_restart() {
+    let dir = std::env::temp_dir().join(format!("codr-crash-recovery-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Server 1: every sweep-point task is slowed by 250 ms, so the KILL
+    // below provably lands while the job is still running — the journal
+    // then holds a submit with no terminal record.
+    let (mut first, addr1) = spawn_serve(&dir, Some("sched.point.slow:10000"), false);
+    let submitted = proto::request(
+        &addr1,
+        &obj(&[
+            ("verb", Json::str("submit")),
+            ("models", Json::str("tiny")),
+            ("groups", Json::str("Orig")),
+            ("seed", Json::u64(29)),
+        ]),
+    )
+    .expect("submit");
+    assert!(ok(&submitted), "{submitted}");
+    let dead_job = submitted.get("job").unwrap().as_u64().unwrap();
+
+    // The ack implies the submit record is journaled and fsynced: the
+    // server answers only after the append. SIGKILL — no drain, no
+    // atexit, exactly the crash the journal exists for.
+    first.kill().expect("kill serve");
+    let _ = first.wait();
+
+    // Replay (in-process, same code the server runs) sees the open job.
+    {
+        let (_journal, recovered) = Journal::open(&dir).expect("open journal");
+        assert_eq!(recovered.len(), 1, "{recovered:?}");
+        assert_eq!(recovered[0].job, dead_job);
+    }
+
+    // Server 2, no faults: it must re-queue the journaled job before
+    // accepting, announce the recovery on stderr, and finish the job.
+    let (mut second, addr2) = spawn_serve(&dir, None, true);
+    // The re-queued job runs under the fresh process's first id.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "re-queued job never reached a terminal state"
+        );
+        let status = proto::request(
+            &addr2,
+            &obj(&[("verb", Json::str("status")), ("job", Json::u64(1))]),
+        )
+        .expect("status");
+        if !ok(&status) {
+            // Recovery may still be registering the job; keep polling.
+            std::thread::sleep(Duration::from_millis(20));
+            continue;
+        }
+        match status.get("state").unwrap().as_str().unwrap() {
+            "running" => std::thread::sleep(Duration::from_millis(50)),
+            "done" => break,
+            other => panic!("re-queued job entered state {other}: {status}"),
+        }
+    }
+
+    // The recovered grid's results are in the store.
+    let res = proto::request(
+        &addr2,
+        &obj(&[
+            ("verb", Json::str("result")),
+            ("model", Json::str("tiny")),
+            ("group", Json::str("Orig")),
+            ("arch", Json::str("CoDR")),
+            ("seed", Json::u64(29)),
+        ]),
+    )
+    .expect("result");
+    assert!(ok(&res), "recovered job must persist its points: {res}");
+
+    let bye = proto::request(&addr2, &obj(&[("verb", Json::str("shutdown"))])).expect("shutdown");
+    assert!(ok(&bye), "{bye}");
+    let status = second.wait().expect("serve exit status");
+    assert!(status.success(), "serve exited {status}");
+    let mut stderr = String::new();
+    second
+        .stderr
+        .take()
+        .expect("piped stderr")
+        .read_to_string(&mut stderr)
+        .expect("read serve stderr");
+    assert!(
+        stderr.contains(&format!("journal: recovered job {dead_job}")),
+        "restart must announce the recovery: {stderr}"
+    );
+
+    // The old id was closed with `requeued` and the new one with `done`:
+    // a third replay recovers nothing, and compaction keeps the file
+    // from growing across restarts.
+    let (journal, recovered) = Journal::open(&dir).expect("reopen journal");
+    assert!(recovered.is_empty(), "{recovered:?}");
+    let len = std::fs::metadata(journal.path()).expect("journal metadata").len();
+    assert_eq!(len, 0, "a journal with no open jobs compacts to empty");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
