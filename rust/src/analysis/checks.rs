@@ -1,0 +1,459 @@
+//! The four token-level invariant checks: lock order, atomic orderings,
+//! panic policy, and fault-seam coverage. (The fifth check — the env-var
+//! registry — lives in [`super::env_registry`] beside the table it
+//! validates.)
+//!
+//! Every check pattern-matches the lexed token stream (comments and
+//! string literals are already out of band, `#[cfg(test)]` spans are
+//! marked), reports deterministic `file:line` findings, and can be
+//! silenced per-site by a justified waiver comment. None of them parse
+//! Rust for real; each knows exactly the idioms this codebase uses, and
+//! the fixture tests in `rust/tests/static_analysis.rs` pin that the
+//! known-bad shapes still fire.
+
+use super::lexer::Tok;
+use super::Finding;
+
+/// Run every token-level check over one file.
+pub(super) fn run(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    panic_policy(rel, toks, out);
+    atomics(rel, toks, out);
+    lock_order(rel, toks, out);
+    fault_seams(rel, toks, out);
+}
+
+fn is_path_sep(toks: &[Tok], i: usize) -> bool {
+    i >= 2 && toks[i - 1].is_punct(':') && toks[i - 2].is_punct(':')
+}
+
+// ---------------------------------------------------------------- panic
+
+/// Directories where a panic is an outage, not a bug report: the serve
+/// request paths, the worker pool, and the fault registry itself.
+fn in_panic_scope(rel: &str) -> bool {
+    rel.starts_with("serve/") || rel == "coordinator/pool.rs" || rel.starts_with("faults/")
+}
+
+fn panic_policy(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if !in_panic_scope(rel) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test {
+            continue;
+        }
+        let Some(name) = t.ident() else { continue };
+        let next_is = |c| toks.get(i + 1).is_some_and(|n: &Tok| n.is_punct(c));
+        match name {
+            "unwrap" | "expect" if i > 0 && toks[i - 1].is_punct('.') && next_is('(') => {
+                out.push(Finding {
+                    check: "panic_policy",
+                    file: rel.to_string(),
+                    line: t.line,
+                    message: format!(
+                        "`.{name}()` outside #[cfg(test)] in a no-panic zone — \
+                         return a structured error (or waive with a reason)"
+                    ),
+                });
+            }
+            "panic" | "unreachable" | "todo" | "unimplemented" if next_is('!') => {
+                out.push(Finding {
+                    check: "panic_policy",
+                    file: rel.to_string(),
+                    line: t.line,
+                    message: format!("`{name}!` outside #[cfg(test)] in a no-panic zone"),
+                });
+            }
+            _ => {}
+        }
+    }
+}
+
+// -------------------------------------------------------------- atomics
+
+/// Sites where `Ordering::Relaxed` is the *point*: independent
+/// statistics counters and reference/tombstone bits whose readers
+/// tolerate staleness by design. Everything else — stop flags,
+/// generation tags, cross-thread handshakes — must use
+/// Acquire/Release or stronger. The `why` column is the audit trail.
+struct RelaxedAllow {
+    file: &'static str,
+    atomic: &'static str,
+    #[allow(dead_code)]
+    why: &'static str,
+}
+
+const RELAXED_OK: &[RelaxedAllow] = &[
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "next", why: "arena slot counter; publication is the per-segment OnceLock" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "bytes", why: "footprint statistic" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "NEXT_STRIPE", why: "round-robin stripe assignment; any interleaving is fine" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "NEXT_ID", why: "thread-id allocator for L1 slots; uniqueness only" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "lookups", why: "striped statistic" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "l1_hits", why: "striped statistic" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "l2_hits", why: "statistic" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "misses", why: "statistic" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "collision_verifies", why: "statistic" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "double_computes", why: "statistic" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "lock_waits", why: "statistic" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "evictions", why: "statistic" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "entries", why: "approximate occupancy gauge; exact bookkeeping is under the shard lock" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "hot", why: "second-chance reference bit; pure eviction heuristic" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "dead", why: "tombstone bit; snapshot walkers tolerate staleness by design" },
+    RelaxedAllow { file: "util/bench.rs", atomic: "extract_ns", why: "phase-time accumulator" },
+    RelaxedAllow { file: "util/bench.rs", atomic: "transform_ns", why: "phase-time accumulator" },
+    RelaxedAllow { file: "util/bench.rs", atomic: "price_ns", why: "phase-time accumulator" },
+    RelaxedAllow { file: "faults/mod.rs", atomic: "remaining", why: "independent shot budget; the fetch_update claim is atomic on its own" },
+    RelaxedAllow { file: "serve/store.rs", atomic: "TMP_SEQ", why: "temp-file name uniquifier; uniqueness only" },
+];
+
+fn atomics(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.in_test || !t.is_ident("Relaxed") || !is_path_sep(toks, i) {
+            continue;
+        }
+        if !toks.get(i.wrapping_sub(3)).is_some_and(|o| o.is_ident("Ordering")) {
+            continue;
+        }
+        let (recv, method) = call_receiver(toks, i)
+            .unwrap_or_else(|| ("?".to_string(), "?".to_string()));
+        let allowed = RELAXED_OK
+            .iter()
+            .any(|a| rel.ends_with(a.file) && a.atomic == recv);
+        if !allowed {
+            out.push(Finding {
+                check: "atomics",
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "`{recv}.{method}(Ordering::Relaxed)` is not an allowlisted striped \
+                     counter — control flags and tags need Acquire/Release or stronger"
+                ),
+            });
+        }
+    }
+}
+
+/// For a token inside a call's argument list, walk back to the call's
+/// opening paren and name the method and its receiver:
+/// `self.l2_hits.fetch_add(1, Ordering::Relaxed)` → (`l2_hits`, `fetch_add`).
+fn call_receiver(toks: &[Tok], at: usize) -> Option<(String, String)> {
+    let mut depth = 0i32;
+    let mut j = at;
+    while j > 0 && at - j < 120 {
+        j -= 1;
+        if toks[j].is_punct(')') {
+            depth += 1;
+        } else if toks[j].is_punct('(') {
+            if depth == 0 {
+                let method = toks.get(j.checked_sub(1)?)?.ident()?.to_string();
+                let recv = j
+                    .checked_sub(3)
+                    .filter(|_| toks[j - 2].is_punct('.'))
+                    .and_then(|k| toks[k].ident())
+                    .unwrap_or("?")
+                    .to_string();
+                return Some((recv, method));
+            }
+            depth -= 1;
+        }
+    }
+    None
+}
+
+// ----------------------------------------------------------- lock order
+
+/// The declared hierarchy, outermost first. Acquiring a *lower* tier
+/// while a higher tier is held is an inversion (the arena is tier 6 and
+/// lock-free, so it never appears as an acquisition). Mutexes not named
+/// here — job channels, claim lists, journal file, stats — are leaves:
+/// they never wrap another acquisition in this codebase and stay out of
+/// the ranking rather than encode a false order.
+const LOCK_TIERS: &[(&str, u8)] = &[
+    ("jobs", 1),      // server job table
+    ("inflight", 2),  // scheduler claim set
+    ("save_lock", 3), // store read-modify-write serialization
+    ("shard", 5),     // memo shard (via receiver name)
+    ("shards", 5),
+];
+
+const PACK_LOCK_TIER: u8 = 4; // cross-process advisory pack lock
+
+fn tier_name(t: u8) -> &'static str {
+    match t {
+        1 => "server jobs",
+        2 => "scheduler inflight",
+        3 => "store save_lock",
+        4 => "pack lock",
+        5 => "memo shard",
+        _ => "?",
+    }
+}
+
+fn lock_order(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    // (tier, brace depth at acquisition, line); cleared per function.
+    let mut held: Vec<(u8, i32, u32)> = Vec::new();
+    let mut depth = 0i32;
+    let mut fn_depth: Option<i32> = None;
+    let mut pending_fn = false;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.is_punct('{') {
+            depth += 1;
+            if pending_fn {
+                pending_fn = false;
+                fn_depth = Some(depth);
+                held.clear();
+            }
+            continue;
+        }
+        if t.is_punct('}') {
+            depth -= 1;
+            held.retain(|&(_, d, _)| d <= depth);
+            if fn_depth.is_some_and(|fd| depth < fd) {
+                fn_depth = None;
+                held.clear();
+            }
+            continue;
+        }
+        if t.in_test {
+            continue;
+        }
+        if t.is_ident("fn") {
+            pending_fn = true;
+            held.clear();
+            continue;
+        }
+        let Some(tier) = acquisition_tier(toks, i) else {
+            continue;
+        };
+        for &(h, _, hline) in &held {
+            if h > tier {
+                out.push(Finding {
+                    check: "lock_order",
+                    file: rel.to_string(),
+                    line: t.line,
+                    message: format!(
+                        "lock-order inversion: acquiring {} (tier {tier}) while \
+                         holding {} (tier {h}, taken at line {hline})",
+                        tier_name(tier),
+                        tier_name(h),
+                    ),
+                });
+                break;
+            }
+        }
+        held.push((tier, depth, t.line));
+    }
+}
+
+/// Does the token at `i` acquire a ranked lock, and at which tier?
+fn acquisition_tier(toks: &[Tok], i: usize) -> Option<u8> {
+    let t = &toks[i];
+    let next_is = |c| toks.get(i + 1).is_some_and(|n: &Tok| n.is_punct(c));
+    let name = t.ident()?;
+    match name {
+        // Method form: `recv.lock()` / `recv.try_lock()`.
+        "lock" | "try_lock" if i >= 2 && toks[i - 1].is_punct('.') && next_is('(') => {
+            let recv = toks[i - 2].ident()?;
+            ranked(recv)
+        }
+        // Helper form: `sync::lock(&path.to.mutex)` — rank the last
+        // path identifier before the closing paren or an index.
+        "lock" if next_is('(') && !(i >= 1 && toks[i - 1].is_punct('.')) => {
+            let mut last = None;
+            let mut j = i + 2;
+            while j < toks.len() {
+                let t = &toks[j];
+                if let Some(id) = t.ident() {
+                    last = Some(id);
+                } else if !(t.is_punct('&') || t.is_punct('.')) {
+                    break; // `)`, `[`, `,`, nested call — stop
+                }
+                j += 1;
+            }
+            ranked(last?)
+        }
+        // Memo shard access helpers.
+        "lock_shard" | "shard_of" if next_is('(') => Some(5),
+        // Cross-process pack lock: `PackLock::acquire…(…)`.
+        "PackLock" => {
+            let m = toks.get(i + 3)?;
+            if toks.get(i + 1).is_some_and(|a: &Tok| a.is_punct(':'))
+                && toks.get(i + 2).is_some_and(|a: &Tok| a.is_punct(':'))
+                && m.ident().is_some_and(|s| s.starts_with("acquire"))
+            {
+                Some(PACK_LOCK_TIER)
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+fn ranked(recv: &str) -> Option<u8> {
+    LOCK_TIERS
+        .iter()
+        .find(|(n, _)| *n == recv)
+        .map(|&(_, t)| t)
+}
+
+// ---------------------------------------------------------- fault seams
+
+const SEAM_CALLS: &[&str] = &[
+    "point",
+    "panic_point",
+    "sleep_point",
+    "torn_point",
+    "bitflip_point",
+];
+
+/// Durability edges (`fs::rename`, `create_new`) must be injectable: the
+/// enclosing function either calls a `faults::…` seam or the edge
+/// carries a waiver explaining why a crash there is already covered.
+fn fault_seams(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    let spans = fn_spans(toks);
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.in_test {
+            continue;
+        }
+        let next_is = |c| toks.get(i + 1).is_some_and(|n: &Tok| n.is_punct(c));
+        let edge = match t.ident() {
+            Some("rename") if is_path_sep(toks, i) && next_is('(') => "fs::rename",
+            Some("create_new") if i > 0 && toks[i - 1].is_punct('.') && next_is('(') => {
+                "create_new"
+            }
+            _ => continue,
+        };
+        // Innermost function body containing the edge.
+        let span = spans
+            .iter()
+            .filter(|&&(s, e)| s <= i && i < e)
+            .max_by_key(|&&(s, _)| s);
+        let covered = span.is_some_and(|&(s, e)| {
+            (s..e).any(|k| {
+                toks[k]
+                    .ident()
+                    .is_some_and(|id| SEAM_CALLS.contains(&id))
+                    && is_path_sep(toks, k)
+                    && toks
+                        .get(k.wrapping_sub(3))
+                        .is_some_and(|f| f.is_ident("faults"))
+            })
+        });
+        if !covered {
+            out.push(Finding {
+                check: "fault_seams",
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "durability edge (`{edge}`) with no faults:: seam in the same \
+                     function — crashes here ship uninjectable"
+                ),
+            });
+        }
+    }
+}
+
+/// Body spans `(start, end)` (token indexes just inside the braces) of
+/// every `fn` in the stream. Bodyless signatures are skipped.
+fn fn_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].is_ident("fn") {
+            i += 1;
+            continue;
+        }
+        // Scan the header for the body `{` (or a `;` — no body).
+        let mut wrap = 0i32;
+        let mut j = i + 1;
+        let mut body = None;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.is_punct('(') || t.is_punct('[') {
+                wrap += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                wrap -= 1;
+            } else if wrap == 0 && t.is_punct(';') {
+                break;
+            } else if wrap == 0 && t.is_punct('{') {
+                body = Some(j + 1);
+                break;
+            }
+            j += 1;
+        }
+        let Some(start) = body else {
+            i = j + 1;
+            continue;
+        };
+        let mut braces = 1usize;
+        let mut k = start;
+        while k < toks.len() && braces > 0 {
+            if toks[k].is_punct('{') {
+                braces += 1;
+            } else if toks[k].is_punct('}') {
+                braces -= 1;
+            }
+            k += 1;
+        }
+        spans.push((start, k.saturating_sub(1)));
+        i += 1; // nested fns get their own (inner) spans
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        let mut out = Vec::new();
+        run(rel, &lex(src).tokens, &mut out);
+        out
+    }
+
+    #[test]
+    fn receiver_extraction_handles_chained_calls() {
+        let toks = lex("self.arena.get(h).hot.swap(false, Ordering::Relaxed);").tokens;
+        let at = toks.iter().position(|t| t.is_ident("Relaxed")).unwrap();
+        assert_eq!(
+            call_receiver(&toks, at),
+            Some(("hot".into(), "swap".into()))
+        );
+    }
+
+    #[test]
+    fn receiver_extraction_handles_multiple_orderings() {
+        let toks =
+            lex("r.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));")
+                .tokens;
+        let last = toks.iter().rposition(|t| t.is_ident("Relaxed")).unwrap();
+        assert_eq!(
+            call_receiver(&toks, last),
+            Some(("r".into(), "fetch_update".into()))
+        );
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies_not_signatures() {
+        let toks = lex("trait T { fn sig(&self); }\nfn real() { body(); }").tokens;
+        let spans = fn_spans(&toks);
+        assert_eq!(spans.len(), 1);
+        let (s, e) = spans[0];
+        assert!((s..e).any(|i| toks[i].is_ident("body")));
+    }
+
+    #[test]
+    fn scope_filter_is_exact() {
+        let src = "fn f() { x.unwrap(); }";
+        assert_eq!(findings("serve/server.rs", src).len(), 1);
+        assert_eq!(findings("coordinator/pool.rs", src).len(), 1);
+        assert_eq!(findings("faults/mod.rs", src).len(), 1);
+        assert!(findings("reuse/memo.rs", src).is_empty());
+        assert!(findings("coordinator/mod.rs", src).is_empty());
+    }
+}

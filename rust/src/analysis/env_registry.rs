@@ -1,0 +1,230 @@
+//! Central registry of every `CODR_*` environment variable.
+//!
+//! Two jobs: (1) at runtime, [`var`] is the one sanctioned way to read a
+//! `CODR_*` variable — a `debug_assert` catches reads of names that were
+//! never registered; (2) at analysis time, [`check_file`] flags `CODR_*`
+//! string literals that are missing from [`ENV_VARS`] and direct
+//! `std::env::var("CODR_…")` calls outside this module, and
+//! [`render_table`] produces the markdown table the README embeds
+//! between `<!-- codr-env:begin -->` / `<!-- codr-env:end -->` markers
+//! (`analyze` diffs the block against the rendered table, so the doc
+//! cannot drift from the code).
+
+use super::lexer::Tok;
+use super::Finding;
+use std::collections::BTreeSet;
+
+/// One registered variable: its name, effective default, and purpose.
+pub struct EnvVar {
+    pub name: &'static str,
+    pub default: &'static str,
+    pub purpose: &'static str,
+}
+
+/// The full registry. Adding a `CODR_*` literal anywhere under
+/// `rust/src/` without a row here is an `env_registry` finding.
+pub const ENV_VARS: &[EnvVar] = &[
+    EnvVar {
+        name: "CODR_FAULTS",
+        default: "(unset)",
+        purpose: "Deterministic fault-injection spec, `name[:count][@prob],…,seed=N`; unset disarms every seam",
+    },
+    EnvVar {
+        name: "CODR_MEMO_CAP",
+        default: "524288",
+        purpose: "Vector-memo capacity (distinct cached vectors) before second-chance eviction",
+    },
+    EnvVar {
+        name: "CODR_MEMO_SNAPSHOT",
+        default: "(store)/memo.snapshot",
+        purpose: "Memo snapshot path; `off`/`0`/empty disables persistence",
+    },
+    EnvVar {
+        name: "CODR_MEMO_SNAPSHOT_CAP_MB",
+        default: "64",
+        purpose: "Memo snapshot size cap in MiB; hottest entries are kept when truncating",
+    },
+    EnvVar {
+        name: "CODR_MEMO_SNAPSHOT_SECS",
+        default: "300",
+        purpose: "Background memo-snapshot period in seconds; `0`/`off` disables the periodic writer",
+    },
+    EnvVar {
+        name: "CODR_SERVE_MAX_JOBS",
+        default: "256",
+        purpose: "Finished jobs retained for status polling before pruning to the expired ring",
+    },
+    EnvVar {
+        name: "CODR_STORE",
+        default: "results/store",
+        purpose: "Result-store directory used when `--store` is not given",
+    },
+    EnvVar {
+        name: "CODR_STORE_WRITE_V1",
+        default: "(unset)",
+        purpose: "`1`/`true` keeps the store in the legacy v1 single-point layout (no pack migration)",
+    },
+];
+
+/// Is `name` a registered variable?
+pub fn is_registered(name: &str) -> bool {
+    ENV_VARS.iter().any(|v| v.name == name)
+}
+
+/// Read a registered `CODR_*` variable. The single sanctioned
+/// `std::env::var` call site for them — `codr analyze` flags any other.
+pub fn var(name: &str) -> Option<String> {
+    debug_assert!(
+        is_registered(name),
+        "env var {name} is not in analysis::env_registry::ENV_VARS"
+    );
+    std::env::var(name).ok()
+}
+
+/// The markdown table the README embeds. Regenerate with
+/// `codr analyze --print-env-table` whenever [`ENV_VARS`] changes.
+pub fn render_table() -> String {
+    let mut s = String::from("| variable | default | purpose |\n|---|---|---|\n");
+    for v in ENV_VARS {
+        s.push_str(&format!(
+            "| `{}` | `{}` | {} |\n",
+            v.name, v.default, v.purpose
+        ));
+    }
+    s
+}
+
+pub const README_BEGIN: &str = "<!-- codr-env:begin -->";
+pub const README_END: &str = "<!-- codr-env:end -->";
+
+/// Token-level check for one file: unregistered `CODR_*` literals, and
+/// `std::env::var`/`var_os` reads of them outside this module. Names
+/// seen in string literals are collected into `used` so the tree pass
+/// can flag dead registry rows.
+pub(super) fn check_file(
+    rel: &str,
+    toks: &[Tok],
+    out: &mut Vec<Finding>,
+    used: &mut BTreeSet<String>,
+) {
+    let here = rel.ends_with("analysis/env_registry.rs");
+    for (i, t) in toks.iter().enumerate() {
+        // Any CODR_* name inside any string literal must be registered.
+        if let Some(s) = t.str_lit() {
+            for name in codr_names(s) {
+                if is_registered(&name) {
+                    // Mentions inside this module (the rows themselves)
+                    // don't count toward liveness.
+                    if !here {
+                        used.insert(name);
+                    }
+                } else if !t.in_test {
+                    out.push(Finding {
+                        check: "env_registry",
+                        file: rel.to_string(),
+                        line: t.line,
+                        message: format!(
+                            "`{name}` is not in analysis::env_registry::ENV_VARS — \
+                             register it (name, default, purpose)"
+                        ),
+                    });
+                }
+            }
+        }
+        // Direct std::env reads of CODR_* belong only in this module.
+        if here || t.in_test {
+            continue;
+        }
+        let is_read = t
+            .ident()
+            .is_some_and(|id| id == "var" || id == "var_os")
+            && i >= 3
+            && toks[i - 1].is_punct(':')
+            && toks[i - 2].is_punct(':')
+            && toks[i - 3].is_ident("env");
+        if is_read {
+            if let Some(name) = toks
+                .get(i + 2)
+                .and_then(|a| a.str_lit())
+                .filter(|s| s.starts_with("CODR_"))
+            {
+                out.push(Finding {
+                    check: "env_registry",
+                    file: rel.to_string(),
+                    line: t.line,
+                    message: format!(
+                        "reads `{name}` via std::env directly — route through \
+                         analysis::env_registry::var"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Extract every maximal `CODR_[A-Z0-9_]*` word from a string literal.
+fn codr_names(s: &str) -> Vec<String> {
+    let b = s.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 5 <= b.len() {
+        if &b[i..i + 5] == b"CODR_" && (i == 0 || !word_byte(b[i - 1])) {
+            let mut j = i + 5;
+            while j < b.len() && word_byte(b[j]) {
+                j += 1;
+            }
+            out.push(s[i..j].to_string());
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn word_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_uppercase() || c.is_ascii_digit()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_sorted_unique_and_prefixed() {
+        for w in ENV_VARS.windows(2) {
+            assert!(w[0].name < w[1].name, "{} !< {}", w[0].name, w[1].name);
+        }
+        for v in ENV_VARS {
+            assert!(v.name.starts_with("CODR_"));
+            assert!(!v.purpose.is_empty() && !v.default.is_empty());
+        }
+    }
+
+    #[test]
+    fn var_reads_registered_names() {
+        assert!(is_registered("CODR_STORE"));
+        assert!(!is_registered("CODR_BOGUS"));
+        // Unset in the test env; the point is the debug_assert passes.
+        let _ = var("CODR_STORE");
+    }
+
+    #[test]
+    fn codr_name_extraction() {
+        assert_eq!(
+            codr_names("set CODR_STORE or CODR_MEMO_CAP."),
+            vec!["CODR_STORE".to_string(), "CODR_MEMO_CAP".to_string()]
+        );
+        assert_eq!(codr_names("$CODR_FAULTS"), vec!["CODR_FAULTS".to_string()]);
+        assert!(codr_names("DECODR_X no, codr_store no").is_empty());
+    }
+
+    #[test]
+    fn table_renders_every_row() {
+        let t = render_table();
+        for v in ENV_VARS {
+            assert!(t.contains(v.name), "table missing {}", v.name);
+        }
+        assert_eq!(t.lines().count(), 2 + ENV_VARS.len());
+    }
+}

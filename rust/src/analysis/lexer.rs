@@ -1,0 +1,591 @@
+//! A comment/string-aware Rust lexer for the invariant checks — the
+//! same hand-rolled spirit as [`crate::util::json`]: no regex crate, no
+//! syn, just a byte cursor that knows exactly as much Rust surface
+//! syntax as the checks need.
+//!
+//! What it gets right (and the unit tests pin): line comments, nested
+//! block comments, string literals with escapes, raw strings
+//! (`r#"…"#`, any hash depth, `b`/`br` prefixes), char literals vs
+//! lifetimes (`'a'` vs `'a`), numeric literals (so `0..10` does not eat
+//! the range dots), and `#[cfg(test)]` / `#[test]` item spans (marked
+//! `in_test` so checks skip them). What it deliberately does not do:
+//! full expression parsing — the checks pattern-match token windows.
+//!
+//! The lexer also collects **waiver comments**:
+//!
+//! ```text
+//! // analyze: allow(panic_policy): worker panics are contained by run_isolated
+//! ```
+//!
+//! A waiver names one check and must carry a non-empty reason; it
+//! suppresses findings of that check on its own line or the line
+//! directly below. Malformed directives are reported, not ignored —
+//! a typo must not silently disable a check.
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tok {
+    pub line: u32,
+    /// Inside a `#[cfg(test)]` / `#[test]` item span.
+    pub in_test: bool,
+    pub kind: Kind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Kind {
+    /// Identifier or keyword.
+    Ident(String),
+    /// String literal contents (escapes kept raw; prefix/quotes/hashes
+    /// stripped). Covers `"…"`, `b"…"`, and raw forms.
+    Str(String),
+    /// Any single punctuation byte (`::` arrives as two `:`).
+    Punct(char),
+    /// Numeric literal (value not needed by any check).
+    Num,
+    /// Char literal such as `'x'` or `'\n'`.
+    Char,
+    /// Lifetime such as `'a` (kept distinct so it never reads as an
+    /// unterminated char literal).
+    Lifetime,
+}
+
+impl Tok {
+    pub fn is_ident(&self, name: &str) -> bool {
+        matches!(&self.kind, Kind::Ident(s) if s == name)
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(&self.kind, Kind::Punct(p) if *p == c)
+    }
+
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            Kind::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn str_lit(&self) -> Option<&str> {
+        match &self.kind {
+            Kind::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed `// analyze: allow(<check>): <reason>` directive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Waiver {
+    pub line: u32,
+    pub check: String,
+    pub reason: String,
+}
+
+/// Lexer output: the token stream (with test spans marked), the parsed
+/// waivers, and any malformed waiver directives (line, complaint).
+#[derive(Debug, Default)]
+pub struct LexOut {
+    pub tokens: Vec<Tok>,
+    pub waivers: Vec<Waiver>,
+    pub malformed: Vec<(u32, String)>,
+}
+
+/// Lex one source file. Never panics on any input: unterminated
+/// constructs simply run to end-of-file.
+pub fn lex(src: &str) -> LexOut {
+    let b = src.as_bytes();
+    let mut out = LexOut::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i + 2;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                parse_directive(&src[start..i], line, &mut out);
+                // The newline itself is consumed by the next loop turn.
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                // Nested block comments, per the Rust grammar.
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                let tok_line = line;
+                let (s, ni, nl) = scan_string(b, i + 1, line);
+                out.tokens.push(Tok {
+                    line: tok_line,
+                    in_test: false,
+                    kind: Kind::Str(s),
+                });
+                i = ni;
+                line = nl;
+            }
+            b'\'' => {
+                let (kind, ni) = scan_quote(b, i);
+                out.tokens.push(Tok {
+                    line,
+                    in_test: false,
+                    kind,
+                });
+                i = ni;
+            }
+            b'0'..=b'9' => {
+                i += 1;
+                while i < b.len() {
+                    let d = b[i];
+                    if d.is_ascii_alphanumeric() || d == b'_' {
+                        i += 1;
+                    } else if d == b'.'
+                        && b.get(i + 1).is_some_and(|n| n.is_ascii_digit())
+                    {
+                        i += 1; // decimal point, not a `..` range
+                    } else {
+                        break;
+                    }
+                }
+                out.tokens.push(Tok {
+                    line,
+                    in_test: false,
+                    kind: Kind::Num,
+                });
+            }
+            _ if c.is_ascii_alphabetic() || c == b'_' => {
+                // Raw/byte string prefixes first: r"…", r#"…"#, b"…", br#"…"#.
+                if let Some((s, ni, nl, tok_line)) = scan_raw_or_byte(b, i, line) {
+                    out.tokens.push(Tok {
+                        line: tok_line,
+                        in_test: false,
+                        kind: Kind::Str(s),
+                    });
+                    i = ni;
+                    line = nl;
+                    continue;
+                }
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                out.tokens.push(Tok {
+                    line,
+                    in_test: false,
+                    kind: Kind::Ident(src[start..i].to_string()),
+                });
+            }
+            _ => {
+                out.tokens.push(Tok {
+                    line,
+                    in_test: false,
+                    kind: Kind::Punct(c as char),
+                });
+                i += 1;
+            }
+        }
+    }
+    mark_test_spans(&mut out.tokens);
+    out
+}
+
+/// Scan a double-quoted string body starting just past the opening
+/// quote. Returns (contents, next index, next line).
+fn scan_string(b: &[u8], mut i: usize, mut line: u32) -> (String, usize, u32) {
+    let start = i;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i = (i + 2).min(b.len()), // skip the escaped byte
+            b'"' => {
+                let s = String::from_utf8_lossy(&b[start..i]).into_owned();
+                return (s, i + 1, line);
+            }
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (String::from_utf8_lossy(&b[start..]).into_owned(), i, line)
+}
+
+/// `'` disambiguation: char literal vs lifetime.
+fn scan_quote(b: &[u8], i: usize) -> (Kind, usize) {
+    match b.get(i + 1) {
+        Some(b'\\') => {
+            // Escaped char literal: scan to the closing quote.
+            let mut j = i + 2;
+            while j < b.len() && b[j] != b'\'' {
+                if b[j] == b'\\' {
+                    j += 1; // e.g. '\\'
+                }
+                j += 1;
+            }
+            (Kind::Char, (j + 1).min(b.len()))
+        }
+        Some(&c) if c.is_ascii_alphanumeric() || c == b'_' => {
+            if b.get(i + 2) == Some(&b'\'') {
+                // 'x' — a one-character literal.
+                (Kind::Char, i + 3)
+            } else {
+                // 'ident — a lifetime; consume the identifier.
+                let mut j = i + 1;
+                while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+                (Kind::Lifetime, j)
+            }
+        }
+        Some(&c) if c != b'\n' => {
+            // Punctuation char literal such as '"' or '{'.
+            if b.get(i + 2) == Some(&b'\'') {
+                (Kind::Char, i + 3)
+            } else {
+                (Kind::Punct(c as char), i + 2)
+            }
+        }
+        _ => (Kind::Punct('\''), i + 1),
+    }
+}
+
+/// Raw and byte strings: `r"…"`, `r#"…"#…`, `b"…"`, `br##"…"##`, `rb` is
+/// not Rust. Returns None when the ident at `i` is not a string prefix.
+fn scan_raw_or_byte(b: &[u8], i: usize, line: u32) -> Option<(String, usize, u32, u32)> {
+    let (raw, mut j) = match (b[i], b.get(i + 1)) {
+        (b'b', Some(b'"')) => (false, i + 1),
+        (b'b', Some(b'r')) => (true, i + 2),
+        (b'r', Some(b'"')) | (b'r', Some(b'#')) => (true, i + 1),
+        _ => return None,
+    };
+    if !raw {
+        // b"…" — same body rules as a plain string.
+        let (s, ni, nl) = scan_string(b, j + 1, line);
+        return Some((s, ni, nl, line));
+    }
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) != Some(&b'"') {
+        return None; // `r` / `br` was an ordinary identifier after all
+    }
+    j += 1;
+    let start = j;
+    let tok_line = line;
+    let mut nl = line;
+    while j < b.len() {
+        if b[j] == b'\n' {
+            nl += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == b'"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while seen < hashes && b.get(k) == Some(&b'#') {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                let s = String::from_utf8_lossy(&b[start..j]).into_owned();
+                return Some((s, k, nl, tok_line));
+            }
+        }
+        j += 1;
+    }
+    Some((
+        String::from_utf8_lossy(&b[start..]).into_owned(),
+        j,
+        nl,
+        tok_line,
+    ))
+}
+
+/// Parse the text of one line comment for an `analyze:` directive.
+fn parse_directive(comment: &str, line: u32, out: &mut LexOut) {
+    let t = comment.trim_start_matches(['/', '!']).trim();
+    let Some(rest) = t.strip_prefix("analyze:") else {
+        return;
+    };
+    let rest = rest.trim();
+    let parse = || -> Result<Waiver, String> {
+        let body = rest
+            .strip_prefix("allow(")
+            .ok_or("expected `allow(<check>): <reason>`")?;
+        let (check, tail) = body
+            .split_once(')')
+            .ok_or("unclosed `allow(` — missing `)`")?;
+        let reason = tail
+            .strip_prefix(':')
+            .ok_or("missing `: <reason>` after allow(...)")?
+            .trim();
+        if check.trim().is_empty() {
+            return Err("empty check name".into());
+        }
+        if reason.is_empty() {
+            return Err("empty reason — every waiver must justify itself".into());
+        }
+        Ok(Waiver {
+            line,
+            check: check.trim().to_string(),
+            reason: reason.to_string(),
+        })
+    };
+    match parse() {
+        Ok(w) => out.waivers.push(w),
+        Err(e) => out.malformed.push((line, e.to_string())),
+    }
+}
+
+/// Mark every token inside a `#[cfg(test)]`- or `#[test]`-attributed
+/// item span (through the item's closing `}` or terminating `;`).
+fn mark_test_spans(toks: &mut [Tok]) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].is_punct('#') && toks.get(i + 1).is_some_and(|t| t.is_punct('['))) {
+            i += 1;
+            continue;
+        }
+        // Attribute span: to the matching `]`.
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut saw_cfg = false;
+        let mut saw_test = false;
+        let mut saw_not = false;
+        while j < toks.len() && depth > 0 {
+            if toks[j].is_punct('[') {
+                depth += 1;
+            } else if toks[j].is_punct(']') {
+                depth -= 1;
+            } else if toks[j].is_ident("cfg") {
+                saw_cfg = true;
+            } else if toks[j].is_ident("test") {
+                saw_test = true;
+            } else if toks[j].is_ident("not") {
+                // `#[cfg(not(test))]` is production code, not test code.
+                saw_not = true;
+            }
+            j += 1;
+        }
+        let bare_test_attr = j == i + 4; // exactly `#[test]`
+        let is_test_attr = saw_test && !saw_not && (saw_cfg || bare_test_attr);
+        if !is_test_attr {
+            i = j;
+            continue;
+        }
+        // Mark from the attribute through the item it decorates: skip
+        // further attributes, then either a `{ … }` body or a `;`.
+        let span_start = i;
+        let mut k = j;
+        while k + 1 < toks.len() && toks[k].is_punct('#') && toks[k + 1].is_punct('[') {
+            let mut d = 1usize;
+            k += 2;
+            while k < toks.len() && d > 0 {
+                if toks[k].is_punct('[') {
+                    d += 1;
+                } else if toks[k].is_punct(']') {
+                    d -= 1;
+                }
+                k += 1;
+            }
+        }
+        // To the first `{` (then its match) or a top-level `;`.
+        let mut wrap = 0i32; // (), [] nesting on the item header
+        while k < toks.len() {
+            if toks[k].is_punct('(') || toks[k].is_punct('[') {
+                wrap += 1;
+            } else if toks[k].is_punct(')') || toks[k].is_punct(']') {
+                wrap -= 1;
+            } else if toks[k].is_punct(';') && wrap == 0 {
+                k += 1;
+                break;
+            } else if toks[k].is_punct('{') && wrap == 0 {
+                let mut braces = 1usize;
+                k += 1;
+                while k < toks.len() && braces > 0 {
+                    if toks[k].is_punct('{') {
+                        braces += 1;
+                    } else if toks[k].is_punct('}') {
+                        braces -= 1;
+                    }
+                    k += 1;
+                }
+                break;
+            }
+            k += 1;
+        }
+        for t in toks[span_start..k].iter_mut() {
+            t.in_test = true;
+        }
+        i = k;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| t.ident().map(str::to_string))
+            .collect()
+    }
+
+    #[test]
+    fn strings_hide_their_contents_from_the_token_stream() {
+        let toks = lex(r#"let s = "a.unwrap() // not a comment"; x"#).tokens;
+        assert!(toks.iter().all(|t| !t.is_ident("unwrap")));
+        let lit = toks.iter().find_map(|t| t.str_lit()).unwrap();
+        assert!(lit.contains("not a comment"));
+        assert!(toks.iter().any(|t| t.is_ident("x")), "lexing continues");
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_terminate_strings() {
+        let toks = lex(r#"let s = "say \"hi\" now"; done"#).tokens;
+        assert_eq!(toks.iter().filter_map(|t| t.str_lit()).count(), 1);
+        assert!(toks.iter().any(|t| t.is_ident("done")));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let src = "let s = r#\"quote \" inside\"#; let t = br##\"x\"# y\"##; tail";
+        let toks = lex(src).tokens;
+        let lits: Vec<_> = toks.iter().filter_map(|t| t.str_lit()).collect();
+        assert_eq!(lits, vec!["quote \" inside", "x\"# y"]);
+        assert!(toks.iter().any(|t| t.is_ident("tail")));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* outer /* inner */ still comment */ b";
+        assert_eq!(idents(src), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn line_comments_end_at_newline() {
+        let src = "a // unwrap() panic!\nb";
+        let toks = lex(src).tokens;
+        assert_eq!(idents(src), vec!["a", "b"]);
+        assert_eq!(toks[1].line, 2);
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { m.insert('x', '\\n'); let q = '\"'; }";
+        let toks = lex(src).tokens;
+        let chars = toks.iter().filter(|t| t.kind == Kind::Char).count();
+        let lifetimes = toks.iter().filter(|t| t.kind == Kind::Lifetime).count();
+        assert_eq!(chars, 3, "{toks:?}");
+        assert_eq!(lifetimes, 2);
+    }
+
+    #[test]
+    fn generics_vs_shift_do_not_confuse_the_stream() {
+        let src = "let v: Vec<Vec<u8>> = x(); let y = 1u64 << 20; let r = 0..10;";
+        let toks = lex(src).tokens;
+        assert!(toks.iter().any(|t| t.is_ident("Vec")));
+        // `>>` arrives as two '>' puncts, `<<` as two '<': nothing is lost.
+        assert_eq!(toks.iter().filter(|t| t.is_punct('<')).count(), 4);
+        // `0..10` keeps its range dots.
+        assert_eq!(toks.iter().filter(|t| t.is_punct('.')).count(), 2);
+    }
+
+    #[test]
+    fn numeric_literals_swallow_suffixes_and_floats() {
+        let toks = lex("let a = 1_000u64; let b = 2.5e3; let c = 0xFFu8;").tokens;
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::Num).count(), 3);
+    }
+
+    #[test]
+    fn cfg_test_items_are_marked() {
+        let src = "fn live() { a.unwrap(); }\n\
+                   #[cfg(test)]\nmod tests {\n fn t() { b.unwrap(); }\n}\n\
+                   fn live2() { c.expect(\"x\"); }";
+        let toks = lex(src).tokens;
+        let unwraps: Vec<bool> = toks
+            .iter()
+            .filter(|t| t.is_ident("unwrap") || t.is_ident("expect"))
+            .map(|t| t.in_test)
+            .collect();
+        assert_eq!(unwraps, vec![false, true, false]);
+    }
+
+    #[test]
+    fn test_attr_marks_single_fn() {
+        let src = "#[test]\nfn check_it() { x.unwrap(); }\nfn live() { y.unwrap(); }";
+        let toks = lex(src).tokens;
+        let unwraps: Vec<bool> = toks
+            .iter()
+            .filter(|t| t.is_ident("unwrap"))
+            .map(|t| t.in_test)
+            .collect();
+        assert_eq!(unwraps, vec![true, false]);
+    }
+
+    #[test]
+    fn waiver_parsing() {
+        let out = lex("// analyze: allow(panic_policy): poisoning is survived upstream\nx();");
+        assert_eq!(out.waivers.len(), 1);
+        let w = &out.waivers[0];
+        assert_eq!((w.line, w.check.as_str()), (1, "panic_policy"));
+        assert!(w.reason.contains("survived"));
+        assert!(out.malformed.is_empty());
+    }
+
+    #[test]
+    fn malformed_waivers_are_reported_not_dropped() {
+        for bad in [
+            "// analyze: allow(panic_policy)",       // no reason
+            "// analyze: allow(panic_policy):    ",  // empty reason
+            "// analyze: allow panic_policy: why",   // missing parens
+            "// analyze: allow(): why",              // empty check
+        ] {
+            let out = lex(bad);
+            assert!(out.waivers.is_empty(), "{bad}");
+            assert_eq!(out.malformed.len(), 1, "{bad}");
+        }
+        // Unrelated comments are not directives at all.
+        assert!(lex("// analyzer of things").malformed.is_empty());
+    }
+
+    #[test]
+    fn never_panics_on_hostile_input() {
+        for src in [
+            "\"unterminated",
+            "r#\"unterminated",
+            "/* unterminated",
+            "'",
+            "'\\",
+            "b\"",
+            "r###",
+            "#[cfg(test)]",
+            "#[",
+        ] {
+            let _ = lex(src);
+        }
+    }
+}

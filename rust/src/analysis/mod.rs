@@ -1,0 +1,362 @@
+//! `codr analyze` — project-invariant static analysis.
+//!
+//! A hand-rolled, dependency-free analyzer in the same spirit as
+//! [`crate::util::json`]: a comment/string-aware [`lexer`] feeds five
+//! token-level checks over `rust/src/**`:
+//!
+//! * `lock_order` — the declared hierarchy (server jobs → scheduler
+//!   inflight → store save lock → pack lock → memo shard → arena) with
+//!   nested acquisitions flagged when they invert it;
+//! * `atomics` — `Ordering::Relaxed` only on allowlisted striped
+//!   counters, never on control flags or generation tags;
+//! * `panic_policy` — no `unwrap`/`expect`/`panic!` outside
+//!   `#[cfg(test)]` in `serve/`, `coordinator/pool.rs`, `faults/`;
+//! * `fault_seams` — every `fs::rename`/`create_new` durability edge
+//!   sits in a function with a `faults::` seam, so new edges cannot
+//!   ship uninjectable;
+//! * `env_registry` — every `CODR_*` literal is registered in
+//!   [`env_registry::ENV_VARS`], reads route through
+//!   [`env_registry::var`], and the README table matches the registry.
+//!
+//! Any finding can be silenced at the site with a justified waiver:
+//! `// analyze: allow(<check>): <reason>` on the same line or the line
+//! above. Waivers without a reason, for unknown checks, or that match
+//! nothing are themselves findings — the waiver budget stays honest.
+//! The report is deterministic (sorted by file, line, check) so the
+//! tier-1 test `rust/tests/static_analysis.rs` can pin the tree clean.
+
+mod checks;
+pub mod env_registry;
+pub mod lexer;
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Check identifiers a waiver may name.
+pub const CHECKS: &[&str] = &[
+    "atomics",
+    "env_registry",
+    "fault_seams",
+    "lock_order",
+    "panic_policy",
+];
+
+/// One violation at a deterministic `file:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub check: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// The result of analyzing a tree.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files: usize,
+    pub waivers_used: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report, one `file:line: [check] message` per
+    /// finding, sorted, with a one-line summary.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            let _ = writeln!(s, "{}:{}: [{}] {}", f.file, f.line, f.check, f.message);
+        }
+        let _ = write!(
+            s,
+            "analyze: {} files, {} finding{}, {} waiver{} honored",
+            self.files,
+            self.findings.len(),
+            if self.findings.len() == 1 { "" } else { "s" },
+            self.waivers_used,
+            if self.waivers_used == 1 { "" } else { "s" },
+        );
+        s
+    }
+
+    /// Machine-readable report for `codr analyze --json`.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::Obj(vec![
+                    ("check".into(), Json::str(f.check)),
+                    ("file".into(), Json::str(&f.file)),
+                    ("line".into(), Json::u64(u64::from(f.line))),
+                    ("message".into(), Json::str(&f.message)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("clean".into(), Json::Bool(self.is_clean())),
+            ("files".into(), Json::usize(self.files)),
+            ("waivers_used".into(), Json::usize(self.waivers_used)),
+            ("findings".into(), Json::Arr(findings)),
+        ])
+        .to_pretty_string()
+    }
+}
+
+/// Analyze one source string as the file `rel` (fixture entry point;
+/// skips the cross-file registry/README checks). Returns sorted,
+/// waiver-filtered findings.
+pub fn analyze_source(rel: &str, src: &str) -> Vec<Finding> {
+    let mut used_env = BTreeSet::new();
+    let (mut findings, _) = analyze_file(rel, src, &mut used_env);
+    sort(&mut findings);
+    findings
+}
+
+/// Analyze every `.rs` file under `src_root` plus the cross-file
+/// invariants (dead registry rows, README env table).
+pub fn analyze_tree(src_root: &Path) -> Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)
+        .with_context(|| format!("walking {}", src_root.display()))?;
+    files.sort();
+    if files.is_empty() {
+        bail!("no .rs files under {}", src_root.display());
+    }
+
+    let mut findings = Vec::new();
+    let mut used_env = BTreeSet::new();
+    let mut waivers_used = 0usize;
+    let mut registry_src = None;
+    for path in &files {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if rel.ends_with("analysis/env_registry.rs") {
+            registry_src = Some(src.clone());
+        }
+        let (mut fs, used) = analyze_file(&rel, &src, &mut used_env);
+        findings.append(&mut fs);
+        waivers_used += used;
+    }
+
+    // Dead registry rows: registered but never referenced anywhere else.
+    for v in env_registry::ENV_VARS {
+        if !used_env.contains(v.name) {
+            let line = registry_src
+                .as_deref()
+                .and_then(|s| {
+                    s.lines()
+                        .position(|l| l.contains(&format!("\"{}\"", v.name)))
+                })
+                .map_or(1, |p| p as u32 + 1);
+            findings.push(Finding {
+                check: "env_registry",
+                file: "analysis/env_registry.rs".into(),
+                line,
+                message: format!("`{}` is registered but never read — remove the row", v.name),
+            });
+        }
+    }
+
+    readme_check(src_root, &mut findings);
+    sort(&mut findings);
+    Ok(Report {
+        findings,
+        files: files.len(),
+        waivers_used,
+    })
+}
+
+/// `rust/src` resolved from the current directory, falling back to the
+/// build-time manifest dir (so `codr analyze` works from a checkout and
+/// `cargo test` works from anywhere).
+pub fn default_src_root() -> PathBuf {
+    let local = Path::new("rust/src");
+    if local.is_dir() {
+        return local.to_path_buf();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src")
+}
+
+fn sort(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.check, a.message.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.check, b.message.as_str()))
+    });
+}
+
+/// Lex, run every check, then apply waivers. Returns the surviving
+/// findings (plus waiver-hygiene findings) and the count of honored
+/// waivers.
+fn analyze_file(
+    rel: &str,
+    src: &str,
+    used_env: &mut BTreeSet<String>,
+) -> (Vec<Finding>, usize) {
+    let out = lexer::lex(src);
+    let mut raw = Vec::new();
+    checks::run(rel, &out.tokens, &mut raw);
+    env_registry::check_file(rel, &out.tokens, &mut raw, used_env);
+
+    let mut used = vec![false; out.waivers.len()];
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in raw {
+        let waived = out.waivers.iter().enumerate().any(|(i, w)| {
+            let hit = w.check == f.check && (w.line == f.line || w.line + 1 == f.line);
+            if hit {
+                used[i] = true;
+            }
+            hit
+        });
+        if !waived {
+            findings.push(f);
+        }
+    }
+    for (line, text) in &out.malformed {
+        findings.push(Finding {
+            check: "waiver",
+            file: rel.to_string(),
+            line: *line,
+            message: format!(
+                "malformed waiver `{text}` — syntax is `analyze: allow(<check>): <reason>`"
+            ),
+        });
+    }
+    for (i, w) in out.waivers.iter().enumerate() {
+        if !CHECKS.contains(&w.check.as_str()) {
+            findings.push(Finding {
+                check: "waiver",
+                file: rel.to_string(),
+                line: w.line,
+                message: format!("waiver names unknown check `{}`", w.check),
+            });
+        } else if !used[i] {
+            findings.push(Finding {
+                check: "waiver",
+                file: rel.to_string(),
+                line: w.line,
+                message: format!(
+                    "unused waiver for `{}` — nothing fires here; remove it",
+                    w.check
+                ),
+            });
+        }
+    }
+    let honored = used.iter().filter(|&&u| u).count();
+    (findings, honored)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Validate the README env table against the registry. The README lives
+/// two levels above `rust/src`; if the layout differs (fixture trees),
+/// absence of a README is not a finding, but a README without markers
+/// or with a stale table is.
+fn readme_check(src_root: &Path, findings: &mut Vec<Finding>) {
+    let candidates = [
+        src_root.join("../../README.md"),
+        src_root.join("../README.md"),
+    ];
+    let Some(text) = candidates
+        .iter()
+        .find_map(|p| std::fs::read_to_string(p).ok())
+    else {
+        return;
+    };
+    let (b, e) = (env_registry::README_BEGIN, env_registry::README_END);
+    let block = text.find(b).and_then(|i| {
+        let after = i + b.len();
+        text[after..].find(e).map(|j| text[after..after + j].trim())
+    });
+    match block {
+        None => findings.push(Finding {
+            check: "env_registry",
+            file: "README.md".into(),
+            line: 1,
+            message: format!("README has no `{b}` … `{e}` block for the env-var table"),
+        }),
+        Some(got) if got != env_registry::render_table().trim() => {
+            let line = text[..text.find(b).unwrap_or(0)].lines().count() as u32 + 1;
+            findings.push(Finding {
+                check: "env_registry",
+                file: "README.md".into(),
+                line,
+                message: "README env-var table is stale — regenerate with \
+                          `codr analyze --print-env-table`"
+                    .into(),
+            });
+        }
+        Some(_) => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waiver_same_line_and_line_above() {
+        let src = "fn f() { x.unwrap(); // analyze: allow(panic_policy): test helper\n}\n";
+        assert!(analyze_source("serve/x.rs", src).is_empty());
+        let src2 = "fn f() {\n    // analyze: allow(panic_policy): startup only\n    x.unwrap();\n}\n";
+        assert!(analyze_source("serve/x.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn waiver_wrong_check_does_not_silence() {
+        let src = "fn f() {\n    // analyze: allow(atomics): wrong check\n    x.unwrap();\n}\n";
+        let fs = analyze_source("serve/x.rs", src);
+        // The unwrap still fires and the waiver is reported unused.
+        assert_eq!(fs.len(), 2, "{fs:?}");
+        assert!(fs.iter().any(|f| f.check == "panic_policy"));
+        assert!(fs.iter().any(|f| f.check == "waiver"));
+    }
+
+    #[test]
+    fn unknown_check_in_waiver_is_flagged() {
+        let src = "// analyze: allow(bogus): reason here\nfn f() {}\n";
+        let fs = analyze_source("sim/x.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].check, "waiver");
+        assert!(fs[0].message.contains("bogus"));
+    }
+
+    #[test]
+    fn report_renders_deterministically() {
+        let r = Report {
+            findings: vec![Finding {
+                check: "atomics",
+                file: "a.rs".into(),
+                line: 3,
+                message: "m".into(),
+            }],
+            files: 2,
+            waivers_used: 1,
+        };
+        assert_eq!(
+            r.render(),
+            "a.rs:3: [atomics] m\nanalyze: 2 files, 1 finding, 1 waiver honored"
+        );
+        assert!(r.to_json().contains("\"clean\": false"));
+    }
+}

@@ -19,6 +19,7 @@ const SWITCHES: &[&str] = &[
     "watch",
     "quick",
     "json",
+    "print-env-table",
 ];
 
 impl Args {

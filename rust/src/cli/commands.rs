@@ -1021,6 +1021,38 @@ pub fn info() -> String {
     out
 }
 
+/// `codr analyze` — static invariant checks over `rust/src`.
+///
+/// `--print-env-table` prints the README env-var block (markers
+/// included) instead of scanning. Findings exit 2 via [`super::Outcome`]
+/// rather than `Err`: the report rendered fine, the nonzero code is the
+/// verdict, and the usage dump must not fire.
+pub fn analyze(args: &Args) -> Result<super::Outcome> {
+    use crate::analysis::{self, env_registry};
+    if args.flag("print-env-table") {
+        let text = format!(
+            "{}\n{}{}",
+            env_registry::README_BEGIN,
+            env_registry::render_table(),
+            env_registry::README_END
+        );
+        return Ok(super::Outcome { text, code: 0 });
+    }
+    let root = match args.get("src") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => analysis::default_src_root(),
+    };
+    let report = analysis::analyze_tree(&root)
+        .with_context(|| format!("analyze: scanning {}", root.display()))?;
+    let text = if args.flag("json") {
+        report.to_json()
+    } else {
+        report.render()
+    };
+    let code = if report.is_clean() { 0 } else { 2 };
+    Ok(super::Outcome { text, code })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

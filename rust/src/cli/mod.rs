@@ -13,6 +13,7 @@
 //! codr watch --job N [--addr HOST:PORT] [--retries N]
 //! codr warm [--addr HOST:PORT | --store DIR] [grid opts]
 //! codr bench [--quick] [--out FILE] [grid opts]
+//! codr analyze [--json] [--src DIR] [--print-env-table]
 //! codr info
 //! ```
 
@@ -47,6 +48,9 @@ COMMANDS:
     warm            Populate the result store (locally, or via --addr)
     bench           Time the simulation hot path (reference vs memoized),
                     write BENCH_hotpath.json
+    analyze         Statically check project invariants over rust/src
+                    (lock order, atomics, panic policy, fault seams,
+                    env registry); exit 2 if findings remain
     info            Print design configurations and model zoo summary
 
 OPTIONS:
@@ -76,14 +80,31 @@ OPTIONS:
     --save             Also write reports under results/
     --quick            bench/map: tiny grid for CI smoke runs
     --out FILE         bench: output path (default BENCH_hotpath.json)
+    --src DIR          analyze: source root to scan (default rust/src)
+    --json             analyze: machine-readable findings report
 ";
+
+/// A command's rendered output plus the process exit code it asks for.
+/// Almost everything exits 0 on success; `analyze` exits 2 when the
+/// tree has findings (the report itself rendered fine — the nonzero
+/// code is the verdict, and it must not trigger the usage dump).
+pub struct Outcome {
+    pub text: String,
+    pub code: i32,
+}
+
+impl Outcome {
+    fn ok(text: String) -> Outcome {
+        Outcome { text, code: 0 }
+    }
+}
 
 /// Entry point used by `main.rs`. Returns the process exit code.
 pub fn run(argv: &[String]) -> i32 {
     match dispatch(argv) {
-        Ok(output) => {
-            println!("{output}");
-            0
+        Ok(out) => {
+            println!("{}", out.text);
+            out.code
         }
         Err(e) => {
             eprintln!("error: {e:#}");
@@ -93,7 +114,7 @@ pub fn run(argv: &[String]) -> i32 {
     }
 }
 
-fn dispatch(argv: &[String]) -> Result<String> {
+fn dispatch(argv: &[String]) -> Result<Outcome> {
     if argv.is_empty() {
         bail!("missing command");
     }
@@ -105,19 +126,20 @@ fn dispatch(argv: &[String]) -> Result<String> {
                 bail!("figure: missing id");
             }
             let args = Args::parse(&rest[1..])?;
-            commands::figure(&rest[0], &args)
+            commands::figure(&rest[0], &args).map(Outcome::ok)
         }
-        "simulate" => commands::simulate(&Args::parse(rest)?),
-        "map" => commands::map(&Args::parse(rest)?),
-        "compress" => commands::compress(&Args::parse(rest)?),
-        "golden" => commands::golden(&Args::parse(rest)?),
-        "serve" => commands::serve(&Args::parse(rest)?),
-        "submit" => commands::submit(&Args::parse(rest)?),
-        "watch" => commands::watch(&Args::parse(rest)?),
-        "warm" => commands::warm(&Args::parse(rest)?),
-        "bench" => commands::bench(&Args::parse(rest)?),
-        "info" => Ok(commands::info()),
-        "help" | "--help" | "-h" => Ok(USAGE.to_string()),
+        "simulate" => commands::simulate(&Args::parse(rest)?).map(Outcome::ok),
+        "map" => commands::map(&Args::parse(rest)?).map(Outcome::ok),
+        "compress" => commands::compress(&Args::parse(rest)?).map(Outcome::ok),
+        "golden" => commands::golden(&Args::parse(rest)?).map(Outcome::ok),
+        "serve" => commands::serve(&Args::parse(rest)?).map(Outcome::ok),
+        "submit" => commands::submit(&Args::parse(rest)?).map(Outcome::ok),
+        "watch" => commands::watch(&Args::parse(rest)?).map(Outcome::ok),
+        "warm" => commands::warm(&Args::parse(rest)?).map(Outcome::ok),
+        "bench" => commands::bench(&Args::parse(rest)?).map(Outcome::ok),
+        "analyze" => commands::analyze(&Args::parse(rest)?),
+        "info" => Ok(Outcome::ok(commands::info())),
+        "help" | "--help" | "-h" => Ok(Outcome::ok(USAGE.to_string())),
         other => bail!("unknown command `{other}`"),
     }
 }
@@ -132,7 +154,7 @@ mod tests {
 
     #[test]
     fn help_renders() {
-        assert!(dispatch(&sv(&["help"])).unwrap().contains("COMMANDS"));
+        assert!(dispatch(&sv(&["help"])).unwrap().text.contains("COMMANDS"));
     }
 
     #[test]
@@ -144,12 +166,12 @@ mod tests {
     #[test]
     fn table1_via_cli() {
         let out = dispatch(&sv(&["figure", "table1"])).unwrap();
-        assert!(out.contains("T_PU"));
+        assert!(out.text.contains("T_PU"));
     }
 
     #[test]
     fn info_lists_models() {
         let out = dispatch(&sv(&["info"])).unwrap();
-        assert!(out.contains("alexnet") && out.contains("googlenet"));
+        assert!(out.text.contains("alexnet") && out.text.contains("googlenet"));
     }
 }

@@ -9,6 +9,7 @@
 //! the input (one giant conv layer's chunks, say) therefore get
 //! redistributed instead of serializing behind whoever drew them.
 
+use crate::util::sync;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -79,9 +80,9 @@ pub fn parallel_map_with<T: Sync, R: Send>(
             scope.spawn(move || {
                 while let Some(i) = queue.pop(worker) {
                     match catch_unwind(AssertUnwindSafe(|| f(&items[i]))) {
-                        Ok(r) => *slots[i].lock().unwrap() = Some(r),
+                        Ok(r) => *sync::lock(&slots[i]) = Some(r),
                         Err(payload) => {
-                            let mut slot = first_panic.lock().unwrap();
+                            let mut slot = sync::lock(first_panic);
                             if slot.is_none() {
                                 *slot = Some(payload);
                             }
@@ -91,12 +92,13 @@ pub fn parallel_map_with<T: Sync, R: Send>(
             });
         }
     });
-    if let Some(payload) = first_panic.into_inner().unwrap() {
+    if let Some(payload) = sync::into_inner(first_panic) {
         resume_unwind(payload);
     }
     slots
         .into_iter()
-        .map(|s| s.into_inner().unwrap().expect("worker skipped a slot"))
+        // analyze: allow(panic_policy): scoped threads joined above and the queue partitions indexes, so every slot is filled
+        .map(|s| sync::into_inner(s).expect("worker skipped a slot"))
         .collect()
 }
 
@@ -131,7 +133,7 @@ impl StealQueue {
     fn pop(&self, me: usize) -> Option<usize> {
         loop {
             {
-                let mut own = self.ranges[me].lock().unwrap();
+                let mut own = sync::lock(&self.ranges[me]);
                 if own.0 < own.1 {
                     let i = own.0;
                     own.0 += 1;
@@ -149,7 +151,7 @@ impl StealQueue {
                 if w == me {
                     continue;
                 }
-                let r = range.lock().unwrap();
+                let r = sync::lock(range);
                 let rem = r.1 - r.0;
                 if rem > victim.map_or(0, |(_, best)| best) {
                     victim = Some((w, rem));
@@ -165,7 +167,7 @@ impl StealQueue {
             // Re-check under the victim's lock (it may have drained or
             // been stolen from since the scan), then take the top half.
             let (mid, hi) = {
-                let mut r = self.ranges[w].lock().unwrap();
+                let mut r = sync::lock(&self.ranges[w]);
                 let rem = r.1 - r.0;
                 if rem == 0 {
                     continue; // lost the race; rescan
@@ -179,7 +181,7 @@ impl StealQueue {
             // Publish the rest of the stolen half as our range BEFORE
             // returning, so it is invisible only for these few lines.
             {
-                let mut own = self.ranges[me].lock().unwrap();
+                let mut own = sync::lock(&self.ranges[me]);
                 debug_assert!(own.0 >= own.1, "stealing while local work remains");
                 *own = (mid + 1, hi);
             }

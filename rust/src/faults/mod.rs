@@ -113,7 +113,7 @@ impl Registry {
         if p.remaining.load(Ordering::Relaxed) == 0 {
             return false;
         }
-        if p.prob < 1.0 && !self.rng.lock().unwrap().chance(p.prob) {
+        if p.prob < 1.0 && !crate::util::sync::lock(&self.rng).chance(p.prob) {
             return false;
         }
         // Claim one shot; a concurrent evaluation that raced us past the
@@ -126,7 +126,7 @@ impl Registry {
     /// A seeded draw in `[0, bound)` for byte manglers, decorrelated per
     /// point name so two manglers armed together damage independently.
     fn draw(&self, name: &str, bound: u64) -> u64 {
-        self.rng.lock().unwrap().fork(name).below(bound)
+        crate::util::sync::lock(&self.rng).fork(name).below(bound)
     }
 }
 
@@ -135,7 +135,7 @@ static REGISTRY: OnceLock<Option<Registry>> = OnceLock::new();
 fn registry() -> Option<&'static Registry> {
     REGISTRY
         .get_or_init(|| {
-            let spec = std::env::var("CODR_FAULTS").ok()?;
+            let spec = crate::analysis::env_registry::var("CODR_FAULTS")?;
             if spec.trim().is_empty() {
                 return None;
             }
@@ -147,6 +147,7 @@ fn registry() -> Option<&'static Registry> {
                 Err(e) => {
                     // A malformed spec must not silently run a "chaos"
                     // test with no chaos in it.
+                    // analyze: allow(panic_policy): misconfiguration must fail loudly at arm time, not inject nothing
                     panic!("invalid CODR_FAULTS spec: {e}");
                 }
             }
@@ -174,6 +175,7 @@ pub fn point(name: &str) -> bool {
 #[inline]
 pub fn panic_point(name: &str) {
     if point(name) {
+        // analyze: allow(panic_policy): this panic IS the injected fault
         panic!("fault injected: {name}");
     }
 }

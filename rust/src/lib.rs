@@ -25,6 +25,11 @@
 //!   injection points at the durability seams (torn pack writes, memo
 //!   snapshot bit-rot, worker panics, stalled connections), armed via
 //!   `CODR_FAULTS`, zero-cost when unarmed;
+//! * the **project-invariant static analyzer** ([`analysis`]): a
+//!   dependency-free comment/string-aware lexer plus checks surfaced as
+//!   `codr analyze` — lock hierarchy, atomic-ordering audit, no-panic
+//!   request paths, fault-seam coverage, and the env-var registry that
+//!   generates the README table;
 //! * the **persistent sweep service** ([`serve`]): a content-addressed
 //!   result store (multi-writer safe via advisory pack locks), an
 //!   incremental grid scheduler with per-point progress observation,
@@ -35,6 +40,7 @@
 //! model and AOT-lowers it to HLO text in `artifacts/`; it never runs at
 //! simulation time.
 
+pub mod analysis;
 pub mod arch;
 pub mod baselines;
 pub mod cli;

@@ -538,7 +538,10 @@ impl VectorCache {
     /// it once per vector and thread it through; tests inject colliding
     /// values here to pin the fallback path.
     pub fn get_or_insert_keyed(&self, fp: Fp128, weights: &[i8]) -> &CachedVector {
-        let generation = self.generation.load(Ordering::Relaxed);
+        // Acquire pairs with the AcqRel bump in `flush`: a thread that
+        // observes the new generation also observes the cleared shards,
+        // so its stale L1 slots can never alias a post-flush insert.
+        let generation = self.generation.load(Ordering::Acquire);
         // L1: thread-local, lock-free, counter on a thread-pinned stripe.
         let l1 = L1.with(|tls| {
             let mut tls = tls.borrow_mut();
@@ -836,7 +839,7 @@ impl VectorCache {
             guard.side.clear();
         }
         self.entries.store(0, Ordering::Relaxed);
-        self.generation.fetch_add(1, Ordering::Relaxed);
+        self.generation.fetch_add(1, Ordering::AcqRel);
     }
 
     /// Cached distinct vectors (map residents, not arena slots).
@@ -868,8 +871,7 @@ pub const DEFAULT_SNAPSHOT_CAP_BYTES: u64 = 64 << 20;
 
 /// The snapshot size cap honoring `CODR_MEMO_SNAPSHOT_CAP_MB`.
 pub fn snapshot_cap_bytes() -> u64 {
-    std::env::var("CODR_MEMO_SNAPSHOT_CAP_MB")
-        .ok()
+    crate::analysis::env_registry::var("CODR_MEMO_SNAPSHOT_CAP_MB")
         .and_then(|v| v.parse::<u64>().ok())
         .map(|mb| mb << 20)
         .unwrap_or(DEFAULT_SNAPSHOT_CAP_BYTES)
@@ -1018,8 +1020,7 @@ fn validate_snapshot_parts(weights: &[i8], ucr: &UcrVector, size: &VectorSizeSta
 pub fn global() -> &'static VectorCache {
     static CACHE: OnceLock<VectorCache> = OnceLock::new();
     CACHE.get_or_init(|| {
-        let cap = std::env::var("CODR_MEMO_CAP")
-            .ok()
+        let cap = crate::analysis::env_registry::var("CODR_MEMO_CAP")
             .and_then(|v| v.parse::<usize>().ok())
             .unwrap_or(DEFAULT_CAPACITY);
         VectorCache::with_capacity(cap)

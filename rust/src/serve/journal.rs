@@ -31,6 +31,7 @@
 //! candidates replay as store hits).
 
 use crate::util::hash::fnv1a64;
+use crate::util::sync;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::Write;
@@ -92,6 +93,11 @@ impl Journal {
             compacted.push('\n');
         }
         let tmp = store_dir.join(format!(".{JOURNAL_FILE}.tmp-{}", std::process::id()));
+        // Injection seam: the compacted rewrite is torn mid-write.
+        // Replay tolerates a damaged tail by construction, so a crash
+        // here loses at most the last open record.
+        let mut compacted = compacted.into_bytes();
+        crate::faults::torn_point("journal.compact.torn", &mut compacted);
         if let Err(e) = std::fs::write(&tmp, &compacted) {
             let _ = std::fs::remove_file(&tmp);
             return Err(e).with_context(|| format!("writing {}", tmp.display()));
@@ -136,7 +142,7 @@ impl Journal {
     /// Append one framed record and fsync. Best-effort by policy: a
     /// full disk must degrade recovery, not take the server down.
     fn append(&self, rec: &Json) {
-        let mut guard = self.file.lock().unwrap();
+        let mut guard = sync::lock(&self.file);
         let line = frame(rec);
         if let Err(e) = writeln!(guard, "{line}").and_then(|_| guard.sync_data()) {
             eprintln!(

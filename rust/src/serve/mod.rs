@@ -46,7 +46,7 @@ use std::path::PathBuf;
 /// `results/store` under the working directory (next to the `--save`
 /// report artifacts).
 pub fn default_store_dir() -> PathBuf {
-    match std::env::var_os("CODR_STORE") {
+    match crate::analysis::env_registry::var("CODR_STORE") {
         Some(dir) if !dir.is_empty() => PathBuf::from(dir),
         _ => PathBuf::from("results").join("store"),
     }

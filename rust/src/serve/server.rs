@@ -48,8 +48,10 @@ use crate::codr::Codr;
 use crate::coordinator::{Arch, SweepStats};
 use crate::mapping::search::{enumerate_mappings, SearchConfig};
 use crate::models::{parse_group_list, LayerKind, SweepGroup};
+use crate::analysis::env_registry;
 use crate::reuse::memo;
 use crate::util::json::Json;
+use crate::util::sync;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, Write};
@@ -108,7 +110,7 @@ impl JobChannel {
 
     /// Publish one completed point.
     fn publish_point(&self, job: u64, p: &PointDone<'_>) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = sync::lock(&self.inner);
         if inner.closed {
             return;
         }
@@ -136,7 +138,7 @@ impl JobChannel {
     /// first close wins (the drain's force-close never clobbers a real
     /// `end` that already landed).
     fn close(&self, end: Json) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = sync::lock(&self.inner);
         if inner.closed {
             return;
         }
@@ -148,7 +150,7 @@ impl JobChannel {
     /// Event at `cursor`, blocking until it exists. `None` once the
     /// channel is closed and the history is exhausted.
     fn next(&self, cursor: usize) -> Option<Json> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = sync::lock(&self.inner);
         loop {
             if cursor < inner.events.len() {
                 return Some(inner.events[cursor].clone());
@@ -156,7 +158,7 @@ impl JobChannel {
             if inner.closed {
                 return None;
             }
-            inner = self.cond.wait(inner).unwrap();
+            inner = sync::wait(&self.cond, inner);
         }
     }
 }
@@ -209,10 +211,10 @@ pub struct Server {
 /// `CODR_MEMO_SNAPSHOT` (`off`/`0`/empty disables, any other value is a
 /// path override; unset defaults to `<store>/memo.snapshot`).
 pub fn memo_snapshot_path(store_dir: &Path) -> Option<std::path::PathBuf> {
-    match std::env::var("CODR_MEMO_SNAPSHOT") {
-        Ok(v) if v.is_empty() || v == "off" || v == "0" => None,
-        Ok(v) => Some(std::path::PathBuf::from(v)),
-        Err(_) => Some(store_dir.join("memo.snapshot")),
+    match env_registry::var("CODR_MEMO_SNAPSHOT") {
+        Some(v) if v.is_empty() || v == "off" || v == "0" => None,
+        Some(v) => Some(std::path::PathBuf::from(v)),
+        None => Some(store_dir.join("memo.snapshot")),
     }
 }
 
@@ -220,10 +222,10 @@ pub fn memo_snapshot_path(store_dir: &Path) -> Option<std::path::PathBuf> {
 /// `CODR_MEMO_SNAPSHOT_SECS` (default 300; `0`/`off` disables the
 /// periodic writer — the clean-shutdown snapshot still happens).
 fn memo_snapshot_period() -> Option<Duration> {
-    match std::env::var("CODR_MEMO_SNAPSHOT_SECS") {
-        Ok(v) if v == "0" || v == "off" => None,
-        Ok(v) => v.parse::<u64>().ok().map(Duration::from_secs),
-        Err(_) => Some(Duration::from_secs(300)),
+    match env_registry::var("CODR_MEMO_SNAPSHOT_SECS") {
+        Some(v) if v == "0" || v == "off" => None,
+        Some(v) => v.parse::<u64>().ok().map(Duration::from_secs),
+        None => Some(Duration::from_secs(300)),
     }
 }
 
@@ -231,8 +233,7 @@ fn memo_snapshot_period() -> Option<Duration> {
 /// terminal entries are pruned (their ids move to the expired ring).
 /// `CODR_SERVE_MAX_JOBS` overrides for tests.
 fn max_retained_jobs() -> usize {
-    std::env::var("CODR_SERVE_MAX_JOBS")
-        .ok()
+    env_registry::var("CODR_SERVE_MAX_JOBS")
         .and_then(|v| v.parse::<usize>().ok())
         .filter(|&n| n >= 2)
         .unwrap_or(256)
@@ -434,10 +435,7 @@ impl Server {
         let shared = &self.shared;
         let deadline = Instant::now() + self.drain;
         loop {
-            let running = shared
-                .jobs
-                .lock()
-                .unwrap()
+            let running = sync::lock(&shared.jobs)
                 .values()
                 .filter(|j| matches!(j.state, JobState::Running))
                 .count();
@@ -459,7 +457,7 @@ impl Server {
         // the bound holds even for stragglers (their handles are dropped,
         // i.e. detached — exactly the pre-drain behavior, but now it is
         // the bounded exception rather than the rule).
-        let handles: Vec<_> = std::mem::take(&mut *shared.workers.lock().unwrap());
+        let handles: Vec<_> = std::mem::take(&mut *sync::lock(&shared.workers));
         for h in handles {
             while !h.is_finished() && Instant::now() < deadline {
                 std::thread::sleep(Duration::from_millis(10));
@@ -469,7 +467,7 @@ impl Server {
             }
         }
         {
-            let jobs = shared.jobs.lock().unwrap();
+            let jobs = sync::lock(&shared.jobs);
             for (id, job) in jobs.iter() {
                 if matches!(job.state, JobState::Running) {
                     job.chan.close(Json::Obj(vec![
@@ -601,7 +599,7 @@ fn stream_events(chan: &JobChannel, writer: &mut impl Write) -> Result<()> {
 /// Resolve a `watch` request to its ack response and job channel.
 fn watch_attach(msg: &Json, shared: &Arc<Shared>) -> Result<(Json, Arc<JobChannel>)> {
     let id = msg.field("job")?.as_u64()?;
-    let jobs = shared.jobs.lock().unwrap();
+    let jobs = sync::lock(&shared.jobs);
     match jobs.get(&id) {
         Some(job) => Ok((
             ok_response(vec![
@@ -612,7 +610,7 @@ fn watch_attach(msg: &Json, shared: &Arc<Shared>) -> Result<(Json, Arc<JobChanne
             Arc::clone(&job.chan),
         )),
         None => {
-            if shared.expired.lock().unwrap().contains(&id) {
+            if sync::lock(&shared.expired).contains(&id) {
                 anyhow::bail!("job {id} expired (pruned from the job table); resubmit it")
             }
             anyhow::bail!("unknown job {id}")
@@ -683,7 +681,7 @@ fn warm(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
 /// async-job verb (`submit`, `map`).
 fn register_job(shared: &Arc<Shared>, chan: &Arc<JobChannel>) -> Result<u64> {
     let id = shared.next_job.fetch_add(1, Ordering::SeqCst);
-    let mut jobs = shared.jobs.lock().unwrap();
+    let mut jobs = sync::lock(&shared.jobs);
     // Checked under the jobs lock: the drain reads this table only
     // after `stop` is set, so either it observes the job inserted
     // below, or this check observes the stop and refuses — a job id
@@ -697,7 +695,7 @@ fn register_job(shared: &Arc<Shared>, chan: &Arc<JobChannel>) -> Result<u64> {
             .collect();
         finished.sort_unstable();
         let excess = jobs.len() + 1 - max_retained_jobs();
-        let mut expired = shared.expired.lock().unwrap();
+        let mut expired = sync::lock(&shared.expired);
         for old in finished.into_iter().take(excess) {
             jobs.remove(&old);
             if expired.len() == EXPIRED_RING {
@@ -718,7 +716,7 @@ fn register_job(shared: &Arc<Shared>, chan: &Arc<JobChannel>) -> Result<u64> {
 
 /// Track a spawned job worker so the shutdown drain can join it.
 fn track_worker(shared: &Shared, handle: std::thread::JoinHandle<()>) {
-    let mut workers = shared.workers.lock().unwrap();
+    let mut workers = sync::lock(&shared.workers);
     // Reap handles of long-finished workers so the list stays bounded on
     // a long-lived server (dropping a finished handle just detaches it).
     workers.retain(|h| !h.is_finished());
@@ -790,7 +788,7 @@ fn spawn_grid_job(shared: &Arc<Shared>, grid: GridRequest) -> Result<(u64, usize
                 ]),
             ),
         };
-        if let Some(job) = shared_worker.jobs.lock().unwrap().get_mut(&id) {
+        if let Some(job) = sync::lock(&shared_worker.jobs).get_mut(&id) {
             job.state = state;
         }
         if let Some(j) = &shared_worker.journal {
@@ -918,7 +916,7 @@ fn map_submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
                 ]),
             ),
         };
-        if let Some(job) = shared_worker.jobs.lock().unwrap().get_mut(&id) {
+        if let Some(job) = sync::lock(&shared_worker.jobs).get_mut(&id) {
             job.state = state;
         }
         worker_chan.close(end);
@@ -935,7 +933,7 @@ fn map_submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
 fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     if let Some(job) = msg.get("job") {
         let id = job.as_u64()?;
-        let state = shared.jobs.lock().unwrap().get(&id).map(|j| j.state.clone());
+        let state = sync::lock(&shared.jobs).get(&id).map(|j| j.state.clone());
         let mut fields = vec![("job".into(), Json::u64(id))];
         match state {
             Some(JobState::Running) => fields.push(("state".into(), Json::str("running"))),
@@ -952,7 +950,7 @@ fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
                 // A pruned terminal id and a never-issued id are
                 // different answers: the former is a completed job the
                 // client was too slow to poll, the latter a client bug.
-                if !shared.expired.lock().unwrap().contains(&id) {
+                if !sync::lock(&shared.expired).contains(&id) {
                     anyhow::bail!("unknown job {id}");
                 }
                 fields.push(("state".into(), Json::str("expired")));
@@ -960,7 +958,7 @@ fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
         }
         return Ok(ok_response(fields));
     }
-    let jobs = shared.jobs.lock().unwrap();
+    let jobs = sync::lock(&shared.jobs);
     let running = jobs
         .values()
         .filter(|j| matches!(j.state, JobState::Running))

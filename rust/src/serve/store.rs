@@ -73,7 +73,8 @@ fn sanitize(s: &str) -> String {
 /// so a store that must stay readable by a pre-v2 binary is never
 /// converted under it.
 fn legacy_v1_mode() -> bool {
-    std::env::var_os("CODR_STORE_WRITE_V1").is_some_and(|v| v == "1" || v == "true")
+    crate::analysis::env_registry::var("CODR_STORE_WRITE_V1")
+        .is_some_and(|v| v == "1" || v == "true")
 }
 
 /// The identity of one sweep point. Two keys are interchangeable iff
@@ -235,6 +236,7 @@ impl PackLock {
             first = false;
             match std::fs::OpenOptions::new()
                 .write(true)
+                // analyze: allow(fault_seams): advisory lock file, no data behind it; a crash leaves a stale lock reclaimed by takeover
                 .create_new(true)
                 .open(&path)
             {
@@ -262,6 +264,7 @@ impl PackLock {
                             // and put a live lock back if we stole one.
                             let grave = path
                                 .with_extension(format!("lock.stale-{}", std::process::id()));
+                            // analyze: allow(fault_seams): lock takeover; a crash strands a stale grave file, not data
                             if std::fs::rename(&path, &grave).is_ok() {
                                 let still_stale = std::fs::metadata(&grave)
                                     .and_then(|md| md.modified())
@@ -275,6 +278,7 @@ impl PackLock {
                                 // Stole a live lock: restore it (or drop
                                 // the grave if yet another lock already
                                 // took the path) and keep waiting.
+                                // analyze: allow(fault_seams): restores a stolen live lock; worst case is a stale lock
                                 if std::fs::rename(&grave, &path).is_err() {
                                     let _ = std::fs::remove_file(&grave);
                                 }
@@ -390,6 +394,7 @@ impl ResultStore {
     pub fn load(&self, key: &CacheKey) -> LoadOutcome {
         self.load_group(std::slice::from_ref(key))
             .pop()
+            // analyze: allow(panic_policy): load_group returns exactly one outcome per input key
             .expect("one outcome per key")
     }
 
@@ -512,7 +517,7 @@ impl ResultStore {
         new: Vec<(u64, Json)>,
         v1_cleanup: Vec<PathBuf>,
     ) -> Result<()> {
-        let guard = self.save_lock.lock().unwrap();
+        let guard = crate::util::sync::lock(&self.save_lock);
         let path = self.pack_path_for(pack_key);
         // In-process writers serialize on `save_lock`; the advisory file
         // lock extends the read-modify-write to writers in *other

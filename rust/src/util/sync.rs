@@ -1,0 +1,67 @@
+//! Poison-tolerant mutex helpers.
+//!
+//! The serve stack isolates per-point panics (`coordinator::pool`
+//! catches them and reports `state:"partial"`), so a panicked worker
+//! must not poison-cascade every later request into its own panic.
+//! These helpers recover the guard from a [`PoisonError`] — the data a
+//! panicking holder left behind is either a statistic, an idempotent
+//! map entry, or re-validated by the caller, so continuing is always
+//! safer here than propagating the panic. They are also what keeps the
+//! `panic_policy` analyzer check honest: request paths call
+//! `sync::lock(&m)` instead of sprinkling `.lock().unwrap()`.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering from poison.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv`, recovering from poison.
+pub fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Consume a mutex, recovering from poison.
+pub fn into_inner<T>(m: Mutex<T>) -> T {
+    m.into_inner().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Borrow the contents of an exclusively-held mutex, recovering from
+/// poison.
+pub fn get_mut<T>(m: &mut Mutex<T>) -> &mut T {
+    m.get_mut().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = std::sync::Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7);
+        let mut owned = Mutex::new(1u32);
+        *get_mut(&mut owned) = 2;
+        assert_eq!(into_inner(owned), 2);
+    }
+
+    #[test]
+    fn wait_passes_through() {
+        let m = Mutex::new(false);
+        let cv = Condvar::new();
+        let g = lock(&m);
+        let (g, timed_out) = cv
+            .wait_timeout(g, std::time::Duration::from_millis(1))
+            .unwrap_or_else(PoisonError::into_inner);
+        assert!(timed_out.timed_out());
+        drop(g);
+    }
+}

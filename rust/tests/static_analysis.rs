@@ -1,0 +1,170 @@
+//! Tier-1 gate for `codr analyze`: the tree itself must be clean, and
+//! every check must still fire on its known-bad fixture. The first half
+//! is the contract the CI deny-findings step enforces; the second half
+//! is the proof the analyzer has not gone quietly blind — a check that
+//! stops firing on its fixture would otherwise look exactly like a
+//! clean tree.
+
+use codr::analysis::{analyze_source, analyze_tree, default_src_root, Finding};
+
+fn checks(fs: &[Finding]) -> Vec<&'static str> {
+    fs.iter().map(|f| f.check).collect()
+}
+
+// ------------------------------------------------------------- the tree
+
+/// The repository's own source is clean: zero findings, and every waiver
+/// in the tree is honored (an unused or malformed waiver is itself a
+/// finding, so a clean report also means zero unexplained waivers).
+#[test]
+fn tree_is_clean() {
+    let root = default_src_root();
+    let report = analyze_tree(&root).expect("analyze_tree");
+    assert!(
+        report.files > 15,
+        "suspiciously few files under {}: {}",
+        root.display(),
+        report.files
+    );
+    assert!(
+        report.waivers_used >= 1,
+        "the tree carries justified waivers; honoring none means waiver \
+         matching broke"
+    );
+    assert!(
+        report.is_clean(),
+        "static analysis found violations:\n{}",
+        report.render()
+    );
+}
+
+// ------------------------------------------------- per-check known-bads
+
+#[test]
+fn lock_order_inversion_fires() {
+    let bad = "\
+impl S {
+    fn f(&self) {
+        let s = self.shard.lock();
+        let j = self.jobs.lock();
+    }
+}
+";
+    let fs = analyze_source("reuse/memo.rs", bad);
+    assert_eq!(checks(&fs), vec!["lock_order"], "{fs:?}");
+    assert_eq!((fs[0].file.as_str(), fs[0].line), ("reuse/memo.rs", 4));
+    assert!(fs[0].message.contains("inversion"), "{}", fs[0].message);
+
+    // The same locks in hierarchy order are legal.
+    let good = "\
+impl S {
+    fn f(&self) {
+        let j = self.jobs.lock();
+        let s = self.shard.lock();
+    }
+}
+";
+    assert!(analyze_source("reuse/memo.rs", good).is_empty());
+}
+
+#[test]
+fn relaxed_on_control_flag_fires() {
+    let bad = "fn f(s: &S) {\n    s.stop.store(true, Ordering::Relaxed);\n}\n";
+    let fs = analyze_source("serve/server.rs", bad);
+    assert_eq!(checks(&fs), vec!["atomics"], "{fs:?}");
+    assert_eq!((fs[0].file.as_str(), fs[0].line), ("serve/server.rs", 2));
+
+    // An allowlisted striped counter in its home file is silent…
+    let counter = "fn f(s: &S) {\n    s.l2_hits.fetch_add(1, Ordering::Relaxed);\n}\n";
+    assert!(analyze_source("reuse/memo.rs", counter).is_empty());
+    // …but the same receiver name outside that file still fires: the
+    // allowlist is (file, atomic) pairs, not bare names.
+    assert_eq!(checks(&analyze_source("serve/server.rs", counter)), vec!["atomics"]);
+}
+
+#[test]
+fn panics_in_no_panic_zones_fire() {
+    let bad = "fn f() {\n    let v = x.parse().unwrap();\n    panic!(\"boom\");\n}\n";
+    let fs = analyze_source("serve/scheduler.rs", bad);
+    assert_eq!(checks(&fs), vec!["panic_policy", "panic_policy"], "{fs:?}");
+    assert_eq!(fs[0].line, 2);
+    assert_eq!(fs[1].line, 3);
+
+    // The same source outside the no-panic zones is out of scope.
+    assert!(analyze_source("sim/mod.rs", bad).is_empty());
+    // #[cfg(test)] code inside the zone is exempt.
+    let test_only = "#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); }\n}\n";
+    assert!(analyze_source("serve/server.rs", test_only).is_empty());
+}
+
+#[test]
+fn uncovered_durability_edge_fires() {
+    let bad = "fn publish(a: &Path, b: &Path) {\n    std::fs::rename(a, b).ok();\n}\n";
+    let fs = analyze_source("serve/newfile.rs", bad);
+    assert_eq!(checks(&fs), vec!["fault_seams"], "{fs:?}");
+    assert_eq!(fs[0].line, 2);
+    assert!(fs[0].message.contains("fs::rename"), "{}", fs[0].message);
+
+    // A faults:: seam anywhere in the same function covers the edge.
+    let good = "\
+fn publish(a: &Path, b: &Path) {
+    crate::faults::sleep_point(\"publish.pre\");
+    std::fs::rename(a, b).ok();
+}
+";
+    assert!(analyze_source("serve/newfile.rs", good).is_empty());
+
+    // create_new is the other durability edge shape.
+    let create = "fn g(p: &Path) {\n    OpenOptions::new().create_new(true).open(p).ok();\n}\n";
+    assert_eq!(checks(&analyze_source("serve/newfile.rs", create)), vec!["fault_seams"]);
+}
+
+#[test]
+fn env_registry_checks_fire() {
+    // An unregistered CODR_* literal plus a direct std::env read: the
+    // name must be registered AND the read must route through
+    // analysis::env_registry::var, so both findings fire on one line.
+    let bad = "fn f() -> Option<String> {\n    std::env::var(\"CODR_UNREGISTERED_THING\").ok()\n}\n";
+    let fs = analyze_source("serve/newfile.rs", bad);
+    assert_eq!(checks(&fs), vec!["env_registry", "env_registry"], "{fs:?}");
+    assert!(fs.iter().all(|f| f.line == 2));
+    assert!(fs.iter().any(|f| f.message.contains("not in")), "{fs:?}");
+    assert!(fs.iter().any(|f| f.message.contains("route through")), "{fs:?}");
+
+    // A registered name read directly still fires the routing check.
+    let direct = "fn f() { std::env::var(\"CODR_STORE\").ok(); }\n";
+    let fs = analyze_source("serve/newfile.rs", direct);
+    assert_eq!(checks(&fs), vec!["env_registry"]);
+    assert!(fs[0].message.contains("route through"));
+
+    // The sanctioned path is silent.
+    let routed = "fn f() { crate::analysis::env_registry::var(\"CODR_STORE\"); }\n";
+    assert!(analyze_source("serve/newfile.rs", routed).is_empty());
+}
+
+// --------------------------------------------------------------- waivers
+
+#[test]
+fn waivers_silence_and_stay_honest() {
+    // A justified waiver on the line above silences exactly its check.
+    let waived = "\
+fn f() {
+    // analyze: allow(panic_policy): fixture — fires without this line
+    x.unwrap();
+}
+";
+    assert!(analyze_source("serve/x.rs", waived).is_empty());
+
+    // An unused waiver is a finding, not a no-op.
+    let unused = "// analyze: allow(atomics): nothing here uses atomics\nfn f() {}\n";
+    let fs = analyze_source("sim/x.rs", unused);
+    assert_eq!(checks(&fs), vec!["waiver"], "{fs:?}");
+    assert!(fs[0].message.contains("unused"));
+
+    // A malformed waiver (no reason) is reported AND the violation it
+    // meant to cover still fires — a typo never disables a check.
+    let malformed = "fn f() {\n    // analyze: allow(panic_policy)\n    x.unwrap();\n}\n";
+    let fs = analyze_source("serve/x.rs", malformed);
+    assert!(fs.iter().any(|f| f.check == "waiver"), "{fs:?}");
+    assert!(fs.iter().any(|f| f.check == "panic_policy"), "{fs:?}");
+}
