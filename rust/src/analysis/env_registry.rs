@@ -50,6 +50,11 @@ pub const ENV_VARS: &[EnvVar] = &[
         purpose: "Background memo-snapshot period in seconds; `0`/`off` disables the periodic writer",
     },
     EnvVar {
+        name: "CODR_SERVE_EXECUTORS",
+        default: "4",
+        purpose: "Executor-pool worker threads for `codr serve`; the server's thread count is fixed regardless of connected clients",
+    },
+    EnvVar {
         name: "CODR_SERVE_MAX_JOBS",
         default: "256",
         purpose: "Finished jobs retained for status polling before pruning to the expired ring",

@@ -119,6 +119,22 @@ impl Args {
         }
     }
 
+    /// Admission-queue bound for `codr serve` (`--max-queued`, default
+    /// 64). Caps *waiting* tasks only; past the cap, `submit`/`warm`/`map`
+    /// answer `state:"queued-full"` instead of queueing.
+    pub fn max_queued(&self) -> Result<usize> {
+        match self.get("max-queued") {
+            None => Ok(crate::serve::server::DEFAULT_MAX_QUEUED),
+            Some(s) => {
+                let n: usize = s.parse().context("--max-queued must be an integer")?;
+                if n == 0 {
+                    bail!("--max-queued must be at least 1");
+                }
+                Ok(n)
+            }
+        }
+    }
+
     /// Job id for `codr watch` (`--job`).
     pub fn job(&self) -> Result<u64> {
         self.get("job")
@@ -284,6 +300,22 @@ mod tests {
         assert!(Args::parse(&sv(&["--conn-timeout-secs", "-1"]))
             .unwrap()
             .conn_timeout_secs()
+            .is_err());
+    }
+
+    #[test]
+    fn max_queued_parsing() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.max_queued().unwrap(), crate::serve::server::DEFAULT_MAX_QUEUED);
+        let a = Args::parse(&sv(&["--max-queued", "3"])).unwrap();
+        assert_eq!(a.max_queued().unwrap(), 3);
+        assert!(Args::parse(&sv(&["--max-queued", "0"]))
+            .unwrap()
+            .max_queued()
+            .is_err());
+        assert!(Args::parse(&sv(&["--max-queued", "lots"]))
+            .unwrap()
+            .max_queued()
             .is_err());
     }
 

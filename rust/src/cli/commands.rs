@@ -258,7 +258,9 @@ fn map_remote(args: &Args, name: &str) -> Result<String> {
         fields.push(("quick".into(), Json::Bool(true)));
     }
     let retry = retry_policy(args)?;
-    let resp = proto::request_retry(addr, &Json::Obj(fields), &retry)?;
+    // `queued-full` refusals retry under the same budget as transport
+    // errors — a full admission queue is a transient condition.
+    let resp = proto::request_admitted(addr, &Json::Obj(fields), &retry)?;
     expect_ok(&resp)?;
     let job = resp.field("job")?.as_u64()?;
     let end = proto::watch_retry(addr, job, &retry, |ev| {
@@ -427,6 +429,7 @@ pub fn serve(args: &Args) -> Result<String> {
     let mut server = Server::bind_with(args.addr(), store)?;
     server.set_drain_secs(args.drain_secs()?);
     server.set_conn_timeout_secs(args.conn_timeout_secs()?);
+    server.set_max_queued(args.max_queued()?);
     // Announce before blocking so scripts can wait for readiness.
     let cap_note = match cap {
         Some(mb) => format!(", cap {mb} MiB"),
@@ -582,7 +585,10 @@ pub fn submit(args: &Args) -> Result<String> {
     let retry = retry_policy(args)?;
     let mut fields = vec![("verb".into(), Json::str("submit"))];
     fields.extend(grid_fields(args)?);
-    let resp = proto::request_retry(addr, &Json::Obj(fields), &retry)?;
+    // Admission-aware: a `queued-full` refusal backs off and retries
+    // under `--retries` instead of being treated as success or a hard
+    // failure with budget remaining.
+    let resp = proto::request_admitted(addr, &Json::Obj(fields), &retry)?;
     expect_ok(&resp)?;
     let job = resp.field("job")?.as_u64()?;
     let points = resp.field("points")?.as_u64()?;
@@ -636,7 +642,8 @@ pub fn warm(args: &Args) -> Result<String> {
     if args.get("addr").is_some() {
         let mut fields = vec![("verb".into(), Json::str("warm"))];
         fields.extend(grid_fields(args)?);
-        let resp = proto::request_retry(args.addr(), &Json::Obj(fields), &retry_policy(args)?)?;
+        let resp =
+            proto::request_admitted(args.addr(), &Json::Obj(fields), &retry_policy(args)?)?;
         expect_ok(&resp)?;
         let stats = proto::stats_from_json(resp.field("stats")?)?;
         return Ok(format!("warm (via {}): {}", args.addr(), render_stats(&stats)));

@@ -8,7 +8,7 @@
 //! codr compress --model <name> [--seed N]
 //! codr golden [--artifacts DIR] [--seed N]
 //! codr serve [--addr HOST:PORT] [--store DIR] [--store-cap-mb N] [--drain-secs N]
-//!           [--conn-timeout-secs N]
+//!           [--conn-timeout-secs N] [--max-queued N]
 //! codr submit [--addr HOST:PORT] [grid opts] [--watch | --wait] [--retries N]
 //! codr watch --job N [--addr HOST:PORT] [--retries N]
 //! codr warm [--addr HOST:PORT | --store DIR] [grid opts]
@@ -65,10 +65,13 @@ OPTIONS:
     --store-cap-mb N   serve: store size cap in MiB (oldest packs evicted)
     --drain-secs N     serve: shutdown drain bound in seconds (default 30)
     --conn-timeout-secs N
-                       serve: per-connection socket timeout (0 = unbounded)
+                       serve: idle-connection timeout (0 = unbounded)
+    --max-queued N     serve: admission-queue bound; past it, submit/warm/map
+                       answer state:\"queued-full\" (default 64)
     --addr HOST:PORT   Sweep service address        (default 127.0.0.1:7878)
-    --retries N        submit/watch/map: retry transport failures with
-                       exponential backoff (default 0 = fail fast)
+    --retries N        submit/watch/map: retry transport failures and
+                       queued-full refusals with exponential backoff
+                       (default 0 = fail fast)
     --job N            watch: job id to attach to
     --layer NAME       map: conv layer to search (default: first conv)
     --group G          map: single sweep group      (default Orig)

@@ -1,0 +1,272 @@
+//! Fixed-size executor pool with a bounded admission queue.
+//!
+//! The reactor (see [`crate::serve::reactor`]) never blocks: CPU-heavy work
+//! (sweep jobs, `map` searches, `warm` grids) is handed to this pool as
+//! boxed closures. The pool owns a **fixed** number of worker threads —
+//! `CODR_SERVE_EXECUTORS`, default 4 — so the server's thread count is
+//! independent of the number of connected clients.
+//!
+//! Admission is bounded: at most `cap` tasks may be **waiting** in the
+//! queue (tasks already running on a worker do not count). When the queue
+//! is full, [`Exec::submit`] refuses the task and the caller answers the
+//! client with `state:"queued-full"` instead of stalling intake. The cap
+//! is the `--max-queued` CLI switch.
+//!
+//! Shutdown is two-phase, mirroring the drain contract: a soft
+//! [`Exec::request_stop`] lets workers finish the queue and exit when it
+//! is empty, and a hard stop (deadline passed) makes workers exit before
+//! picking up any further queued task. Panics inside a task are contained
+//! with `catch_unwind` so one poisoned sweep cannot take a worker down.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::sync;
+
+/// A unit of work handed to the pool by the reactor.
+pub type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Default bound on the number of *waiting* tasks (`--max-queued`).
+pub const DEFAULT_MAX_QUEUED: usize = 64;
+
+/// Result of an admission attempt.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// The task was queued (or is about to run).
+    Accepted,
+    /// The queue was full; the task was dropped. Carries the queue length
+    /// observed at refusal time, for the `queued-full` answer.
+    QueuedFull(usize),
+}
+
+struct ExecQueue {
+    tasks: VecDeque<Task>,
+    /// Soft stop: finish queued tasks, then exit.
+    stop: bool,
+    /// Hard stop: exit without picking up further queued tasks.
+    halt: bool,
+}
+
+/// Fixed worker pool with bounded admission.
+pub struct Exec {
+    queue: Mutex<ExecQueue>,
+    ready: Condvar,
+    cap: AtomicUsize,
+    /// Tasks currently executing on a worker (gauge, for `status`).
+    active: AtomicUsize,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Default for Exec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Exec {
+    pub fn new() -> Self {
+        Exec {
+            queue: Mutex::new(ExecQueue { tasks: VecDeque::new(), stop: false, halt: false }),
+            ready: Condvar::new(),
+            cap: AtomicUsize::new(DEFAULT_MAX_QUEUED),
+            active: AtomicUsize::new(0),
+            threads: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Number of worker threads, from `CODR_SERVE_EXECUTORS` (default 4,
+    /// clamped to at least 1).
+    pub fn default_workers() -> usize {
+        crate::analysis::env_registry::var("CODR_SERVE_EXECUTORS")
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(4)
+            .max(1)
+    }
+
+    /// Set the admission cap (`--max-queued`), clamped to at least 1.
+    pub fn set_cap(&self, cap: usize) {
+        self.cap.store(cap.max(1), Ordering::SeqCst);
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap.load(Ordering::SeqCst)
+    }
+
+    /// Number of tasks waiting in the queue (not yet on a worker).
+    pub fn queue_len(&self) -> usize {
+        sync::lock(&self.queue).tasks.len()
+    }
+
+    /// Number of tasks currently executing on a worker.
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Number of live worker threads (reported by `status`).
+    pub fn workers(&self) -> usize {
+        sync::lock(&self.threads).len()
+    }
+
+    /// Spawn `n` worker threads. Called once from `Server::run`.
+    pub fn start(self: &std::sync::Arc<Self>, n: usize) {
+        let mut threads = sync::lock(&self.threads);
+        for i in 0..n.max(1) {
+            let pool = std::sync::Arc::clone(self);
+            let handle = std::thread::Builder::new()
+                .name(format!("codr-exec-{i}"))
+                .spawn(move || pool.worker_loop());
+            match handle {
+                Ok(h) => threads.push(h),
+                Err(e) => eprintln!("warn: could not spawn executor worker: {e}"),
+            }
+        }
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let task = {
+                let mut q = sync::lock(&self.queue);
+                loop {
+                    if q.halt || (q.stop && q.tasks.is_empty()) {
+                        return;
+                    }
+                    if let Some(t) = q.tasks.pop_front() {
+                        break t;
+                    }
+                    q = sync::wait(&self.ready, q);
+                }
+            };
+            self.active.fetch_add(1, Ordering::SeqCst);
+            // Tasks carry their own panic containment (sweep workers wrap
+            // the grid walk), but a belt-and-braces catch here keeps one
+            // misbehaving closure from killing the worker thread.
+            let _ = catch_unwind(AssertUnwindSafe(task));
+            self.active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Try to admit a task. Refuses with [`Admit::QueuedFull`] when the
+    /// number of waiting tasks has reached the cap, or when the pool is
+    /// stopping.
+    pub fn submit(&self, task: Task) -> Admit {
+        let cap = self.cap();
+        let mut q = sync::lock(&self.queue);
+        if q.stop || q.halt {
+            return Admit::QueuedFull(q.tasks.len());
+        }
+        if q.tasks.len() >= cap {
+            return Admit::QueuedFull(q.tasks.len());
+        }
+        q.tasks.push_back(task);
+        drop(q);
+        self.ready.notify_one();
+        Admit::Accepted
+    }
+
+    /// Enqueue past the admission cap. For work that must not be refused
+    /// once accepted: journal-recovered jobs, and submits the reactor
+    /// already admitted (capacity was checked before the job was registered
+    /// and journaled). Returns `false` only after a hard stop, when workers
+    /// will no longer pick the task up.
+    pub fn submit_unbounded(&self, task: Task) -> bool {
+        let mut q = sync::lock(&self.queue);
+        if q.halt {
+            return false;
+        }
+        q.tasks.push_back(task);
+        drop(q);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Soft stop: workers drain the queue, then exit. New submissions are
+    /// refused from this point on.
+    pub fn request_stop(&self) {
+        sync::lock(&self.queue).stop = true;
+        self.ready.notify_all();
+    }
+
+    /// Hard stop + join. Workers exit without picking up further queued
+    /// tasks; queued-but-never-run tasks are dropped (the journal re-queues
+    /// their jobs on the next start). Joins each worker until `deadline`,
+    /// then detaches stragglers (a task may be mid-sweep; the process is
+    /// exiting anyway).
+    pub fn shutdown(&self, deadline: Instant) {
+        {
+            let mut q = sync::lock(&self.queue);
+            q.stop = true;
+            q.halt = true;
+            q.tasks.clear();
+        }
+        self.ready.notify_all();
+        let handles = std::mem::take(&mut *sync::lock(&self.threads));
+        for h in handles {
+            while !h.is_finished() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            if h.is_finished() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    #[test]
+    fn admission_refuses_past_cap() {
+        // No workers started: every submitted task stays queued, so the
+        // admission decision is deterministic.
+        let pool = Arc::new(Exec::new());
+        pool.set_cap(2);
+        assert_eq!(pool.submit(Box::new(|| {})), Admit::Accepted);
+        assert_eq!(pool.submit(Box::new(|| {})), Admit::Accepted);
+        assert_eq!(pool.submit(Box::new(|| {})), Admit::QueuedFull(2));
+        assert_eq!(pool.queue_len(), 2);
+        pool.shutdown(Instant::now());
+    }
+
+    #[test]
+    fn workers_run_tasks_and_panics_are_contained() {
+        let pool = Arc::new(Exec::new());
+        pool.set_cap(16);
+        pool.start(2);
+        let (tx, rx) = mpsc::channel::<u32>();
+        let t1 = tx.clone();
+        assert_eq!(pool.submit(Box::new(move || panic!("contained"))), Admit::Accepted);
+        assert_eq!(
+            pool.submit(Box::new(move || {
+                t1.send(7).unwrap();
+            })),
+            Admit::Accepted
+        );
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), 7);
+        // Pool still functional after the panic.
+        let t2 = tx;
+        assert_eq!(
+            pool.submit(Box::new(move || {
+                t2.send(9).unwrap();
+            })),
+            Admit::Accepted
+        );
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), 9);
+        pool.request_stop();
+        pool.shutdown(Instant::now() + Duration::from_secs(5));
+        assert_eq!(pool.active(), 0);
+    }
+
+    #[test]
+    fn stop_refuses_new_work() {
+        let pool = Arc::new(Exec::new());
+        pool.request_stop();
+        assert!(matches!(pool.submit(Box::new(|| {})), Admit::QueuedFull(_)));
+    }
+}

@@ -1,0 +1,194 @@
+//! Per-verb latency/throughput counters for the serve layer.
+//!
+//! Every request dispatched by the reactor bumps a `requests` counter for
+//! its verb; the eventual answer bumps `answers` (ok) or `errors`
+//! (`ok:false`, including `queued-full` refusals), and the elapsed wall
+//! time lands in a fixed 16-bucket log-scale histogram from which `status`
+//! reports p50/p99. Conservation holds by construction:
+//! `requests == answers + errors` once the server is quiescent — the soak
+//! test pins this.
+//!
+//! Counters are monotonic and independent, so `Ordering::Relaxed` is
+//! sufficient; all relaxed accesses are funneled through the [`bump`] /
+//! [`read`] helpers, which carry the analyzer's allowlist entry.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Verbs tracked individually; anything unrecognized lands in `other`.
+pub const VERB_NAMES: [&str; 9] =
+    ["ping", "warm", "submit", "map", "watch", "status", "result", "shutdown", "other"];
+
+/// Upper bounds (inclusive) of the latency buckets, in microseconds.
+/// The last bucket is the overflow bucket.
+const BUCKET_BOUNDS_US: [u64; 15] = [
+    250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 500_000, 1_000_000,
+    2_500_000, 5_000_000, 10_000_000,
+];
+
+const BUCKETS: usize = BUCKET_BOUNDS_US.len() + 1;
+
+/// Map a verb string to its slot in [`VERB_NAMES`].
+pub fn verb_index(verb: &str) -> usize {
+    VERB_NAMES.iter().position(|v| *v == verb).unwrap_or(VERB_NAMES.len() - 1)
+}
+
+fn bucket_index(elapsed_us: u64) -> usize {
+    BUCKET_BOUNDS_US.iter().position(|b| elapsed_us <= *b).unwrap_or(BUCKETS - 1)
+}
+
+/// Increment a monotonic metrics counter. The single funnel for relaxed
+/// atomics in this module (see the module docs and the analyzer allowlist).
+fn bump(counter: &AtomicU64) {
+    counter.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Read a monotonic metrics counter (relaxed; see [`bump`]).
+fn read(counter: &AtomicU64) -> u64 {
+    counter.load(Ordering::Relaxed)
+}
+
+#[derive(Default)]
+struct VerbStat {
+    requests: AtomicU64,
+    answers: AtomicU64,
+    errors: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl VerbStat {
+    /// Upper bound (ms) of the bucket where the cumulative count first
+    /// reaches `q` of the total, or 0.0 when no samples were recorded.
+    fn quantile_ms(&self, counts: &[u64; BUCKETS], q: f64) -> f64 {
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return if i < BUCKET_BOUNDS_US.len() {
+                    BUCKET_BOUNDS_US[i] as f64 / 1000.0
+                } else {
+                    // Overflow bucket: report the last finite bound.
+                    BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1] as f64 / 1000.0
+                };
+            }
+        }
+        BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1] as f64 / 1000.0
+    }
+
+    fn to_json(&self) -> Json {
+        let counts: [u64; BUCKETS] = std::array::from_fn(|i| read(&self.buckets[i]));
+        Json::Obj(vec![
+            ("requests".into(), Json::u64(read(&self.requests))),
+            ("answers".into(), Json::u64(read(&self.answers))),
+            ("errors".into(), Json::u64(read(&self.errors))),
+            ("p50_ms".into(), Json::f64(self.quantile_ms(&counts, 0.50))),
+            ("p99_ms".into(), Json::f64(self.quantile_ms(&counts, 0.99))),
+        ])
+    }
+}
+
+/// Per-verb counters for the whole server; one instance lives in
+/// `serve::Shared` and is reported by the `status` verb.
+#[derive(Default)]
+pub struct Metrics {
+    verbs: [VerbStat; VERB_NAMES.len()],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Record a dispatched request; returns the verb slot for `finish`.
+    pub fn begin(&self, verb: &str) -> usize {
+        let idx = verb_index(verb);
+        bump(&self.verbs[idx].requests);
+        idx
+    }
+
+    /// Record the answer for a request begun at `started`. `ok` mirrors the
+    /// response's `ok` field (`queued-full` counts as an error).
+    pub fn finish(&self, idx: usize, started: Instant, ok: bool) {
+        let stat = &self.verbs[idx.min(VERB_NAMES.len() - 1)];
+        if ok {
+            bump(&stat.answers);
+        } else {
+            bump(&stat.errors);
+        }
+        let elapsed_us = started.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        bump(&stat.buckets[bucket_index(elapsed_us)]);
+    }
+
+    /// The `verbs` object surfaced by `status`.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            VERB_NAMES
+                .iter()
+                .enumerate()
+                .map(|(i, name)| ((*name).to_string(), self.verbs[i].to_json()))
+                .collect(),
+        )
+    }
+
+    /// Totals across all verbs: (requests, answers, errors).
+    pub fn totals(&self) -> (u64, u64, u64) {
+        let mut req = 0;
+        let mut ans = 0;
+        let mut err = 0;
+        for stat in &self.verbs {
+            req += read(&stat.requests);
+            ans += read(&stat.answers);
+            err += read(&stat.errors);
+        }
+        (req, ans, err)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verb_index_maps_known_and_other() {
+        assert_eq!(verb_index("ping"), 0);
+        assert_eq!(verb_index("shutdown"), 7);
+        assert_eq!(verb_index("frobnicate"), VERB_NAMES.len() - 1);
+    }
+
+    #[test]
+    fn counters_conserve_and_quantiles_report() {
+        let m = Metrics::new();
+        let t = Instant::now();
+        for _ in 0..9 {
+            let idx = m.begin("submit");
+            m.finish(idx, t, true);
+        }
+        let idx = m.begin("submit");
+        m.finish(idx, t, false);
+        let (req, ans, err) = m.totals();
+        assert_eq!(req, 10);
+        assert_eq!(ans + err, 10);
+        assert_eq!(err, 1);
+        let json = m.to_json();
+        let submit = json.get("submit").expect("submit verb present");
+        assert_eq!(submit.get("requests").unwrap().as_u64().unwrap(), 10);
+        assert!(submit.get("p50_ms").unwrap().as_f64().is_ok());
+        assert!(submit.get("p99_ms").unwrap().as_f64().is_ok());
+    }
+
+    #[test]
+    fn bucket_index_is_monotonic() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(250), 0);
+        assert_eq!(bucket_index(251), 1);
+        assert_eq!(bucket_index(10_000_000), BUCKETS - 2);
+        assert_eq!(bucket_index(10_000_001), BUCKETS - 1);
+    }
+}

@@ -19,6 +19,14 @@
 //!   `result` / `warm`), with `codr submit` / `codr watch` /
 //!   `codr warm` as clients; `shutdown` drains in-flight jobs and open
 //!   watchers (bounded by `--drain-secs`) before snapshotting the memo;
+//! * [`reactor`] / [`exec`] / [`metrics`] — the event-driven core: a
+//!   nonblocking readiness loop (epoll on Linux, portable `poll(2)`
+//!   fallback) owns every connection and streams watch events as
+//!   event-loop writes; CPU-heavy verbs run on a fixed executor pool
+//!   behind a bounded admission queue (`--max-queued`, refusals answer
+//!   `state:"queued-full"`), so the thread count is independent of the
+//!   number of clients; per-verb request/answer/error counters with
+//!   latency histograms surface in `status`;
 //! * [`journal`] — append-only, checksummed record of accepted sweep
 //!   jobs; on restart after a crash, journaled jobs that never reached a
 //!   terminal state are re-queued (the store diff turns the dead
@@ -28,8 +36,11 @@
 //! `codr warm --models tiny` followed by `codr figure headline --models
 //! tiny` renders the figure without a single `simulate_layer` call.
 
+pub(crate) mod exec;
 pub mod journal;
+pub(crate) mod metrics;
 pub mod proto;
+pub(crate) mod reactor;
 pub mod scheduler;
 pub mod server;
 pub mod store;

@@ -48,6 +48,13 @@
 //! terminal `end` event carries the search stats plus the full Pareto
 //! front under `map` (the `codr map --json` report shape).
 //!
+//! **Backpressure.** Admission to the server's executor pool is bounded
+//! (`--max-queued`): past the cap, `submit`/`map`/`warm` answer
+//! `{"ok":false,"state":"queued-full","queued":N,"max_queued":C,
+//! "error":...}` instead of stalling intake. `queued-full` is never a
+//! success: clients retry it under their `--retries` backoff
+//! ([`request_admitted`]) and exit nonzero when the budget runs out.
+//!
 //! The server-wide `status` reply keeps the flat `store_entries` field
 //! for pre-v2 clients; the structured `store` / `memo` objects are the
 //! forward surface (store occupancy in packed-v2 terms, the two-level
@@ -215,6 +222,29 @@ pub fn error_response(msg: impl Into<String>) -> Json {
     ])
 }
 
+/// The backpressure refusal: the executor's admission queue is at the
+/// cap. Carries `state:"queued-full"` so clients can distinguish "server
+/// busy, retry later" from a hard error, plus the observed queue depth.
+pub fn queued_full_response(queued: usize, cap: usize) -> Json {
+    Json::Obj(vec![
+        ("ok".into(), Json::Bool(false)),
+        ("state".into(), Json::str("queued-full")),
+        ("queued".into(), Json::usize(queued)),
+        ("max_queued".into(), Json::usize(cap)),
+        (
+            "error".into(),
+            Json::str(format!(
+                "admission queue full ({queued}/{cap} tasks queued); back off and retry"
+            )),
+        ),
+    ])
+}
+
+/// Is this response the server's bounded-admission refusal?
+pub fn is_queued_full(resp: &Json) -> bool {
+    matches!(resp.get("state").map(|s| s.as_str()), Some(Ok("queued-full")))
+}
+
 /// Read one line-delimited JSON value from a buffered reader. Returns
 /// `Ok(None)` on clean EOF.
 pub fn read_message(reader: &mut impl BufRead) -> Result<Option<Json>> {
@@ -328,6 +358,47 @@ pub fn request_retry(addr: &str, msg: &Json, retry: &Retry) -> Result<Json> {
                 std::thread::sleep(pause);
             }
         }
+    }
+}
+
+/// [`request_retry`] that also treats the server's `queued-full`
+/// backpressure refusal as retryable: transport failures and
+/// `state:"queued-full"` answers share one attempt budget with the same
+/// exponential backoff + seeded jitter, so a flooded server sheds load
+/// without clients hammering it in lockstep. Any other answered response
+/// (ok or error) returns immediately. When the budget runs out on
+/// `queued-full`, this fails — a refused submit is never a success.
+pub fn request_admitted(addr: &str, msg: &Json, retry: &Retry) -> Result<Json> {
+    let mut attempt = 0u32;
+    loop {
+        let failure = match request(addr, msg) {
+            Ok(resp) if !is_queued_full(&resp) => return Ok(resp),
+            Ok(resp) => {
+                let busy = resp
+                    .get("error")
+                    .and_then(|e| e.as_str().ok())
+                    .unwrap_or("admission queue full")
+                    .to_string();
+                if attempt >= retry.attempts {
+                    anyhow::bail!("{busy} (still queued-full after {} attempt(s))", attempt + 1);
+                }
+                busy
+            }
+            Err(e) => {
+                if attempt >= retry.attempts {
+                    return Err(e);
+                }
+                format!("{e:#}")
+            }
+        };
+        attempt += 1;
+        let pause = retry.backoff(attempt);
+        eprintln!(
+            "retry {attempt}/{}: {failure} — backing off {}ms",
+            retry.attempts,
+            pause.as_millis()
+        );
+        std::thread::sleep(pause);
     }
 }
 
@@ -576,6 +647,34 @@ mod tests {
         .unwrap_err();
         assert!(err.to_string().contains("connecting"), "{err:#}");
         assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+    }
+
+    #[test]
+    fn queued_full_shape_is_distinguishable() {
+        let resp = queued_full_response(3, 4);
+        assert!(is_queued_full(&resp));
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(resp.get("queued").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(resp.get("max_queued").unwrap().as_usize().unwrap(), 4);
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("3/4"));
+        assert!(!is_queued_full(&error_response("nope")));
+        assert!(!is_queued_full(&ok_response(vec![])));
+        // Wire roundtrip preserves the marker.
+        let back = Json::parse(&resp.to_string()).unwrap();
+        assert!(is_queued_full(&back));
+    }
+
+    #[test]
+    fn request_admitted_fails_fast_on_transport_with_no_budget() {
+        // Port 1 never listens; zero retries must surface the connect
+        // error immediately (queued-full handling shares this budget).
+        let err = request_admitted(
+            "127.0.0.1:1",
+            &Json::parse(r#"{"verb":"status"}"#).unwrap(),
+            &Retry::none(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("connecting"), "{err:#}");
     }
 
     #[test]

@@ -1,0 +1,1100 @@
+//! Nonblocking readiness loop for `codr serve`.
+//!
+//! The reactor is **one thread** owning every client socket. It multiplexes
+//! with `epoll(7)` on Linux (falling back to `poll(2)` if the kernel
+//! refuses an epoll fd) and plain `poll(2)` elsewhere — both via raw libc
+//! declarations, since the offline registry has no tokio/mio/libc crates.
+//!
+//! Each connection is a small state machine:
+//!
+//! * **Idle** — bytes accumulate in a read buffer; complete `\n`-terminated
+//!   JSON lines are parsed and dispatched. Cheap verbs (`ping`, `submit`,
+//!   `map`, `status`, `result`, `watch` attach, `shutdown`) are answered
+//!   inline on the reactor; answers land in a write buffer that flushes on
+//!   writability.
+//! * **AwaitWarm** — a `warm` grid is running on the executor pool
+//!   ([`crate::serve::exec`]); the finished stats come back through the
+//!   completion mailbox and the self-pipe waker.
+//! * **Watching** — the connection streams job events. Worker threads never
+//!   touch the socket: they publish to the job channel and ring the waker;
+//!   the reactor copies fresh events into the write buffer (`events_from`
+//!   cursor per watcher, so late attachment still replays exactly once).
+//!
+//! Idle connections are reaped by a lazy deadline heap (`--conn-timeout-secs`),
+//! and shutdown runs the same drain contract as the old thread-per-connection
+//! server: stop accepting, let running jobs/warms finish within
+//! `--drain-secs`, abandon stragglers with the exact same warning, then give
+//! watchers a short window to flush their terminal events.
+//!
+//! Locking note for `codr analyze`: the reactor's own state (connection map,
+//! deadline heap, poller registry) is single-threaded and lock-free; the only
+//! shared lock it introduces is the notifier `inbox`, a leaf like the job
+//! channels (never wraps another acquisition).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::io::{Read as _, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::serve::proto::{error_response, MAX_LINE_BYTES};
+use crate::serve::server::{self, JobChannel, Shared};
+use crate::util::json::Json;
+use crate::util::sync;
+
+// ------------------------------------------------------------------ syscalls
+
+/// Minimal libc surface: pipes, nonblocking fcntl, poll, and (Linux) epoll.
+/// The std runtime already links libc, so these resolve without a crate.
+mod sys {
+    #![allow(non_camel_case_types)]
+    use std::os::raw::{c_int, c_short, c_void};
+
+    #[cfg(target_os = "linux")]
+    pub type nfds_t = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    pub type nfds_t = std::os::raw::c_uint;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+    pub const POLLERR: c_short = 0x008;
+    pub const POLLHUP: c_short = 0x010;
+    pub const POLLNVAL: c_short = 0x020;
+
+    pub const F_GETFL: c_int = 3;
+    pub const F_SETFL: c_int = 4;
+    #[cfg(target_os = "linux")]
+    pub const O_NONBLOCK: c_int = 0x800;
+    #[cfg(not(target_os = "linux"))]
+    pub const O_NONBLOCK: c_int = 0x4;
+
+    #[cfg(target_os = "linux")]
+    pub const EPOLL_CLOEXEC: c_int = 0x80000;
+    #[cfg(target_os = "linux")]
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    #[cfg(target_os = "linux")]
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    #[cfg(target_os = "linux")]
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    #[cfg(target_os = "linux")]
+    pub const EPOLLIN: u32 = 0x001;
+    #[cfg(target_os = "linux")]
+    pub const EPOLLOUT: u32 = 0x004;
+    #[cfg(target_os = "linux")]
+    pub const EPOLLERR: u32 = 0x008;
+    #[cfg(target_os = "linux")]
+    pub const EPOLLHUP: u32 = 0x010;
+
+    /// `struct epoll_event`; packed on x86-64, natural alignment elsewhere.
+    #[cfg(target_os = "linux")]
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn poll(fds: *mut PollFd, nfds: nfds_t, timeout: c_int) -> c_int;
+        #[cfg(target_os = "linux")]
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        #[cfg(target_os = "linux")]
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        #[cfg(target_os = "linux")]
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+    }
+}
+
+fn set_nonblocking_fd(fd: RawFd) -> std::io::Result<()> {
+    let flags = unsafe { sys::fcntl(fd, sys::F_GETFL) };
+    if flags < 0 {
+        return Err(std::io::Error::last_os_error());
+    }
+    if unsafe { sys::fcntl(fd, sys::F_SETFL, flags | sys::O_NONBLOCK) } < 0 {
+        return Err(std::io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------------- poller
+
+/// What a registered fd should wake the loop for.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+/// A readiness event. Errors and hangups report as both readable and
+/// writable so the owning state machine discovers them on its next I/O.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+enum Backend {
+    /// Linux epoll instance (owned fd).
+    #[cfg(target_os = "linux")]
+    Epoll(RawFd),
+    /// Portable `poll(2)`: the fd set is rebuilt from `regs` each wait.
+    Poll,
+}
+
+/// Readiness multiplexer over raw fds, keyed by caller-chosen tokens.
+pub(crate) struct Poller {
+    backend: Backend,
+    regs: HashMap<usize, (RawFd, Interest)>,
+}
+
+impl Default for Poller {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Poller {
+    /// Prefer epoll on Linux; fall back to `poll(2)` if the kernel refuses
+    /// (containers occasionally filter the syscall) and everywhere else.
+    pub fn new() -> Poller {
+        #[cfg(target_os = "linux")]
+        {
+            let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+            if fd >= 0 {
+                return Poller { backend: Backend::Epoll(fd), regs: HashMap::new() };
+            }
+            eprintln!(
+                "warn: epoll unavailable ({}); serving via poll(2)",
+                std::io::Error::last_os_error()
+            );
+        }
+        Poller::poll_only()
+    }
+
+    /// Force the portable `poll(2)` backend (exercised by unit tests so the
+    /// fallback path stays honest on Linux CI too).
+    pub fn poll_only() -> Poller {
+        Poller { backend: Backend::Poll, regs: HashMap::new() }
+    }
+
+    pub fn register(&mut self, token: usize, fd: RawFd, interest: Interest) -> std::io::Result<()> {
+        #[cfg(target_os = "linux")]
+        if let Backend::Epoll(ep) = &self.backend {
+            let mut ev = sys::EpollEvent { events: epoll_mask(interest), data: token as u64 };
+            if unsafe { sys::epoll_ctl(*ep, sys::EPOLL_CTL_ADD, fd, &mut ev) } < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+        }
+        self.regs.insert(token, (fd, interest));
+        Ok(())
+    }
+
+    pub fn modify(&mut self, token: usize, interest: Interest) -> std::io::Result<()> {
+        let Some((fd, slot)) = self.regs.get_mut(&token) else {
+            return Ok(());
+        };
+        let fd = *fd;
+        *slot = interest;
+        #[cfg(target_os = "linux")]
+        if let Backend::Epoll(ep) = &self.backend {
+            let mut ev = sys::EpollEvent { events: epoll_mask(interest), data: token as u64 };
+            if unsafe { sys::epoll_ctl(*ep, sys::EPOLL_CTL_MOD, fd, &mut ev) } < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+        }
+        #[cfg(not(target_os = "linux"))]
+        let _ = fd;
+        Ok(())
+    }
+
+    pub fn deregister(&mut self, token: usize) {
+        let Some((fd, _)) = self.regs.remove(&token) else {
+            return;
+        };
+        #[cfg(target_os = "linux")]
+        if let Backend::Epoll(ep) = &self.backend {
+            let mut ev = sys::EpollEvent { events: 0, data: 0 };
+            // The fd may already be closed by the caller; a failed DEL is fine.
+            let _ = unsafe { sys::epoll_ctl(*ep, sys::EPOLL_CTL_DEL, fd, &mut ev) };
+        }
+        #[cfg(not(target_os = "linux"))]
+        let _ = fd;
+    }
+
+    /// Wait up to `timeout` and fill `out` with readiness events. A signal
+    /// interruption returns an empty set rather than an error.
+    pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> std::io::Result<()> {
+        out.clear();
+        let ms = i32::try_from(timeout.as_millis()).unwrap_or(i32::MAX);
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(ep) => {
+                const CAP: usize = 256;
+                let mut buf = [sys::EpollEvent { events: 0, data: 0 }; CAP];
+                let n = unsafe { sys::epoll_wait(*ep, buf.as_mut_ptr(), CAP as i32, ms) };
+                if n < 0 {
+                    let e = std::io::Error::last_os_error();
+                    if e.kind() == std::io::ErrorKind::Interrupted {
+                        return Ok(());
+                    }
+                    return Err(e);
+                }
+                for ev in buf.iter().take(n.max(0) as usize) {
+                    // Copy out of the (possibly packed) struct before use.
+                    let bits = { ev.events };
+                    let data = { ev.data };
+                    let err = bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0;
+                    out.push(Event {
+                        token: data as usize,
+                        readable: err || bits & sys::EPOLLIN != 0,
+                        writable: err || bits & sys::EPOLLOUT != 0,
+                    });
+                }
+                Ok(())
+            }
+            Backend::Poll => {
+                let mut fds: Vec<sys::PollFd> = Vec::with_capacity(self.regs.len());
+                let mut toks: Vec<usize> = Vec::with_capacity(self.regs.len());
+                for (tok, (fd, interest)) in &self.regs {
+                    let mut events = 0;
+                    if interest.read {
+                        events |= sys::POLLIN;
+                    }
+                    if interest.write {
+                        events |= sys::POLLOUT;
+                    }
+                    fds.push(sys::PollFd { fd: *fd, events, revents: 0 });
+                    toks.push(*tok);
+                }
+                let n = unsafe { sys::poll(fds.as_mut_ptr(), fds.len() as sys::nfds_t, ms) };
+                if n < 0 {
+                    let e = std::io::Error::last_os_error();
+                    if e.kind() == std::io::ErrorKind::Interrupted {
+                        return Ok(());
+                    }
+                    return Err(e);
+                }
+                for (pfd, tok) in fds.iter().zip(toks) {
+                    let r = pfd.revents;
+                    if r == 0 {
+                        continue;
+                    }
+                    let err = r & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0;
+                    out.push(Event {
+                        token: tok,
+                        readable: err || r & sys::POLLIN != 0,
+                        writable: err || r & sys::POLLOUT != 0,
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn epoll_mask(interest: Interest) -> u32 {
+    let mut m = 0;
+    if interest.read {
+        m |= sys::EPOLLIN;
+    }
+    if interest.write {
+        m |= sys::EPOLLOUT;
+    }
+    m
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        if let Backend::Epoll(ep) = &self.backend {
+            unsafe { sys::close(*ep) };
+        }
+    }
+}
+
+// --------------------------------------------------------------- self-pipe
+
+/// A finished background task (today: `warm` grids) addressed to the
+/// connection that requested it.
+pub(crate) struct Completion {
+    pub token: usize,
+    pub verb_idx: usize,
+    pub started: Instant,
+    pub response: Json,
+}
+
+/// Write half of the reactor's self-pipe plus the completion mailbox.
+/// Cloned (via `Arc`) into executor tasks and job channels; any thread can
+/// ring the reactor awake. Writes are nonblocking and fire-and-forget: a
+/// full pipe already guarantees a pending wakeup, and a closed pipe (reactor
+/// gone) returns `EPIPE` harmlessly because Rust ignores `SIGPIPE`.
+pub(crate) struct Notifier {
+    tx: RawFd,
+    inbox: Mutex<Vec<Completion>>,
+}
+
+impl Notifier {
+    /// Ring the reactor without queueing anything (job-channel publishes).
+    pub fn wake(&self) {
+        let byte = [1u8];
+        let _ = unsafe { sys::write(self.tx, byte.as_ptr().cast(), 1) };
+    }
+
+    /// Queue a completion for delivery on the loop, then ring it.
+    pub fn complete(&self, c: Completion) {
+        sync::lock(&self.inbox).push(c);
+        self.wake();
+    }
+
+    pub fn take_completions(&self) -> Vec<Completion> {
+        std::mem::take(&mut *sync::lock(&self.inbox))
+    }
+}
+
+impl Drop for Notifier {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.tx) };
+    }
+}
+
+/// Read half of the self-pipe, owned by the reactor.
+pub(crate) struct WakeRx(RawFd);
+
+impl WakeRx {
+    pub fn fd(&self) -> RawFd {
+        self.0
+    }
+
+    /// Drain every pending wakeup byte (nonblocking).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 256];
+        loop {
+            let n = unsafe { sys::read(self.0, buf.as_mut_ptr().cast(), buf.len()) };
+            if n < buf.len() as isize {
+                break;
+            }
+        }
+    }
+}
+
+impl Drop for WakeRx {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.0) };
+    }
+}
+
+/// Build the self-pipe: (reactor read half, shareable write half).
+pub(crate) fn wake_pair() -> std::io::Result<(WakeRx, Notifier)> {
+    let mut fds = [0 as std::os::raw::c_int; 2];
+    if unsafe { sys::pipe(fds.as_mut_ptr()) } != 0 {
+        return Err(std::io::Error::last_os_error());
+    }
+    let (rx, tx) = (fds[0], fds[1]);
+    for fd in [rx, tx] {
+        if let Err(e) = set_nonblocking_fd(fd) {
+            unsafe {
+                sys::close(rx);
+                sys::close(tx);
+            }
+            return Err(e);
+        }
+    }
+    Ok((WakeRx(rx), Notifier { tx, inbox: Mutex::new(Vec::new()) }))
+}
+
+// ---------------------------------------------------------------- connection
+
+const TOKEN_LISTENER: usize = 0;
+const TOKEN_WAKER: usize = 1;
+const FIRST_CONN_TOKEN: usize = 2;
+
+/// How long flushed terminal events get after the drain decision, matching
+/// the old server's watcher-flush window.
+const FLUSH_WINDOW: Duration = Duration::from_millis(500);
+
+pub(crate) enum ConnState {
+    /// Parsing request lines.
+    Idle,
+    /// A `warm` grid is on the executor pool; answer comes via completion.
+    AwaitWarm,
+    /// Streaming job events; `cursor` counts events already buffered.
+    Watching { chan: Arc<JobChannel>, cursor: usize },
+}
+
+struct Conn {
+    stream: TcpStream,
+    state: ConnState,
+    rbuf: Vec<u8>,
+    /// Bytes of `rbuf` already scanned for a newline (avoids rescans).
+    scanned: usize,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    interest: Interest,
+    last_activity: Instant,
+    close_after_flush: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            state: ConnState::Idle,
+            rbuf: Vec::new(),
+            scanned: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            interest: Interest { read: true, write: false },
+            last_activity: Instant::now(),
+            close_after_flush: false,
+            dead: false,
+        }
+    }
+
+    fn pending_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+}
+
+/// Write as much buffered output as the socket accepts right now. Errors
+/// (including a peer that vanished mid-stream) mark the connection dead so
+/// the sweep deregisters it promptly.
+fn flush_conn(conn: &mut Conn) {
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    if conn.wpos >= conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    } else if conn.wpos > 64 * 1024 {
+        conn.wbuf.drain(..conn.wpos);
+        conn.wpos = 0;
+    }
+}
+
+// ------------------------------------------------------------------ reactor
+
+enum Phase {
+    Serving,
+    /// Stop accepted; waiting for running jobs + warms within the deadline.
+    Draining { deadline: Instant },
+    /// Jobs settled (or abandoned); flushing terminal events to watchers.
+    Flushing { deadline: Instant },
+}
+
+struct Reactor {
+    shared: Arc<Shared>,
+    poller: Poller,
+    conns: HashMap<usize, Conn>,
+    /// Lazy idle-reap heap: (deadline, token), earliest first. Entries are
+    /// revalidated against `last_activity` when they surface, so stale ones
+    /// are harmless.
+    reap: BinaryHeap<Reverse<(Instant, usize)>>,
+    conn_timeout: Option<Duration>,
+    next_token: usize,
+}
+
+/// Drive the serve loop until shutdown completes. Owns every connection;
+/// returns after the drain/flush sequence.
+pub(crate) fn run_loop(
+    listener: &TcpListener,
+    shared: &Arc<Shared>,
+    wake: &WakeRx,
+    drain: Duration,
+    conn_timeout: Option<Duration>,
+) -> Result<()> {
+    listener.set_nonblocking(true).context("setting the listener nonblocking")?;
+    let mut r = Reactor {
+        shared: Arc::clone(shared),
+        poller: Poller::new(),
+        conns: HashMap::new(),
+        reap: BinaryHeap::new(),
+        conn_timeout,
+        next_token: FIRST_CONN_TOKEN,
+    };
+    r.poller
+        .register(TOKEN_LISTENER, listener.as_raw_fd(), Interest { read: true, write: false })
+        .context("registering the listener with the poller")?;
+    r.poller
+        .register(TOKEN_WAKER, wake.fd(), Interest { read: true, write: false })
+        .context("registering the wake pipe with the poller")?;
+
+    let mut phase = Phase::Serving;
+    let mut events: Vec<Event> = Vec::new();
+    loop {
+        let timeout = r.poll_timeout(&phase);
+        r.poller.wait(&mut events, timeout).context("waiting for readiness events")?;
+
+        let mut woke = false;
+        for ev in events.drain(..) {
+            match ev.token {
+                TOKEN_LISTENER => r.accept_ready(listener, matches!(phase, Phase::Serving)),
+                TOKEN_WAKER => woke = true,
+                tok => {
+                    if ev.readable {
+                        r.conn_readable(tok);
+                    }
+                    if ev.writable {
+                        r.conn_writable(tok);
+                    }
+                }
+            }
+        }
+        if woke {
+            wake.drain();
+            r.deliver_completions();
+            r.pump_watchers();
+        }
+        r.reap_idle();
+        r.sweep();
+
+        match phase {
+            Phase::Serving => {
+                if r.shared.stop.load(Ordering::SeqCst) {
+                    // Stop intake, let the pool finish what it holds.
+                    r.poller.deregister(TOKEN_LISTENER);
+                    r.shared.exec.request_stop();
+                    phase = Phase::Draining { deadline: Instant::now() + drain };
+                }
+            }
+            Phase::Draining { deadline } => {
+                let (running, warming) = server::running_and_warming(&r.shared);
+                let settled = running == 0 && warming == 0;
+                if settled || Instant::now() >= deadline {
+                    if !settled {
+                        eprintln!(
+                            "warn: drain deadline passed with {running} job(s) and \
+                             {warming} warm(s) still running; abandoning them"
+                        );
+                    }
+                    r.shared.exec.shutdown(deadline);
+                    server::force_close_running(&r.shared);
+                    r.deliver_completions();
+                    r.pump_watchers();
+                    r.sweep();
+                    phase =
+                        Phase::Flushing { deadline: deadline.max(Instant::now() + FLUSH_WINDOW) };
+                }
+            }
+            Phase::Flushing { deadline } => {
+                let flushed = r.conns.values().all(|c| {
+                    !c.pending_write() && !matches!(c.state, ConnState::Watching { .. })
+                });
+                if flushed || Instant::now() >= deadline {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+impl Reactor {
+    fn poll_timeout(&self, phase: &Phase) -> Duration {
+        let cap = match phase {
+            Phase::Serving => Duration::from_secs(1),
+            _ => Duration::from_millis(200),
+        };
+        match self.reap.peek() {
+            Some(&Reverse((deadline, _))) if self.conn_timeout.is_some() => {
+                cap.min(deadline.saturating_duration_since(Instant::now()))
+            }
+            _ => cap,
+        }
+    }
+
+    fn accept_ready(&mut self, listener: &TcpListener, serving: bool) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if !serving || stream.set_nonblocking(true).is_err() {
+                        continue; // dropped: refused during drain or unusable
+                    }
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    let fd = stream.as_raw_fd();
+                    let interest = Interest { read: true, write: false };
+                    if self.poller.register(token, fd, interest).is_err() {
+                        continue;
+                    }
+                    self.conns.insert(token, Conn::new(stream));
+                    self.shared.conns.fetch_add(1, Ordering::SeqCst);
+                    self.push_reap(token);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    eprintln!("warn: accept failed: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    fn conn_readable(&mut self, token: usize) {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        let mut chunk = [0u8; 4096];
+        loop {
+            // Backpressure: while an answer/stream is in flight, stop
+            // slurping once a full line's worth of pipelined bytes is held.
+            if !matches!(conn.state, ConnState::Idle) && conn.rbuf.len() >= MAX_LINE_BYTES {
+                break;
+            }
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&chunk[..n]);
+                    conn.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+        self.process_lines(token);
+    }
+
+    fn conn_writable(&mut self, token: usize) {
+        if let Some(conn) = self.conns.get_mut(&token) {
+            flush_conn(conn);
+        }
+    }
+
+    /// Parse and dispatch every complete line while the connection is Idle.
+    fn process_lines(&mut self, token: usize) {
+        loop {
+            let line = {
+                let Some(conn) = self.conns.get_mut(&token) else {
+                    return;
+                };
+                if conn.dead || conn.close_after_flush || !matches!(conn.state, ConnState::Idle) {
+                    return;
+                }
+                match conn.rbuf[conn.scanned..].iter().position(|b| *b == b'\n') {
+                    Some(off) => {
+                        let end = conn.scanned + off;
+                        let line: Vec<u8> = conn.rbuf.drain(..=end).collect();
+                        conn.scanned = 0;
+                        line
+                    }
+                    None => {
+                        conn.scanned = conn.rbuf.len();
+                        if conn.rbuf.len() > MAX_LINE_BYTES {
+                            let resp =
+                                error_response(format!("message exceeds {MAX_LINE_BYTES} bytes"));
+                            conn.close_after_flush = true;
+                            self.send(token, &resp);
+                        }
+                        return;
+                    }
+                }
+            };
+            let text = String::from_utf8_lossy(&line);
+            let text = text.trim();
+            if text.is_empty() {
+                continue;
+            }
+            let text = text.to_string();
+            self.dispatch(token, &text);
+        }
+    }
+
+    /// Handle one framed request line. The reactor answers most verbs
+    /// inline; `warm` rides the executor pool and `watch` re-parks the
+    /// connection as a streaming watcher.
+    fn dispatch(&mut self, token: usize, line: &str) {
+        crate::faults::sleep_point("serve.conn.stall", Duration::from_secs(2));
+        let msg = match Json::parse(line) {
+            Ok(m) => m,
+            Err(e) => {
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.close_after_flush = true;
+                }
+                self.send(token, &error_response(format!("{e:#}")));
+                return;
+            }
+        };
+        let verb = msg
+            .get("verb")
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or_default()
+            .to_string();
+        let started = Instant::now();
+        let idx = self.shared.metrics.begin(&verb);
+        match verb.as_str() {
+            "watch" => match server::watch_attach(&msg, &self.shared) {
+                Ok((ack, chan)) => {
+                    self.shared.metrics.finish(idx, started, true);
+                    self.send(token, &ack);
+                    self.shared.watchers.fetch_add(1, Ordering::SeqCst);
+                    if let Some(conn) = self.conns.get_mut(&token) {
+                        conn.state = ConnState::Watching { chan, cursor: 0 };
+                    } else {
+                        self.shared.watchers.fetch_sub(1, Ordering::SeqCst);
+                        return;
+                    }
+                    self.pump_one(token);
+                }
+                Err(e) => {
+                    self.shared.metrics.finish(idx, started, false);
+                    self.send(token, &error_response(format!("{e:#}")));
+                }
+            },
+            "warm" => match server::warm_enqueue(&msg, &self.shared, token, idx, started) {
+                None => {
+                    if let Some(conn) = self.conns.get_mut(&token) {
+                        conn.state = ConnState::AwaitWarm;
+                    }
+                }
+                Some(resp) => {
+                    self.shared.metrics.finish(idx, started, resp_ok(&resp));
+                    self.send(token, &resp);
+                }
+            },
+            _ => {
+                let resp = server::handle_request(&msg, &self.shared);
+                self.shared.metrics.finish(idx, started, resp_ok(&resp));
+                self.send(token, &resp);
+            }
+        }
+        // Mirror the blocking server: once stop is set, a connection closes
+        // after its in-flight answer; watch/warm streams settle first.
+        if self.shared.stop.load(Ordering::SeqCst) {
+            if let Some(conn) = self.conns.get_mut(&token) {
+                if matches!(conn.state, ConnState::Idle) {
+                    conn.close_after_flush = true;
+                }
+            }
+        }
+    }
+
+    /// Deliver finished executor tasks to their connections. Metrics are
+    /// recorded even when the requester hung up, so conservation holds.
+    fn deliver_completions(&mut self) {
+        for c in self.shared.notify.take_completions() {
+            self.shared.metrics.finish(c.verb_idx, c.started, resp_ok(&c.response));
+            let awaiting = matches!(
+                self.conns.get(&c.token).map(|conn| &conn.state),
+                Some(ConnState::AwaitWarm)
+            );
+            if !awaiting {
+                continue;
+            }
+            if let Some(conn) = self.conns.get_mut(&c.token) {
+                conn.state = ConnState::Idle;
+                conn.last_activity = Instant::now();
+            }
+            self.push_reap(c.token);
+            self.send(c.token, &c.response);
+            if self.shared.stop.load(Ordering::SeqCst) {
+                if let Some(conn) = self.conns.get_mut(&c.token) {
+                    conn.close_after_flush = true;
+                }
+            }
+            self.process_lines(c.token);
+        }
+    }
+
+    fn pump_watchers(&mut self) {
+        let tokens: Vec<usize> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| matches!(c.state, ConnState::Watching { .. }))
+            .map(|(t, _)| *t)
+            .collect();
+        for token in tokens {
+            self.pump_one(token);
+            let idle = matches!(
+                self.conns.get(&token).map(|c| &c.state),
+                Some(ConnState::Idle)
+            );
+            if idle {
+                self.process_lines(token);
+            }
+        }
+    }
+
+    /// Copy fresh channel events into one watcher's write buffer; detach the
+    /// watcher when the stream ends (or the drop fault seam fires).
+    fn pump_one(&mut self, token: usize) {
+        let (events, closed) = {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                return;
+            };
+            let ConnState::Watching { chan, cursor } = &mut conn.state else {
+                return;
+            };
+            let (events, closed) = chan.events_from(*cursor);
+            *cursor += events.len();
+            (events, closed)
+        };
+        for ev in &events {
+            self.send(token, ev);
+            if crate::faults::point("serve.watch.drop") {
+                eprintln!(
+                    "warn: connection ended with error: fault injected: serve.watch.drop"
+                );
+                self.shared.watchers.fetch_sub(1, Ordering::SeqCst);
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.state = ConnState::Idle;
+                    conn.close_after_flush = true;
+                }
+                return;
+            }
+        }
+        if closed {
+            self.shared.watchers.fetch_sub(1, Ordering::SeqCst);
+            if let Some(conn) = self.conns.get_mut(&token) {
+                conn.state = ConnState::Idle;
+                conn.last_activity = Instant::now();
+                if self.shared.stop.load(Ordering::SeqCst) {
+                    conn.close_after_flush = true;
+                }
+            }
+            self.push_reap(token);
+        }
+    }
+
+    /// Append one line-framed JSON message and flush opportunistically.
+    fn send(&mut self, token: usize, msg: &Json) {
+        if let Some(conn) = self.conns.get_mut(&token) {
+            conn.wbuf.extend_from_slice(msg.to_string().as_bytes());
+            conn.wbuf.push(b'\n');
+            flush_conn(conn);
+        }
+    }
+
+    fn push_reap(&mut self, token: usize) {
+        let Some(timeout) = self.conn_timeout else {
+            return;
+        };
+        if let Some(conn) = self.conns.get(&token) {
+            self.reap.push(Reverse((conn.last_activity + timeout, token)));
+        }
+    }
+
+    /// Pop due deadlines; kill connections that sat Idle past the timeout.
+    /// Busy connections (mid-warm, watching) are skipped — they re-enter the
+    /// heap when they return to Idle.
+    fn reap_idle(&mut self) {
+        let Some(timeout) = self.conn_timeout else {
+            return;
+        };
+        let now = Instant::now();
+        while let Some(&Reverse((deadline, token))) = self.reap.peek() {
+            if deadline > now {
+                break;
+            }
+            self.reap.pop();
+            let verdict = match self.conns.get(&token) {
+                None => None,
+                Some(conn) => {
+                    if !matches!(conn.state, ConnState::Idle) || conn.close_after_flush {
+                        None // re-armed on the next Idle transition
+                    } else {
+                        Some(conn.last_activity + timeout)
+                    }
+                }
+            };
+            match verdict {
+                Some(due) if due <= now => {
+                    if let Some(conn) = self.conns.get_mut(&token) {
+                        conn.dead = true;
+                    }
+                }
+                Some(due) => self.reap.push(Reverse((due, token))),
+                None => {}
+            }
+        }
+    }
+
+    /// Post-iteration housekeeping: finish pending closes, reconcile poller
+    /// interest with each connection's buffers, drop dead connections.
+    fn sweep(&mut self) {
+        let mut dead: Vec<usize> = Vec::new();
+        for (token, conn) in self.conns.iter_mut() {
+            if !conn.dead && conn.close_after_flush && !conn.pending_write() {
+                conn.dead = true;
+            }
+            if conn.dead {
+                dead.push(*token);
+                continue;
+            }
+            let want = Interest {
+                read: matches!(conn.state, ConnState::Idle | ConnState::AwaitWarm)
+                    || conn.rbuf.len() < MAX_LINE_BYTES,
+                write: conn.pending_write(),
+            };
+            if want != conn.interest {
+                conn.interest = want;
+                let _ = self.poller.modify(*token, want);
+            }
+        }
+        for token in dead {
+            self.remove_conn(token);
+        }
+    }
+
+    fn remove_conn(&mut self, token: usize) {
+        self.poller.deregister(token);
+        if let Some(conn) = self.conns.remove(&token) {
+            if matches!(conn.state, ConnState::Watching { .. }) {
+                self.shared.watchers.fetch_sub(1, Ordering::SeqCst);
+            }
+            self.shared.conns.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+fn resp_ok(msg: &Json) -> bool {
+    msg.get("ok").and_then(|v| v.as_bool().ok()).unwrap_or(false)
+}
+
+// -------------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw_pipe() -> (RawFd, RawFd) {
+        let mut fds = [0 as std::os::raw::c_int; 2];
+        assert_eq!(unsafe { sys::pipe(fds.as_mut_ptr()) }, 0);
+        set_nonblocking_fd(fds[0]).unwrap();
+        set_nonblocking_fd(fds[1]).unwrap();
+        (fds[0], fds[1])
+    }
+
+    fn close_fd(fd: RawFd) {
+        unsafe { sys::close(fd) };
+    }
+
+    fn poller_sees_readable(mut poller: Poller) {
+        let (rx, tx) = raw_pipe();
+        poller.register(7, rx, Interest { read: true, write: false }).unwrap();
+
+        // Nothing written yet: a short wait reports no events.
+        let mut events = Vec::new();
+        poller.wait(&mut events, Duration::from_millis(10)).unwrap();
+        assert!(events.iter().all(|e| e.token != 7));
+
+        let byte = [9u8];
+        assert_eq!(unsafe { sys::write(tx, byte.as_ptr().cast(), 1) }, 1);
+        poller.wait(&mut events, Duration::from_millis(1000)).unwrap();
+        let ev = events.iter().find(|e| e.token == 7).expect("readable event");
+        assert!(ev.readable);
+
+        // Interest off: the pending byte no longer reports.
+        poller.modify(7, Interest { read: false, write: false }).unwrap();
+        poller.wait(&mut events, Duration::from_millis(10)).unwrap();
+        assert!(events.iter().all(|e| e.token != 7));
+
+        poller.deregister(7);
+        close_fd(rx);
+        close_fd(tx);
+    }
+
+    #[test]
+    fn default_backend_reports_readiness() {
+        poller_sees_readable(Poller::new());
+    }
+
+    #[test]
+    fn poll_fallback_backend_reports_readiness() {
+        poller_sees_readable(Poller::poll_only());
+    }
+
+    #[test]
+    fn writable_interest_reports_on_empty_pipe() {
+        for mut poller in [Poller::new(), Poller::poll_only()] {
+            let (rx, tx) = raw_pipe();
+            poller.register(3, tx, Interest { read: false, write: true }).unwrap();
+            let mut events = Vec::new();
+            poller.wait(&mut events, Duration::from_millis(1000)).unwrap();
+            let ev = events.iter().find(|e| e.token == 3).expect("writable event");
+            assert!(ev.writable);
+            poller.deregister(3);
+            close_fd(rx);
+            close_fd(tx);
+        }
+    }
+
+    #[test]
+    fn wake_pair_delivers_completions() {
+        let (rx, notifier) = wake_pair().unwrap();
+        let mut poller = Poller::new();
+        poller.register(TOKEN_WAKER, rx.fd(), Interest { read: true, write: false }).unwrap();
+
+        notifier.complete(Completion {
+            token: 42,
+            verb_idx: 0,
+            started: Instant::now(),
+            response: Json::Obj(vec![("ok".into(), Json::Bool(true))]),
+        });
+        notifier.wake(); // extra rings coalesce harmlessly
+
+        let mut events = Vec::new();
+        poller.wait(&mut events, Duration::from_millis(1000)).unwrap();
+        assert!(events.iter().any(|e| e.token == TOKEN_WAKER && e.readable));
+        rx.drain();
+        let got = notifier.take_completions();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].token, 42);
+        assert!(notifier.take_completions().is_empty());
+
+        // Drained: no further readiness from the pipe.
+        poller.wait(&mut events, Duration::from_millis(10)).unwrap();
+        assert!(events.iter().all(|e| e.token != TOKEN_WAKER));
+    }
+
+    #[test]
+    fn wake_after_receiver_closed_is_harmless() {
+        let (rx, notifier) = wake_pair().unwrap();
+        drop(rx);
+        notifier.wake(); // EPIPE is swallowed (std ignores SIGPIPE)
+    }
+}

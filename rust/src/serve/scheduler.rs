@@ -39,7 +39,9 @@
 //! [`Scheduler::run_grid_observed`] fires a [`Progress`] callback the
 //! moment each point resolves (store hit, streaming per-point assembly,
 //! or dedup) — the serve `submit` path publishes these into per-job
-//! broadcast channels, which is what the `watch` verb streams.
+//! broadcast channels. Each publish pokes the reactor's wake pipe, and
+//! the event loop fans the new events out to every watching connection
+//! as nonblocking writes; no thread ever parks on a job channel.
 
 use super::store::{CacheKey, LoadOutcome, ResultStore};
 use crate::arch::MemConfig;

@@ -1,46 +1,61 @@
 //! The long-running sweep service behind `codr serve`.
 //!
-//! Blocking std::net (tokio is unavailable offline): a poll-accept loop
-//! hands each connection to its own thread; every connection can issue
-//! any number of line-delimited JSON requests. All connections share one
-//! [`Scheduler`], so the in-flight dedup spans clients — two clients
-//! warming the same grid simulate it once.
+//! **Event-driven core.** One reactor thread (see [`super::reactor`]) owns
+//! every client socket behind an epoll/poll readiness loop: nonblocking
+//! line-JSON framing in per-connection read buffers, answers staged in
+//! write buffers that flush on writability. CPU-heavy work — `submit` and
+//! `map` jobs, `warm` grids — runs on a fixed executor pool
+//! ([`super::exec`], `CODR_SERVE_EXECUTORS` workers), so the server's
+//! thread count is independent of the number of connected clients. All
+//! work shares one [`Scheduler`], so the in-flight dedup spans clients —
+//! two clients warming the same grid simulate it once.
 //!
-//! Verbs: `ping`, `warm` (synchronous sweep), `submit` (async job),
-//! `map` (async mapping-space search job), `watch` (stream a job's
-//! per-point progress), `status` (job or server), `result` (store
-//! lookup), `shutdown`.
+//! Verbs: `ping`, `warm` (pooled sweep, answered when it finishes),
+//! `submit` (async job), `map` (async mapping-space search job), `watch`
+//! (stream a job's per-point progress), `status` (job or server, including
+//! per-verb latency counters), `result` (store lookup), `shutdown`.
+//!
+//! **Admission is bounded.** At most `--max-queued` tasks may wait for an
+//! executor; past that, `submit`/`map`/`warm` answer
+//! `ok:false, state:"queued-full"` instead of stalling intake. Refused
+//! submits are never journaled and burn no job ids — the client retries
+//! under its own `--retries` backoff.
 //!
 //! **Job progress is a broadcast, not a poll.** Every submitted job owns
-//! a [`JobChannel`]: the scheduler's per-point completion path (the
-//! worker that finishes a point's last layer) publishes one `point`
-//! event into it, and any number of `watch` connections replay the
-//! event history and then stream live until the terminal `end` event.
-//! A watcher that attaches late — even after the job finished — sees
-//! the identical sequence.
+//! a [`JobChannel`]: the scheduler's per-point completion path publishes
+//! one `point` event into it and rings the reactor's self-pipe; the
+//! reactor copies fresh events into every watching connection's write
+//! buffer. A watcher that attaches late — even after the job finished —
+//! sees the identical sequence; a watcher whose socket dies mid-stream is
+//! deregistered on the next write.
 //!
 //! **Shutdown drains.** A `shutdown` request stops intake (new `submit`
-//! and `warm` requests are refused, the accept loop exits), then waits —
-//! bounded by `--drain-secs` — for running jobs to finish, joins their
-//! worker threads, force-closes the channels of anything still running
-//! so watchers terminate, and only then snapshots the memo. Results of
-//! in-flight work are persisted, workers are never orphaned mid-sweep,
-//! and the snapshot is written once, after the memo stopped changing.
+//! and `warm` requests are refused, the listener is deregistered), then
+//! waits — bounded by `--drain-secs` — for running jobs and warms to
+//! finish, stops the executor pool, force-closes the channels of anything
+//! still running so watchers terminate, and only then snapshots the memo.
+//! Results of in-flight work are persisted, workers are never orphaned
+//! mid-sweep, and the snapshot is written once, after the memo stopped
+//! changing.
 //!
 //! **Crash restart is journaled.** Accepted sweep jobs are recorded in
 //! an append-only, checksummed journal (`<store>/jobs.journal`, see
 //! [`super::journal`]); at startup, jobs the previous process never
-//! finished are re-queued under fresh ids, and the store diff turns
-//! whatever the dead process persisted into cache hits. A sweep whose
-//! points partially panicked (contained per point by the scheduler)
-//! finishes as `state:"partial"`. `--conn-timeout-secs` bounds
-//! per-connection socket reads and writes so a stalled client cannot
-//! pin its thread forever.
+//! finished are re-queued under fresh ids (bypassing the admission cap —
+//! an acked job is never refused), and the store diff turns whatever the
+//! dead process persisted into cache hits. A sweep whose points partially
+//! panicked (contained per point by the scheduler) finishes as
+//! `state:"partial"`. `--conn-timeout-secs` reaps idle connections via
+//! the reactor's deadline heap so a stalled client cannot hold its slot
+//! forever.
 
+use super::exec::Exec;
 use super::journal::Journal;
+use super::metrics::Metrics;
 use super::proto::{
-    error_response, ok_response, read_message, stats_to_json, write_message, GridRequest,
+    error_response, ok_response, queued_full_response, stats_to_json, GridRequest,
 };
+use super::reactor::{self, Completion, Notifier, WakeRx};
 use super::scheduler::{PointDone, Scheduler};
 use super::store::{CacheKey, LoadOutcome, ResultStore};
 use crate::arch::MemConfig;
@@ -54,12 +69,13 @@ use crate::util::json::Json;
 use crate::util::sync;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
-use std::io::{BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+pub use super::exec::DEFAULT_MAX_QUEUED;
 
 /// Default bound on how long `shutdown` waits for in-flight jobs and
 /// open watchers before abandoning them (`--drain-secs` overrides; 0
@@ -75,15 +91,18 @@ enum JobState {
 }
 
 /// Per-job broadcast channel: the submit worker publishes one `point`
-/// event per completed sweep point and a terminal `end` event; watchers
-/// replay the buffered history and then block for live events. Events
-/// are buffered for the job's lifetime (a job is at most the paper grid
-/// — tens of points — so the history is small), which is what makes a
-/// late `watch` identical to an early one.
-struct JobChannel {
+/// event per completed sweep point and a terminal `end` event. Watchers
+/// never block on it — each watching connection keeps a cursor and the
+/// reactor copies `events_from(cursor)` into its write buffer whenever
+/// the self-pipe rings. Events are buffered for the job's lifetime (a
+/// job is at most the paper grid — tens of points — so the history is
+/// small), which is what makes a late `watch` identical to an early one.
+pub(crate) struct JobChannel {
     total: usize,
     inner: Mutex<ChannelInner>,
-    cond: Condvar,
+    /// Rings the reactor after every publish so watcher buffers fill
+    /// promptly. A leaf lock/fd pair: never wraps another acquisition.
+    notify: Arc<Notifier>,
 }
 
 struct ChannelInner {
@@ -96,7 +115,7 @@ struct ChannelInner {
 }
 
 impl JobChannel {
-    fn new(total: usize) -> JobChannel {
+    fn new(total: usize, notify: Arc<Notifier>) -> JobChannel {
         JobChannel {
             total,
             inner: Mutex::new(ChannelInner {
@@ -104,62 +123,64 @@ impl JobChannel {
                 points: 0,
                 closed: false,
             }),
-            cond: Condvar::new(),
+            notify,
         }
     }
 
     /// Publish one completed point.
     fn publish_point(&self, job: u64, p: &PointDone<'_>) {
-        let mut inner = sync::lock(&self.inner);
-        if inner.closed {
-            return;
+        {
+            let mut inner = sync::lock(&self.inner);
+            if inner.closed {
+                return;
+            }
+            inner.points += 1;
+            let mut fields = vec![
+                ("event".into(), Json::str("point")),
+                ("job".into(), Json::u64(job)),
+                ("done".into(), Json::usize(inner.points)),
+                ("total".into(), Json::usize(self.total)),
+                ("model".into(), Json::str(p.model)),
+                ("group".into(), Json::str(p.group.as_str())),
+                ("arch".into(), Json::str(p.arch)),
+                ("cache_hit".into(), Json::Bool(p.cache_hit)),
+            ];
+            // A point whose computation panicked still resolves — with the
+            // panic message — so watchers see it counted, not hung.
+            if let Some(err) = p.error {
+                fields.push(("error".into(), Json::str(err)));
+            }
+            inner.events.push(Json::Obj(fields));
         }
-        inner.points += 1;
-        let mut fields = vec![
-            ("event".into(), Json::str("point")),
-            ("job".into(), Json::u64(job)),
-            ("done".into(), Json::usize(inner.points)),
-            ("total".into(), Json::usize(self.total)),
-            ("model".into(), Json::str(p.model)),
-            ("group".into(), Json::str(p.group.as_str())),
-            ("arch".into(), Json::str(p.arch)),
-            ("cache_hit".into(), Json::Bool(p.cache_hit)),
-        ];
-        // A point whose computation panicked still resolves — with the
-        // panic message — so watchers see it counted, not hung.
-        if let Some(err) = p.error {
-            fields.push(("error".into(), Json::str(err)));
-        }
-        inner.events.push(Json::Obj(fields));
-        self.cond.notify_all();
+        self.notify.wake();
     }
 
     /// Append the terminal event and close the channel. Idempotent: the
     /// first close wins (the drain's force-close never clobbers a real
     /// `end` that already landed).
     fn close(&self, end: Json) {
-        let mut inner = sync::lock(&self.inner);
-        if inner.closed {
-            return;
+        {
+            let mut inner = sync::lock(&self.inner);
+            if inner.closed {
+                return;
+            }
+            inner.events.push(end);
+            inner.closed = true;
         }
-        inner.events.push(end);
-        inner.closed = true;
-        self.cond.notify_all();
+        self.notify.wake();
     }
 
-    /// Event at `cursor`, blocking until it exists. `None` once the
-    /// channel is closed and the history is exhausted.
-    fn next(&self, cursor: usize) -> Option<Json> {
-        let mut inner = sync::lock(&self.inner);
-        loop {
-            if cursor < inner.events.len() {
-                return Some(inner.events[cursor].clone());
-            }
-            if inner.closed {
-                return None;
-            }
-            inner = sync::wait(&self.cond, inner);
-        }
+    /// Events from `cursor` on, plus whether the channel is closed (the
+    /// last event of a closed channel is always the terminal `end`).
+    /// Never blocks — this is the reactor's pump primitive.
+    pub(crate) fn events_from(&self, cursor: usize) -> (Vec<Json>, bool) {
+        let inner = sync::lock(&self.inner);
+        let events = if cursor < inner.events.len() {
+            inner.events[cursor..].to_vec()
+        } else {
+            Vec::new()
+        };
+        (events, inner.closed)
     }
 }
 
@@ -169,25 +190,30 @@ struct Job {
     chan: Arc<JobChannel>,
 }
 
-/// Shared server state: the scheduler (store + in-flight claims) plus the
-/// job table and shutdown bookkeeping.
-struct Shared {
+/// Shared server state: the scheduler (store + in-flight claims), the job
+/// table, the executor pool, and the reactor's metrics/wake plumbing.
+pub(crate) struct Shared {
     sched: Scheduler,
     jobs: Mutex<HashMap<u64, Job>>,
     /// Recently pruned terminal job ids — `status` answers `expired` for
     /// these instead of `unknown job N`, so a slow poller stops retrying.
     expired: Mutex<VecDeque<u64>>,
-    /// Handles of submit worker threads, joined by the shutdown drain so
-    /// process exit never orphans a worker mid-sweep.
-    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
-    /// Synchronous `warm` sweeps currently running on connection
-    /// threads; the drain waits for these exactly like jobs (they
-    /// simulate and mutate the memo just the same).
-    warms: AtomicUsize,
-    /// Open `watch` streams; the drain waits for them to flush.
-    watchers: AtomicUsize,
+    /// Fixed worker pool running submit/map/warm work.
+    pub(crate) exec: Arc<Exec>,
+    /// Write half of the reactor's self-pipe + completion mailbox.
+    pub(crate) notify: Arc<Notifier>,
+    /// Per-verb request/answer/latency counters, reported by `status`.
+    pub(crate) metrics: Metrics,
+    /// `warm` grids currently queued or running on the pool; the drain
+    /// waits for these exactly like jobs (they simulate and mutate the
+    /// memo just the same).
+    pub(crate) warms: AtomicUsize,
+    /// Open `watch` streams; the drain flush window waits for them.
+    pub(crate) watchers: AtomicUsize,
+    /// Open client connections (reactor-owned gauge, for `status`).
+    pub(crate) conns: AtomicUsize,
     next_job: AtomicU64,
-    stop: AtomicBool,
+    pub(crate) stop: AtomicBool,
     /// Crash-restart job journal (`None` when the store dir cannot host
     /// one — serving continues, jobs just do not survive a crash).
     /// Sweep jobs are journaled; `map` jobs are not (their report lives
@@ -200,6 +226,8 @@ struct Shared {
 pub struct Server {
     listener: TcpListener,
     shared: Arc<Shared>,
+    /// Read half of the reactor's self-pipe.
+    wake_rx: WakeRx,
     drain: Duration,
     conn_timeout: Option<Duration>,
     /// Journaled jobs the previous process never finished; re-queued at
@@ -263,19 +291,25 @@ impl Server {
                 (None, Vec::new())
             }
         };
+        let (wake_rx, notifier) =
+            reactor::wake_pair().context("creating the reactor wake pipe")?;
         Ok(Server {
             listener,
             shared: Arc::new(Shared {
                 sched: Scheduler::new(store),
                 jobs: Mutex::new(HashMap::new()),
                 expired: Mutex::new(VecDeque::new()),
-                workers: Mutex::new(Vec::new()),
+                exec: Arc::new(Exec::new()),
+                notify: Arc::new(notifier),
+                metrics: Metrics::new(),
                 warms: AtomicUsize::new(0),
                 watchers: AtomicUsize::new(0),
+                conns: AtomicUsize::new(0),
                 next_job: AtomicU64::new(1),
                 stop: AtomicBool::new(false),
                 journal,
             }),
+            wake_rx,
             drain: Duration::from_secs(DEFAULT_DRAIN_SECS),
             conn_timeout: None,
             recovered,
@@ -288,32 +322,38 @@ impl Server {
         self.drain = Duration::from_secs(secs);
     }
 
-    /// Per-connection socket read/write timeout (`--conn-timeout-secs`;
-    /// 0 leaves connections unbounded). A client that stalls mid-request
-    /// — or parks an idle connection past the bound — is reaped instead
-    /// of pinning its thread forever.
+    /// Idle-connection bound (`--conn-timeout-secs`; 0 leaves connections
+    /// unbounded). A client that parks an idle connection past the bound
+    /// is reaped by the reactor's deadline heap instead of holding a slot
+    /// forever; connections mid-warm or mid-watch are never reaped.
     pub fn set_conn_timeout_secs(&mut self, secs: u64) {
         self.conn_timeout = (secs > 0).then(|| Duration::from_secs(secs));
+    }
+
+    /// Bound on tasks waiting for an executor (`--max-queued`); past it,
+    /// `submit`/`map`/`warm` answer `state:"queued-full"`.
+    pub fn set_max_queued(&mut self, cap: usize) {
+        self.shared.exec.set_cap(cap);
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
         self.listener.local_addr().context("reading bound address")
     }
 
-    /// Accept-and-serve until a `shutdown` request arrives, then drain
-    /// and snapshot. Consumes the server; each connection runs on its
-    /// own thread.
+    /// Serve until a `shutdown` request arrives, then drain and snapshot.
+    /// Consumes the server. One reactor thread (this one) owns every
+    /// socket; `CODR_SERVE_EXECUTORS` pool workers run the sweeps.
     ///
-    /// The persistent vector memo brackets the accept loop: a snapshot
-    /// from a previous process is restored lazily (on a background
-    /// thread — binding and first requests never wait on it; until it
-    /// lands, lookups simply miss and recompute), a periodic writer
-    /// re-snapshots every `CODR_MEMO_SNAPSHOT_SECS` so a crash loses at
-    /// most one interval of warm state, and a final snapshot lands on
-    /// clean shutdown *after* the drain (so it includes everything the
-    /// drained jobs computed). The restore thread is joined before any
-    /// save, and an empty memo is never saved — a fast shutdown cannot
-    /// clobber a warm on-disk snapshot with a cold one.
+    /// The persistent vector memo brackets the loop: a snapshot from a
+    /// previous process is restored lazily (on a background thread —
+    /// binding and first requests never wait on it; until it lands,
+    /// lookups simply miss and recompute), a periodic writer re-snapshots
+    /// every `CODR_MEMO_SNAPSHOT_SECS` so a crash loses at most one
+    /// interval of warm state, and a final snapshot lands on clean
+    /// shutdown *after* the drain (so it includes everything the drained
+    /// jobs computed). The restore thread is joined before any save, and
+    /// an empty memo is never saved — a fast shutdown cannot clobber a
+    /// warm on-disk snapshot with a cold one.
     pub fn run(self) -> Result<()> {
         let snapshot = memo_snapshot_path(self.shared.sched.store().dir());
         let restore_done = Arc::new(AtomicBool::new(snapshot.is_none()));
@@ -362,21 +402,25 @@ impl Server {
             }
             _ => None,
         };
+        self.shared.exec.start(Exec::default_workers());
         // Re-queue journaled jobs the previous process never finished.
         // Each runs under a fresh id through the normal submit path (so
-        // it is journaled, watchable, and drainable like any job); the
+        // it is journaled, watchable, and drainable like any job) but
+        // bypasses the admission cap — an acked job is never refused. The
         // old id is closed with `requeued` so a second restart does not
         // replay it again. The store diff makes this cheap: everything
         // the dead process persisted comes back as cache hits.
         for rec in &self.recovered {
             let requeued = GridRequest::from_json(&rec.grid)
-                .and_then(|grid| spawn_grid_job(&self.shared, grid));
+                .and_then(|grid| spawn_grid_job(&self.shared, grid, Admission::Bypass));
             match requeued {
-                Ok((id, points)) => eprintln!(
+                Ok(Spawned::Job { id, points }) => eprintln!(
                     "journal: recovered job {} (never finished); re-queued as job {id} \
                      ({points} points)",
                     rec.job
                 ),
+                // Bypass admission never answers queued-full.
+                Ok(Spawned::QueuedFull { .. }) => {}
                 Err(e) => eprintln!(
                     "warn: journaled job {} could not be re-queued: {e:#}",
                     rec.job
@@ -386,117 +430,50 @@ impl Server {
                 j.record_end(rec.job, "requeued");
             }
         }
-        self.listener
-            .set_nonblocking(true)
-            .context("setting listener nonblocking")?;
-        loop {
-            if self.shared.stop.load(Ordering::SeqCst) {
-                self.drain_inflight();
-                if let Some(h) = restore {
-                    let _ = h.join();
+        let result = reactor::run_loop(
+            &self.listener,
+            &self.shared,
+            &self.wake_rx,
+            self.drain,
+            self.conn_timeout,
+        );
+        // The reactor normally returns with `stop` set and the pool shut
+        // down; on a fatal poller error, set/stop them here so the joins
+        // below cannot hang.
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.exec.shutdown(Instant::now() + Duration::from_secs(1));
+        if let Some(h) = restore {
+            let _ = h.join();
+        }
+        if let Some(h) = periodic {
+            let _ = h.join();
+        }
+        if let Some(path) = &snapshot {
+            match memo::global().save_snapshot_if_warm(path) {
+                Ok(0) => {
+                    eprintln!("memo: empty at shutdown; keeping the existing snapshot")
                 }
-                if let Some(h) = periodic {
-                    let _ = h.join();
-                }
-                if let Some(path) = &snapshot {
-                    match memo::global().save_snapshot_if_warm(path) {
-                        Ok(0) => {
-                            eprintln!("memo: empty at shutdown; keeping the existing snapshot")
-                        }
-                        Ok(n) => eprintln!("memo: snapshotted {n} vectors to {}", path.display()),
-                        Err(e) => eprintln!("warn: failed to snapshot memo: {e:#}"),
-                    }
-                }
-                return Ok(());
-            }
-            match self.listener.accept() {
-                Ok((stream, _peer)) => {
-                    let shared = Arc::clone(&self.shared);
-                    let timeout = self.conn_timeout;
-                    std::thread::spawn(move || {
-                        if let Err(e) = serve_connection(stream, &shared, timeout) {
-                            eprintln!("warn: connection ended with error: {e:#}");
-                        }
-                    });
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(20));
-                }
-                Err(e) => return Err(e).context("accepting connection"),
+                Ok(n) => eprintln!("memo: snapshotted {n} vectors to {}", path.display()),
+                Err(e) => eprintln!("warn: failed to snapshot memo: {e:#}"),
             }
         }
-    }
-
-    /// The shutdown drain, bounded by `--drain-secs`: wait for running
-    /// jobs to reach a terminal state, join their worker threads, force-
-    /// close the channels of anything abandoned so watchers terminate,
-    /// then give open watchers a moment to flush.
-    fn drain_inflight(&self) {
-        let shared = &self.shared;
-        let deadline = Instant::now() + self.drain;
-        loop {
-            let running = sync::lock(&shared.jobs)
-                .values()
-                .filter(|j| matches!(j.state, JobState::Running))
-                .count();
-            let warming = shared.warms.load(Ordering::SeqCst);
-            if running == 0 && warming == 0 {
-                break;
-            }
-            if Instant::now() >= deadline {
-                eprintln!(
-                    "warn: drain deadline passed with {running} job(s) and {warming} warm(s) \
-                     still running; abandoning them"
-                );
-                break;
-            }
-            std::thread::sleep(Duration::from_millis(20));
-        }
-        // Join worker threads. After the wait above a worker is either
-        // done or abandoned; `join` is only called on finished threads so
-        // the bound holds even for stragglers (their handles are dropped,
-        // i.e. detached — exactly the pre-drain behavior, but now it is
-        // the bounded exception rather than the rule).
-        let handles: Vec<_> = std::mem::take(&mut *sync::lock(&shared.workers));
-        for h in handles {
-            while !h.is_finished() && Instant::now() < deadline {
-                std::thread::sleep(Duration::from_millis(10));
-            }
-            if h.is_finished() {
-                let _ = h.join();
-            }
-        }
-        {
-            let jobs = sync::lock(&shared.jobs);
-            for (id, job) in jobs.iter() {
-                if matches!(job.state, JobState::Running) {
-                    job.chan.close(Json::Obj(vec![
-                        ("event".into(), Json::str("end")),
-                        ("job".into(), Json::u64(*id)),
-                        (
-                            "error".into(),
-                            Json::str("server shut down before the job finished"),
-                        ),
-                    ]));
-                }
-            }
-        }
-        // Watchers exit once their channel closes; give them a bounded
-        // window to write their final events.
-        let flush_deadline = deadline.max(Instant::now() + Duration::from_millis(500));
-        while shared.watchers.load(Ordering::SeqCst) > 0 && Instant::now() < flush_deadline {
-            std::thread::sleep(Duration::from_millis(10));
-        }
+        result
     }
 }
 
-/// Decrements the open-watcher count even if the stream unwinds.
-struct WatcherGuard<'a>(&'a Shared);
+/// How a job reaches the executor pool.
+pub(crate) enum Admission {
+    /// Normal client submits: refuse with `queued-full` past the cap.
+    Bounded,
+    /// Journal recovery: capacity is not checked — an acked job is never
+    /// refused.
+    Bypass,
+}
 
-impl Drop for WatcherGuard<'_> {
-    fn drop(&mut self) {
-        self.0.watchers.fetch_sub(1, Ordering::SeqCst);
-    }
+/// Outcome of [`spawn_grid_job`].
+pub(crate) enum Spawned {
+    Job { id: u64, points: usize },
+    QueuedFull { queued: usize },
 }
 
 /// Decrements the in-flight-warm count even if the sweep unwinds.
@@ -508,96 +485,35 @@ impl Drop for WarmGuard<'_> {
     }
 }
 
-fn serve_connection(
-    stream: TcpStream,
-    shared: &Arc<Shared>,
-    timeout: Option<Duration>,
-) -> Result<()> {
-    stream
-        .set_nonblocking(false)
-        .context("setting stream blocking")?;
-    stream
-        .set_read_timeout(timeout)
-        .context("setting read timeout")?;
-    stream
-        .set_write_timeout(timeout)
-        .context("setting write timeout")?;
-    let mut writer = stream.try_clone().context("cloning stream")?;
-    let mut reader = BufReader::new(stream);
-    loop {
-        let msg = match read_message(&mut reader) {
-            Ok(Some(m)) => m,
-            Ok(None) => return Ok(()), // clean EOF
-            Err(e) => {
-                // An idle or stalled connection hitting
-                // `--conn-timeout-secs` is reaped quietly; anything else
-                // is malformed input — answer with the error, then drop
-                // the connection (framing may be lost).
-                if is_timeout(&e) {
-                    return Ok(());
-                }
-                let _ = write_message(&mut writer, &error_response(format!("{e:#}")));
-                return Ok(());
-            }
-        };
-        // Injection seam: a server that goes quiet mid-conversation.
-        // Clients must survive this via their own timeouts + retries.
-        crate::faults::sleep_point("serve.conn.stall", Duration::from_secs(2));
-        // `watch` is the one verb that streams: it takes over the writer
-        // until the job's channel closes, then the connection returns to
-        // normal request/response framing.
-        if matches!(msg.get("verb").map(|v| v.as_str()), Some(Ok("watch"))) {
-            match watch_attach(&msg, shared) {
-                Ok((ack, chan)) => {
-                    write_message(&mut writer, &ack)?;
-                    shared.watchers.fetch_add(1, Ordering::SeqCst);
-                    let _guard = WatcherGuard(shared);
-                    stream_events(&chan, &mut writer)?;
-                }
-                Err(e) => write_message(&mut writer, &error_response(format!("{e:#}")))?,
-            }
-        } else {
-            let response = handle_request(&msg, shared);
-            write_message(&mut writer, &response)?;
-        }
-        if shared.stop.load(Ordering::SeqCst) {
-            return Ok(());
-        }
-    }
+/// Running jobs + in-flight warms, read by the reactor's drain phase.
+pub(crate) fn running_and_warming(shared: &Shared) -> (usize, usize) {
+    let running = sync::lock(&shared.jobs)
+        .values()
+        .filter(|j| matches!(j.state, JobState::Running))
+        .count();
+    (running, shared.warms.load(Ordering::SeqCst))
 }
 
-/// Does this error bottom out in a socket-timeout io error?
-fn is_timeout(e: &anyhow::Error) -> bool {
-    e.root_cause()
-        .downcast_ref::<std::io::Error>()
-        .map(|io| {
-            matches!(
-                io.kind(),
-                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-            )
-        })
-        .unwrap_or(false)
-}
-
-/// Replay a job channel from the start and stream until it closes. The
-/// last event written is always the terminal `end`.
-fn stream_events(chan: &JobChannel, writer: &mut impl Write) -> Result<()> {
-    let mut cursor = 0;
-    while let Some(event) = chan.next(cursor) {
-        cursor += 1;
-        write_message(writer, &event)?;
-        // Injection seam: the server drops a watch stream mid-flight
-        // (crash, LB reap, network partition). The client's reconnect
-        // path must replay and dedup to exactly-once delivery.
-        if crate::faults::point("serve.watch.drop") {
-            anyhow::bail!("fault injected: serve.watch.drop");
+/// Force-close the channels of abandoned jobs so watchers terminate;
+/// called by the reactor once the drain settles or its deadline passes.
+pub(crate) fn force_close_running(shared: &Shared) {
+    let jobs = sync::lock(&shared.jobs);
+    for (id, job) in jobs.iter() {
+        if matches!(job.state, JobState::Running) {
+            job.chan.close(Json::Obj(vec![
+                ("event".into(), Json::str("end")),
+                ("job".into(), Json::u64(*id)),
+                (
+                    "error".into(),
+                    Json::str("server shut down before the job finished"),
+                ),
+            ]));
         }
     }
-    Ok(())
 }
 
 /// Resolve a `watch` request to its ack response and job channel.
-fn watch_attach(msg: &Json, shared: &Arc<Shared>) -> Result<(Json, Arc<JobChannel>)> {
+pub(crate) fn watch_attach(msg: &Json, shared: &Arc<Shared>) -> Result<(Json, Arc<JobChannel>)> {
     let id = msg.field("job")?.as_u64()?;
     let jobs = sync::lock(&shared.jobs);
     match jobs.get(&id) {
@@ -619,26 +535,31 @@ fn watch_attach(msg: &Json, shared: &Arc<Shared>) -> Result<(Json, Arc<JobChanne
 }
 
 /// Dispatch one request. Never panics on client input: every failure
-/// becomes an `ok:false` response.
-fn handle_request(msg: &Json, shared: &Arc<Shared>) -> Json {
+/// becomes an `ok:false` response. `watch` and `warm` never reach this —
+/// the reactor handles them (attach / pool hand-off) itself.
+pub(crate) fn handle_request(msg: &Json, shared: &Arc<Shared>) -> Json {
     let verb = match msg.get("verb").map(|v| v.as_str()) {
         Some(Ok(v)) => v.to_string(),
         _ => return error_response("request must carry a string `verb`"),
     };
     let result = match verb.as_str() {
         "ping" => Ok(ok_response(vec![("pong".into(), Json::Bool(true))])),
-        "warm" => warm(msg, shared),
         "submit" => submit(msg, shared),
         "map" => map_submit(msg, shared),
         "status" => status(msg, shared),
         "result" => result_lookup(msg, shared),
         "shutdown" => {
             shared.stop.store(true, Ordering::SeqCst);
+            shared.notify.wake();
             Ok(ok_response(vec![
                 ("stopping".into(), Json::Bool(true)),
                 ("draining".into(), Json::Bool(true)),
             ]))
         }
+        // Defensive: the reactor intercepts `warm` before dispatching here.
+        "warm" => Err(anyhow::anyhow!(
+            "warm is handled by the reactor's executor hand-off"
+        )),
         other => Err(anyhow::anyhow!(
             "unknown verb `{other}` (use ping|warm|submit|map|watch|status|result|shutdown)"
         )),
@@ -653,27 +574,77 @@ fn refuse_if_stopping(shared: &Shared) -> Result<()> {
     Ok(())
 }
 
-/// `warm`: run the requested grid synchronously, reply with stats.
-/// Store occupancy is deliberately NOT included here: counting packed
-/// entries parses every pack file (an O(store-bytes) walk that belongs
-/// on the `status` path, not on every warm request).
-fn warm(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
+/// Is the executor's waiting queue at the admission cap?
+fn admission_full(shared: &Shared) -> Option<Json> {
+    let queued = shared.exec.queue_len();
+    let cap = shared.exec.cap();
+    (queued >= cap).then(|| queued_full_response(queued, cap))
+}
+
+/// `warm`: run the requested grid on the executor pool. Returns `None`
+/// when the grid was enqueued (the answer arrives through the completion
+/// mailbox once the sweep finishes) or `Some(response)` for an immediate
+/// refusal (stopping, malformed, queue full).
+///
+/// Store occupancy is deliberately NOT included in the answer: counting
+/// packed entries parses every pack file (an O(store-bytes) walk that
+/// belongs on the `status` path, not on every warm request).
+pub(crate) fn warm_enqueue(
+    msg: &Json,
+    shared: &Arc<Shared>,
+    token: usize,
+    verb_idx: usize,
+    started: Instant,
+) -> Option<Json> {
     // Register before the stop check (SeqCst totally orders both): a
     // `shutdown` either happened first — this check refuses — or the
     // drain's counter read happens after the increment and waits for
     // this warm like any job. No window where an accepted warm is
     // invisible to the drain.
     shared.warms.fetch_add(1, Ordering::SeqCst);
-    let _guard = WarmGuard(shared);
-    refuse_if_stopping(shared)?;
-    let grid = GridRequest::from_json(msg)?;
-    let results = shared
-        .sched
-        .run_grid(&grid.models, &grid.groups, &grid.archs, grid.seed);
-    Ok(ok_response(vec![(
-        "stats".into(),
-        stats_to_json(&results.stats),
-    )]))
+    let refusal = refuse_if_stopping(shared)
+        .err()
+        .map(|e| error_response(format!("{e:#}")))
+        .or_else(|| admission_full(shared));
+    if let Some(resp) = refusal {
+        shared.warms.fetch_sub(1, Ordering::SeqCst);
+        return Some(resp);
+    }
+    let grid = match GridRequest::from_json(msg) {
+        Ok(g) => g,
+        Err(e) => {
+            shared.warms.fetch_sub(1, Ordering::SeqCst);
+            return Some(error_response(format!("{e:#}")));
+        }
+    };
+    let shared_task = Arc::clone(shared);
+    let task = move || {
+        let _guard = WarmGuard(&shared_task);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            shared_task
+                .sched
+                .run_grid(&grid.models, &grid.groups, &grid.archs, grid.seed)
+        }));
+        let response = match outcome {
+            Ok(results) => ok_response(vec![(
+                "stats".into(),
+                stats_to_json(&results.stats),
+            )]),
+            Err(_) => error_response("warm sweep panicked"),
+        };
+        shared_task.notify.complete(Completion {
+            token,
+            verb_idx,
+            started,
+            response,
+        });
+    };
+    if shared.exec.submit_unbounded(Box::new(task)) {
+        None
+    } else {
+        shared.warms.fetch_sub(1, Ordering::SeqCst);
+        Some(error_response("server is shutting down; not accepting new work"))
+    }
 }
 
 /// Allocate a job id and insert a Running job into the table, pruning
@@ -714,43 +685,52 @@ fn register_job(shared: &Arc<Shared>, chan: &Arc<JobChannel>) -> Result<u64> {
     Ok(id)
 }
 
-/// Track a spawned job worker so the shutdown drain can join it.
-fn track_worker(shared: &Shared, handle: std::thread::JoinHandle<()>) {
-    let mut workers = sync::lock(&shared.workers);
-    // Reap handles of long-finished workers so the list stays bounded on
-    // a long-lived server (dropping a finished handle just detaches it).
-    workers.retain(|h| !h.is_finished());
-    workers.push(handle);
-}
-
-/// `submit`: run the grid on a tracked worker thread, reply immediately
-/// with a job id for `status` polling or `watch` streaming.
+/// `submit`: enqueue the grid on the executor pool, reply immediately
+/// with a job id for `status` polling or `watch` streaming — or with
+/// `state:"queued-full"` when the admission queue is at the cap.
 fn submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     let grid = GridRequest::from_json(msg)?;
-    let (id, points) = spawn_grid_job(shared, grid)?;
-    Ok(ok_response(vec![
-        ("job".into(), Json::u64(id)),
-        ("points".into(), Json::usize(points)),
-    ]))
+    match spawn_grid_job(shared, grid, Admission::Bounded)? {
+        Spawned::Job { id, points } => Ok(ok_response(vec![
+            ("job".into(), Json::u64(id)),
+            ("points".into(), Json::usize(points)),
+        ])),
+        Spawned::QueuedFull { queued } => {
+            Ok(queued_full_response(queued, shared.exec.cap()))
+        }
+    }
 }
 
-/// Register + journal + spawn one sweep job. Shared by the `submit`
-/// verb and by journal recovery at startup. The submit record lands
-/// (fsynced) before this returns, so an acked job is always
-/// recoverable; the worker writes the terminal record.
-fn spawn_grid_job(shared: &Arc<Shared>, grid: GridRequest) -> Result<(u64, usize)> {
+/// Register + journal + enqueue one sweep job. Shared by the `submit`
+/// verb and by journal recovery at startup. Admission is checked
+/// *before* the job is registered or journaled — a refused submit burns
+/// no id and leaves no journal record (only the reactor thread admits,
+/// so the check cannot race). The submit record lands (fsynced) before
+/// this returns, so an acked job is always recoverable; the executor
+/// task writes the terminal record.
+pub(crate) fn spawn_grid_job(
+    shared: &Arc<Shared>,
+    grid: GridRequest,
+    admission: Admission,
+) -> Result<Spawned> {
+    if matches!(admission, Admission::Bounded) {
+        let queued = shared.exec.queue_len();
+        if queued >= shared.exec.cap() {
+            return Ok(Spawned::QueuedFull { queued });
+        }
+    }
     let points = grid.points();
-    let chan = Arc::new(JobChannel::new(points));
+    let chan = Arc::new(JobChannel::new(points, Arc::clone(&shared.notify)));
     let id = register_job(shared, &chan)?;
     if let Some(j) = &shared.journal {
         j.record_submit(id, &grid.to_json());
     }
-    let shared_worker = Arc::clone(shared);
-    let worker_chan = Arc::clone(&chan);
-    let handle = std::thread::spawn(move || {
-        let progress = |p: &PointDone<'_>| worker_chan.publish_point(id, p);
+    let shared_task = Arc::clone(shared);
+    let task_chan = Arc::clone(&chan);
+    let task = move || {
+        let progress = |p: &PointDone<'_>| task_chan.publish_point(id, p);
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            shared_worker.sched.run_grid_observed(
+            shared_task.sched.run_grid_observed(
                 &grid.models,
                 &grid.groups,
                 &grid.archs,
@@ -788,24 +768,45 @@ fn spawn_grid_job(shared: &Arc<Shared>, grid: GridRequest) -> Result<(u64, usize
                 ]),
             ),
         };
-        if let Some(job) = sync::lock(&shared_worker.jobs).get_mut(&id) {
+        if let Some(job) = sync::lock(&shared_task.jobs).get_mut(&id) {
             job.state = state;
         }
-        if let Some(j) = &shared_worker.journal {
+        if let Some(j) = &shared_task.journal {
             j.record_end(id, terminal);
         }
-        worker_chan.close(end);
-    });
-    track_worker(shared, handle);
-    Ok((id, points))
+        task_chan.close(end);
+    };
+    if !shared.exec.submit_unbounded(Box::new(task)) {
+        // Hard stop raced the enqueue: the task will never run. Fail the
+        // job so `status`/`watch` terminate instead of hanging Running.
+        let err = "server is shutting down; not accepting new work";
+        if let Some(job) = sync::lock(&shared.jobs).get_mut(&id) {
+            job.state = JobState::Failed(err.into());
+        }
+        if let Some(j) = &shared.journal {
+            j.record_end(id, "failed");
+        }
+        chan.close(Json::Obj(vec![
+            ("event".into(), Json::str("end")),
+            ("job".into(), Json::u64(id)),
+            ("state".into(), Json::str("failed")),
+            ("error".into(), Json::str(err)),
+        ]));
+        anyhow::bail!(err);
+    }
+    Ok(Spawned::Job { id, points })
 }
 
-/// `map`: run a mapping-space search for one layer as an async job.
-/// Each evaluated candidate publishes a `point` event on the job's
-/// channel (`group` carries the candidate's tile label, `arch` is always
-/// CoDR); the terminal `end` event carries search stats plus the full
-/// Pareto front as `map`.
+/// `map`: run a mapping-space search for one layer as an async job on
+/// the executor pool (bounded admission, like `submit`). Each evaluated
+/// candidate publishes a `point` event on the job's channel (`group`
+/// carries the candidate's tile label, `arch` is always CoDR); the
+/// terminal `end` event carries search stats plus the full Pareto front
+/// as `map`.
 fn map_submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
+    if let Some(resp) = admission_full(shared) {
+        return Ok(resp);
+    }
     let name = msg.field("model")?.as_str()?;
     let model = crate::models::parse_model(name)?;
     let layer: Option<String> = match msg.get("layer") {
@@ -848,14 +849,14 @@ fn map_submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     let (kept, ..) = enumerate_mappings(&spec, &Codr::default(), &cfg);
     let candidates = kept.len();
     let layer_name = spec.name.clone();
-    let chan = Arc::new(JobChannel::new(candidates));
+    let chan = Arc::new(JobChannel::new(candidates, Arc::clone(&shared.notify)));
     let id = register_job(shared, &chan)?;
-    let shared_worker = Arc::clone(shared);
-    let worker_chan = Arc::clone(&chan);
-    let handle = std::thread::spawn(move || {
+    let shared_task = Arc::clone(shared);
+    let task_chan = Arc::clone(&chan);
+    let task = move || {
         let t0 = Instant::now();
         let progress = |c: &crate::mapping::CandidateResult| {
-            worker_chan.publish_point(
+            task_chan.publish_point(
                 id,
                 &PointDone {
                     model: model.name,
@@ -867,7 +868,7 @@ fn map_submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
             );
         };
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            shared_worker.sched.run_map(
+            shared_task.sched.run_map(
                 &model,
                 Some(spec.name.as_str()),
                 group,
@@ -916,12 +917,24 @@ fn map_submit(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
                 ]),
             ),
         };
-        if let Some(job) = sync::lock(&shared_worker.jobs).get_mut(&id) {
+        if let Some(job) = sync::lock(&shared_task.jobs).get_mut(&id) {
             job.state = state;
         }
-        worker_chan.close(end);
-    });
-    track_worker(shared, handle);
+        task_chan.close(end);
+    };
+    if !shared.exec.submit_unbounded(Box::new(task)) {
+        let err = "server is shutting down; not accepting new work";
+        if let Some(job) = sync::lock(&shared.jobs).get_mut(&id) {
+            job.state = JobState::Failed(err.into());
+        }
+        chan.close(Json::Obj(vec![
+            ("event".into(), Json::str("end")),
+            ("job".into(), Json::u64(id)),
+            ("state".into(), Json::str("failed")),
+            ("error".into(), Json::str(err)),
+        ]));
+        anyhow::bail!(err);
+    }
     Ok(ok_response(vec![
         ("job".into(), Json::u64(id)),
         ("layer".into(), Json::str(layer_name)),
@@ -981,6 +994,24 @@ fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
             "watchers".into(),
             Json::usize(shared.watchers.load(Ordering::SeqCst)),
         ),
+        (
+            "conns".into(),
+            Json::usize(shared.conns.load(Ordering::SeqCst)),
+        ),
+        (
+            "queued".into(),
+            Json::usize(shared.exec.queue_len()),
+        ),
+        (
+            "max_queued".into(),
+            Json::usize(shared.exec.cap()),
+        ),
+        (
+            "executors".into(),
+            Json::usize(shared.exec.workers()),
+        ),
+        // Per-verb request/answer/error counts and p50/p99 latency.
+        ("verbs".into(), shared.metrics.to_json()),
         // Kept for pre-v2 clients; the structured `store` object is the
         // forward surface.
         ("store_entries".into(), Json::usize(st.entries)),

@@ -43,13 +43,29 @@ struct ServeProc {
 
 impl ServeProc {
     fn spawn(store: &Path, faults: &str) -> ServeProc {
+        ServeProc::spawn_opts(store, faults, &[], &[])
+    }
+
+    /// [`spawn`] with extra serve flags (`--max-queued`, …) and extra
+    /// subprocess-only env vars (`CODR_SERVE_EXECUTORS`, …) — env is set
+    /// on the child, never this process, so parallel tests stay isolated.
+    fn spawn_opts(
+        store: &Path,
+        faults: &str,
+        extra_args: &[&str],
+        envs: &[(&str, &str)],
+    ) -> ServeProc {
         let mut cmd = Command::new(bin());
         cmd.args(["serve", "--addr", "127.0.0.1:0", "--store"])
             .arg(store)
+            .args(extra_args)
             .stdout(Stdio::piped())
             .stderr(Stdio::null());
         if !faults.is_empty() {
             cmd.env("CODR_FAULTS", faults);
+        }
+        for (k, v) in envs {
+            cmd.env(k, v);
         }
         let mut child = cmd.spawn().expect("spawn codr serve");
         // The announce line carries the ephemeral port.
@@ -263,5 +279,127 @@ fn torn_pack_write_recomputes_and_converges_to_all_hits() {
         "healed store must answer every point: {stdout}"
     );
 
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Bounded admission under a held executor: with one worker, a queue
+/// cap of 1, and the scheduler slowed by `sched.point.slow`, a third
+/// concurrent submit is refused with the full `queued-full` contract —
+/// and a `--retries` client backs off through the refusals and
+/// converges to `done` once the backlog drains.
+#[test]
+fn full_admission_queue_refuses_submits_and_retries_converge() {
+    let dir = temp_dir("backpressure");
+    let srv = ServeProc::spawn_opts(
+        &dir,
+        "sched.point.slow:12",
+        &["--max-queued", "1"],
+        &[("CODR_SERVE_EXECUTORS", "1")],
+    );
+
+    // Job A occupies the single worker (each of its 3 points sleeps
+    // 250 ms under the fault). Wait until the pool has dequeued it so
+    // the queue slot below is deterministic.
+    let job_a = srv.submit("Orig", 21);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let status = srv.request(&obj(&[("verb", Json::str("status"))]));
+        if status.get("queued").unwrap().as_u64().unwrap() == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job {job_a} never left the queue: {status}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Job B fills the one queue slot; submit C must be refused — never
+    // silently queued, never a success.
+    let job_b = srv.submit("Orig", 22);
+    let refused = srv.request(&obj(&[
+        ("verb", Json::str("submit")),
+        ("models", Json::str("tiny")),
+        ("groups", Json::str("Orig")),
+        ("seed", Json::u64(23)),
+    ]));
+    assert!(!ok(&refused), "{refused}");
+    assert!(proto::is_queued_full(&refused), "{refused}");
+    assert_eq!(refused.get("max_queued").unwrap().as_u64().unwrap(), 1, "{refused}");
+    assert!(
+        refused.get("error").unwrap().as_str().unwrap().contains("admission queue full"),
+        "{refused}"
+    );
+
+    // A retrying CLI submit backs off through the refusals and lands
+    // once the backlog drains.
+    let out = Command::new(bin())
+        .args([
+            "submit", "--addr", &srv.addr, "--models", "tiny", "--groups", "Orig", "--seed",
+            "23", "--retries", "8", "--wait",
+        ])
+        .output()
+        .expect("run codr submit --retries --wait");
+    assert!(
+        out.status.success(),
+        "retried submit must converge: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("done:"), "{stdout}");
+
+    // The queued job was admitted, not lost: it ran before the CLI job.
+    let status = srv.request(&obj(&[("verb", Json::str("status")), ("job", Json::u64(job_b))]));
+    assert_eq!(status.get("state").unwrap().as_str().unwrap(), "done", "{status}");
+
+    srv.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `serve.conn.stall` re-seated at the reactor: a stalled dispatch
+/// blocks the event loop for its 2 s injection, an idle connection's
+/// `--conn-timeout-secs 1` deadline lapses meanwhile, and the reaper
+/// closes it as soon as the loop resumes — the server stays healthy
+/// and answers promptly once the stall budget is spent.
+#[test]
+fn stalled_dispatch_still_reaps_idle_connections() {
+    let dir = temp_dir("stall");
+    let srv =
+        ServeProc::spawn_opts(&dir, "serve.conn.stall:1", &["--conn-timeout-secs", "1"], &[]);
+
+    // An idle connection: never sends a byte, so its reap deadline is
+    // one second after accept.
+    let idle = std::net::TcpStream::connect(&srv.addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(15))).unwrap();
+    let mut idle_reader = BufReader::new(idle);
+
+    // This ping burns the single stall shot: dispatch sleeps 2 s on the
+    // reactor thread, past the idle connection's deadline.
+    let started = Instant::now();
+    let pong = srv.request(&obj(&[("verb", Json::str("ping"))]));
+    assert!(ok(&pong), "{pong}");
+    assert!(
+        started.elapsed() >= Duration::from_millis(1500),
+        "the stall seam never fired ({:?})",
+        started.elapsed()
+    );
+
+    // The loop resumed; the overdue idle connection must be reaped well
+    // before the 15 s client read timeout.
+    let waited = Instant::now();
+    match proto::read_message(&mut idle_reader) {
+        Ok(None) | Err(_) => {} // FIN or reset: both count as closed
+        Ok(Some(m)) => panic!("unexpected message on the idle connection: {m}"),
+    }
+    assert!(
+        waited.elapsed() < Duration::from_secs(10),
+        "idle connection survived {:?} under --conn-timeout-secs 1",
+        waited.elapsed()
+    );
+
+    // Stall budget spent: the server answers promptly again.
+    let started = Instant::now();
+    let pong = srv.request(&obj(&[("verb", Json::str("ping"))]));
+    assert!(ok(&pong), "{pong}");
+    assert!(started.elapsed() < Duration::from_secs(1), "second ping stalled: {pong}");
+
+    srv.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,245 @@
+//! Soak test for the event-driven serve core: many concurrent
+//! connections over real sockets, watcher churn, and idle reaping.
+//! Pins the reactor's headline invariants — every job completes, every
+//! watch stream terminates with `event:"end"`, the per-verb counters
+//! conserve (`requests == answers + errors` at quiescence), watcher and
+//! connection gauges return to baseline, and `--conn-timeout-secs`
+//! actually closes idle connections.
+
+use codr::serve::{proto, Server};
+use codr::util::json::Json;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("codr-soak-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn obj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+fn ok(resp: &Json) -> bool {
+    matches!(resp.get("ok").and_then(|o| o.as_bool().ok()), Some(true))
+}
+
+fn status_of(addr: &str) -> Json {
+    proto::request(addr, &obj(&[("verb", Json::str("status"))])).expect("status request")
+}
+
+fn gauge(status: &Json, field: &str) -> u64 {
+    status.get(field).unwrap().as_u64().unwrap()
+}
+
+/// Poll `status` until the server is quiescent: no lingering
+/// connections beyond the one asking, and no parked watchers. Returns
+/// the final status snapshot.
+fn await_quiescent(addr: &str) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let status = status_of(addr);
+        if gauge(&status, "conns") == 1 && gauge(&status, "watchers") == 0 {
+            return status;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "server never quiesced: conns={} watchers={}",
+            gauge(&status, "conns"),
+            gauge(&status, "watchers"),
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn shutdown_and_join(addr: &str, handle: std::thread::JoinHandle<anyhow::Result<()>>) {
+    let resp = proto::request(addr, &obj(&[("verb", Json::str("shutdown"))])).unwrap();
+    assert!(ok(&resp), "{resp}");
+    handle.join().unwrap().unwrap();
+}
+
+/// 64 concurrent client threads — submits watched to completion, warm
+/// sweeps, status hammers, pings — then per-verb counter conservation
+/// on the quiesced server.
+#[test]
+fn soak_sixty_four_connections_conserve_counters() {
+    let dir = temp_dir("soak");
+    let mut server = Server::bind("127.0.0.1:0", &dir).expect("bind ephemeral port");
+    server.set_max_queued(256);
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    let mut threads = Vec::new();
+    // 16 submitters, each watching its job to the terminal `end` event.
+    for i in 0..16u64 {
+        let addr = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let submitted = proto::request(
+                &addr,
+                &obj(&[
+                    ("verb", Json::str("submit")),
+                    ("models", Json::str("tiny")),
+                    ("groups", Json::str("Orig")),
+                    ("seed", Json::u64(1 + i % 4)),
+                ]),
+            )
+            .unwrap();
+            assert!(ok(&submitted), "{submitted}");
+            let job = submitted.get("job").unwrap().as_u64().unwrap();
+            let end = proto::watch(&addr, job, |_| {}).unwrap();
+            assert_eq!(end.get("event").unwrap().as_str().unwrap(), "end");
+            assert_eq!(end.get("state").unwrap().as_str().unwrap(), "done", "{end}");
+        }));
+    }
+    // 16 warm sweeps of one tiny grid (the store dedups repeats).
+    for _ in 0..16 {
+        let addr = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let resp = proto::request(
+                &addr,
+                &obj(&[
+                    ("verb", Json::str("warm")),
+                    ("models", Json::str("tiny")),
+                    ("groups", Json::str("Orig")),
+                    ("seed", Json::u64(9)),
+                ]),
+            )
+            .unwrap();
+            assert!(ok(&resp), "{resp}");
+        }));
+    }
+    // 16 status hammers and 16 pings riding alongside the real work.
+    for _ in 0..16 {
+        let addr = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            for _ in 0..4 {
+                let status = status_of(&addr);
+                assert!(ok(&status), "{status}");
+            }
+        }));
+        let addr = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let pong = proto::request(&addr, &obj(&[("verb", Json::str("ping"))])).unwrap();
+            assert!(ok(&pong), "{pong}");
+        }));
+    }
+    for t in threads {
+        t.join().expect("client thread panicked");
+    }
+
+    let status = await_quiescent(&addr);
+    let verbs = status.get("verbs").expect("status carries per-verb counters");
+    for name in ["ping", "warm", "submit", "map", "watch", "status", "result", "shutdown", "other"]
+    {
+        let v = verbs.get(name).unwrap_or_else(|| panic!("verb {name} missing"));
+        let req = v.get("requests").unwrap().as_u64().unwrap();
+        let ans = v.get("answers").unwrap().as_u64().unwrap();
+        let err = v.get("errors").unwrap().as_u64().unwrap();
+        // The snapshot is built while its own `status` request is still
+        // in flight: counted as a request, not yet finished.
+        let in_flight = u64::from(name == "status");
+        assert_eq!(req, ans + err + in_flight, "verb {name}: {req} != {ans}+{err}+{in_flight}");
+    }
+    for (name, expected) in [("submit", 16), ("warm", 16), ("watch", 16), ("ping", 16)] {
+        let v = verbs.get(name).unwrap();
+        assert_eq!(v.get("requests").unwrap().as_u64().unwrap(), expected, "verb {name}");
+        assert_eq!(v.get("errors").unwrap().as_u64().unwrap(), 0, "verb {name}");
+    }
+    // Latency quantiles are present and sane (bucketed, so >= 0.25 ms).
+    let p50 = verbs.get("submit").unwrap().get("p50_ms").unwrap().as_f64().unwrap();
+    let p99 = verbs.get("submit").unwrap().get("p99_ms").unwrap().as_f64().unwrap();
+    assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+
+    shutdown_and_join(&addr, handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// 100 watchers that connect, attach, and immediately hang up: the
+/// watcher and connection gauges must return to baseline — nothing
+/// leaks, nothing double-decrements.
+#[test]
+fn watcher_churn_returns_to_baseline() {
+    let dir = temp_dir("churn");
+    let server = Server::bind("127.0.0.1:0", &dir).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    let submitted = proto::request(
+        &addr,
+        &obj(&[
+            ("verb", Json::str("submit")),
+            ("models", Json::str("tiny")),
+            ("groups", Json::str("Orig")),
+            ("seed", Json::u64(3)),
+        ]),
+    )
+    .unwrap();
+    assert!(ok(&submitted), "{submitted}");
+    let job = submitted.get("job").unwrap().as_u64().unwrap();
+    let end = proto::watch(&addr, job, |_| {}).unwrap();
+    assert_eq!(end.get("state").unwrap().as_str().unwrap(), "done", "{end}");
+
+    for _ in 0..100 {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        proto::write_message(
+            &mut writer,
+            &obj(&[("verb", Json::str("watch")), ("job", Json::u64(job))]),
+        )
+        .unwrap();
+        let ack = proto::read_message(&mut reader).unwrap().expect("watch ack");
+        assert!(ok(&ack), "{ack}");
+        // Drop both halves mid-stream: the reactor must deregister the
+        // watcher and reclaim the connection.
+    }
+
+    let status = await_quiescent(&addr);
+    assert_eq!(gauge(&status, "watchers"), 0);
+    assert_eq!(gauge(&status, "conns"), 1);
+
+    shutdown_and_join(&addr, handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--conn-timeout-secs` under the reactor: an idle connection is
+/// reaped by the deadline heap while fresh connections keep working.
+#[test]
+fn idle_connections_are_reaped() {
+    let dir = temp_dir("reap");
+    let mut server = Server::bind("127.0.0.1:0", &dir).expect("bind ephemeral port");
+    server.set_conn_timeout_secs(1);
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(15))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    proto::write_message(&mut writer, &obj(&[("verb", Json::str("ping"))])).unwrap();
+    let pong = proto::read_message(&mut reader).unwrap().expect("pong");
+    assert!(ok(&pong), "{pong}");
+
+    // Go idle past the 1 s deadline: the reaper must close the socket
+    // well before our 15 s read timeout would fire.
+    let waited = Instant::now();
+    match proto::read_message(&mut reader) {
+        Ok(None) | Err(_) => {} // FIN or reset: both count as closed
+        Ok(Some(m)) => panic!("unexpected message on an idle connection: {m}"),
+    }
+    assert!(
+        waited.elapsed() < Duration::from_secs(10),
+        "idle connection survived {:?} — the reaper never fired",
+        waited.elapsed(),
+    );
+
+    // The server is still healthy for new connections.
+    let pong = proto::request(&addr, &obj(&[("verb", Json::str("ping"))])).unwrap();
+    assert!(ok(&pong), "{pong}");
+
+    shutdown_and_join(&addr, handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
