@@ -99,6 +99,7 @@ const RELAXED_OK: &[RelaxedAllow] = &[
     RelaxedAllow { file: "reuse/memo.rs", atomic: "entries", why: "approximate occupancy gauge; exact bookkeeping is under the shard lock" },
     RelaxedAllow { file: "reuse/memo.rs", atomic: "hot", why: "second-chance reference bit; pure eviction heuristic" },
     RelaxedAllow { file: "reuse/memo.rs", atomic: "dead", why: "tombstone bit; snapshot walkers tolerate staleness by design" },
+    RelaxedAllow { file: "reuse/memo.rs", atomic: "tombstoned", why: "tombstoned-bytes gauge; the swap on `dead` is the only publication edge" },
     RelaxedAllow { file: "util/bench.rs", atomic: "extract_ns", why: "phase-time accumulator" },
     RelaxedAllow { file: "util/bench.rs", atomic: "transform_ns", why: "phase-time accumulator" },
     RelaxedAllow { file: "util/bench.rs", atomic: "price_ns", why: "phase-time accumulator" },
@@ -172,10 +173,11 @@ fn call_receiver(toks: &[Tok], at: usize) -> Option<(String, String)> {
 /// never wrap another acquisition in this codebase and stay out of the
 /// ranking rather than encode a false order.
 const LOCK_TIERS: &[(&str, u8)] = &[
-    ("jobs", 1),      // server job table
-    ("inflight", 2),  // scheduler claim set
-    ("save_lock", 3), // store read-modify-write serialization
-    ("shard", 5),     // memo shard (via receiver name)
+    ("maintenance", 0), // ring maintenance pass (outermost; wraps store locks)
+    ("jobs", 1),        // server job table
+    ("inflight", 2),    // scheduler claim set
+    ("save_lock", 3),   // store read-modify-write serialization
+    ("shard", 5),       // memo shard (via receiver name)
     ("shards", 5),
 ];
 
@@ -183,6 +185,7 @@ const PACK_LOCK_TIER: u8 = 4; // cross-process advisory pack lock
 
 fn tier_name(t: u8) -> &'static str {
     match t {
+        0 => "ring maintenance",
         1 => "server jobs",
         2 => "scheduler inflight",
         3 => "store save_lock",

@@ -50,6 +50,16 @@ pub const ENV_VARS: &[EnvVar] = &[
         purpose: "Background memo-snapshot period in seconds; `0`/`off` disables the periodic writer",
     },
     EnvVar {
+        name: "CODR_PEER_TIMEOUT_MS",
+        default: "1000",
+        purpose: "Per-peer connect/read/write timeout for ring forwards and health probes, in milliseconds",
+    },
+    EnvVar {
+        name: "CODR_RING",
+        default: "(unset)",
+        purpose: "Static multi-host ring membership (`host:port,host:port,...`) used when `--ring` is not given; the list must include this node's own address",
+    },
+    EnvVar {
         name: "CODR_SERVE_EXECUTORS",
         default: "4",
         purpose: "Executor-pool worker threads for `codr serve`; the server's thread count is fixed regardless of connected clients",

@@ -91,6 +91,16 @@ impl Args {
         self.get("addr").unwrap_or(crate::serve::DEFAULT_ADDR)
     }
 
+    /// Multi-host ring spec for `codr serve` (`--ring`, then
+    /// `$CODR_RING`; `None` = single-node). A comma-separated
+    /// `host:port` list that must include this node's own `--addr`.
+    pub fn ring_spec(&self) -> Option<String> {
+        match self.get("ring") {
+            Some(spec) => Some(spec.to_string()),
+            None => crate::analysis::env_registry::var("CODR_RING").filter(|v| !v.is_empty()),
+        }
+    }
+
     /// Shutdown drain budget in seconds (`--drain-secs`, default 30).
     /// Zero is allowed and means "abandon in-flight work immediately".
     pub fn drain_secs(&self) -> Result<u64> {
@@ -317,6 +327,12 @@ mod tests {
             .unwrap()
             .max_queued()
             .is_err());
+    }
+
+    #[test]
+    fn ring_spec_prefers_the_flag() {
+        let a = Args::parse(&sv(&["--ring", "127.0.0.1:1,127.0.0.1:2"])).unwrap();
+        assert_eq!(a.ring_spec().as_deref(), Some("127.0.0.1:1,127.0.0.1:2"));
     }
 
     #[test]

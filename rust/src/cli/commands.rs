@@ -430,13 +430,28 @@ pub fn serve(args: &Args) -> Result<String> {
     server.set_drain_secs(args.drain_secs()?);
     server.set_conn_timeout_secs(args.conn_timeout_secs()?);
     server.set_max_queued(args.max_queued()?);
+    let mut ring_note = String::new();
+    if let Some(spec) = args.ring_spec() {
+        // Both the advertised `--addr` and the bound socket address count
+        // as "self" so `--addr host:0` still matches a ring entry that
+        // names the advertised form.
+        let self_addrs = [args.addr().to_string(), server.local_addr()?.to_string()];
+        let ring = crate::serve::ring::Ring::parse(&spec, &self_addrs)?;
+        ring_note = format!(
+            ", ring {}/{} [{}]",
+            ring.self_idx() + 1,
+            ring.nodes().len(),
+            ring.nodes().join(",")
+        );
+        server.set_ring(std::sync::Arc::new(crate::serve::ring::RingState::new(ring)));
+    }
     // Announce before blocking so scripts can wait for readiness.
     let cap_note = match cap {
         Some(mb) => format!(", cap {mb} MiB"),
         None => String::new(),
     };
     println!(
-        "codr serve: listening on {} (store: {}{cap_note})",
+        "codr serve: listening on {} (store: {}{cap_note}{ring_note})",
         server.local_addr()?,
         store_dir.display()
     );
@@ -529,6 +544,69 @@ pub fn watch(args: &Args) -> Result<String> {
     watch_to_end(args.addr(), args.job()?, &retry_policy(args)?)
 }
 
+/// `codr ring` — query a ring-mode server: membership, per-peer health
+/// and forward/repair gauges; with `--model` (plus `--group`/`--seed`),
+/// also resolve which node owns that pack.
+pub fn ring(args: &Args) -> Result<String> {
+    let addr = args.addr();
+    let mut fields = vec![("verb".into(), Json::str("ring"))];
+    if let Some(model) = args.get("model") {
+        fields.push(("model".into(), Json::str(model)));
+        fields.push(("group".into(), Json::str(args.get("group").unwrap_or("Orig"))));
+        fields.push(("seed".into(), Json::u64(args.seed()?)));
+    }
+    let resp = proto::request_retry(addr, &Json::Obj(fields), &retry_policy(args)?)?;
+    expect_ok(&resp)?;
+    let ring = resp.field("ring")?;
+    let s = |j: &Json, k: &str| -> String {
+        j.get(k)
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or("?")
+            .to_string()
+    };
+    let n = |j: &Json, k: &str| j.get(k).and_then(|v| v.as_u64().ok()).unwrap_or(0);
+    let nodes = match ring.field("nodes")?.as_arr() {
+        Ok(arr) => arr
+            .iter()
+            .filter_map(|v| v.as_str().ok())
+            .collect::<Vec<_>>()
+            .join(","),
+        Err(_) => "?".to_string(),
+    };
+    let mut out = format!(
+        "ring via {addr}: self {}, nodes [{nodes}], {} forwards, {} repairs",
+        s(ring, "self"),
+        n(ring, "forwards"),
+        n(ring, "repairs"),
+    );
+    if let Ok(peers) = ring.field("peers").and_then(|p| p.as_arr()) {
+        for p in peers {
+            out.push_str(&format!(
+                "\n  peer {:<21} {:<7} forwards {} (errors {}), repairs {}, probe p99 {} ms",
+                s(p, "addr"),
+                s(p, "state"),
+                n(p, "forwards"),
+                n(p, "forward_errors"),
+                n(p, "repairs"),
+                p.get("probe_p99_ms").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+            ));
+        }
+    }
+    if let Some(pack) = resp.get("pack") {
+        out.push_str(&format!(
+            "\n  pack {} -> owner {}{}",
+            s(pack, "stem"),
+            s(pack, "owner"),
+            if pack.get("owned").and_then(|o| o.as_bool().ok()) == Some(true) {
+                " (the node answering)"
+            } else {
+                ""
+            }
+        ));
+    }
+    Ok(out)
+}
+
 /// The client retry policy from `--retries` (0 = fail fast).
 fn retry_policy(args: &Args) -> Result<proto::Retry> {
     Ok(proto::Retry::attempts(args.retries()?))
@@ -591,6 +669,27 @@ pub fn submit(args: &Args) -> Result<String> {
     let resp = proto::request_admitted(addr, &Json::Obj(fields), &retry)?;
     expect_ok(&resp)?;
     let job = resp.field("job")?.as_u64()?;
+    if resp.get("state").and_then(|s| s.as_str().ok()) == Some("done-degraded") {
+        // The pack owner was down, so the node we dialed computed the
+        // grid itself and journaled the results for anti-entropy repair.
+        let stats = proto::stats_from_json(resp.field("stats")?)?;
+        let owner = resp
+            .get("owner")
+            .and_then(|o| o.as_str().ok())
+            .unwrap_or("unknown");
+        return Ok(format!(
+            "job {job} done-degraded: {} (owner {owner} down; results held on {addr} \
+             until repair)",
+            render_stats(&stats)
+        ));
+    }
+    // A forwarded submit ran on the pack owner — poll/stream there, not
+    // on the node we dialed (the job table lives with the owner).
+    let poll_addr = match resp.get("owner").and_then(|o| o.as_str().ok()) {
+        Some(owner) if resp.get("forwarded").is_some() => owner.to_string(),
+        _ => addr.to_string(),
+    };
+    let addr = poll_addr.as_str();
     let points = resp.field("points")?.as_u64()?;
     if args.flag("watch") {
         return watch_to_end(addr, job, &retry);
@@ -945,6 +1044,14 @@ pub fn bench(args: &Args) -> Result<String> {
         ),
         ("speedup_cold".into(), ratio(ref_ms, cold_ms)),
         ("speedup_warm".into(), ratio(ref_ms, warm_ms)),
+        ("arena".into(), {
+            let (entries, bytes, tombstoned) = memo::global().arena_stats();
+            Json::Obj(vec![
+                ("entries".into(), Json::usize(entries)),
+                ("bytes".into(), Json::u64(bytes)),
+                ("tombstoned_bytes".into(), Json::u64(tombstoned)),
+            ])
+        }),
         (
             "micro".into(),
             Json::Arr(
@@ -976,11 +1083,13 @@ pub fn bench(args: &Args) -> Result<String> {
             ref_ms as f64 / den as f64
         }
     };
+    let (arena_entries, arena_bytes, arena_tombstoned) = memo::global().arena_stats();
     Ok(format!(
         "hot path over {} layer sims ({} threads):\n\
          \u{20} reference       {:>8} ms  ({:.1} layers/s)\n\
          \u{20} optimized cold  {:>8} ms  ({:.1} layers/s, {:.1}x, memo {}/{} hits, {} L1)\n\
          \u{20} optimized warm  {:>8} ms  ({:.1} layers/s, {:.1}x, memo {}/{} hits, {} L1)\n\
+         \u{20} memo arena      {} entries, {} bytes live, {} bytes tombstoned\n\
          wrote {}",
         n_layer_sims,
         pool::default_threads(),
@@ -998,6 +1107,9 @@ pub fn bench(args: &Args) -> Result<String> {
         warm_memo.hits(),
         warm_memo.lookups,
         warm_memo.l1_hits,
+        arena_entries,
+        arena_bytes,
+        arena_tombstoned,
         out_path
     ))
 }
@@ -1159,6 +1271,11 @@ mod tests {
                 assert!(phases.get(k).is_some(), "{pass} missing {k}");
             }
         }
+        let arena = j.field("arena").unwrap();
+        for k in ["entries", "bytes", "tombstoned_bytes"] {
+            assert!(arena.field(k).unwrap().as_u64().is_ok(), "arena {k}");
+        }
+        assert!(summary.contains("memo arena"), "{summary}");
         let _ = std::fs::remove_file(&out);
     }
 

@@ -8,9 +8,10 @@
 //! codr compress --model <name> [--seed N]
 //! codr golden [--artifacts DIR] [--seed N]
 //! codr serve [--addr HOST:PORT] [--store DIR] [--store-cap-mb N] [--drain-secs N]
-//!           [--conn-timeout-secs N] [--max-queued N]
+//!           [--conn-timeout-secs N] [--max-queued N] [--ring host:port,host:port,...]
 //! codr submit [--addr HOST:PORT] [grid opts] [--watch | --wait] [--retries N]
 //! codr watch --job N [--addr HOST:PORT] [--retries N]
+//! codr ring [--addr HOST:PORT] [--model NAME [--group G] [--seed N]]
 //! codr warm [--addr HOST:PORT | --store DIR] [grid opts]
 //! codr bench [--quick] [--out FILE] [grid opts]
 //! codr analyze [--json] [--src DIR] [--print-env-table]
@@ -45,6 +46,8 @@ COMMANDS:
     submit          Send a sweep grid to a running server
                     (--watch to stream progress, --wait to poll)
     watch           Stream a submitted job's per-point progress (--job N)
+    ring            Show a ring-mode server's membership, peer health,
+                    and forward/repair gauges (--model resolves an owner)
     warm            Populate the result store (locally, or via --addr)
     bench           Time the simulation hot path (reference vs memoized),
                     write BENCH_hotpath.json
@@ -69,6 +72,10 @@ OPTIONS:
     --max-queued N     serve: admission-queue bound; past it, submit/warm/map
                        answer state:\"queued-full\" (default 64)
     --addr HOST:PORT   Sweep service address        (default 127.0.0.1:7878)
+    --ring a,b,...     serve: static multi-host ring membership (all nodes,
+                       including this one; $CODR_RING). Submits for packs
+                       another node owns are forwarded there; a down owner
+                       degrades to local compute + anti-entropy repair
     --retries N        submit/watch/map: retry transport failures and
                        queued-full refusals with exponential backoff
                        (default 0 = fail fast)
@@ -138,6 +145,7 @@ fn dispatch(argv: &[String]) -> Result<Outcome> {
         "serve" => commands::serve(&Args::parse(rest)?).map(Outcome::ok),
         "submit" => commands::submit(&Args::parse(rest)?).map(Outcome::ok),
         "watch" => commands::watch(&Args::parse(rest)?).map(Outcome::ok),
+        "ring" => commands::ring(&Args::parse(rest)?).map(Outcome::ok),
         "warm" => commands::warm(&Args::parse(rest)?).map(Outcome::ok),
         "bench" => commands::bench(&Args::parse(rest)?).map(Outcome::ok),
         "analyze" => commands::analyze(&Args::parse(rest)?),

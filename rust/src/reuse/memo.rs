@@ -214,6 +214,9 @@ struct Arena {
     segments: [OnceLock<Box<[OnceLock<CachedVector>]>>; ARENA_SEGMENTS],
     next: AtomicUsize,
     bytes: AtomicU64,
+    /// Bytes held by tombstoned (dead, never-reclaimed) entries — the
+    /// arena's reclaimable slack, surfaced by `status` and `codr bench`.
+    tombstoned: AtomicU64,
 }
 
 impl Arena {
@@ -222,7 +225,23 @@ impl Arena {
             segments: std::array::from_fn(|_| OnceLock::new()),
             next: AtomicUsize::new(0),
             bytes: AtomicU64::new(0),
+            tombstoned: AtomicU64::new(0),
         }
+    }
+
+    /// Tombstone one entry, accounting its bytes as reclaimable slack.
+    /// The swap makes double-tombstoning (a `flush` over an already
+    /// evicted entry) a no-op, so the gauge never double-counts.
+    fn tombstone(&self, handle: u32) {
+        let entry = self.get(handle);
+        if !entry.dead.swap(true, Ordering::Relaxed) {
+            self.tombstoned
+                .fetch_add(entry.approx_bytes() as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn tombstoned_bytes(&self) -> u64 {
+        self.tombstoned.load(Ordering::Relaxed)
     }
 
     /// Publish one entry; returns its handle.
@@ -613,13 +632,13 @@ impl VectorCache {
             match victim {
                 Some(vfp) => {
                     let vhandle = guard.map.remove(&vfp).expect("victim resident");
-                    self.arena.get(vhandle).dead.store(true, Ordering::Relaxed);
+                    self.arena.tombstone(vhandle);
                     let mut removed = 1usize;
                     // The collision chain dies with its primary.
                     let arena = &self.arena;
                     guard.side.retain(|&(cfp, chandle)| {
                         if cfp == vfp {
-                            arena.get(chandle).dead.store(true, Ordering::Relaxed);
+                            arena.tombstone(chandle);
                             removed += 1;
                             false
                         } else {
@@ -643,7 +662,7 @@ impl VectorCache {
                     // it still feeds this thread's L1 below — a hot
                     // vector stuck in an empty-at-cap shard serves from
                     // the front table instead of re-transforming.
-                    entry.dead.store(true, Ordering::Relaxed);
+                    self.arena.tombstone(handle);
                     drop(guard);
                 }
             }
@@ -700,11 +719,18 @@ impl VectorCache {
         self.evictions.load(Ordering::Relaxed)
     }
 
-    /// Arena occupancy: `(interned entries, approximate bytes)`. Counts
-    /// tombstoned entries too — the arena is append-only, so this is
-    /// the memo's true memory footprint.
-    pub fn arena_stats(&self) -> (usize, u64) {
-        (self.arena.len(), self.arena.bytes())
+    /// Arena occupancy: `(interned entries, approximate bytes,
+    /// tombstoned bytes)`. Entry and byte counts include tombstoned
+    /// entries — the arena is append-only, so they are the memo's true
+    /// memory footprint; the third field is the share of those bytes
+    /// held by dead entries (the reclaimable slack a future compaction
+    /// could recover).
+    pub fn arena_stats(&self) -> (usize, u64, u64) {
+        (
+            self.arena.len(),
+            self.arena.bytes(),
+            self.arena.tombstoned_bytes(),
+        )
     }
 
     /// Write the memo to `path` as a compact binary snapshot (atomic
@@ -830,10 +856,10 @@ impl VectorCache {
         for shard in &self.shards {
             let mut guard = shard.lock().unwrap();
             for &handle in guard.map.values() {
-                self.arena.get(handle).dead.store(true, Ordering::Relaxed);
+                self.arena.tombstone(handle);
             }
             for &(_, handle) in &guard.side {
-                self.arena.get(handle).dead.store(true, Ordering::Relaxed);
+                self.arena.tombstone(handle);
             }
             guard.map.clear();
             guard.side.clear();
@@ -1399,14 +1425,20 @@ mod tests {
     #[test]
     fn arena_stats_track_interned_entries() {
         let cache = VectorCache::with_capacity(64);
-        assert_eq!(cache.arena_stats(), (0, 0));
+        assert_eq!(cache.arena_stats(), (0, 0, 0));
         cache.get_or_insert(&[1i8, 2]);
         cache.get_or_insert(&[3i8]);
-        let (entries, bytes) = cache.arena_stats();
+        let (entries, bytes, tombstoned) = cache.arena_stats();
         assert_eq!(entries, 2);
         assert!(bytes > 0);
-        // Flush tombstones but does not reclaim (append-only).
+        assert_eq!(tombstoned, 0, "live entries are not slack");
+        // Flush tombstones but does not reclaim (append-only): the
+        // whole footprint becomes reclaimable slack, exactly once even
+        // if flushed again.
         cache.flush();
-        assert_eq!(cache.arena_stats().0, 2);
+        cache.flush();
+        let (entries, bytes, tombstoned) = cache.arena_stats();
+        assert_eq!(entries, 2);
+        assert_eq!(tombstoned, bytes, "all entries dead => all bytes slack");
     }
 }

@@ -18,8 +18,10 @@ use std::time::Instant;
 use crate::util::json::Json;
 
 /// Verbs tracked individually; anything unrecognized lands in `other`.
-pub const VERB_NAMES: [&str; 9] =
-    ["ping", "warm", "submit", "map", "watch", "status", "result", "shutdown", "other"];
+pub const VERB_NAMES: [&str; 11] = [
+    "ping", "warm", "submit", "map", "watch", "status", "result", "shutdown", "ring", "repair",
+    "other",
+];
 
 /// Upper bounds (inclusive) of the latency buckets, in microseconds.
 /// The last bucket is the overflow bucket.
@@ -58,39 +60,64 @@ struct VerbStat {
     buckets: [AtomicU64; BUCKETS],
 }
 
-impl VerbStat {
-    /// Upper bound (ms) of the bucket where the cumulative count first
-    /// reaches `q` of the total, or 0.0 when no samples were recorded.
-    fn quantile_ms(&self, counts: &[u64; BUCKETS], q: f64) -> f64 {
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = (q * total as f64).ceil().max(1.0) as u64;
-        let mut cum = 0u64;
-        for (i, c) in counts.iter().enumerate() {
-            cum += c;
-            if cum >= target {
-                return if i < BUCKET_BOUNDS_US.len() {
-                    BUCKET_BOUNDS_US[i] as f64 / 1000.0
-                } else {
-                    // Overflow bucket: report the last finite bound.
-                    BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1] as f64 / 1000.0
-                };
-            }
-        }
-        BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1] as f64 / 1000.0
+/// Upper bound (ms) of the bucket where the cumulative count first
+/// reaches `q` of the total, or 0.0 when no samples were recorded.
+fn quantile_from(counts: &[u64; BUCKETS], q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
     }
+    let target = (q * total as f64).ceil().max(1.0) as u64;
+    let mut cum = 0u64;
+    for (i, c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return if i < BUCKET_BOUNDS_US.len() {
+                BUCKET_BOUNDS_US[i] as f64 / 1000.0
+            } else {
+                // Overflow bucket: report the last finite bound.
+                BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1] as f64 / 1000.0
+            };
+        }
+    }
+    BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1] as f64 / 1000.0
+}
 
+impl VerbStat {
     fn to_json(&self) -> Json {
         let counts: [u64; BUCKETS] = std::array::from_fn(|i| read(&self.buckets[i]));
         Json::Obj(vec![
             ("requests".into(), Json::u64(read(&self.requests))),
             ("answers".into(), Json::u64(read(&self.answers))),
             ("errors".into(), Json::u64(read(&self.errors))),
-            ("p50_ms".into(), Json::f64(self.quantile_ms(&counts, 0.50))),
-            ("p99_ms".into(), Json::f64(self.quantile_ms(&counts, 0.99))),
+            ("p50_ms".into(), Json::f64(quantile_from(&counts, 0.50))),
+            ("p99_ms".into(), Json::f64(quantile_from(&counts, 0.99))),
         ])
+    }
+}
+
+/// A standalone log-scale latency histogram on the same bucket bounds
+/// as the verb table — used for per-peer probe latency, where a full
+/// [`VerbStat`] (request/answer accounting) does not apply. Shares the
+/// [`bump`]/[`read`] relaxed-counter funnel.
+#[derive(Default)]
+pub(crate) struct Hist {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Hist {
+    pub(crate) fn new() -> Hist {
+        Hist::default()
+    }
+
+    pub(crate) fn record(&self, elapsed: std::time::Duration) {
+        let elapsed_us = elapsed.as_micros().min(u64::MAX as u128) as u64;
+        bump(&self.buckets[bucket_index(elapsed_us)]);
+    }
+
+    pub(crate) fn quantile_ms(&self, q: f64) -> f64 {
+        let counts: [u64; BUCKETS] = std::array::from_fn(|i| read(&self.buckets[i]));
+        quantile_from(&counts, q)
     }
 }
 
@@ -159,7 +186,25 @@ mod tests {
     fn verb_index_maps_known_and_other() {
         assert_eq!(verb_index("ping"), 0);
         assert_eq!(verb_index("shutdown"), 7);
+        assert_eq!(verb_index("ring"), 8);
+        assert_eq!(verb_index("repair"), 9);
         assert_eq!(verb_index("frobnicate"), VERB_NAMES.len() - 1);
+    }
+
+    #[test]
+    fn hist_records_and_reports_quantiles() {
+        let h = Hist::new();
+        assert_eq!(h.quantile_ms(0.99), 0.0, "empty histogram reports zero");
+        for _ in 0..99 {
+            h.record(std::time::Duration::from_micros(100));
+        }
+        h.record(std::time::Duration::from_millis(700));
+        // 99% of samples land in the first bucket (bound 250us)...
+        assert_eq!(h.quantile_ms(0.50), 0.25);
+        // ...and the p99 target (ceil(0.99*100)=99) still sits there;
+        // anything above it reaches the outlier's bucket (bound 1s).
+        assert_eq!(h.quantile_ms(0.99), 0.25);
+        assert_eq!(h.quantile_ms(1.0), 1000.0);
     }
 
     #[test]

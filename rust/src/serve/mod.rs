@@ -30,7 +30,15 @@
 //! * [`journal`] — append-only, checksummed record of accepted sweep
 //!   jobs; on restart after a crash, journaled jobs that never reached a
 //!   terminal state are re-queued (the store diff turns the dead
-//!   process's persisted points into hits).
+//!   process's persisted points into hits);
+//! * [`ring`] / [`peer`] — optional multi-host mode (`--ring` /
+//!   `CODR_RING`): a static consistent-hash ring places packs on nodes,
+//!   any node forwards non-owned submits to the pack owner through a
+//!   health-checked peer client (Up → Suspect → Down, periodic probes),
+//!   computes locally in degraded mode when the owner is down
+//!   (`state:"done-degraded"`, origin-tagged entries), and an
+//!   anti-entropy repair pass pushes misplaced packs back to recovered
+//!   owners.
 //!
 //! The CLI figure path reads through the same store, so
 //! `codr warm --models tiny` followed by `codr figure headline --models
@@ -39,8 +47,10 @@
 pub(crate) mod exec;
 pub mod journal;
 pub(crate) mod metrics;
+pub(crate) mod peer;
 pub mod proto;
 pub(crate) mod reactor;
+pub(crate) mod ring;
 pub mod scheduler;
 pub mod server;
 pub mod store;

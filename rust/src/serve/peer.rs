@@ -1,0 +1,279 @@
+//! Peer client + health tracking for the multi-host ring.
+//!
+//! One [`Peer`] per remote ring node. All traffic to a peer flows
+//! through two entry points with different failure semantics:
+//!
+//! * [`forward`] — forward a client's work (or push a repair pack) to
+//!   the pack owner. Bounded by the per-peer timeout
+//!   (`CODR_PEER_TIMEOUT_MS`), guarded by the `peer.conn.fail` fault
+//!   seam, and — when faults are armed — the request line runs through
+//!   the `peer.forward.torn` seam (a torn forward never reaches the
+//!   owner whole: the receiving reactor waits for the missing newline
+//!   and this side's read times out, surfacing as a transport error the
+//!   caller retries or degrades on).
+//! * [`probe`] — the periodic health `ping` scheduled by the reactor's
+//!   maintenance tick. Its latency (including any `peer.probe.stall`
+//!   injection) lands in a per-peer histogram reported as `probe_p99_ms`.
+//!
+//! Health is a failure-threshold state machine: any success resets to
+//! **Up**; the first consecutive failure demotes to **Suspect**; after
+//! [`DOWN_AFTER`] consecutive failures the peer is **Down**. Forwarding
+//! skips Down peers immediately (straight to degraded mode) instead of
+//! burning the timeout per request; the probe keeps running so a
+//! recovered peer is promoted back to Up within one maintenance tick.
+//!
+//! Counters use `SeqCst` ordering: they are low-rate (per forward /
+//! per probe, not per sweep point), and the health state must be
+//! totally ordered with the routing decisions that read it.
+
+use super::metrics::Hist;
+use super::proto;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::time::{Duration, Instant};
+
+/// Default per-peer connect/read/write timeout (`CODR_PEER_TIMEOUT_MS`).
+pub(crate) const DEFAULT_TIMEOUT_MS: u64 = 1000;
+
+/// Consecutive failures that demote a peer from Suspect to Down.
+pub(crate) const DOWN_AFTER: u32 = 3;
+
+/// Per-peer timeout from `CODR_PEER_TIMEOUT_MS` (milliseconds, default
+/// [`DEFAULT_TIMEOUT_MS`], clamped to at least 1ms). Applies to connect,
+/// read, and write individually.
+pub(crate) fn peer_timeout() -> Duration {
+    let ms = crate::analysis::env_registry::var("CODR_PEER_TIMEOUT_MS")
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(DEFAULT_TIMEOUT_MS)
+        .max(1);
+    Duration::from_millis(ms)
+}
+
+/// Peer health: Up → Suspect (first failure) → Down ([`DOWN_AFTER`]
+/// consecutive failures); any success resets to Up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Health {
+    Up,
+    Suspect,
+    Down,
+}
+
+impl Health {
+    pub(crate) fn name(self) -> &'static str {
+        match self {
+            Health::Up => "up",
+            Health::Suspect => "suspect",
+            Health::Down => "down",
+        }
+    }
+
+    fn from_u8(v: u8) -> Health {
+        match v {
+            0 => Health::Up,
+            1 => Health::Suspect,
+            _ => Health::Down,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            Health::Up => 0,
+            Health::Suspect => 1,
+            Health::Down => 2,
+        }
+    }
+}
+
+/// One remote ring node: its address, health state machine, and the
+/// per-peer gauges `status` reports.
+pub(crate) struct Peer {
+    pub(crate) addr: String,
+    state: AtomicU8,
+    consecutive_failures: AtomicU32,
+    /// Submits successfully forwarded to this peer.
+    pub(crate) forwards: AtomicU64,
+    /// Forward attempts that failed (transport error, injected fault, or
+    /// an owner-side error answer other than `queued-full`).
+    pub(crate) forward_errors: AtomicU64,
+    /// Misplaced packs successfully pushed to this peer by the
+    /// anti-entropy repair pass.
+    pub(crate) repairs: AtomicU64,
+    probe: Hist,
+}
+
+impl Peer {
+    pub(crate) fn new(addr: impl Into<String>) -> Peer {
+        Peer {
+            addr: addr.into(),
+            state: AtomicU8::new(Health::Up.as_u8()),
+            consecutive_failures: AtomicU32::new(0),
+            forwards: AtomicU64::new(0),
+            forward_errors: AtomicU64::new(0),
+            repairs: AtomicU64::new(0),
+            probe: Hist::new(),
+        }
+    }
+
+    pub(crate) fn health(&self) -> Health {
+        Health::from_u8(self.state.load(Ordering::SeqCst))
+    }
+
+    fn record_success(&self) {
+        self.consecutive_failures.store(0, Ordering::SeqCst);
+        self.state.store(Health::Up.as_u8(), Ordering::SeqCst);
+    }
+
+    fn record_failure(&self) {
+        let fails = self.consecutive_failures.fetch_add(1, Ordering::SeqCst) + 1;
+        let next = if fails >= DOWN_AFTER { Health::Down } else { Health::Suspect };
+        self.state.store(next.as_u8(), Ordering::SeqCst);
+    }
+
+    /// The per-peer gauge object surfaced by `status` and the `ring` verb.
+    pub(crate) fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("addr".into(), Json::str(&self.addr)),
+            ("state".into(), Json::str(self.health().name())),
+            ("forwards".into(), Json::u64(self.forwards.load(Ordering::SeqCst))),
+            (
+                "forward_errors".into(),
+                Json::u64(self.forward_errors.load(Ordering::SeqCst)),
+            ),
+            ("repairs".into(), Json::u64(self.repairs.load(Ordering::SeqCst))),
+            ("probe_p99_ms".into(), Json::f64(self.probe.quantile_ms(0.99))),
+        ])
+    }
+}
+
+/// One request/response exchange with a peer, every phase bounded by
+/// `timeout`. `torn_seam` routes the request line through the
+/// `peer.forward.torn` fault (forward traffic only — probes must stay
+/// honest about what a healthy peer looks like).
+fn call(addr: &str, msg: &Json, timeout: Duration, torn_seam: bool) -> Result<Json> {
+    let sock = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving peer address {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("peer address {addr} resolves to nothing"))?;
+    let stream = TcpStream::connect_timeout(&sock, timeout)
+        .with_context(|| format!("connecting to peer {addr}"))?;
+    stream.set_read_timeout(Some(timeout)).ok();
+    stream.set_write_timeout(Some(timeout)).ok();
+    let mut writer = stream.try_clone().context("cloning peer stream")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = msg.to_string().into_bytes();
+    line.push(b'\n');
+    // Injection seam: a forward torn mid-write (sender dies between
+    // connect and the newline landing). The receiving reactor never sees
+    // a complete line, so nothing is enqueued there; this side's read
+    // times out and the caller retries or degrades. The copy-free fast
+    // path is preserved: the seam only runs when faults are armed.
+    if torn_seam && crate::faults::armed() {
+        crate::faults::torn_point("peer.forward.torn", &mut line);
+    }
+    writer
+        .write_all(&line)
+        .with_context(|| format!("sending to peer {addr}"))?;
+    writer.flush().with_context(|| format!("flushing to peer {addr}"))?;
+    proto::read_message(&mut reader)?
+        .with_context(|| format!("peer {addr} closed the connection without replying"))
+}
+
+/// Forward one request (a routed submit or a repair push) to `peer`.
+/// Transport failures — including the `peer.conn.fail` injection —
+/// update the health state machine; the caller owns retry/degrade
+/// policy and the forward/repair gauges.
+pub(crate) fn forward(peer: &Peer, msg: &Json, timeout: Duration) -> Result<Json> {
+    if crate::faults::point("peer.conn.fail") {
+        peer.record_failure();
+        anyhow::bail!("fault injected: peer.conn.fail ({})", peer.addr);
+    }
+    match call(&peer.addr, msg, timeout, true) {
+        Ok(resp) => {
+            peer.record_success();
+            Ok(resp)
+        }
+        Err(e) => {
+            peer.record_failure();
+            Err(e)
+        }
+    }
+}
+
+/// One health probe: `ping` the peer and update its state machine. The
+/// observed latency (including any injected `peer.probe.stall`) lands in
+/// the per-peer histogram behind `probe_p99_ms`. Returns whether the
+/// peer answered ok.
+pub(crate) fn probe(peer: &Peer, timeout: Duration) -> bool {
+    crate::faults::sleep_point("peer.probe.stall", Duration::from_secs(2));
+    let t0 = Instant::now();
+    let resp = call(
+        &peer.addr,
+        &Json::Obj(vec![("verb".into(), Json::str("ping"))]),
+        timeout,
+        false,
+    );
+    peer.probe.record(t0.elapsed());
+    let ok = matches!(
+        &resp,
+        Ok(r) if matches!(r.get("ok").and_then(|o| o.as_bool().ok()), Some(true))
+    );
+    if ok {
+        peer.record_success();
+    } else {
+        peer.record_failure();
+    }
+    ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_walks_up_suspect_down_and_recovers() {
+        let p = Peer::new("127.0.0.1:1");
+        assert_eq!(p.health(), Health::Up);
+        p.record_failure();
+        assert_eq!(p.health(), Health::Suspect);
+        p.record_failure();
+        assert_eq!(p.health(), Health::Suspect);
+        p.record_failure();
+        assert_eq!(p.health(), Health::Down);
+        // Further failures keep it Down; one success fully recovers.
+        p.record_failure();
+        assert_eq!(p.health(), Health::Down);
+        p.record_success();
+        assert_eq!(p.health(), Health::Up);
+        // The counter reset means the next single failure is Suspect again.
+        p.record_failure();
+        assert_eq!(p.health(), Health::Suspect);
+    }
+
+    #[test]
+    fn probe_against_dead_port_marks_failure_and_records_latency() {
+        let p = Peer::new("127.0.0.1:1");
+        assert!(!probe(&p, Duration::from_millis(50)));
+        assert_eq!(p.health(), Health::Suspect);
+        let j = p.to_json();
+        assert_eq!(j.get("state").unwrap().as_str().unwrap(), "suspect");
+        // One sample recorded: the quantile reports a bucket bound > 0.
+        assert!(j.get("probe_p99_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn forward_against_dead_port_surfaces_transport_error() {
+        let p = Peer::new("127.0.0.1:1");
+        let err = forward(
+            &p,
+            &Json::Obj(vec![("verb".into(), Json::str("ping"))]),
+            Duration::from_millis(50),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("connecting to peer"), "{err:#}");
+        assert_eq!(p.health(), Health::Suspect);
+    }
+}

@@ -305,8 +305,10 @@ impl Retry {
     }
 
     /// Backoff before retry number `attempt` (1-based): exponential in
-    /// the attempt with one seeded jitter draw added.
-    fn backoff(&self, attempt: u32) -> std::time::Duration {
+    /// the attempt with one seeded jitter draw added. Crate-visible so
+    /// the server's peer-forward path retries under the same curve
+    /// clients use.
+    pub(crate) fn backoff(&self, attempt: u32) -> std::time::Duration {
         let exp = self.base.saturating_mul(1u32 << (attempt - 1).min(10));
         let base_ms = self.base.as_millis().max(1) as u64;
         let jitter = crate::util::rng::Rng::new(self.jitter_seed)
@@ -369,9 +371,24 @@ pub fn request_retry(addr: &str, msg: &Json, retry: &Retry) -> Result<Json> {
 /// (ok or error) returns immediately. When the budget runs out on
 /// `queued-full`, this fails — a refused submit is never a success.
 pub fn request_admitted(addr: &str, msg: &Json, retry: &Retry) -> Result<Json> {
+    admitted_with(retry, || request(addr, msg), std::thread::sleep)
+}
+
+/// The admission-retry state machine behind [`request_admitted`],
+/// parameterized over the transport (`transact`) and the clock (`pause`)
+/// so tests can drive mixed failure sequences and pin the exact backoff
+/// schedule. The invariant the pinning test protects: transport failures
+/// and `queued-full` refusals share ONE attempt counter — neither kind
+/// resets the other's budget — so the backoff curve stays monotone
+/// across mixed failures instead of restarting from `base`.
+fn admitted_with(
+    retry: &Retry,
+    mut transact: impl FnMut() -> Result<Json>,
+    mut pause: impl FnMut(std::time::Duration),
+) -> Result<Json> {
     let mut attempt = 0u32;
     loop {
-        let failure = match request(addr, msg) {
+        let failure = match transact() {
             Ok(resp) if !is_queued_full(&resp) => return Ok(resp),
             Ok(resp) => {
                 let busy = resp
@@ -392,13 +409,13 @@ pub fn request_admitted(addr: &str, msg: &Json, retry: &Retry) -> Result<Json> {
             }
         };
         attempt += 1;
-        let pause = retry.backoff(attempt);
+        let wait = retry.backoff(attempt);
         eprintln!(
             "retry {attempt}/{}: {failure} — backing off {}ms",
             retry.attempts,
-            pause.as_millis()
+            wait.as_millis()
         );
-        std::thread::sleep(pause);
+        pause(wait);
     }
 }
 
@@ -631,6 +648,44 @@ mod tests {
             (b1, b2, b3),
             (other.backoff(1), other.backoff(2), other.backoff(3))
         );
+    }
+
+    #[test]
+    fn admitted_retry_shares_one_attempt_counter_across_failure_kinds() {
+        let r = Retry {
+            attempts: 3,
+            base: std::time::Duration::from_millis(100),
+            jitter_seed: 9,
+        };
+        let mut script: std::collections::VecDeque<Result<Json>> = [
+            Err(anyhow::anyhow!("connection refused")),
+            Ok(queued_full_response(4, 4)),
+            Ok(queued_full_response(4, 4)),
+            Ok(ok_response(vec![("job".into(), Json::u64(7))])),
+        ]
+        .into_iter()
+        .collect();
+        let mut pauses: Vec<std::time::Duration> = Vec::new();
+        let resp = admitted_with(
+            &r,
+            || script.pop_front().expect("script exhausted"),
+            |d| pauses.push(d),
+        )
+        .unwrap();
+        assert_eq!(resp.get("job").unwrap().as_u64().unwrap(), 7);
+        // One shared counter: the transport failure consumed attempt 1,
+        // so the queued-full refusals continue at attempts 2 and 3 — the
+        // schedule never resets to `base` when the failure kind changes.
+        assert_eq!(pauses, vec![r.backoff(1), r.backoff(2), r.backoff(3)]);
+
+        // Exhausting the budget on queued-full is a hard error.
+        let mut script: std::collections::VecDeque<Result<Json>> =
+            std::iter::repeat_with(|| Ok(queued_full_response(9, 4)))
+                .take(2)
+                .collect();
+        let short = Retry { attempts: 1, ..r.clone() };
+        let err = admitted_with(&short, || script.pop_front().unwrap(), |_| {}).unwrap_err();
+        assert!(err.to_string().contains("queued-full"), "{err:#}");
     }
 
     #[test]

@@ -438,6 +438,12 @@ const FIRST_CONN_TOKEN: usize = 2;
 /// the old server's watcher-flush window.
 const FLUSH_WINDOW: Duration = Duration::from_millis(500);
 
+/// Ring-mode maintenance cadence: peer health probes + the anti-entropy
+/// repair pass are scheduled onto the executor about this often. The
+/// tick itself only *submits* a task — all network I/O stays off the
+/// reactor thread.
+const RING_TICK: Duration = Duration::from_millis(500);
+
 pub(crate) enum ConnState {
     /// Parsing request lines.
     Idle,
@@ -530,6 +536,8 @@ struct Reactor {
     reap: BinaryHeap<Reverse<(Instant, usize)>>,
     conn_timeout: Option<Duration>,
     next_token: usize,
+    /// Next ring-maintenance deadline; `None` when no ring is configured.
+    next_ring_tick: Option<Instant>,
 }
 
 /// Drive the serve loop until shutdown completes. Owns every connection;
@@ -549,6 +557,7 @@ pub(crate) fn run_loop(
         reap: BinaryHeap::new(),
         conn_timeout,
         next_token: FIRST_CONN_TOKEN,
+        next_ring_tick: shared.ring.get().map(|_| Instant::now() + RING_TICK),
     };
     r.poller
         .register(TOKEN_LISTENER, listener.as_raw_fd(), Interest { read: true, write: false })
@@ -584,6 +593,7 @@ pub(crate) fn run_loop(
             r.pump_watchers();
         }
         r.reap_idle();
+        r.maybe_ring_tick(matches!(phase, Phase::Serving));
         r.sweep();
 
         match phase {
@@ -628,16 +638,41 @@ pub(crate) fn run_loop(
 
 impl Reactor {
     fn poll_timeout(&self, phase: &Phase) -> Duration {
-        let cap = match phase {
+        let mut cap = match phase {
             Phase::Serving => Duration::from_secs(1),
             _ => Duration::from_millis(200),
         };
+        if let (Some(due), Phase::Serving) = (self.next_ring_tick, phase) {
+            cap = cap.min(due.saturating_duration_since(Instant::now()));
+        }
         match self.reap.peek() {
             Some(&Reverse((deadline, _))) if self.conn_timeout.is_some() => {
                 cap.min(deadline.saturating_duration_since(Instant::now()))
             }
             _ => cap,
         }
+    }
+
+    /// Fire the ring-maintenance task when its deadline is due (Serving
+    /// phase only — a draining server neither probes nor repairs). The
+    /// task runs on the executor; overlap is prevented by the ring
+    /// state's own maintenance mutex, so a slow pass simply makes later
+    /// ticks no-ops.
+    fn maybe_ring_tick(&mut self, serving: bool) {
+        if !serving {
+            return;
+        }
+        let Some(due) = self.next_ring_tick else {
+            return;
+        };
+        if Instant::now() < due {
+            return;
+        }
+        self.next_ring_tick = Some(Instant::now() + RING_TICK);
+        let shared = Arc::clone(&self.shared);
+        self.shared
+            .exec
+            .submit_unbounded(Box::new(move || server::ring_maintenance(&shared)));
     }
 
     fn accept_ready(&mut self, listener: &TcpListener, serving: bool) {
@@ -796,6 +831,23 @@ impl Reactor {
                     self.send(token, &resp);
                 }
             },
+            // Ring mode: a submit whose pack belongs to another node is
+            // forwarded off-loop; the connection parks (same contract as
+            // warm) until the forward/degraded answer comes back through
+            // the completion mailbox.
+            "submit" if self.shared.ring.get().is_some() => {
+                match server::submit_intercept(&msg, &self.shared, token, idx, started) {
+                    None => {
+                        if let Some(conn) = self.conns.get_mut(&token) {
+                            conn.state = ConnState::AwaitWarm;
+                        }
+                    }
+                    Some(resp) => {
+                        self.shared.metrics.finish(idx, started, resp_ok(&resp));
+                        self.send(token, &resp);
+                    }
+                }
+            }
             _ => {
                 let resp = server::handle_request(&msg, &self.shared);
                 self.shared.metrics.finish(idx, started, resp_ok(&resp));

@@ -1,0 +1,382 @@
+//! Static consistent-hash ring over pack keys for multi-host serving.
+//!
+//! Placement is by **pack** — the `(model, group, seed)` unit the v2
+//! store already writes as one `*.pack.json` file — so the ring moves
+//! whole files, never entries. Every node is started with the identical
+//! `--ring host1:port,host2:port,...` list (or `CODR_RING`); each hashes
+//! pack stems onto the same [`VNODES_PER_NODE`]-virtual-node circle
+//! (stable `fnv1a64` for vnode positions, the dual-stream [`Fp128`]
+//! fingerprint for keys), so any node can answer "who owns this pack"
+//! without talking to anyone.
+//!
+//! Any node accepts any request. Work whose packs it does not own is
+//! forwarded to the owner through [`super::peer`]; when the owner is
+//! Down the node computes locally instead (degraded mode — entries are
+//! tagged with an `origin` marker by the store), and the anti-entropy
+//! [`RingState::maintain`] pass — probes first, then repair — pushes
+//! misplaced packs to their owner once it is Up again. Repair merges
+//! through the owner's normal pack upsert path (save lock + advisory
+//! pack lock), so a repair never clobbers entries the owner computed
+//! itself, and the local copy is only trimmed after the owner acks.
+
+use super::peer::{self, Health, Peer};
+use super::store::ResultStore;
+use crate::util::hash::{fnv1a64, Fp128};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Virtual nodes per ring node: enough that a two-node ring splits pack
+/// stems roughly evenly instead of by one arbitrary hash boundary.
+pub(crate) const VNODES_PER_NODE: usize = 64;
+
+/// The immutable ring geometry: the configured node list, which entry
+/// is this process, and the sorted virtual-node circle.
+pub(crate) struct Ring {
+    nodes: Vec<String>,
+    self_idx: usize,
+    /// `(position, node index)`, sorted — ties broken by node index so
+    /// every node computes the identical circle from the same list.
+    vnodes: Vec<(u64, usize)>,
+}
+
+impl Ring {
+    /// Parse a `host1:port,host2:port,...` spec. `self_addrs` are the
+    /// strings this process answers to (the `--addr` argument and the
+    /// bound socket address); exactly one ring entry must match one of
+    /// them — a node that is not in its own ring config would route
+    /// every pack away and own nothing.
+    pub(crate) fn parse(spec: &str, self_addrs: &[String]) -> Result<Ring> {
+        let nodes: Vec<String> = spec
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if nodes.len() < 2 {
+            anyhow::bail!(
+                "--ring needs at least two host:port entries, got {} in `{spec}`",
+                nodes.len()
+            );
+        }
+        for n in &nodes {
+            if !n.contains(':') {
+                anyhow::bail!("ring entry `{n}` is not host:port");
+            }
+        }
+        for (i, n) in nodes.iter().enumerate() {
+            if nodes[..i].contains(n) {
+                anyhow::bail!("ring entry `{n}` appears twice");
+            }
+        }
+        let self_idx = nodes
+            .iter()
+            .position(|n| self_addrs.contains(n))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--ring must include this node's own address (listening on {}, ring: {spec})",
+                    self_addrs.join(" / ")
+                )
+            })?;
+        let mut vnodes: Vec<(u64, usize)> = Vec::with_capacity(nodes.len() * VNODES_PER_NODE);
+        for (idx, node) in nodes.iter().enumerate() {
+            for replica in 0..VNODES_PER_NODE {
+                vnodes.push((fnv1a64(format!("{node}#{replica}").as_bytes()), idx));
+            }
+        }
+        vnodes.sort_unstable();
+        Ok(Ring {
+            nodes,
+            self_idx,
+            vnodes,
+        })
+    }
+
+    /// Hash a pack stem onto the circle. Both independent halves of the
+    /// store fingerprint are folded in, so stems that collide in one
+    /// 64-bit stream still spread.
+    fn key_point(stem: &str) -> u64 {
+        let bytes: Vec<i8> = stem.bytes().map(|b| b as i8).collect();
+        let fp = Fp128::of_i8(&bytes);
+        fp.lo ^ fp.hi
+    }
+
+    /// Index of the node owning `stem`: the first virtual node at or
+    /// after the key's position, wrapping at the top of the circle.
+    pub(crate) fn owner_of(&self, stem: &str) -> usize {
+        let point = Ring::key_point(stem);
+        let at = self
+            .vnodes
+            .partition_point(|(pos, _)| *pos < point)
+            % self.vnodes.len();
+        self.vnodes[at].1
+    }
+
+    pub(crate) fn self_idx(&self) -> usize {
+        self.self_idx
+    }
+
+    pub(crate) fn nodes(&self) -> &[String] {
+        &self.nodes
+    }
+}
+
+/// The live ring: geometry plus per-peer health/gauges, the peer
+/// timeout, and the maintenance serialization lock. One per server,
+/// installed into `serve::Shared` at startup when `--ring` is given.
+pub(crate) struct RingState {
+    ring: Ring,
+    /// One slot per ring node (the self slot exists but is never
+    /// probed or forwarded to), so peer and node indexes line up.
+    peers: Vec<Peer>,
+    pub(crate) timeout: Duration,
+    /// Serializes maintenance passes (probe sweep + repair push): ticks
+    /// arrive on a fixed cadence but a pass may outlive one interval
+    /// when probes time out, and two concurrent repair pushes of the
+    /// same pack would double-send entries. Outermost in the lock
+    /// hierarchy (tier 0): a pass acquires the store save lock and pack
+    /// locks underneath it, never the reverse.
+    maintenance: Mutex<()>,
+}
+
+impl RingState {
+    pub(crate) fn new(ring: Ring) -> RingState {
+        let peers = ring.nodes.iter().map(Peer::new).collect();
+        RingState {
+            ring,
+            peers,
+            timeout: peer::peer_timeout(),
+            maintenance: Mutex::new(()),
+        }
+    }
+
+    pub(crate) fn self_addr(&self) -> &str {
+        &self.ring.nodes[self.ring.self_idx]
+    }
+
+    pub(crate) fn self_idx(&self) -> usize {
+        self.ring.self_idx
+    }
+
+    pub(crate) fn nodes(&self) -> &[String] {
+        self.ring.nodes()
+    }
+
+    pub(crate) fn node(&self, idx: usize) -> &str {
+        &self.ring.nodes[idx]
+    }
+
+    pub(crate) fn owner_of(&self, stem: &str) -> usize {
+        self.ring.owner_of(stem)
+    }
+
+    /// Does this node own `stem`? The store's origin-tagging predicate.
+    pub(crate) fn owns(&self, stem: &str) -> bool {
+        self.ring.owner_of(stem) == self.ring.self_idx
+    }
+
+    pub(crate) fn peer(&self, idx: usize) -> &Peer {
+        &self.peers[idx]
+    }
+
+    /// The `ring` gauge object for `status` and the `ring` verb:
+    /// aggregate forward/repair counts plus one entry per remote peer.
+    pub(crate) fn gauges(&self) -> Json {
+        let mut forwards = 0u64;
+        let mut repairs = 0u64;
+        let mut peers = Vec::new();
+        for (i, p) in self.peers.iter().enumerate() {
+            if i == self.ring.self_idx {
+                continue;
+            }
+            forwards += p.forwards.load(Ordering::SeqCst);
+            repairs += p.repairs.load(Ordering::SeqCst);
+            peers.push(p.to_json());
+        }
+        Json::Obj(vec![
+            ("self".into(), Json::str(self.self_addr())),
+            (
+                "nodes".into(),
+                Json::Arr(self.ring.nodes.iter().map(Json::str).collect()),
+            ),
+            ("forwards".into(), Json::u64(forwards)),
+            ("repairs".into(), Json::u64(repairs)),
+            ("peers".into(), Json::Arr(peers)),
+        ])
+    }
+
+    /// One maintenance pass: probe every remote peer, then push any
+    /// misplaced packs to owners that are Up. Scheduled by the reactor
+    /// on a fixed tick but executed on the pool — the reactor never
+    /// blocks on a peer. A tick that arrives while a pass is still
+    /// running is skipped (the lock is try-acquired), so slow probes
+    /// cannot pile passes up.
+    pub(crate) fn maintain(&self, store: &ResultStore) {
+        let _guard = match self.maintenance.try_lock() {
+            Ok(g) => g,
+            // A previous pass panicked mid-probe; the lock protects
+            // nothing across passes, so take it over.
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => return,
+        };
+        for (i, p) in self.peers.iter().enumerate() {
+            if i == self.ring.self_idx {
+                continue;
+            }
+            peer::probe(p, self.timeout);
+        }
+        self.repair(store);
+    }
+
+    /// Anti-entropy: push every pack this node holds but does not own to
+    /// its owner, then trim the pushed entries locally. The local copy
+    /// is only trimmed after the owner acks the merge — a failed push
+    /// changes nothing and the next tick retries — and the trim removes
+    /// exactly the acked fingerprints, so entries written locally while
+    /// the push was in flight survive for the following pass.
+    fn repair(&self, store: &ResultStore) {
+        for (stem, path) in store.misplaced_packs(&|s| self.owns(s)) {
+            let owner = self.ring.owner_of(&stem);
+            if owner == self.ring.self_idx {
+                continue;
+            }
+            let p = &self.peers[owner];
+            if p.health() != Health::Up {
+                continue;
+            }
+            let (model, group, seed, entries) = match store.read_pack_for_repair(&path) {
+                Ok(pack) => pack,
+                Err(e) => {
+                    eprintln!("warn: repair cannot read {}: {e:#}", path.display());
+                    continue;
+                }
+            };
+            if entries.is_empty() {
+                // Nothing addressable to merge; trim so the pass stops
+                // re-reading a husk every tick.
+                let _ = store.remove_pack_entries(&model, &group, seed, &[]);
+                continue;
+            }
+            let fps: Vec<u64> = entries.iter().map(|(fp, _)| *fp).collect();
+            let msg = Json::Obj(vec![
+                ("verb".into(), Json::str("repair")),
+                (
+                    "pack".into(),
+                    Json::Obj(vec![
+                        ("model".into(), Json::str(&model)),
+                        ("group".into(), Json::str(&group)),
+                        ("seed".into(), Json::u64(seed)),
+                    ]),
+                ),
+                (
+                    "entries".into(),
+                    Json::Arr(entries.into_iter().map(|(_, e)| e).collect()),
+                ),
+            ]);
+            match peer::forward(p, &msg, self.timeout) {
+                Ok(resp)
+                    if matches!(resp.get("ok").and_then(|o| o.as_bool().ok()), Some(true)) =>
+                {
+                    match store.remove_pack_entries(&model, &group, seed, &fps) {
+                        Ok(()) => {
+                            p.repairs.fetch_add(1, Ordering::SeqCst);
+                            eprintln!(
+                                "ring: repaired pack {stem} ({} entries) to owner {}",
+                                fps.len(),
+                                p.addr
+                            );
+                        }
+                        Err(e) => eprintln!(
+                            "warn: owner {} acked pack {stem} but the local trim failed: {e:#}",
+                            p.addr
+                        ),
+                    }
+                }
+                Ok(resp) => {
+                    let why = resp
+                        .get("error")
+                        .and_then(|e| e.as_str().ok())
+                        .unwrap_or("refused");
+                    eprintln!("warn: owner {} refused repair of {stem}: {why}", p.addr);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "warn: repair push of {stem} to {} failed (will retry): {e:#}",
+                        p.addr
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two(self_addr: &str) -> Ring {
+        Ring::parse(
+            "127.0.0.1:7001,127.0.0.1:7002",
+            &[self_addr.to_string()],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_rejects_bad_configs() {
+        let me = vec!["127.0.0.1:7001".to_string()];
+        assert!(Ring::parse("", &me).is_err());
+        assert!(Ring::parse("127.0.0.1:7001", &me).is_err(), "one node");
+        assert!(Ring::parse("127.0.0.1:7001,localhost", &me).is_err(), "no port");
+        assert!(
+            Ring::parse("127.0.0.1:7001,127.0.0.1:7001", &me).is_err(),
+            "duplicate"
+        );
+        let err = Ring::parse("127.0.0.1:7002,127.0.0.1:7003", &me).unwrap_err();
+        assert!(err.to_string().contains("own address"), "{err:#}");
+    }
+
+    #[test]
+    fn ownership_is_identical_from_every_node_and_spreads() {
+        let a = two("127.0.0.1:7001");
+        let b = two("127.0.0.1:7002");
+        assert_eq!(a.self_idx(), 0);
+        assert_eq!(b.self_idx(), 1);
+        let mut owned = [0usize; 2];
+        for model in ["tiny", "alexnet", "vgg16", "mobile"] {
+            for seed in 0..32u64 {
+                let stem = format!("{model}-Orig-s{seed}");
+                let oa = a.owner_of(&stem);
+                // Placement must not depend on which node asks.
+                assert_eq!(oa, b.owner_of(&stem), "{stem}");
+                // And must be stable call over call.
+                assert_eq!(oa, a.owner_of(&stem), "{stem}");
+                owned[oa] += 1;
+            }
+        }
+        // 64 vnodes/node over 128 stems: both nodes own a real share.
+        assert!(owned[0] >= 16, "skewed: {owned:?}");
+        assert!(owned[1] >= 16, "skewed: {owned:?}");
+    }
+
+    #[test]
+    fn ring_state_gauges_shape() {
+        let state = RingState::new(two("127.0.0.1:7001"));
+        assert_eq!(state.self_addr(), "127.0.0.1:7001");
+        // `owns` must agree with `owner_of` against the self index.
+        let stem = "tiny-Orig-s9";
+        assert_eq!(state.owns(stem), state.owner_of(stem) == state.self_idx());
+        let g = state.gauges();
+        assert_eq!(g.get("self").unwrap().as_str().unwrap(), "127.0.0.1:7001");
+        assert_eq!(g.get("nodes").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(g.get("forwards").unwrap().as_u64().unwrap(), 0);
+        let peers = g.get("peers").unwrap().as_arr().unwrap();
+        assert_eq!(peers.len(), 1, "self slot excluded");
+        assert_eq!(
+            peers[0].get("addr").unwrap().as_str().unwrap(),
+            "127.0.0.1:7002"
+        );
+        assert_eq!(peers[0].get("state").unwrap().as_str().unwrap(), "up");
+    }
+}

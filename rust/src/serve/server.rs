@@ -52,12 +52,14 @@
 use super::exec::Exec;
 use super::journal::Journal;
 use super::metrics::Metrics;
+use super::peer::{self, Health};
 use super::proto::{
-    error_response, ok_response, queued_full_response, stats_to_json, GridRequest,
+    error_response, ok_response, queued_full_response, stats_to_json, GridRequest, Retry,
 };
 use super::reactor::{self, Completion, Notifier, WakeRx};
+use super::ring::RingState;
 use super::scheduler::{PointDone, Scheduler};
-use super::store::{CacheKey, LoadOutcome, ResultStore};
+use super::store::{pack_stem_for, CacheKey, LoadOutcome, OriginTag, ResultStore};
 use crate::arch::MemConfig;
 use crate::codr::Codr;
 use crate::coordinator::{Arch, SweepStats};
@@ -212,6 +214,10 @@ pub(crate) struct Shared {
     pub(crate) watchers: AtomicUsize,
     /// Open client connections (reactor-owned gauge, for `status`).
     pub(crate) conns: AtomicUsize,
+    /// Multi-host mode (`--ring` / `CODR_RING`): the consistent-hash
+    /// ring plus per-peer health and gauges. Empty on single-node
+    /// servers — every ring code path starts with a cheap `get()` check.
+    pub(crate) ring: std::sync::OnceLock<Arc<RingState>>,
     next_job: AtomicU64,
     pub(crate) stop: AtomicBool,
     /// Crash-restart job journal (`None` when the store dir cannot host
@@ -305,6 +311,7 @@ impl Server {
                 warms: AtomicUsize::new(0),
                 watchers: AtomicUsize::new(0),
                 conns: AtomicUsize::new(0),
+                ring: std::sync::OnceLock::new(),
                 next_job: AtomicU64::new(1),
                 stop: AtomicBool::new(false),
                 journal,
@@ -334,6 +341,20 @@ impl Server {
     /// `submit`/`map`/`warm` answer `state:"queued-full"`.
     pub fn set_max_queued(&mut self, cap: usize) {
         self.shared.exec.set_cap(cap);
+    }
+
+    /// Install the multi-host ring (internal; the CLI builds the
+    /// [`RingState`] from `--ring` / `CODR_RING`). Also arms the store's
+    /// origin tagging: from here on, saves into packs this node does not
+    /// own carry an `origin` marker so the anti-entropy repair pass can
+    /// find and push them.
+    pub(crate) fn set_ring(&mut self, state: Arc<RingState>) {
+        let owned_state = Arc::clone(&state);
+        self.shared.sched.store().set_origin(OriginTag {
+            addr: state.self_addr().to_string(),
+            owned: Box::new(move |stem| owned_state.owns(stem)),
+        });
+        let _ = self.shared.ring.set(state);
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -548,6 +569,8 @@ pub(crate) fn handle_request(msg: &Json, shared: &Arc<Shared>) -> Json {
         "map" => map_submit(msg, shared),
         "status" => status(msg, shared),
         "result" => result_lookup(msg, shared),
+        "ring" => ring_info(msg, shared),
+        "repair" => repair_merge(msg, shared),
         "shutdown" => {
             shared.stop.store(true, Ordering::SeqCst);
             shared.notify.wake();
@@ -561,7 +584,7 @@ pub(crate) fn handle_request(msg: &Json, shared: &Arc<Shared>) -> Json {
             "warm is handled by the reactor's executor hand-off"
         )),
         other => Err(anyhow::anyhow!(
-            "unknown verb `{other}` (use ping|warm|submit|map|watch|status|result|shutdown)"
+            "unknown verb `{other}` (use ping|warm|submit|map|watch|status|result|ring|repair|shutdown)"
         )),
     };
     result.unwrap_or_else(|e| error_response(format!("{e:#}")))
@@ -645,6 +668,290 @@ pub(crate) fn warm_enqueue(
         shared.warms.fetch_sub(1, Ordering::SeqCst);
         Some(error_response("server is shutting down; not accepting new work"))
     }
+}
+
+/// One ring-maintenance pass (peer probes + anti-entropy repair),
+/// scheduled onto the executor by the reactor's tick. A stopping server
+/// neither probes nor repairs.
+pub(crate) fn ring_maintenance(shared: &Arc<Shared>) {
+    if shared.stop.load(Ordering::SeqCst) {
+        return;
+    }
+    if let Some(state) = shared.ring.get() {
+        state.maintain(shared.sched.store());
+    }
+}
+
+/// Append the routing provenance to an answer traveling back through a
+/// forwarding node: which node owns the pack, and that the request was
+/// forwarded (so clients re-point `status`/`watch` polling at the owner).
+fn with_ring_fields(mut resp: Json, owner: &str) -> Json {
+    if let Json::Obj(fields) = &mut resp {
+        fields.push(("owner".into(), Json::str(owner)));
+        fields.push(("forwarded".into(), Json::Bool(true)));
+    }
+    resp
+}
+
+/// Ring-mode `submit` routing, called by the reactor before normal
+/// dispatch. Returns `None` when the submit was handed to the executor
+/// as a forward task (the answer arrives through the completion mailbox,
+/// exactly like `warm`), or `Some(response)` to answer inline — which
+/// includes every locally-computed case: this node owns the packs, the
+/// grid spans owners, the message is already a forwarded copy (loop
+/// prevention: a receiving node never re-forwards), or parsing failed.
+///
+/// An accepted forward is journaled on THIS node before the task is
+/// enqueued: if the process dies mid-forward, restart recovery re-queues
+/// the grid locally — the work is never silently lost, merely computed
+/// on the wrong node and repaired later.
+pub(crate) fn submit_intercept(
+    msg: &Json,
+    shared: &Arc<Shared>,
+    token: usize,
+    verb_idx: usize,
+    started: Instant,
+) -> Option<Json> {
+    let Some(state) = shared.ring.get() else {
+        return Some(handle_request(msg, shared));
+    };
+    if msg.get("forwarded").is_some() {
+        return Some(handle_request(msg, shared));
+    }
+    let Ok(grid) = GridRequest::from_json(msg) else {
+        // Malformed: let the normal submit path produce the real error.
+        return Some(handle_request(msg, shared));
+    };
+    // Route by pack. Only a grid whose every (model, group, seed) pack
+    // hashes to one single REMOTE owner is forwarded; anything owned
+    // here or spanning owners computes locally (misplaced entries get
+    // origin-tagged by the store and repaired by the maintenance pass).
+    let mut owner: Option<usize> = None;
+    for m in &grid.models {
+        for g in &grid.groups {
+            let o = state.owner_of(&pack_stem_for(m.name, &g.label(), grid.seed));
+            match owner {
+                None => owner = Some(o),
+                Some(prev) if prev != o => return Some(handle_request(msg, shared)),
+                Some(_) => {}
+            }
+        }
+    }
+    let owner = match owner {
+        Some(o) if o != state.self_idx() => o,
+        _ => return Some(handle_request(msg, shared)),
+    };
+    // Same admission contract as `warm`: register with the drain before
+    // the stop check, refuse past the queue cap, and run on the pool.
+    shared.warms.fetch_add(1, Ordering::SeqCst);
+    let refusal = refuse_if_stopping(shared)
+        .err()
+        .map(|e| error_response(format!("{e:#}")))
+        .or_else(|| admission_full(shared));
+    if let Some(resp) = refusal {
+        shared.warms.fetch_sub(1, Ordering::SeqCst);
+        return Some(resp);
+    }
+    // Journal before forwarding: an acked submit survives a crash of
+    // this node even though the work is meant to run elsewhere. The
+    // terminal record lands when the owner acks (`forwarded`) or the
+    // degraded compute finishes; a crash in between re-queues the grid
+    // locally at restart.
+    let id = shared.next_job.fetch_add(1, Ordering::SeqCst);
+    if let Some(j) = &shared.journal {
+        j.record_submit(id, &grid.to_json());
+    }
+    let mut fwd = msg.clone();
+    if let Json::Obj(fields) = &mut fwd {
+        fields.push(("forwarded".into(), Json::Bool(true)));
+    }
+    let state = Arc::clone(state);
+    let shared_task = Arc::clone(shared);
+    let task = move || {
+        let _guard = WarmGuard(&shared_task);
+        let response = forward_or_degrade(&shared_task, &state, owner, id, &fwd, &grid);
+        shared_task.notify.complete(Completion {
+            token,
+            verb_idx,
+            started,
+            response,
+        });
+    };
+    if shared.exec.submit_unbounded(Box::new(task)) {
+        None
+    } else {
+        shared.warms.fetch_sub(1, Ordering::SeqCst);
+        if let Some(j) = &shared.journal {
+            j.record_end(id, "failed");
+        }
+        Some(error_response("server is shutting down; not accepting new work"))
+    }
+}
+
+/// Executor-side half of a routed submit: try to forward to the owner
+/// (bounded retries with backoff), fall back to computing the grid
+/// locally in degraded mode. Runs on a pool worker — never the reactor.
+fn forward_or_degrade(
+    shared: &Arc<Shared>,
+    state: &RingState,
+    owner: usize,
+    id: u64,
+    fwd: &Json,
+    grid: &GridRequest,
+) -> Json {
+    let p = state.peer(owner);
+    let retry = Retry {
+        attempts: 2,
+        base: Duration::from_millis(100),
+        jitter_seed: std::process::id() as u64,
+    };
+    let mut answer: Option<Json> = None;
+    // A peer already marked Down skips straight to degraded mode instead
+    // of burning connect timeouts on every submit; the maintenance probe
+    // is what promotes it back to Up.
+    if p.health() != Health::Down {
+        for attempt in 1..=retry.attempts.max(1) {
+            match peer::forward(p, fwd, state.timeout) {
+                Ok(resp) => {
+                    answer = Some(resp);
+                    break;
+                }
+                Err(e) => {
+                    p.forward_errors.fetch_add(1, Ordering::SeqCst);
+                    eprintln!(
+                        "warn: forward attempt {attempt}/{} to {} failed: {e:#}",
+                        retry.attempts, p.addr
+                    );
+                    if attempt < retry.attempts {
+                        std::thread::sleep(retry.backoff(attempt));
+                    }
+                }
+            }
+        }
+    }
+    match answer {
+        Some(resp) if resp_is_ok(&resp) => {
+            p.forwards.fetch_add(1, Ordering::SeqCst);
+            if let Some(j) = &shared.journal {
+                j.record_end(id, "forwarded");
+            }
+            with_ring_fields(resp, &p.addr)
+        }
+        Some(resp) if super::proto::is_queued_full(&resp) => {
+            // The owner is alive but saturated: pass its refusal through
+            // untouched (plus provenance) so the client's own retry
+            // backoff governs, and burn no local compute.
+            if let Some(j) = &shared.journal {
+                j.record_end(id, "forward-refused");
+            }
+            with_ring_fields(resp, &p.addr)
+        }
+        other => {
+            // Transport failure after retries, a Down owner, or an
+            // owner-side refusal (e.g. it is draining): degraded mode.
+            // Compute locally — the store origin-tags the misplaced
+            // entries and the repair pass pushes them to the owner once
+            // it is Up again.
+            if let Some(resp) = other {
+                let why = resp
+                    .get("error")
+                    .and_then(|e| e.as_str().ok())
+                    .unwrap_or("owner refused the forward");
+                eprintln!(
+                    "warn: owner {} refused forwarded submit: {why}; computing locally",
+                    p.addr
+                );
+            } else {
+                eprintln!(
+                    "warn: owner {} unreachable; computing locally (degraded)",
+                    p.addr
+                );
+            }
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                shared
+                    .sched
+                    .run_grid(&grid.models, &grid.groups, &grid.archs, grid.seed)
+            }));
+            match outcome {
+                Ok(results) => {
+                    if let Some(j) = &shared.journal {
+                        j.record_end(id, "done-degraded");
+                    }
+                    ok_response(vec![
+                        ("state".into(), Json::str("done-degraded")),
+                        ("stats".into(), stats_to_json(&results.stats)),
+                        ("job".into(), Json::u64(id)),
+                        ("owner".into(), Json::str(&p.addr)),
+                    ])
+                }
+                Err(_) => {
+                    if let Some(j) = &shared.journal {
+                        j.record_end(id, "failed");
+                    }
+                    error_response("degraded sweep panicked")
+                }
+            }
+        }
+    }
+}
+
+/// Does a peer's answer carry `ok: true`?
+fn resp_is_ok(resp: &Json) -> bool {
+    matches!(resp.get("ok").and_then(|o| o.as_bool().ok()), Some(true))
+}
+
+/// `ring`: ring geometry + per-peer health/gauges; with `model`/`group`
+/// (and optional `seed`), also resolve which node owns that pack.
+fn ring_info(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
+    let Some(state) = shared.ring.get() else {
+        anyhow::bail!("no ring configured (start `codr serve` with --ring or CODR_RING)");
+    };
+    let mut fields = vec![("ring".into(), state.gauges())];
+    if let Some(m) = msg.get("model") {
+        let model = m.as_str()?;
+        let groups = parse_group_list(msg.field("group")?.as_str()?)?;
+        if groups.len() != 1 {
+            anyhow::bail!("`group` must name exactly one sweep group");
+        }
+        let seed = match msg.get("seed") {
+            Some(s) => s.as_u64()?,
+            None => 42,
+        };
+        let stem = pack_stem_for(model, &groups[0].label(), seed);
+        let owner = state.owner_of(&stem);
+        fields.push((
+            "pack".into(),
+            Json::Obj(vec![
+                ("stem".into(), Json::str(&stem)),
+                ("owner".into(), Json::str(state.node(owner))),
+                ("owned".into(), Json::Bool(owner == state.self_idx())),
+            ]),
+        ));
+    }
+    Ok(ok_response(fields))
+}
+
+/// `repair`: merge entries another ring node pushed for a pack this node
+/// owns. The merge runs through the store's normal upsert path (save
+/// lock + advisory pack lock), so pushed entries and locally-computed
+/// ones interleave safely; the pusher only trims its copy on an `ok`
+/// answer. Pack payloads are small (tens of entries), so the disk I/O
+/// here sits on the reactor like `result` lookups do.
+fn repair_merge(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
+    refuse_if_stopping(shared)?;
+    let pack = msg.field("pack")?;
+    let model = pack.field("model")?.as_str()?.to_string();
+    let group = pack.field("group")?.as_str()?.to_string();
+    let seed = pack.field("seed")?.as_u64()?;
+    let entries = match msg.get("entries") {
+        Some(e) => e.as_arr()?.to_vec(),
+        None => Vec::new(),
+    };
+    let merged = shared
+        .sched
+        .store()
+        .merge_repair(&model, &group, seed, entries)?;
+    Ok(ok_response(vec![("merged".into(), Json::usize(merged))]))
 }
 
 /// Allocate a job id and insert a Running job into the table, pruning
@@ -982,8 +1289,8 @@ fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
     let st = store.stats();
     let cache = memo::global();
     let memo = cache.breakdown();
-    let (arena_entries, arena_bytes) = cache.arena_stats();
-    Ok(ok_response(vec![
+    let (arena_entries, arena_bytes, arena_tombstoned) = cache.arena_stats();
+    let mut fields = vec![
         ("jobs".into(), Json::usize(jobs_len)),
         ("running".into(), Json::usize(running)),
         (
@@ -1051,11 +1358,19 @@ fn status(msg: &Json, shared: &Arc<Shared>) -> Result<Json> {
                     Json::Obj(vec![
                         ("entries".into(), Json::usize(arena_entries)),
                         ("bytes".into(), Json::u64(arena_bytes)),
+                        // Bytes held by tombstoned (dead, not yet
+                        // compacted) interned vectors — the arena's
+                        // reclaimable slack.
+                        ("tombstoned_bytes".into(), Json::u64(arena_tombstoned)),
                     ]),
                 ),
             ]),
         ),
-    ]))
+    ];
+    if let Some(state) = shared.ring.get() {
+        fields.push(("ring".into(), state.gauges()));
+    }
+    Ok(ok_response(fields))
 }
 
 /// `result`: summarize one stored point without simulating anything.

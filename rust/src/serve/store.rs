@@ -68,6 +68,15 @@ fn sanitize(s: &str) -> String {
         .collect()
 }
 
+/// Stem of the packed file a `(model, group, seed)` triple maps to —
+/// the ring's unit of placement. Must stay in lockstep with
+/// [`CacheKey::pack_stem`]: the ring routes requests by hashing this
+/// string *before* any key exists, and the file the eventual save
+/// writes has to land where the routing said it would.
+pub(crate) fn pack_stem_for(model: &str, group: &str, seed: u64) -> String {
+    format!("{}-{}-s{}", sanitize(model), sanitize(group), seed)
+}
+
 /// `CODR_STORE_WRITE_V1=1` — keep the store in the legacy single-point
 /// layout: saves write v1 files AND read-through migration is disabled,
 /// so a store that must stay readable by a pre-v2 binary is never
@@ -146,12 +155,7 @@ impl CacheKey {
     /// in. Arch and configuration distinguish entries *inside* the pack
     /// (by fingerprint), not files.
     pub fn pack_stem(&self) -> String {
-        format!(
-            "{}-{}-s{}",
-            sanitize(&self.model),
-            sanitize(&self.group),
-            self.seed
-        )
+        pack_stem_for(&self.model, &self.group, self.seed)
     }
 
     /// Do two keys share one packed file?
@@ -323,13 +327,34 @@ fn lock_path(pack_path: &Path) -> PathBuf {
 /// advisory `<pack>.json.lock` file (create-exclusive, stale-by-age
 /// takeover), so two servers saving into one store merge their entries
 /// instead of last-writer-wins.
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct ResultStore {
     dir: PathBuf,
     /// Soft size cap; oldest packs are evicted after a save pushes the
     /// store past it.
     cap_bytes: Option<u64>,
     save_lock: Arc<Mutex<()>>,
+    /// Ring mode only: saves into packs this node does not own get an
+    /// `origin` marker so the anti-entropy repair pass can find and push
+    /// them. Set once at server startup; shared by every clone (the
+    /// scheduler's store is a clone of the one the CLI opened).
+    origin: Arc<std::sync::OnceLock<OriginTag>>,
+}
+
+impl std::fmt::Debug for ResultStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResultStore")
+            .field("dir", &self.dir)
+            .field("cap_bytes", &self.cap_bytes)
+            .finish()
+    }
+}
+
+/// Origin marker configuration for ring mode: this node's ring address
+/// plus the ownership predicate (does this node own a pack stem?).
+pub(crate) struct OriginTag {
+    pub(crate) addr: String,
+    pub(crate) owned: Box<dyn Fn(&str) -> bool + Send + Sync>,
 }
 
 impl ResultStore {
@@ -368,7 +393,18 @@ impl ResultStore {
             dir,
             cap_bytes,
             save_lock: Arc::new(Mutex::new(())),
+            origin: Arc::new(std::sync::OnceLock::new()),
         })
+    }
+
+    /// Install the ring-mode origin marker (at most once; later calls
+    /// are ignored). From then on, saves into packs the `owned`
+    /// predicate rejects carry `"origin": <addr>` on each entry —
+    /// ignored by every reader ([`decode_entry`] matches key/check/
+    /// result only), stripped again when repair merges the entry into
+    /// its owner.
+    pub(crate) fn set_origin(&self, tag: OriginTag) {
+        let _ = self.origin.set(tag);
     }
 
     pub fn dir(&self) -> &Path {
@@ -491,9 +527,17 @@ impl ResultStore {
         if legacy_v1_mode() {
             return self.save_v1(key, result);
         }
+        let mut entry = entry_to_json(key, result);
+        if let Some(tag) = self.origin.get() {
+            if !(tag.owned)(&key.pack_stem()) {
+                if let Json::Obj(fields) = &mut entry {
+                    fields.push(("origin".into(), Json::str(&tag.addr)));
+                }
+            }
+        }
         self.upsert_entries(
             key,
-            vec![(key.fingerprint, entry_to_json(key, result))],
+            vec![(key.fingerprint, entry)],
             vec![self.v1_path_for(key)],
         )
     }
@@ -552,21 +596,7 @@ impl ResultStore {
                 None => entries.push((fp, node)),
             }
         }
-        let envelope = Json::Obj(vec![
-            ("version".into(), Json::u64(STORE_FORMAT_VERSION as u64)),
-            (
-                "pack".into(),
-                Json::Obj(vec![
-                    ("model".into(), Json::str(&pack_key.model)),
-                    ("group".into(), Json::str(&pack_key.group)),
-                    ("seed".into(), Json::u64(pack_key.seed)),
-                ]),
-            ),
-            (
-                "entries".into(),
-                Json::Arr(entries.into_iter().map(|(_, e)| e).collect()),
-            ),
-        ]);
+        let envelope = pack_envelope(pack_key, entries);
         self.write_atomic(&path, &envelope.to_string())?;
         for p in v1_cleanup {
             let _ = std::fs::remove_file(p);
@@ -574,6 +604,143 @@ impl ResultStore {
         drop(file_lock);
         drop(guard);
         self.enforce_cap(&path);
+        Ok(())
+    }
+
+    /// Pack files on disk whose stem the `owned` predicate rejects —
+    /// the anti-entropy repair pass's work list in ring mode. Returns
+    /// `(stem, path)` pairs, sorted for deterministic repair order.
+    pub(crate) fn misplaced_packs(&self, owned: &dyn Fn(&str) -> bool) -> Vec<(String, PathBuf)> {
+        let mut out = Vec::new();
+        let Ok(rd) = std::fs::read_dir(&self.dir) else { return out };
+        for e in rd.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with('.') {
+                continue;
+            }
+            let Some(stem) = name.strip_suffix(".pack.json") else { continue };
+            if !owned(stem) {
+                out.push((stem.to_string(), e.path()));
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Read one pack file for a repair push: the pack coordinates plus
+    /// every entry with a readable fingerprint (entries without one can
+    /// never be matched by any key, so they are not worth shipping).
+    pub(crate) fn read_pack_for_repair(
+        &self,
+        path: &Path,
+    ) -> Result<(String, String, u64, Vec<(u64, Json)>)> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let version = j.field("version")?.as_u32()?;
+        if version != STORE_FORMAT_VERSION {
+            anyhow::bail!("store pack format v{version}, expected v{STORE_FORMAT_VERSION}");
+        }
+        let pack = j.field("pack")?;
+        let model = pack.field("model")?.as_str()?.to_string();
+        let group = pack.field("group")?.as_str()?.to_string();
+        let seed = pack.field("seed")?.as_u64()?;
+        let entries = j
+            .take("entries")?
+            .into_arr()?
+            .into_iter()
+            .filter_map(|e| entry_fingerprint(&e).map(|fp| (fp, e)))
+            .collect();
+        Ok((model, group, seed, entries))
+    }
+
+    /// Owner-side repair merge: upsert pushed entries into this node's
+    /// pack, stripping their `origin` markers (they are home now). Runs
+    /// under the same save-lock + advisory pack-lock discipline as a
+    /// normal save, so a repair merges with — never clobbers — entries
+    /// this node computed itself. Returns how many entries were merged.
+    pub(crate) fn merge_repair(
+        &self,
+        model: &str,
+        group: &str,
+        seed: u64,
+        entries: Vec<Json>,
+    ) -> Result<usize> {
+        let key = CacheKey {
+            model: model.to_string(),
+            group: group.to_string(),
+            arch: String::new(),
+            seed,
+            fingerprint: 0,
+        };
+        let new: Vec<(u64, Json)> = entries
+            .into_iter()
+            .filter_map(|mut e| {
+                let fp = entry_fingerprint(&e)?;
+                if let Json::Obj(fields) = &mut e {
+                    fields.retain(|(k, _)| k != "origin");
+                }
+                Some((fp, e))
+            })
+            .collect();
+        let merged = new.len();
+        if merged == 0 {
+            return Ok(0);
+        }
+        self.upsert_entries(&key, new, Vec::new())?;
+        Ok(merged)
+    }
+
+    /// Forwarder-side trim after the owner acked a repair push: drop the
+    /// acked fingerprints — plus entries whose fingerprint is unreadable
+    /// (no key can ever match them) — from the local misplaced pack,
+    /// removing the file outright when nothing is left. Entries saved
+    /// locally while the push was in flight keep their fingerprints and
+    /// survive for the next repair pass: trimming is by identity, not
+    /// "whatever the file holds now".
+    pub(crate) fn remove_pack_entries(
+        &self,
+        model: &str,
+        group: &str,
+        seed: u64,
+        acked: &[u64],
+    ) -> Result<()> {
+        let key = CacheKey {
+            model: model.to_string(),
+            group: group.to_string(),
+            arch: String::new(),
+            seed,
+            fingerprint: 0,
+        };
+        let guard = crate::util::sync::lock(&self.save_lock);
+        let path = self.pack_path_for(&key);
+        let file_lock = PackLock::acquire(&path);
+        if file_lock.is_none() {
+            eprintln!(
+                "warn: proceeding without {} — a concurrent writer may race this trim",
+                lock_path(&path).display()
+            );
+        }
+        let remaining: Vec<(u64, Json)> = match std::fs::read_to_string(&path) {
+            Ok(text) => decode_pack(&text)
+                .map(|es| {
+                    es.into_iter()
+                        .filter_map(|e| entry_fingerprint(&e).map(|fp| (fp, e)))
+                        .filter(|(fp, _)| !acked.contains(fp))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            Err(_) => Vec::new(),
+        };
+        if remaining.is_empty() {
+            let _ = std::fs::remove_file(&path);
+            return Ok(());
+        }
+        let envelope = pack_envelope(&key, remaining);
+        self.write_atomic(&path, &envelope.to_string())?;
+        drop(file_lock);
+        drop(guard);
         Ok(())
     }
 
@@ -716,6 +883,27 @@ fn entry_to_json(key: &CacheKey, result: &ModelResult) -> Json {
         ("key".into(), key_to_json(key)),
         ("check".into(), Json::u64(result_check(&result_node))),
         ("result".into(), result_node),
+    ])
+}
+
+/// The on-disk pack envelope for a full set of `(fingerprint, entry)`
+/// pairs. Shared by the save upsert and the repair trim so both rewrite
+/// paths stay byte-compatible.
+fn pack_envelope(pack_key: &CacheKey, entries: Vec<(u64, Json)>) -> Json {
+    Json::Obj(vec![
+        ("version".into(), Json::u64(STORE_FORMAT_VERSION as u64)),
+        (
+            "pack".into(),
+            Json::Obj(vec![
+                ("model".into(), Json::str(&pack_key.model)),
+                ("group".into(), Json::str(&pack_key.group)),
+                ("seed".into(), Json::u64(pack_key.seed)),
+            ]),
+        ),
+        (
+            "entries".into(),
+            Json::Arr(entries.into_iter().map(|(_, e)| e).collect()),
+        ),
     ])
 }
 

@@ -403,3 +403,205 @@ fn stalled_dispatch_still_reaps_idle_connections() {
     srv.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+// ------------------------------------------------------------ ring chaos
+
+/// Spawn one node of a fixed-address ring. Unlike [`ServeProc::spawn`]
+/// the port is pinned (ring membership is static), so a restart of a
+/// killed node may briefly collide with lingering sockets — the spawn
+/// retries until the announce line confirms the bind.
+fn ring_node(addr: &str, store: &Path, ring: &str, faults: &str) -> ServeProc {
+    let deadline = Instant::now() + Duration::from_secs(90);
+    loop {
+        let mut cmd = Command::new(bin());
+        cmd.args(["serve", "--addr", addr, "--ring", ring, "--store"])
+            .arg(store)
+            .env("CODR_PEER_TIMEOUT_MS", "200")
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null());
+        if !faults.is_empty() {
+            cmd.env("CODR_FAULTS", faults);
+        }
+        let mut child = cmd.spawn().expect("spawn ring node");
+        let mut line = String::new();
+        let _ = BufReader::new(child.stdout.take().expect("piped stdout")).read_line(&mut line);
+        if line.contains("listening on") {
+            assert!(line.contains("ring"), "node must announce its ring: {line:?}");
+            return ServeProc { child, addr: addr.to_string() };
+        }
+        let _ = child.kill();
+        let _ = child.wait();
+        assert!(Instant::now() < deadline, "ring node on {addr} never bound: {line:?}");
+        std::thread::sleep(Duration::from_millis(500));
+    }
+}
+
+fn submit_msg(seed: u64) -> Json {
+    obj(&[
+        ("verb", Json::str("submit")),
+        ("models", Json::str("tiny")),
+        ("groups", Json::str("Orig")),
+        ("seed", Json::u64(seed)),
+    ])
+}
+
+/// First `n` seeds whose `tiny`/`Orig` pack hashes to the *other* node,
+/// resolved through the answering node's `ring` verb.
+fn remote_owned_seeds(node: &ServeProc, n: usize) -> Vec<u64> {
+    let mut seeds = Vec::new();
+    for seed in 1..500u64 {
+        let resp = node.request(&obj(&[
+            ("verb", Json::str("ring")),
+            ("model", Json::str("tiny")),
+            ("group", Json::str("Orig")),
+            ("seed", Json::u64(seed)),
+        ]));
+        assert!(ok(&resp), "{resp}");
+        let pack = resp.get("pack").unwrap();
+        if !pack.get("owned").unwrap().as_bool().unwrap() {
+            seeds.push(seed);
+            if seeds.len() == n {
+                return seeds;
+            }
+        }
+    }
+    panic!("fewer than {n} of 500 seeds hashed to the remote node");
+}
+
+/// Poll `job` on `node` until it reaches `done`.
+fn wait_done(node: &ServeProc, job: u64) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        assert!(Instant::now() < deadline, "job {job} never finished on {}", node.addr);
+        let status = node.request(&obj(&[("verb", Json::str("status")), ("job", Json::u64(job))]));
+        assert!(ok(&status), "{status}");
+        match status.get("state").unwrap().as_str().unwrap() {
+            "running" => std::thread::sleep(Duration::from_millis(50)),
+            "done" => return,
+            other => panic!("job {job} entered state {other}: {status}"),
+        }
+    }
+}
+
+/// Two-node ring, full degrade-then-heal arc: a submit for a pack the
+/// other node owns is forwarded there (the pack lands in the owner's
+/// store, never the forwarder's); after the owner is SIGKILLed the same
+/// route answers `done-degraded` from local compute with the misplaced
+/// pack origin-tagged; and once the owner restarts, the anti-entropy
+/// pass pushes the pack home and trims the local copy — no entry lost,
+/// no husk left behind.
+#[test]
+fn killed_ring_owner_degrades_then_anti_entropy_repairs() {
+    let dir1 = temp_dir("ring-heal-1");
+    let dir2 = temp_dir("ring-heal-2");
+    let (a1, a2) = ("127.0.0.1:29411", "127.0.0.1:29412");
+    let ring = format!("{a1},{a2}");
+    let n1 = ring_node(a1, &dir1, &ring, "");
+    let mut n2 = ring_node(a2, &dir2, &ring, "");
+
+    let seeds = remote_owned_seeds(&n1, 2);
+    let (fwd_seed, deg_seed) = (seeds[0], seeds[1]);
+
+    // Healthy ring: the submit is forwarded and the pack lands on the
+    // owner, not the node we dialed.
+    let resp = n1.request(&submit_msg(fwd_seed));
+    assert!(ok(&resp), "{resp}");
+    assert_eq!(resp.get("owner").unwrap().as_str().unwrap(), a2, "{resp}");
+    assert!(resp.get("forwarded").unwrap().as_bool().unwrap(), "{resp}");
+    let job = resp.get("job").unwrap().as_u64().unwrap();
+    wait_done(&n2, job);
+    let fwd_pack = format!("tiny-Orig-s{fwd_seed}.pack.json");
+    assert!(dir2.join(&fwd_pack).exists(), "pack must land in the owner's store");
+    assert!(!dir1.join(&fwd_pack).exists(), "the forwarder must not keep a copy");
+
+    // SIGKILL the owner: the same route degrades to local compute, and
+    // the misplaced pack is origin-tagged for later repair.
+    n2.child.kill().expect("kill owner");
+    n2.child.wait().expect("reap owner");
+    let resp = n1.request(&submit_msg(deg_seed));
+    assert!(ok(&resp), "{resp}");
+    assert_eq!(resp.get("state").unwrap().as_str().unwrap(), "done-degraded", "{resp}");
+    assert_eq!(resp.get("owner").unwrap().as_str().unwrap(), a2, "{resp}");
+    let stats = resp.get("stats").unwrap();
+    assert_eq!(stats.get("computed").unwrap().as_u64().unwrap(), 3, "{resp}");
+    let deg_pack = format!("tiny-Orig-s{deg_seed}.pack.json");
+    let misplaced = std::fs::read_to_string(dir1.join(&deg_pack)).expect("misplaced pack");
+    assert!(misplaced.contains("\"origin\""), "degraded entries must be origin-tagged");
+
+    // Restart the owner on its fixed address: the maintenance pass
+    // probes it back to Up and pushes the pack home.
+    drop(n2);
+    let n2 = ring_node(a2, &dir2, &ring, "");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while dir1.join(&deg_pack).exists() {
+        assert!(
+            Instant::now() < deadline,
+            "misplaced pack was never repaired to the recovered owner"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let repaired = std::fs::read_to_string(dir2.join(&deg_pack)).expect("repaired pack");
+    let entries = Json::parse(&repaired)
+        .expect("parse repaired pack")
+        .field("entries")
+        .expect("entries")
+        .as_arr()
+        .expect("entries array")
+        .len();
+    assert_eq!(entries, 3, "every degraded entry must survive the repair");
+    let info = n1.request(&obj(&[("verb", Json::str("ring"))]));
+    let gauges = info.get("ring").unwrap();
+    assert!(
+        gauges.get("repairs").unwrap().as_u64().unwrap() >= 1,
+        "{info}"
+    );
+
+    n1.shutdown();
+    n2.shutdown();
+    let _ = std::fs::remove_dir_all(&dir1);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+/// The acceptance pin: with `peer.conn.fail` armed on the forwarding
+/// node, a submit routed to a live remote owner is answered — the first
+/// forward attempt burns the fault shot, the backoff retry lands, and
+/// the client gets the owner's ack. Never a hang, never a silent drop.
+#[test]
+fn armed_peer_conn_fault_never_hangs_or_drops_a_forwarded_submit() {
+    let dir1 = temp_dir("ring-fault-1");
+    let dir2 = temp_dir("ring-fault-2");
+    let (a1, a2) = ("127.0.0.1:29421", "127.0.0.1:29422");
+    let ring = format!("{a1},{a2}");
+    let n1 = ring_node(a1, &dir1, &ring, "peer.conn.fail:1");
+    let n2 = ring_node(a2, &dir2, &ring, "");
+
+    let seed = remote_owned_seeds(&n1, 1)[0];
+    let started = Instant::now();
+    let resp = n1.request(&submit_msg(seed));
+    assert!(
+        started.elapsed() < Duration::from_secs(30),
+        "forwarded submit took {:?} under an armed connect fault",
+        started.elapsed()
+    );
+    assert!(ok(&resp), "an armed connect fault must not drop the submit: {resp}");
+    assert!(resp.get("forwarded").unwrap().as_bool().unwrap(), "{resp}");
+    let job = resp.get("job").unwrap().as_u64().unwrap();
+    wait_done(&n2, job);
+
+    // The seam really fired: the retry that landed sits next to at
+    // least one recorded forward error.
+    let info = n1.request(&obj(&[("verb", Json::str("ring"))]));
+    let peers = info.get("ring").unwrap().get("peers").unwrap();
+    let errors: u64 = peers
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| p.get("forward_errors").unwrap().as_u64().unwrap())
+        .sum();
+    assert!(errors >= 1, "the peer.conn.fail seam never fired: {info}");
+
+    n1.shutdown();
+    n2.shutdown();
+    let _ = std::fs::remove_dir_all(&dir1);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
